@@ -1,0 +1,94 @@
+"""Kernel microbenchmarks: us/call for the XLA paths (CPU-measurable) and
+TPU roofline estimates for the Pallas kernels (derived, since this
+container has no TPU).
+
+For each kernel: bytes touched and flops are computed analytically from
+the shapes; est_tpu_us = max(flops/197e12, bytes/819e9) * 1e6."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import decode_attention, flash_attention, rglru_scan, rmsnorm, wkv6
+
+
+def _time(fn, *args, n: int = 5) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.monotonic()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.monotonic() - t0) / n * 1e6
+
+
+def _roofline_us(flops: float, bytes_: float) -> float:
+    return max(flops / 197e12, bytes_ / 819e9) * 1e6
+
+
+def main(quick: bool = True):
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # flash attention: B=1 H=8 S=1024 D=128 bf16
+    B, H, S, D = 1, 8, (512 if quick else 2048), 128
+    q = jax.random.normal(key, (B, H, S, D), jnp.bfloat16)
+    k = jax.random.normal(key, (B, H, S, D), jnp.bfloat16)
+    v = jax.random.normal(key, (B, H, S, D), jnp.bfloat16)
+    fn = jax.jit(lambda q, k, v: flash_attention(q, k, v, impl="xla"))
+    us = _time(fn, q, k, v)
+    flops = 4 * B * H * S * S * D          # qk + pv
+    bytes_ = 3 * q.nbytes + q.nbytes
+    rows.append(("flash_attention_xla", us, _roofline_us(flops, bytes_)))
+
+    # decode attention: B=8 H=8 S=32768 D=128
+    S2 = 8192 if quick else 32768
+    q1 = jax.random.normal(key, (8, 8, 128), jnp.bfloat16)
+    k1 = jax.random.normal(key, (8, 8, S2, 128), jnp.bfloat16)
+    v1 = jax.random.normal(key, (8, 8, S2, 128), jnp.bfloat16)
+    lens = jnp.full((8,), S2, jnp.int32)
+    fn = jax.jit(lambda a, b, c, l: decode_attention(a, b, c, l, impl="ref"))
+    us = _time(fn, q1, k1, v1, lens)
+    rows.append(("decode_attention", us, _roofline_us(4 * 8 * 8 * S2 * 128, k1.nbytes * 2)))
+
+    # rglru scan: B=4 S=2048 Dm=1024
+    S3, Dm = (1024 if quick else 4096), 1024
+    la = -jax.random.uniform(key, (4, S3, Dm), minval=0.01, maxval=2.0)
+    bx = jax.random.normal(key, (4, S3, Dm))
+    h0 = jnp.zeros((4, Dm))
+    fn = jax.jit(lambda a, b, h: rglru_scan(a, b, h, impl="xla"))
+    us = _time(fn, la, bx, h0)
+    rows.append(("rglru_scan_xla", us, _roofline_us(6 * la.size, la.nbytes * 3)))
+
+    # wkv6: B=1 H=8 S=1024 K=64
+    S4, K = (512 if quick else 2048), 64
+    r = jax.random.normal(key, (1, 8, S4, K)) * 0.5
+    kk = jax.random.normal(key, (1, 8, S4, K)) * 0.5
+    vv = jax.random.normal(key, (1, 8, S4, K)) * 0.5
+    lw = -jax.random.uniform(key, (1, 8, S4, K), minval=0.1, maxval=3.0)
+    u = jnp.zeros((8, K))
+    s0 = jnp.zeros((1, 8, K, K))
+    fn = jax.jit(lambda *a: wkv6(*a, impl="xla"))
+    us = _time(fn, r, kk, vv, lw, u, s0)
+    chunk = 64
+    flops = (2 * S4 * K * K * 2 + S4 * chunk * K * 3) * 8   # per head approx
+    rows.append(("wkv6_xla", us, _roofline_us(flops, r.nbytes * 4)))
+
+    # rmsnorm: (8192, 4096)
+    x = jax.random.normal(key, (4096 if quick else 8192, 4096), jnp.bfloat16)
+    w = jnp.ones((4096,), jnp.bfloat16)
+    fn = jax.jit(lambda x, w: rmsnorm(x, w, impl="ref"))
+    us = _time(fn, x, w)
+    rows.append(("rmsnorm", us, _roofline_us(3 * x.size, 2 * x.nbytes)))
+
+    for name, us, tpu_us in rows:
+        print(f"kernel,{name},{us:.0f},{tpu_us:.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main(quick=False)

@@ -1,0 +1,58 @@
+"""Paper §Task Queues: queue + serialization overhead microbenchmarks.
+
+Measures per-message cost of the two queue implementations across payload
+sizes (the paper's Redis-vs-Pipes tradeoff) and the serializer in
+isolation, plus proxy creation/resolution cost (the fabric's overhead
+floor)."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import InMemoryConnector, LocalColmenaQueues, PipeColmenaQueues, Store
+from repro.core.serialization import SERIALIZER
+
+
+def _bench(fn, n: int = 50) -> float:
+    t0 = time.monotonic()
+    for _ in range(n):
+        fn()
+    return (time.monotonic() - t0) / n * 1e6  # us
+
+
+def queue_roundtrip_us(qcls, payload: np.ndarray, n: int = 30) -> float:
+    q = qcls()
+
+    def once():
+        q.send_inputs(payload, method="f")
+        task = q.get_task(timeout=5)
+        task.mark("compute_started")
+        task.set_success(None)
+        task.mark("compute_ended")
+        q.send_result(task)
+        q.get_result(timeout=5)
+
+    return _bench(once, n)
+
+
+def main(quick: bool = True):
+    sizes = [1_000, 1_000_000] if quick else [1_000, 100_000, 1_000_000, 10_000_000]
+    rows = []
+    for size in sizes:
+        payload = np.zeros(size // 8)
+        blob, m = SERIALIZER.serialize(payload)
+        ser_us = _bench(lambda: SERIALIZER.serialize(payload), 20)
+        de_us = _bench(lambda: SERIALIZER.deserialize(blob), 20)
+        local_us = queue_roundtrip_us(LocalColmenaQueues, payload, 20 if quick else 50)
+        pipe_us = queue_roundtrip_us(PipeColmenaQueues, payload, 10 if quick else 30)
+        store = Store(f"ovh-{size}", InMemoryConnector())
+        proxy_us = _bench(lambda: store.proxy(payload).resolve(), 20)
+        rows.append((size, ser_us, de_us, local_us, pipe_us, proxy_us))
+        print(f"overhead,{size},{ser_us:.1f},{de_us:.1f},{local_us:.1f},{pipe_us:.1f},{proxy_us:.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main(quick=False)

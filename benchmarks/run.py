@@ -1,0 +1,59 @@
+"""Benchmark harness entry point: one benchmark per paper table/figure.
+
+``python -m benchmarks.run`` runs the quick suite and prints
+``name,...`` CSV rows per benchmark (plus a summary line per suite).
+``--full`` runs the paper-scale sweeps.
+
+Figure map:
+  proxy_app      -> Fig. 7 (reaction/decision/dispatch latencies)
+  weak_scaling   -> Fig. 3 (inference rate vs workers, fabric vs control)
+  utilization    -> Figs. 2/5 (busy fractions, stateful-cache ablation)
+  multisite      -> Fig. 4 (local vs federated backends)
+  steering_gain  -> '+20% high-performers' claim
+  overhead       -> §Task Queues (serialization/queue microbench)
+  kernel_bench   -> kernels/ (XLA timings + TPU roofline estimates)
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale sweeps")
+    ap.add_argument("--only", default=None, help="run a single benchmark")
+    args = ap.parse_args()
+    quick = not args.full
+
+    from . import kernel_bench, multisite, overhead, proxy_app, steering_gain, utilization, weak_scaling
+
+    suites = {
+        "overhead": overhead.main,
+        "proxy_app": proxy_app.main,
+        "weak_scaling": weak_scaling.main,
+        "utilization": utilization.main,
+        "multisite": multisite.main,
+        "steering_gain": steering_gain.main,
+        "kernel_bench": kernel_bench.main,
+    }
+    if args.only:
+        suites = {args.only: suites[args.only]}
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in suites.items():
+        t0 = time.monotonic()
+        try:
+            fn(quick=quick)
+            print(f"suite,{name},ok,{time.monotonic() - t0:.1f}s")
+        except Exception as exc:  # noqa: BLE001
+            failures += 1
+            print(f"suite,{name},FAILED,{type(exc).__name__}: {exc}")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

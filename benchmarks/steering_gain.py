@@ -1,0 +1,102 @@
+"""Paper claim: '+20% more high-performing molecules from co-scheduling
+simulation and AI' (Fig. 2 discussion).
+
+Reproduction: a synthetic molecular property landscape; a fixed budget of
+simulation tasks; compare (a) unsteered random search vs (b) the Colmena
+AI-steered campaign (surrogate retrained online, sampling biased toward
+predicted optima). Metric: number of 'high-performing' molecules found
+(property above a fixed threshold) within the same task budget.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Tuple
+
+import numpy as np
+
+from repro.core import (
+    BatchRetrainThinker,
+    LocalColmenaQueues,
+    TaskServer,
+    WorkerPool,
+)
+
+DIM = 6
+THRESHOLD = -0.5     # property above this = "high-performing"
+
+
+def _landscape(x: np.ndarray) -> float:
+    time.sleep(0.002)
+    x = np.asarray(x)
+    return float(-np.sum((x - 0.35) ** 2) + 0.1 * np.sin(5 * x).sum())
+
+
+def _train(X, y):
+    X = np.asarray(X); y = np.asarray(y)
+    Xb = np.concatenate([X, np.ones((len(X), 1))], axis=1)
+    w = np.linalg.lstsq(Xb, y, rcond=None)[0]
+    return w
+
+
+class Steered(BatchRetrainThinker):
+    def __init__(self, queues, **kw):
+        super().__init__(queues, **kw)
+        self.rng = np.random.default_rng(0)
+        self.w = None
+
+    def simulate_args(self):
+        if self.w is None:
+            return (self.rng.uniform(-1, 1, DIM),)
+        # ascend the surrogate gradient from a random start
+        x = self.rng.uniform(-1, 1, DIM)
+        x = np.clip(x + 0.8 * np.sign(self.w[:DIM]) * self.rng.uniform(0, 1, DIM), -1, 1)
+        return (x,)
+
+    def make_train_task(self):
+        X = np.stack([np.asarray(r.args[0]) for r in self.database])
+        y = np.asarray([r.value for r in self.database])
+        return (X, y), {}
+
+    def on_train(self, result):
+        if result.success:
+            self.w = np.asarray(result.value)
+
+
+def run_steered(budget: int) -> int:
+    q = LocalColmenaQueues(topics=["simulate", "train"])
+    pools = {"simulate": WorkerPool("simulate", 3), "ml": WorkerPool("ml", 1),
+             "default": WorkerPool("default", 1)}
+    thinker = Steered(q, n_slots=3, retrain_after=max(8, budget // 8),
+                      max_results=budget, ml_slots=1)
+    server = TaskServer(q, {"simulate": _landscape, "train": _train}, pools=pools).start()
+    thinker.run(timeout=300)
+    server.stop()
+    hits = sum(1 for r in thinker.database if r.value > THRESHOLD)
+    return hits
+
+
+def run_random(budget: int) -> int:
+    rng = np.random.default_rng(0)
+    hits = 0
+    for _ in range(budget):
+        x = rng.uniform(-1, 1, DIM)
+        if _landscape(x) > THRESHOLD:
+            hits += 1
+    return hits
+
+
+def main(quick: bool = True) -> Tuple[int, int]:
+    budget = 60 if quick else 240
+    rnd = run_random(budget)
+    steered = run_steered(budget)
+    gain = (steered - rnd) / max(rnd, 1) * 100
+    print(f"steering_gain,budget,{budget}")
+    print(f"steering_gain,random_hits,{rnd}")
+    print(f"steering_gain,steered_hits,{steered}")
+    print(f"steering_gain,gain_pct,{gain:.0f}")
+    return steered, rnd
+
+
+if __name__ == "__main__":
+    main(quick=False)

@@ -1,0 +1,206 @@
+"""DeepDriveMD-style steering of a molecular-dynamics ensemble (Fig. 6).
+
+An ensemble of synthetic MD trajectories (overdamped Langevin walkers on
+a double-well landscape) runs as continuous chunked tasks. A JAX
+autoencoder-style outlier scorer (random-projection reconstruction
+error) is retrained asynchronously on the accumulating trajectory frames;
+walkers judged stuck in already-sampled basins are RESTARTED from the
+most novel frames — the paper's rare-event-sampling loop.
+
+Success metrics: state-space coverage (fraction of the reaction
+coordinate explored — what outlier-driven sampling directly targets) and
+well transitions, steered vs. unsteered.
+
+Run:  PYTHONPATH=src python examples/md_steering.py
+"""
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    BaseThinker,
+    LocalColmenaQueues,
+    ResourceCounter,
+    ResourceRequest,
+    TaskServer,
+    WorkerPool,
+    agent,
+    result_processor,
+    stateful_task,
+)
+
+DIM = 2
+CHUNK = 40          # MD steps per task
+BETA = 8.0          # inverse temperature (deep rare-event regime)
+
+
+def _force(x):
+    # double well along dim 0: V = (x0^2-1)^2 + 0.5*x1^2
+    f0 = -4 * x[0] * (x[0] ** 2 - 1)
+    return np.array([f0, -x[1]])
+
+
+def md_chunk(x0: np.ndarray, seed: int) -> Dict:
+    """Run CHUNK Langevin steps; return the trajectory."""
+    rng = np.random.default_rng(seed)
+    x = np.asarray(x0, float).copy()
+    traj = np.empty((CHUNK, DIM))
+    dt = 0.01
+    for t in range(CHUNK):
+        x = x + dt * _force(x) + np.sqrt(2 * dt / BETA) * rng.standard_normal(DIM)
+        traj[t] = x
+    time.sleep(0.005)
+    return {"traj": traj, "x_final": x}
+
+
+@stateful_task
+def train_scorer(frames: np.ndarray, registry=None) -> Dict:
+    """Density-based novelty model: keep a reference subsample of visited
+    frames; a frame is novel if it sits in a low-density (under-sampled)
+    region — for the double well, that is the transition barrier."""
+    X = np.asarray(frames)
+    rng = np.random.default_rng(registry.get("seed", 0))
+    registry["seed"] = registry.get("seed", 0) + 1
+    ref = X[rng.choice(len(X), size=min(512, len(X)), replace=False)]
+    # cached jit: kNN mean distance to the reference set
+    fn = registry.get("knn_fn")
+    if fn is None:
+        def knn(ref, q):
+            d = jnp.linalg.norm(q[:, None, :] - ref[None, :, :], axis=-1)
+            k = jnp.minimum(16, d.shape[1])
+            return jnp.sort(d, axis=1)[:, :16].mean(axis=1)
+        fn = registry["knn_fn"] = jax.jit(knn)
+    registry["ref"] = ref
+    return {"ref": ref}
+
+
+def novelty(model, frames: np.ndarray) -> np.ndarray:
+    ref = np.asarray(model["ref"])
+    q = np.asarray(frames)
+    d = np.linalg.norm(q[:, None, :] - ref[None, :, :], axis=-1)
+    k = min(16, d.shape[1])
+    return np.sort(d, axis=1)[:, :k].mean(axis=1)
+
+
+def _potential(frames: np.ndarray) -> np.ndarray:
+    x0, x1 = frames[:, 0], frames[:, 1]
+    return (x0 ** 2 - 1) ** 2 + 0.5 * x1 ** 2
+
+
+def restart_scores(model, frames: np.ndarray) -> np.ndarray:
+    """Novelty tempered by energy: pure density-novelty favors high-energy
+    tails the walker immediately relaxes out of; the paper notes that
+    'domain-specific biophysical calculations are still needed to guide
+    AI-driven sampling properly' — here the potential plays that role,
+    pointing restarts at under-sampled low-barrier states (the saddle)."""
+    nov = novelty(model, frames)
+    return np.where(_potential(frames) < 1.2, nov, -np.inf)
+
+
+class MDThinker(BaseThinker):
+    def __init__(self, queues, n_walkers=6, budget=120, steer=True, retrain_every=10):
+        super().__init__(queues, ResourceCounter(n_walkers, pools=["md", "ml"]))
+        self.rng = np.random.default_rng(0)
+        self.budget = budget
+        self.steer = steer
+        self.retrain_every = retrain_every
+        self.chunks_done = 0
+        self.frames: List[np.ndarray] = []
+        self.model = None
+        self.transitions = 0
+        self._last_well: Dict[int, int] = {}
+        self._walker_pos = {i: np.array([-1.0, 0.0]) for i in range(n_walkers)}
+        self._novel_bank: List[np.ndarray] = [np.array([-1.0, 0.0])]
+
+    def _submit(self, walker: int):
+        x0 = self._walker_pos[walker]
+        self.queues.send_inputs(
+            x0, int(self.rng.integers(1 << 30)),
+            method="md_chunk", topic="default",
+            task_info={"walker": walker},
+            resources=ResourceRequest(pool="md"),
+        )
+
+    @agent(startup=True)
+    def startup(self):
+        for i in self._walker_pos:
+            self._submit(i)
+
+    @result_processor()
+    def on_chunk(self, result):
+        if result.method == "train_scorer":
+            if result.success:
+                self.model = result.value
+                # rank accumulated frames by novelty; refresh restart bank
+                if self.frames:
+                    allf = np.concatenate(self.frames)[-2000:]
+                    scores = restart_scores(self.model, allf)
+                    top = np.argsort(-scores)[:16]
+                    self._novel_bank = [allf[i] for i in top]
+            return
+        if not result.success:
+            self._submit(result.task_info["walker"])
+            return
+        w = result.task_info["walker"]
+        traj = result.value["traj"]
+        self.frames.append(traj)
+        self.chunks_done += 1
+
+        # transition bookkeeping (well = sign of x0)
+        wells = np.sign(traj[:, 0])
+        prev = self._last_well.get(w, wells[0])
+        self.transitions += int(np.sum(np.abs(np.diff(np.concatenate([[prev], wells]))) > 0) // 2)
+        self._last_well[w] = wells[-1]
+
+        # steering: stuck walkers restart from the most novel frames
+        x_next = result.value["x_final"]
+        if self.steer and self.model is not None and self.rng.random() < 0.7:
+            # DeepDriveMD round: restart ensemble members from outliers
+            x_next = self._novel_bank[self.rng.integers(len(self._novel_bank))]
+            x_next = x_next + self.rng.normal(0, 0.1, DIM)
+        self._walker_pos[w] = x_next
+
+        if self.steer and self.chunks_done % self.retrain_every == 0:
+            frames = np.concatenate(self.frames)[-2000:]
+            self.queues.send_inputs(frames, method="train_scorer", topic="default",
+                                    resources=ResourceRequest(pool="ml"))
+        if self.chunks_done >= self.budget:
+            self.done.set()
+            return
+        self._submit(w)
+
+
+def run(steer: bool, budget: int = 120) -> Dict:
+    queues = LocalColmenaQueues()
+    pools = {"md": WorkerPool("md", 4), "ml": WorkerPool("ml", 1),
+             "default": WorkerPool("default", 1)}
+    thinker = MDThinker(queues, budget=budget, steer=steer)
+    server = TaskServer(queues, {"md_chunk": md_chunk, "train_scorer": train_scorer},
+                        pools=pools).start()
+    t0 = time.monotonic()
+    thinker.run(timeout=300)
+    wall = time.monotonic() - t0
+    server.stop()
+    allf = np.concatenate(thinker.frames)
+    hist, _ = np.histogram(allf[:, 0], bins=48, range=(-1.8, 1.8))
+    coverage = float((hist > 0).mean())
+    return {"steered": steer, "transitions": thinker.transitions,
+            "coverage": coverage, "chunks": thinker.chunks_done, "wall_s": wall}
+
+
+def main():
+    base = run(steer=False)
+    steered = run(steer=True)
+    for r in (base, steered):
+        label = "steered  " if r["steered"] else "unsteered"
+        print(f"{label}: coverage={r['coverage']:.2f} transitions={r['transitions']} "
+              f"({r['chunks']} chunks)")
+    print(f"coverage gain: {steered['coverage']/max(base['coverage'],1e-9):.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,157 @@
+"""Molecular design campaign — the paper's flagship application (Fig. 2).
+
+Three task types share a worker fleet:
+  * simulate — evaluates a candidate 'molecule' (synthetic landscape),
+  * train    — refits a JAX ridge surrogate on all results so far,
+  * infer    — scores a large candidate pool with the surrogate
+               (inputs shipped once through the ProxyStore fabric).
+
+The Thinker reallocates resources between simulation and ML when
+retraining triggers, steers further sampling toward surrogate optima,
+and reports the outcome vs. an unsteered random baseline (the paper's
+'+20% high-performing molecules' claim).
+
+Run:  PYTHONPATH=src python examples/molecular_design.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    BatchRetrainThinker,
+    InMemoryConnector,
+    LocalColmenaQueues,
+    ResourceRequest,
+    Store,
+    TaskServer,
+    WorkerPool,
+    stateful_task,
+)
+
+DIM = 8
+THRESH = -1.0
+
+
+def simulate(x: np.ndarray) -> float:
+    time.sleep(0.01)
+    x = np.asarray(x)
+    return float(-np.sum((x - 0.35) ** 2) + 0.05 * np.sin(4 * x).sum())
+
+
+def _features(X):
+    """Quadratic features: the surrogate must capture curvature."""
+    return jnp.concatenate([X, X ** 2, jnp.ones((X.shape[0], 1))], axis=1)
+
+
+def train(X, y) -> np.ndarray:
+    X = jnp.asarray(np.asarray(X))
+    y = jnp.asarray(np.asarray(y))
+    Xb = _features(X)
+    w = jnp.linalg.solve(Xb.T @ Xb + 1e-3 * jnp.eye(Xb.shape[1]), Xb.T @ y)
+    return np.asarray(w)
+
+
+@stateful_task
+def infer(w, pool, registry=None):
+    """Score a candidate pool; the pool rides the fabric and is cached."""
+    fn = registry.get("score_fn")
+    if fn is None:
+        fn = registry["score_fn"] = jax.jit(lambda w, X: _features(X) @ w)
+    scores = fn(jnp.asarray(np.asarray(w)), jnp.asarray(np.asarray(pool)))
+    return np.asarray(scores)
+
+
+class MolecularDesign(BatchRetrainThinker):
+    def __init__(self, queues, store, candidate_pool, **kw):
+        super().__init__(queues, **kw)
+        self.rng = np.random.default_rng(0)
+        self.store = store
+        # bulk ahead-of-time transfer: pool proxied ONCE, reused by every
+        # inference task (the paper's manual-proxy optimization)
+        self.pool_ref = store.proxy(candidate_pool)
+        self.pool = candidate_pool
+        self.w = None
+        self.ranked = None
+
+    def simulate_args(self):
+        r = self.rng.random()
+        if self.database and r < 0.6:
+            # exploit: refine around the best simulations so far
+            top = sorted(self.database, key=lambda rr: -rr.value)[:8]
+            pick = top[self.rng.integers(len(top))]
+            x = np.clip(np.asarray(pick.args[0]) + self.rng.normal(0, 0.15, DIM), -1, 1)
+        elif self.ranked is not None and r < 0.85:
+            # surrogate-ranked candidates from the proxied pool
+            idx = self.ranked[self.rng.integers(0, 32)]
+            x = np.clip(self.pool[idx] + self.rng.normal(0, 0.1, DIM), -1, 1)
+        else:
+            x = self.rng.uniform(-1, 1, DIM)
+        return (x,)
+
+    def make_train_task(self):
+        X = np.stack([np.asarray(r.args[0]) for r in self.database])
+        y = np.asarray([r.value for r in self.database])
+        return (X, y), {}
+
+    def on_train(self, result):
+        if not result.success:
+            return
+        self.w = np.asarray(result.value)
+        # act on new model: launch inference over the full candidate pool
+        self.queues.send_inputs(
+            self.w, self.pool_ref, method="infer", topic="train",
+            resources=ResourceRequest(pool="ml"),
+        )
+
+    from repro.core import result_processor as _rp
+
+    @_rp(topic="train")
+    def receive_training(self, result):  # route infer results too
+        if result.method == "infer":
+            if result.success:
+                self.ranked = np.argsort(-np.asarray(result.value))
+            return
+        # train results: base-class bookkeeping
+        with self._state_lock:
+            self._ml_inflight = max(0, self._ml_inflight - 1)
+        self.train_rounds += 1
+        self.on_train(result)
+        self._maybe_finish()
+
+
+def main(budget: int = 120):
+    rng = np.random.default_rng(1)
+    candidate_pool = rng.uniform(-1, 1, (4096, DIM))
+
+    store = Store("moldesign", InMemoryConnector())
+    queues = LocalColmenaQueues(topics=["simulate", "train"],
+                                proxystore=store, proxy_threshold=10_000)
+    pools = {"simulate": WorkerPool("simulate", 4), "ml": WorkerPool("ml", 1),
+             "default": WorkerPool("default", 1)}
+    thinker = MolecularDesign(
+        queues, store, candidate_pool,
+        n_slots=4, retrain_after=20, max_results=budget, ml_slots=1,
+    )
+    server = TaskServer(queues, {"simulate": simulate, "train": train,
+                                 "infer": infer}, pools=pools).start()
+    t0 = time.monotonic()
+    thinker.run(timeout=300)
+    wall = time.monotonic() - t0
+    server.stop()
+
+    steered_hits = sum(1 for r in thinker.database if r.value > THRESH)
+    base_hits = sum(1 for _ in range(budget)
+                    if simulate(rng.uniform(-1, 1, DIM)) > THRESH)
+    print(f"campaign: {len(thinker.database)} simulations, "
+          f"{thinker.train_rounds} retrains in {wall:.1f}s")
+    print(f"high-performing molecules: steered={steered_hits} random={base_hits} "
+          f"({(steered_hits - base_hits) / max(base_hits, 1) * 100:+.0f}%)")
+    print(f"fabric: {store.metrics.fabric_bytes_out/1e6:.2f} MB moved, "
+          f"{store.metrics.cache_hits} cache hits")
+
+
+if __name__ == "__main__":
+    main()

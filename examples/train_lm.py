@@ -1,0 +1,46 @@
+"""End-to-end driver: Colmena-steered LM training with fault recovery.
+
+Wraps ``repro.launch.train``: trains a reduced gemma-family model for a
+few hundred steps through the full steering stack (chunked train tasks on
+stateful workers, async checkpoints, plateau monitor), then INJECTS a
+node failure mid-run and shows the campaign recovering from the latest
+checkpoint. ``--scale 4`` reaches the ~100M-param end-to-end config on
+real hardware.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 200] [--scale 1]
+"""
+
+import argparse
+import json
+import tempfile
+
+from repro.launch.train import run
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma-2b")
+    ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--scale", type=int, default=1)
+    ap.add_argument("--no-preempt", action="store_true")
+    args = ap.parse_args()
+
+    ckpt_dir = tempfile.mkdtemp(prefix="repro-trainlm-")
+    preempt_at = None if args.no_preempt else args.steps // 2
+    report = run(
+        arch=args.arch, steps=args.steps, scale=args.scale,
+        ckpt_dir=ckpt_dir, ckpt_every=max(20, args.steps // 6),
+        preempt_at=preempt_at,
+    )
+    print(json.dumps(report, indent=2))
+    assert report["final_loss"] < report["first_loss"], "loss must decrease"
+    if preempt_at is not None:
+        assert report["workers_replaced"] >= 1, "recovery path not exercised"
+        print(f"\nsurvived an injected node failure at step {preempt_at}: "
+              f"{report['workers_replaced']} worker(s) replaced, "
+              f"{report['tasks_retried']} task(s) retried, loss "
+              f"{report['first_loss']:.2f} -> {report['final_loss']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

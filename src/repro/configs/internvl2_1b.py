@@ -1,0 +1,20 @@
+"""InternVL2-1B backbone: InternViT (stub) + Qwen2-0.5B LM. [arXiv:2404.16821; hf]"""
+from .base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="internvl2-1b",
+    family="vlm",
+    n_layers=24,
+    d_model=896,
+    n_heads=14,
+    n_kv_heads=2,
+    head_dim=64,
+    d_ff=4864,
+    vocab_size=151_655,
+    activation="swiglu",
+    rope_theta=1_000_000.0,
+    tie_embeddings=True,
+    vision_patches=256,          # stub: precomputed patch embeddings
+    grad_accum=4,
+    sharding="dp_tp",
+))

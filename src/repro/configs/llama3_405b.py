@@ -1,0 +1,24 @@
+"""Llama-3.1-405B: GQA, 128k vocab. [arXiv:2407.21783; unverified]"""
+from .base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="llama3-405b",
+    family="dense",
+    n_layers=126,
+    d_model=16_384,
+    n_heads=128,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=53_248,
+    vocab_size=128_256,
+    activation="swiglu",
+    rope_theta=500_000.0,
+    # 405B on 256 x v5e (16 GB HBM): FSDP+TP, 16 microbatches, factored
+    # optimizer state in bf16, bf16 grad accumulation (see DESIGN.md).
+    sharding="fsdp_tp",
+    grad_accum=16,
+    optimizer="adafactor",
+    opt_state_dtype="bfloat16",
+    grad_accum_dtype="bfloat16",
+    remat="full",
+))

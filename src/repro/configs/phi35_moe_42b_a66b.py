@@ -1,0 +1,20 @@
+"""Phi-3.5-MoE-instruct: 16-expert top-2 MoE. [hf:microsoft/Phi-3.5-MoE-instruct; hf]"""
+from .base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="phi3.5-moe-42b-a6.6b",
+    family="moe",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=6400,                  # per-expert intermediate size
+    vocab_size=32_064,
+    activation="swiglu",
+    rope_theta=10_000.0,
+    n_experts=16,
+    experts_per_token=2,
+    grad_accum=8,
+    sharding="dp_tp",
+))

@@ -1,0 +1,20 @@
+"""Qwen3-30B-A3B: 128-expert top-8 MoE. [hf:Qwen/Qwen3-30B-A3B; hf]"""
+from .base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="qwen3-moe-30b-a3b",
+    family="moe",
+    n_layers=48,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=4,
+    head_dim=128,
+    d_ff=768,                   # per-expert moe_intermediate_size
+    vocab_size=151_936,
+    activation="swiglu",
+    rope_theta=1_000_000.0,
+    n_experts=128,
+    experts_per_token=8,
+    grad_accum=8,
+    sharding="dp_tp",
+))

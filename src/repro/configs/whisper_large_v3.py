@@ -1,0 +1,20 @@
+"""Whisper-large-v3 backbone: enc-dec, conv frontend stubbed. [arXiv:2212.04356; unverified]"""
+from .base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="whisper-large-v3",
+    family="whisper",
+    n_layers=32,                # decoder layers
+    encoder_layers=32,
+    encoder_seq=1500,           # 30 s of audio at 50 Hz (stub frame embeddings)
+    d_model=1280,
+    n_heads=20,
+    n_kv_heads=20,              # MHA
+    head_dim=64,
+    d_ff=5120,
+    vocab_size=51_866,
+    activation="gelu",
+    norm_type="layernorm",
+    grad_accum=4,
+    sharding="dp_tp",
+))

@@ -1,0 +1,81 @@
+"""Colmena-on-JAX core: AI-steered workflow orchestration.
+
+The paper's primary contribution, adapted to a TPU/JAX runtime (see
+DESIGN.md): Thinker agents steer campaigns of jitted computations through
+Task Queues and a Task Server, with a ProxyStore-style data fabric
+keeping bulk tensors off the control path.
+"""
+
+from .executors import FailureInjector, WorkerDied, WorkerPool, stateful_task
+from .proxystore import (
+    Connector,
+    FileConnector,
+    InMemoryConnector,
+    Proxy,
+    Store,
+    apply_threshold,
+    get_store,
+    prefetch_all,
+    resolve_all,
+)
+from .queues import (
+    ColmenaQueues,
+    CompletionNotice,
+    KillSignal,
+    LocalColmenaQueues,
+    PipeColmenaQueues,
+)
+from .result import FailureKind, ResourceRequest, Result, TimingInfo, Timestamps
+from .task_server import RetryPolicy, ServerMetrics, StragglerPolicy, TaskServer, serve_forever
+from .thinker import (
+    BaseThinker,
+    ResourceCounter,
+    agent,
+    event_responder,
+    result_processor,
+    task_submitter,
+)
+from .steering import BatchRetrainThinker, ConstantInflightThinker, PriorityQueueThinker
+from .campaign import Campaign, CampaignReport
+
+__all__ = [
+    "agent",
+    "apply_threshold",
+    "BaseThinker",
+    "BatchRetrainThinker",
+    "Campaign",
+    "CampaignReport",
+    "ColmenaQueues",
+    "CompletionNotice",
+    "Connector",
+    "ConstantInflightThinker",
+    "event_responder",
+    "FailureInjector",
+    "FailureKind",
+    "FileConnector",
+    "get_store",
+    "InMemoryConnector",
+    "KillSignal",
+    "LocalColmenaQueues",
+    "PipeColmenaQueues",
+    "prefetch_all",
+    "PriorityQueueThinker",
+    "Proxy",
+    "resolve_all",
+    "ResourceCounter",
+    "ResourceRequest",
+    "Result",
+    "result_processor",
+    "RetryPolicy",
+    "serve_forever",
+    "ServerMetrics",
+    "stateful_task",
+    "Store",
+    "StragglerPolicy",
+    "task_submitter",
+    "TaskServer",
+    "TimingInfo",
+    "Timestamps",
+    "WorkerDied",
+    "WorkerPool",
+]

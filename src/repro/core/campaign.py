@@ -1,0 +1,172 @@
+"""Campaign driver: ties Thinker + TaskServer together with fault tolerance.
+
+A *campaign* is one AI-steered computational run (the paper's Fig. 2
+molecular-design run is a campaign). The driver owns the lifecycle:
+
+    campaign = Campaign(thinker=..., server=..., state_dir=...)
+    campaign.run()
+
+and supplies the fault-tolerance guarantees a 1000+-node deployment needs
+at this layer:
+
+  * periodic **campaign-state checkpoints** (what finished, what is
+    queued, any user state the Thinker exposes through
+    ``get_state``/``set_state``), written atomically;
+  * **resume**: a restarted campaign reloads the newest checkpoint and
+    re-submits in-flight work (tasks are required to be idempotent, as in
+    the paper's quantum-chemistry/inference workloads);
+  * crash containment: agent/executor exceptions mark the campaign failed
+    without losing the checkpoint history.
+"""
+
+from __future__ import annotations
+
+import json
+import logging
+import os
+import pickle
+import threading
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional
+
+from .task_server import TaskServer
+from .thinker import BaseThinker
+
+logger = logging.getLogger("repro.campaign")
+
+
+@dataclass
+class CampaignReport:
+    completed: bool
+    wall_seconds: float
+    checkpoints_written: int
+    resumed_from: Optional[str]
+    server_metrics: dict
+    queue_metrics: dict
+
+
+class Campaign:
+    def __init__(
+        self,
+        thinker: BaseThinker,
+        server: TaskServer,
+        state_dir: Optional[str] = None,
+        checkpoint_interval_s: float = 5.0,
+        name: str = "campaign",
+    ) -> None:
+        self.thinker = thinker
+        self.server = server
+        self.state_dir = state_dir
+        self.checkpoint_interval_s = checkpoint_interval_s
+        self.name = name
+        self.checkpoints_written = 0
+        self._resumed_from: Optional[str] = None
+        if state_dir:
+            os.makedirs(state_dir, exist_ok=True)
+
+    # ------------------------------------------------------------ checkpoint
+    def _ckpt_path(self, step: int) -> str:
+        return os.path.join(self.state_dir, f"{self.name}-state-{step:06d}.pkl")
+
+    def checkpoint(self) -> Optional[str]:
+        if not self.state_dir:
+            return None
+        get_state = getattr(self.thinker, "get_state", None)
+        state = get_state() if callable(get_state) else {}
+        record = {
+            "time": time.time(),
+            "thinker_state": state,
+            "server_metrics": self.server.metrics.__dict__,
+        }
+        step = self.checkpoints_written
+        path = self._ckpt_path(step)
+        tmp = path + ".tmp"
+        with open(tmp, "wb") as f:
+            pickle.dump(record, f, protocol=pickle.HIGHEST_PROTOCOL)
+        os.replace(tmp, path)  # atomic publish
+        self.checkpoints_written += 1
+        # retain last 3 checkpoints
+        for old in range(step - 3):
+            try:
+                os.remove(self._ckpt_path(old))
+            except FileNotFoundError:
+                pass
+        return path
+
+    def latest_checkpoint(self) -> Optional[str]:
+        if not self.state_dir or not os.path.isdir(self.state_dir):
+            return None
+        cands = sorted(
+            p for p in os.listdir(self.state_dir)
+            if p.startswith(f"{self.name}-state-") and p.endswith(".pkl")
+        )
+        return os.path.join(self.state_dir, cands[-1]) if cands else None
+
+    def try_resume(self) -> bool:
+        path = self.latest_checkpoint()
+        if path is None:
+            return False
+        with open(path, "rb") as f:
+            record = pickle.load(f)
+        set_state = getattr(self.thinker, "set_state", None)
+        if callable(set_state):
+            set_state(record["thinker_state"])
+        self._resumed_from = path
+        logger.info("campaign resumed from %s", path)
+        return True
+
+    # ------------------------------------------------------------------ run
+    def run(self, timeout: Optional[float] = None, resume: bool = True) -> CampaignReport:
+        t0 = time.monotonic()
+        if resume:
+            self.try_resume()
+        self.server.start()
+
+        stop_ckpt = threading.Event()
+
+        def _ckpt_loop() -> None:
+            while not stop_ckpt.is_set():
+                stop_ckpt.wait(self.checkpoint_interval_s)
+                if stop_ckpt.is_set():
+                    break
+                try:
+                    self.checkpoint()
+                except Exception:  # noqa: BLE001 - checkpointing must not kill the run
+                    logger.exception("campaign checkpoint failed")
+
+        ckpt_thread = None
+        if self.state_dir:
+            ckpt_thread = threading.Thread(target=_ckpt_loop, daemon=True, name="campaign-ckpt")
+            ckpt_thread.start()
+
+        completed = False
+        try:
+            self.thinker.run(timeout=timeout)
+            completed = True
+        finally:
+            stop_ckpt.set()
+            if ckpt_thread:
+                ckpt_thread.join(timeout=2)
+            if self.state_dir:
+                try:
+                    self.checkpoint()  # final state
+                except Exception:  # noqa: BLE001
+                    logger.exception("final campaign checkpoint failed")
+            self.queues_kill()
+            self.server.stop()
+
+        return CampaignReport(
+            completed=completed,
+            wall_seconds=time.monotonic() - t0,
+            checkpoints_written=self.checkpoints_written,
+            resumed_from=self._resumed_from,
+            server_metrics=dict(self.server.metrics.__dict__),
+            queue_metrics=dict(self.thinker.queues.metrics.__dict__),
+        )
+
+    def queues_kill(self) -> None:
+        try:
+            self.thinker.queues.send_kill_signal()
+        except Exception:  # noqa: BLE001
+            pass

@@ -1,0 +1,229 @@
+"""Worker pools: the execution substrate under the Task Server.
+
+Workers are long-lived, *stateful* slots — the paper's "intelligent
+initialization" lesson: each worker owns a ``registry`` dict that caches
+expensive objects (deserialized models, compiled JAX functions, lookup
+tables) between task invocations, instead of reloading per task. Task
+functions opt in with the ``@stateful_task`` decorator, which injects the
+worker registry as a keyword argument.
+
+The pool also provides the failure surface used for fault-tolerance
+testing: probabilistic task failures, explicit worker kills (node loss),
+per-worker slowdowns (stragglers / heterogeneous nodes), heartbeats, and
+elastic resize.
+"""
+
+from __future__ import annotations
+
+import logging
+import queue
+import random
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+from .proxystore import prefetch_all, resolve_all
+from .result import FailureKind, Result
+
+logger = logging.getLogger("repro.executors")
+
+
+def stateful_task(fn: Callable) -> Callable:
+    """Mark a task function as wanting the worker registry injected as the
+    keyword argument ``registry`` (worker-side cache between invocations)."""
+    fn._wants_registry = True
+    return fn
+
+
+class WorkerDied(RuntimeError):
+    """Raised inside a worker when failure injection kills the 'node'."""
+
+
+@dataclass
+class FailureInjector:
+    """Deterministic failure/straggler injection for tests and benchmarks."""
+
+    task_failure_rate: float = 0.0      # P(task raises WorkerDied)
+    seed: int = 0
+    # worker_id -> extra seconds added to every task (straggling node)
+    slow_workers: Dict[int, float] = field(default_factory=dict)
+    # worker ids that die permanently the next time they pick up a task
+    doomed_workers: set = field(default_factory=set)
+
+    def __post_init__(self) -> None:
+        self._rng = random.Random(self.seed)
+        self._lock = threading.Lock()
+
+    def before_task(self, worker_id: int, result: Result) -> None:
+        with self._lock:
+            if worker_id in self.doomed_workers:
+                self.doomed_workers.discard(worker_id)
+                raise WorkerDied(f"worker {worker_id} lost (injected node failure)")
+            if self.task_failure_rate and self._rng.random() < self.task_failure_rate:
+                raise WorkerDied(f"task {result.task_id} lost to injected failure")
+
+    def after_task(self, worker_id: int) -> None:
+        delay = self.slow_workers.get(worker_id, 0.0)
+        if delay > 0:
+            time.sleep(delay)
+
+
+@dataclass
+class WorkerState:
+    worker_id: int
+    busy: bool = False
+    alive: bool = True
+    current_task: Optional[str] = None
+    last_heartbeat: float = field(default_factory=time.monotonic)
+    tasks_done: int = 0
+    registry: Dict[str, Any] = field(default_factory=dict)
+
+
+class WorkerPool:
+    """A named pool of stateful worker threads executing Results.
+
+    ``submit(result, fn, on_done)`` enqueues work; a free worker runs
+    ``fn(*result.args, **result.kwargs)`` and invokes ``on_done(result)``.
+    Proxies in the args are prefetched (async resolution) before the call
+    so fabric I/O overlaps any remaining queue wait.
+    """
+
+    def __init__(
+        self,
+        name: str = "default",
+        n_workers: int = 4,
+        injector: Optional[FailureInjector] = None,
+        prefetch_proxies: bool = True,
+    ) -> None:
+        self.name = name
+        self.injector = injector or FailureInjector()
+        self.prefetch_proxies = prefetch_proxies
+        self._queue: "queue.Queue[Any]" = queue.Queue()
+        self._workers: Dict[int, WorkerState] = {}
+        self._threads: Dict[int, threading.Thread] = {}
+        self._next_id = 0
+        self._lock = threading.Lock()
+        self._shutdown = threading.Event()
+        self.add_workers(n_workers)
+
+    # --------------------------------------------------------------- sizing
+    @property
+    def n_workers(self) -> int:
+        with self._lock:
+            return sum(1 for w in self._workers.values() if w.alive)
+
+    def add_workers(self, n: int) -> List[int]:
+        """Elastic scale-up."""
+        ids = []
+        for _ in range(n):
+            with self._lock:
+                wid = self._next_id
+                self._next_id += 1
+                state = WorkerState(worker_id=wid)
+                self._workers[wid] = state
+            t = threading.Thread(
+                target=self._worker_loop, args=(state,), daemon=True,
+                name=f"{self.name}-worker-{wid}",
+            )
+            self._threads[wid] = t
+            t.start()
+            ids.append(wid)
+        return ids
+
+    def remove_workers(self, n: int) -> None:
+        """Elastic scale-down: poison-pill ``n`` workers (they exit after
+        finishing their current task)."""
+        for _ in range(n):
+            self._queue.put(None)
+
+    def kill_worker(self, worker_id: int) -> None:
+        """Simulate immediate node loss: mark dead; the heartbeat monitor /
+        in-flight bookkeeping treats its running task as failed."""
+        with self._lock:
+            w = self._workers.get(worker_id)
+            if w:
+                w.alive = False
+
+    # --------------------------------------------------------------- submit
+    def submit(self, result: Result, fn: Callable, on_done: Callable[[Result], None]) -> None:
+        result.mark("dispatched")
+        if self.prefetch_proxies:
+            prefetch_all(result.args)
+            prefetch_all(result.kwargs)
+        self._queue.put((result, fn, on_done))
+
+    def queued(self) -> int:
+        return self._queue.qsize()
+
+    # ----------------------------------------------------------- worker loop
+    def _worker_loop(self, state: WorkerState) -> None:
+        while not self._shutdown.is_set():
+            try:
+                item = self._queue.get(timeout=0.05)
+            except queue.Empty:
+                state.last_heartbeat = time.monotonic()
+                continue
+            if item is None:  # poison pill (scale-down)
+                with self._lock:
+                    state.alive = False
+                return
+            result, fn, on_done = item
+            if not state.alive:  # killed while idle: drop back and exit
+                self._queue.put(item)
+                return
+            state.busy = True
+            state.current_task = result.task_id
+            state.last_heartbeat = time.monotonic()
+            result.worker_id = state.worker_id
+            result.mark("compute_started")
+            try:
+                self.injector.before_task(state.worker_id, result)
+                wants_reg = getattr(fn, "_wants_registry", False)
+                args = resolve_all(result.args)
+                kwargs = resolve_all(result.kwargs)
+                if wants_reg:
+                    kwargs = dict(kwargs)
+                    kwargs["registry"] = state.registry
+                value = fn(*args, **kwargs)
+                self.injector.after_task(state.worker_id)
+                result.mark("compute_ended")
+                result.set_success(value)
+            except WorkerDied as exc:
+                result.mark("compute_ended")
+                result.set_failure(FailureKind.WORKER_DIED, str(exc))
+                with self._lock:
+                    state.alive = False
+                state.busy = False
+                try:
+                    on_done(result)
+                finally:
+                    pass
+                return  # the 'node' is gone; thread exits
+            except Exception as exc:  # noqa: BLE001 - task exception
+                result.mark("compute_ended")
+                result.set_failure(FailureKind.EXCEPTION, f"{type(exc).__name__}: {exc}")
+            state.busy = False
+            state.current_task = None
+            state.tasks_done += 1
+            state.last_heartbeat = time.monotonic()
+            on_done(result)
+
+    # ------------------------------------------------------------ monitoring
+    def worker_states(self) -> List[WorkerState]:
+        with self._lock:
+            return list(self._workers.values())
+
+    def dead_workers(self, heartbeat_timeout_s: float = 5.0) -> List[WorkerState]:
+        now = time.monotonic()
+        out = []
+        with self._lock:
+            for w in self._workers.values():
+                if not w.alive:
+                    out.append(w)
+                elif w.busy and now - w.last_heartbeat > heartbeat_timeout_s:
+                    out.append(w)
+        return out
+
+    def shutdown(self) -> None:
+        self._shutdown.set()

@@ -1,0 +1,180 @@
+"""Result objects: the unit of communication between Thinker and Task Server.
+
+Reproduces Colmena's ``Result`` record: it carries the task definition
+(method name + args), resource requirements, free-form ``task_info``
+metadata, and — critically for the paper's evaluation — a full timestamp
+ledger from which the three latencies of the proxy application
+(reaction / decision / dispatch, Fig. 7) are derived.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+import uuid
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Any, Optional
+
+_TASK_COUNTER = itertools.count()
+
+
+class FailureKind(str, Enum):
+    """Why a task failed (used by the TaskServer retry policy)."""
+
+    NONE = "none"
+    EXCEPTION = "exception"          # task function raised
+    WORKER_DIED = "worker_died"      # simulated node failure / heartbeat loss
+    TIMEOUT = "timeout"              # exceeded wall-time limit
+    CANCELLED = "cancelled"          # superseded by a speculative copy
+    SERIALIZATION = "serialization"  # could not (de)serialize payload
+
+
+@dataclass
+class ResourceRequest:
+    """Resources a task needs; mirrors Colmena's per-task resource hints.
+
+    ``pool`` routes the task to a named executor/worker pool (the paper's
+    multi-resource deployments: simulation on Theta CPUs, ML on a GPU
+    cluster).  ``slots`` is the number of worker slots (nodes) consumed.
+    """
+
+    pool: str = "default"
+    slots: int = 1
+    # Wall-time limit in seconds; None = unlimited. Drives TIMEOUT failures.
+    timeout_s: Optional[float] = None
+    # Allow speculative re-execution if this task looks like a straggler.
+    speculative_ok: bool = True
+
+
+@dataclass
+class Timestamps:
+    """Every hop of a task's life, in ``time.monotonic()`` seconds.
+
+    The proxy application defines:
+      * reaction  = result_received - compute_ended   (completion -> Thinker)
+      * decision  = next_submitted - result_received  (Thinker thinks)
+      * dispatch  = compute_started - created         (request -> node)
+    """
+
+    created: Optional[float] = None           # Thinker built the request
+    input_proxied: Optional[float] = None     # big inputs swapped for proxies
+    queued: Optional[float] = None            # pushed onto the task queue
+    picked_up: Optional[float] = None         # TaskServer popped it
+    dispatched: Optional[float] = None        # handed to an executor slot
+    compute_started: Optional[float] = None   # worker began running
+    compute_ended: Optional[float] = None     # worker finished running
+    result_proxied: Optional[float] = None    # big outputs swapped for proxies
+    returned: Optional[float] = None          # pushed onto the result queue
+    completion_notified: Optional[float] = None  # act-on-completion signal seen
+    result_received: Optional[float] = None   # Thinker popped the result
+    decision_made: Optional[float] = None     # Thinker finished reacting
+
+
+@dataclass
+class TimingInfo:
+    """Derived timings (seconds) — populated by ``Result.finalize_timings``."""
+
+    dispatch: Optional[float] = None
+    compute: Optional[float] = None
+    reaction: Optional[float] = None
+    decision: Optional[float] = None
+    total: Optional[float] = None
+    # Bytes that flowed through the control channel vs. the data fabric.
+    control_bytes: int = 0
+    fabric_bytes: int = 0
+    serialization_s: float = 0.0
+    deserialization_s: float = 0.0
+
+
+@dataclass
+class Result:
+    """A task request and (eventually) its outcome."""
+
+    method: str
+    args: tuple = ()
+    kwargs: dict = field(default_factory=dict)
+    task_info: dict = field(default_factory=dict)
+    resources: ResourceRequest = field(default_factory=ResourceRequest)
+    topic: str = "default"
+
+    task_id: str = field(default_factory=lambda: f"task-{next(_TASK_COUNTER):08d}-{uuid.uuid4().hex[:8]}")
+    value: Any = None
+    success: Optional[bool] = None
+    failure: FailureKind = FailureKind.NONE
+    failure_info: Optional[str] = None
+    retries: int = 0
+    worker_id: Optional[int] = None
+    speculative: bool = False
+
+    time: Timestamps = field(default_factory=Timestamps)
+    timing: TimingInfo = field(default_factory=TimingInfo)
+
+    # ------------------------------------------------------------------ marks
+    def mark(self, name: str) -> None:
+        setattr(self.time, name, time.monotonic())
+
+    # ---------------------------------------------------------------- success
+    def set_success(self, value: Any) -> None:
+        self.value = value
+        self.success = True
+        self.failure = FailureKind.NONE
+        self.failure_info = None
+
+    def set_failure(self, kind: FailureKind, info: str) -> None:
+        self.value = None
+        self.success = False
+        self.failure = kind
+        self.failure_info = info
+
+    # ---------------------------------------------------------------- timings
+    def finalize_timings(self) -> TimingInfo:
+        t = self.time
+        g = self.timing
+
+        def span(a: Optional[float], b: Optional[float]) -> Optional[float]:
+            return (b - a) if (a is not None and b is not None) else None
+
+        g.dispatch = span(t.created, t.compute_started)
+        g.compute = span(t.compute_started, t.compute_ended)
+        g.reaction = span(t.compute_ended, t.completion_notified or t.result_received)
+        g.decision = span(t.result_received, t.decision_made)
+        g.total = span(t.created, t.decision_made or t.result_received)
+        return g
+
+    # ------------------------------------------------------------------ misc
+    def clone_for_retry(self) -> "Result":
+        """Fresh copy for re-submission after a failure (new timestamps)."""
+        new = Result(
+            method=self.method,
+            args=self.args,
+            kwargs=dict(self.kwargs),
+            task_info=dict(self.task_info),
+            resources=dataclasses.replace(self.resources),
+            topic=self.topic,
+        )
+        new.retries = self.retries + 1
+        return new
+
+    def clone_for_speculation(self) -> "Result":
+        """Copy used for straggler mitigation; keeps the same task_id so the
+        first finisher wins and the loser is dropped."""
+        new = Result(
+            method=self.method,
+            args=self.args,
+            kwargs=dict(self.kwargs),
+            task_info=dict(self.task_info),
+            resources=dataclasses.replace(self.resources),
+            topic=self.topic,
+        )
+        new.task_id = self.task_id
+        new.speculative = True
+        new.retries = self.retries
+        return new
+
+    def __repr__(self) -> str:  # keep logs short; args may be huge
+        return (
+            f"Result(id={self.task_id}, method={self.method}, topic={self.topic}, "
+            f"success={self.success}, retries={self.retries})"
+        )

@@ -1,0 +1,249 @@
+"""Steering-policy templates: the paper's "Templates for Common Patterns".
+
+The paper observes that although Thinkers are free-form, applications
+repeat a handful of patterns. This module provides tuned implementations:
+
+  * ``ConstantInflightThinker`` — the proxy application's policy: keep a
+    constant number of tasks in flight, launching a replacement the
+    moment one completes (used by benchmarks/proxy_app.py).
+  * ``PriorityQueueThinker`` — an agent submits the top entry of a
+    priority queue whenever resources free, while result processors
+    re-rank the queue from completed computations (the paper's canonical
+    template example).
+  * ``BatchRetrainThinker`` — the molecular-design pattern (Fig. 2):
+    simulate continuously; once N new results arrive, shift resources to
+    retraining + inference, then push fresh priorities back to the queue.
+
+All templates subclass ``BaseThinker`` and can be further subclassed;
+hooks (``score``, ``on_result`` …) are the extension points.
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+import threading
+import time
+from typing import Any, Callable, Iterable, List, Optional, Sequence, Tuple
+
+from .queues import ColmenaQueues
+from .result import ResourceRequest, Result
+from .thinker import BaseThinker, ResourceCounter, agent, event_responder, result_processor, task_submitter
+
+
+class ConstantInflightThinker(BaseThinker):
+    """Maintain exactly ``n_parallel`` tasks in flight until a work list is
+    exhausted — the paper's proxy application."""
+
+    def __init__(
+        self,
+        queues: ColmenaQueues,
+        work: Sequence[Tuple[tuple, dict]],
+        method: str,
+        n_parallel: int,
+        topic: str = "default",
+        pool: str = "default",
+    ) -> None:
+        super().__init__(queues, ResourceCounter(n_parallel))
+        self._work = list(work)
+        self._method = method
+        self._topic = topic
+        self._pool = pool
+        self._next = 0
+        self._outstanding = 0
+        self._lock = threading.Lock()
+        self.results: List[Result] = []
+
+    def _submit_next(self) -> bool:
+        with self._lock:
+            if self._next >= len(self._work):
+                return False
+            args, kwargs = self._work[self._next]
+            self._next += 1
+            self._outstanding += 1
+        self.queues.send_inputs(
+            *args, method=self._method, topic=self._topic,
+            keyword_args=kwargs, resources=ResourceRequest(pool=self._pool),
+        )
+        return True
+
+    @agent(startup=True)
+    def startup(self) -> None:
+        for _ in range(min(self.rec.total_slots, len(self._work))):
+            self._submit_next()
+
+    @result_processor()
+    def on_result(self, result: Result) -> None:
+        self.results.append(result)
+        submitted = self._submit_next()
+        with self._lock:
+            self._outstanding -= 1
+            drained = self._outstanding == 0 and self._next >= len(self._work)
+        if drained and not submitted:
+            self.done.set()
+
+
+class PriorityQueueThinker(BaseThinker):
+    """Submit-from-priority-queue + re-rank-on-result template."""
+
+    def __init__(
+        self,
+        queues: ColmenaQueues,
+        method: str,
+        n_slots: int,
+        topic: str = "default",
+        max_tasks: Optional[int] = None,
+    ) -> None:
+        super().__init__(queues, ResourceCounter(n_slots))
+        self.method = method
+        self.topic = topic
+        self.max_tasks = max_tasks
+        self._heap: List[Tuple[float, int, tuple, dict]] = []
+        self._tie = itertools.count()
+        self._heap_lock = threading.Lock()
+        self._completed = 0
+        self.results: List[Result] = []
+
+    # -------------------------------------------------------------- queue ops
+    def push(self, args: tuple, kwargs: Optional[dict] = None, priority: float = 0.0) -> None:
+        """Lower priority value = run sooner."""
+        with self._heap_lock:
+            heapq.heappush(self._heap, (priority, next(self._tie), args, kwargs or {}))
+
+    def pending(self) -> int:
+        with self._heap_lock:
+            return len(self._heap)
+
+    # --------------------------------------------------------------- agents
+    @task_submitter(task_type="default", n_slots=1)
+    def submit_next(self) -> None:
+        item = None
+        with self._heap_lock:
+            if self._heap:
+                item = heapq.heappop(self._heap)
+        if item is None:
+            self.rec.release("default", 1)
+            time.sleep(0.01)
+            return
+        _, _, args, kwargs = item
+        self.queues.send_inputs(*args, method=self.method, topic=self.topic, keyword_args=kwargs)
+
+    @result_processor()
+    def on_result_internal(self, result: Result) -> None:
+        self.rec.release("default", 1)
+        self.results.append(result)
+        self._completed += 1
+        self.on_result(result)
+        if self.max_tasks is not None and self._completed >= self.max_tasks:
+            self.done.set()
+
+    # ---------------------------------------------------------------- hooks
+    def on_result(self, result: Result) -> None:
+        """Override: inspect result, push new work / re-rank."""
+
+
+class BatchRetrainThinker(BaseThinker):
+    """Simulate continuously; retrain + re-infer when enough data arrives.
+
+    Hooks: ``simulate_args()`` yields task args; ``retrain(results)``
+    returns new task priorities (list of (args, priority)).
+    """
+
+    def __init__(
+        self,
+        queues: ColmenaQueues,
+        n_slots: int,
+        retrain_after: int,
+        simulate_method: str = "simulate",
+        train_method: str = "train",
+        infer_method: str = "infer",
+        ml_slots: int = 1,
+        max_results: Optional[int] = None,
+    ) -> None:
+        rec = ResourceCounter(n_slots, pools=["simulate", "ml"])
+        rec.reallocate("simulate", "ml", min(ml_slots, n_slots))
+        super().__init__(queues, rec)
+        self.retrain_after = retrain_after
+        self.simulate_method = simulate_method
+        self.train_method = train_method
+        self.infer_method = infer_method
+        self.max_results = max_results
+        self._new_since_train = 0
+        self._total = 0
+        self._ml_inflight = 0
+        self._drain = False
+        self._state_lock = threading.Lock()
+        self.train_rounds = 0
+        self.database: List[Result] = []
+
+    def _maybe_finish(self) -> None:
+        """Finish only when the sim budget is spent AND no ML task is in
+        flight — otherwise the final retrain's result would be dropped."""
+        with self._state_lock:
+            ready = self._drain and self._ml_inflight == 0
+        if ready:
+            self.done.set()
+
+    # ---------------------------------------------------------------- hooks
+    def simulate_args(self) -> tuple:
+        raise NotImplementedError
+
+    def on_simulation(self, result: Result) -> None:
+        pass
+
+    def make_train_task(self) -> Tuple[tuple, dict]:
+        raise NotImplementedError
+
+    def on_train(self, result: Result) -> None:
+        pass
+
+    # --------------------------------------------------------------- agents
+    @task_submitter(task_type="simulate", n_slots=1)
+    def submit_simulation(self) -> None:
+        with self._state_lock:
+            drained = self._drain
+        if drained:   # budget spent: stop feeding the pool
+            self.rec.release("simulate", 1)
+            time.sleep(0.01)
+            return
+        args = self.simulate_args()
+        self.queues.send_inputs(
+            *args, method=self.simulate_method, topic="simulate",
+            resources=ResourceRequest(pool="simulate"),
+        )
+
+    @result_processor(topic="simulate")
+    def receive_simulation(self, result: Result) -> None:
+        self.rec.release("simulate", 1)
+        if result.success:
+            self.database.append(result)
+            self._new_since_train += 1
+            self._total += 1
+            self.on_simulation(result)
+            with self._state_lock:
+                drained = self._drain
+            if self._new_since_train >= self.retrain_after and not drained:
+                self._new_since_train = 0
+                self.set_event("retrain")
+        if self.max_results is not None and self._total >= self.max_results:
+            with self._state_lock:
+                self._drain = True
+            self._maybe_finish()
+
+    @event_responder(event_name="retrain")
+    def run_training(self) -> None:
+        args, kwargs = self.make_train_task()
+        with self._state_lock:
+            self._ml_inflight += 1
+        self.queues.send_inputs(
+            *args, method=self.train_method, topic="train",
+            keyword_args=kwargs, resources=ResourceRequest(pool="ml"),
+        )
+
+    @result_processor(topic="train")
+    def receive_training(self, result: Result) -> None:
+        with self._state_lock:
+            self._ml_inflight = max(0, self._ml_inflight - 1)
+        self.train_rounds += 1
+        self.on_train(result)
+        self._maybe_finish()

@@ -1,0 +1,263 @@
+"""The Task Server: stewards execution of tasks requested by the Thinker.
+
+Reproduces Colmena's Task Server abstraction — it pulls task requests
+from the queues, routes them to an execution backend, and pushes
+completed ``Result`` objects back — and layers on the reliability
+machinery a 1000+-node deployment needs:
+
+  * **pluggable executors**: named ``WorkerPool``s (the paper's
+    multi-resource deployments — e.g. a "sim" pool for simulation tasks
+    and an "ml" pool on accelerator nodes — selected per-task through
+    ``ResourceRequest.pool``);
+  * **retries with backoff** for tasks lost to node failures;
+  * **heartbeat monitoring** that detects dead/silent workers, fails over
+    their in-flight tasks, and replaces the 'node' (elastic recovery);
+  * **straggler mitigation**: speculative re-execution of tasks running
+    far beyond the historical duration for their method — first finisher
+    wins, the copy is dropped;
+  * **timeouts** per task.
+
+The server runs as a thread by default (1 process on this container) but
+the same class runs under ``multiprocessing`` with ``PipeColmenaQueues``
+— the deployment shape in the paper.
+"""
+
+from __future__ import annotations
+
+import logging
+import statistics
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+from .executors import FailureInjector, WorkerPool
+from .queues import ColmenaQueues, KillSignal
+from .result import FailureKind, Result
+
+logger = logging.getLogger("repro.task_server")
+
+
+@dataclass
+class RetryPolicy:
+    max_retries: int = 2
+    backoff_s: float = 0.0          # base backoff (doubles per retry)
+    retry_on: tuple = (FailureKind.WORKER_DIED, FailureKind.TIMEOUT)
+
+
+@dataclass
+class StragglerPolicy:
+    enabled: bool = True
+    # speculate when runtime > factor * median(method history)
+    factor: float = 3.0
+    min_history: int = 5
+    check_interval_s: float = 0.25
+
+
+@dataclass
+class ServerMetrics:
+    tasks_received: int = 0
+    tasks_completed: int = 0
+    tasks_failed: int = 0
+    tasks_retried: int = 0
+    speculative_launched: int = 0
+    speculative_wins: int = 0
+    workers_replaced: int = 0
+
+
+@dataclass
+class _InFlight:
+    result: Result
+    started: float
+    pool: str
+    speculated: bool = False
+    done: bool = False
+
+
+class TaskServer:
+    """Dispatch loop + reliability machinery over one or more WorkerPools."""
+
+    def __init__(
+        self,
+        queues: ColmenaQueues,
+        methods: Dict[str, Callable],
+        pools: Optional[Dict[str, WorkerPool]] = None,
+        n_workers: int = 4,
+        retry: Optional[RetryPolicy] = None,
+        straggler: Optional[StragglerPolicy] = None,
+        injector: Optional[FailureInjector] = None,
+        heartbeat_timeout_s: float = 10.0,
+        replace_dead_workers: bool = True,
+    ) -> None:
+        self.queues = queues
+        self.methods = dict(methods)
+        self.pools = pools or {"default": WorkerPool("default", n_workers, injector=injector)}
+        self.retry = retry or RetryPolicy()
+        self.straggler = straggler or StragglerPolicy()
+        self.heartbeat_timeout_s = heartbeat_timeout_s
+        self.replace_dead_workers = replace_dead_workers
+        self.metrics = ServerMetrics()
+
+        self._inflight: Dict[str, _InFlight] = {}
+        self._inflight_lock = threading.Lock()
+        self._history: Dict[str, List[float]] = {}
+        self._stop = threading.Event()
+        self._threads: List[threading.Thread] = []
+
+    # ------------------------------------------------------------ lifecycle
+    def start(self) -> "TaskServer":
+        main = threading.Thread(target=self._dispatch_loop, daemon=True, name="task-server")
+        main.start()
+        self._threads.append(main)
+        mon = threading.Thread(target=self._monitor_loop, daemon=True, name="task-server-monitor")
+        mon.start()
+        self._threads.append(mon)
+        return self
+
+    def run(self) -> None:
+        """Blocking variant (for running inside a dedicated process)."""
+        self.start()
+        self.join()
+
+    def join(self, timeout: Optional[float] = None) -> None:
+        self._threads[0].join(timeout=timeout)
+
+    def stop(self) -> None:
+        self._stop.set()
+        for p in self.pools.values():
+            p.shutdown()
+
+    # -------------------------------------------------------------- dispatch
+    def _dispatch_loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                task = self.queues.get_task(timeout=0.05)
+            except KillSignal:
+                logger.info("kill signal received; stopping task server")
+                self.stop()
+                return
+            if task is None:
+                continue
+            self.metrics.tasks_received += 1
+            self._dispatch(task)
+
+    def _dispatch(self, task: Result) -> None:
+        fn = self.methods.get(task.method)
+        if fn is None:
+            task.set_failure(FailureKind.EXCEPTION, f"unknown method {task.method!r}")
+            self.queues.send_result(task)
+            self.metrics.tasks_failed += 1
+            return
+        pool_name = task.resources.pool if task.resources.pool in self.pools else "default"
+        pool = self.pools[pool_name]
+        with self._inflight_lock:
+            # Speculative copies share a task_id with the original.
+            if task.task_id not in self._inflight:
+                self._inflight[task.task_id] = _InFlight(result=task, started=time.monotonic(), pool=pool_name)
+        pool.submit(task, fn, self._on_done)
+
+    # ------------------------------------------------------------ completion
+    def _on_done(self, result: Result) -> None:
+        with self._inflight_lock:
+            entry = self._inflight.get(result.task_id)
+            if entry is not None and entry.done:
+                # A speculative twin already finished; drop this copy.
+                if result.speculative or entry.speculated:
+                    logger.info("dropping late copy of %s", result.task_id)
+                return
+            if entry is not None:
+                entry.done = True
+                del self._inflight[result.task_id]
+                if result.speculative:
+                    self.metrics.speculative_wins += 1
+
+        if result.success:
+            dur = (result.time.compute_ended or 0) - (result.time.compute_started or 0)
+            self._history.setdefault(result.method, []).append(dur)
+            self.metrics.tasks_completed += 1
+            self.queues.send_result(result)
+            return
+
+        # Failure path: maybe retry.
+        if (
+            result.failure in self.retry.retry_on
+            and result.retries < self.retry.max_retries
+        ):
+            self.metrics.tasks_retried += 1
+            backoff = self.retry.backoff_s * (2 ** result.retries)
+            if backoff:
+                time.sleep(backoff)
+            retry = result.clone_for_retry()
+            retry.mark("created")
+            logger.info("retrying %s (attempt %d) after %s", result.task_id, retry.retries, result.failure)
+            self._dispatch(retry)
+            return
+
+        self.metrics.tasks_failed += 1
+        self.queues.send_result(result)
+
+    # -------------------------------------------------------------- monitors
+    def _monitor_loop(self) -> None:
+        while not self._stop.is_set():
+            time.sleep(self.straggler.check_interval_s)
+            self._check_heartbeats()
+            if self.straggler.enabled:
+                self._check_stragglers()
+
+    def _check_heartbeats(self) -> None:
+        for name, pool in self.pools.items():
+            for w in pool.dead_workers(self.heartbeat_timeout_s):
+                if w.current_task:
+                    with self._inflight_lock:
+                        entry = self._inflight.pop(w.current_task, None)
+                    if entry is not None and not entry.done:
+                        failed = entry.result
+                        failed.set_failure(
+                            FailureKind.WORKER_DIED,
+                            f"worker {w.worker_id} heartbeat lost",
+                        )
+                        failed.mark("compute_ended")
+                        w.current_task = None
+                        self._on_done(failed)
+                if self.replace_dead_workers and not w.alive:
+                    with pool._lock:
+                        still_there = w.worker_id in pool._workers
+                        if still_there:
+                            del pool._workers[w.worker_id]
+                    if still_there:
+                        pool.add_workers(1)
+                        self.metrics.workers_replaced += 1
+                        logger.info("replaced dead worker %d in pool %s", w.worker_id, name)
+
+    def _check_stragglers(self) -> None:
+        now = time.monotonic()
+        with self._inflight_lock:
+            entries = list(self._inflight.values())
+        for entry in entries:
+            if entry.done or entry.speculated or not entry.result.resources.speculative_ok:
+                continue
+            hist = self._history.get(entry.result.method, [])
+            if len(hist) < self.straggler.min_history:
+                continue
+            median = statistics.median(hist[-50:])
+            if median <= 0:
+                continue
+            if now - entry.started > self.straggler.factor * median:
+                pool = self.pools[entry.pool]
+                if pool.queued() > 0:
+                    continue  # no spare capacity; don't pile on
+                entry.speculated = True
+                copy = entry.result.clone_for_speculation()
+                copy.mark("created")
+                self.metrics.speculative_launched += 1
+                logger.info(
+                    "straggler: %s running %.2fs > %.1fx median %.2fs; speculating",
+                    entry.result.task_id, now - entry.started, self.straggler.factor, median,
+                )
+                fn = self.methods[copy.method]
+                pool.submit(copy, fn, self._on_done)
+
+
+def serve_forever(queues: ColmenaQueues, methods: Dict[str, Callable], **kwargs) -> None:
+    """Entry point for running a TaskServer in a separate process."""
+    TaskServer(queues, methods, **kwargs).run()

@@ -1,0 +1,347 @@
+"""The Thinker: Colmena's agent-based steering programming model.
+
+A Thinker is a Python object whose decorated methods run as cooperating
+threads ("agents") once ``run()`` is called. The four agent types from
+the paper:
+
+  1. ``@agent`` — starts at application start; runs until it returns
+     (``startup=True`` marks short-lived initializers). When a *critical*
+     agent returns, the whole Thinker begins shutdown (``done`` is set).
+  2. ``@result_processor(topic=...)`` — invoked once per completed task on
+     a topic, receiving the ``Result``. ``on="completion"`` subscribes to
+     the act-on-completion notices instead (react before data arrives).
+  3. ``@event_responder(event_name=...)`` — invoked when a named
+     ``threading.Event`` on the Thinker is set; can optionally reallocate
+     resources between task pools for the duration of the response.
+  4. ``@task_submitter(task_type=..., n_slots=...)`` — invoked whenever
+     the ``ResourceCounter`` has ``n_slots`` free in the given pool; the
+     body is expected to submit work that occupies those slots.
+
+Coordination uses only the standard ``threading`` library (Events,
+Conditions), exactly as the paper prescribes — steering logic is meant to
+be ms-scale, so the GIL is not a limiter.
+"""
+
+from __future__ import annotations
+
+import logging
+import threading
+import time
+from functools import update_wrapper
+from typing import Any, Callable, Dict, List, Optional
+
+from .queues import ColmenaQueues
+from .result import Result
+
+logger = logging.getLogger("repro.thinker")
+
+_POLL_S = 0.02  # agent wakeup granularity while waiting on queues/events
+
+
+# --------------------------------------------------------------------------
+# Resource tracking
+# --------------------------------------------------------------------------
+
+
+class ResourceCounter:
+    """Semaphore-style tracker of worker slots split across task pools.
+
+    Reproduces Colmena's resource tracker: agents ``acquire`` slots before
+    submitting work, ``release`` when results return, and ``reallocate``
+    moves capacity between pools mid-run (e.g., shift nodes from
+    simulation to inference when a new model lands — Fig. 2's behaviour).
+    """
+
+    def __init__(self, total_slots: int, pools: Optional[List[str]] = None) -> None:
+        self._cond = threading.Condition()
+        self._pools: Dict[str, int] = {}
+        pools = pools or ["default"]
+        self._pools = {p: 0 for p in pools}
+        self._pools[pools[0]] = total_slots
+        self._total = total_slots
+
+    @property
+    def total_slots(self) -> int:
+        return self._total
+
+    def pools(self) -> List[str]:
+        with self._cond:
+            return list(self._pools)
+
+    def available(self, pool: str = "default") -> int:
+        with self._cond:
+            return self._pools.get(pool, 0)
+
+    def add_pool(self, pool: str, slots: int = 0) -> None:
+        with self._cond:
+            self._pools.setdefault(pool, 0)
+            self._pools[pool] += slots
+            self._total += slots
+            self._cond.notify_all()
+
+    def grow(self, pool: str, slots: int) -> None:
+        """Elastic scale-up: new capacity appears in ``pool``."""
+        with self._cond:
+            self._pools[pool] = self._pools.get(pool, 0) + slots
+            self._total += slots
+            self._cond.notify_all()
+
+    def shrink(self, pool: str, slots: int, timeout: Optional[float] = None) -> bool:
+        """Elastic scale-down: remove capacity once it is idle."""
+        if not self.acquire(pool, slots, timeout=timeout):
+            return False
+        with self._cond:
+            self._total -= slots
+        return True
+
+    def acquire(
+        self,
+        pool: str,
+        n: int = 1,
+        timeout: Optional[float] = None,
+        stop_event: Optional[threading.Event] = None,
+    ) -> bool:
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cond:
+            while self._pools.get(pool, 0) < n:
+                if stop_event is not None and stop_event.is_set():
+                    return False
+                remaining = _POLL_S
+                if deadline is not None:
+                    remaining = min(remaining, deadline - time.monotonic())
+                    if remaining <= 0:
+                        return False
+                self._cond.wait(remaining)
+            self._pools[pool] -= n
+            return True
+
+    def release(self, pool: str, n: int = 1) -> None:
+        with self._cond:
+            self._pools[pool] = self._pools.get(pool, 0) + n
+            self._cond.notify_all()
+
+    def reallocate(
+        self,
+        src: str,
+        dst: str,
+        n: int = 1,
+        timeout: Optional[float] = None,
+        stop_event: Optional[threading.Event] = None,
+    ) -> bool:
+        """Move ``n`` slots from ``src`` to ``dst`` (blocks until idle)."""
+        if not self.acquire(src, n, timeout=timeout, stop_event=stop_event):
+            return False
+        self.release(dst, n)
+        return True
+
+
+# --------------------------------------------------------------------------
+# Agent decorators
+# --------------------------------------------------------------------------
+
+
+def agent(func: Optional[Callable] = None, *, startup: bool = False, critical: bool = True):
+    def deco(f: Callable) -> Callable:
+        f._colmena_kind = "agent"
+        f._colmena_opts = {"startup": startup, "critical": critical and not startup}
+        return f
+
+    return deco(func) if func is not None else deco
+
+
+def result_processor(func: Optional[Callable] = None, *, topic: str = "default", on: str = "result"):
+    assert on in ("result", "completion")
+
+    def deco(f: Callable) -> Callable:
+        f._colmena_kind = "result_processor"
+        f._colmena_opts = {"topic": topic, "on": on}
+        return f
+
+    return deco(func) if func is not None else deco
+
+
+def event_responder(
+    func: Optional[Callable] = None,
+    *,
+    event_name: str,
+    reallocate: Optional[dict] = None,
+    clear_after: bool = True,
+):
+    """``reallocate`` (optional): dict(src=, dst=, n=) applied while the
+    responder runs and reversed afterwards — the paper's pattern of
+    shifting nodes to retraining when 'enough data' arrives."""
+
+    def deco(f: Callable) -> Callable:
+        f._colmena_kind = "event_responder"
+        f._colmena_opts = {
+            "event_name": event_name,
+            "reallocate": reallocate,
+            "clear_after": clear_after,
+        }
+        return f
+
+    return deco(func) if func is not None else deco
+
+
+def task_submitter(func: Optional[Callable] = None, *, task_type: str = "default", n_slots: int = 1):
+    def deco(f: Callable) -> Callable:
+        f._colmena_kind = "task_submitter"
+        f._colmena_opts = {"task_type": task_type, "n_slots": n_slots}
+        return f
+
+    return deco(func) if func is not None else deco
+
+
+# --------------------------------------------------------------------------
+# BaseThinker
+# --------------------------------------------------------------------------
+
+
+class BaseThinker:
+    """Base class for steering policies. Subclass, decorate methods, run."""
+
+    def __init__(
+        self,
+        queues: ColmenaQueues,
+        resource_counter: Optional[ResourceCounter] = None,
+        daemon: bool = True,
+    ) -> None:
+        self.queues = queues
+        self.rec = resource_counter or ResourceCounter(1)
+        self.done = threading.Event()
+        self.daemon = daemon
+        self.logger = logging.getLogger(f"repro.thinker.{type(self).__name__}")
+        self._threads: List[threading.Thread] = []
+        self._events: Dict[str, threading.Event] = {}
+        self._agent_exc: List[BaseException] = []
+
+    # ---------------------------------------------------------------- events
+    def event(self, name: str) -> threading.Event:
+        ev = self._events.get(name)
+        if ev is None:
+            ev = self._events[name] = threading.Event()
+        return ev
+
+    def set_event(self, name: str) -> None:
+        self.event(name).set()
+
+    # --------------------------------------------------------------- agents
+    def _collect_agents(self) -> List[Callable]:
+        out = []
+        for name in dir(self):
+            if name.startswith("__"):
+                continue
+            fn = getattr(self, name, None)
+            if callable(fn) and hasattr(fn, "_colmena_kind"):
+                out.append(fn)
+        return out
+
+    # wrappers -------------------------------------------------------------
+    def _run_agent(self, fn: Callable) -> None:
+        opts = fn._colmena_opts
+        try:
+            fn()
+        except BaseException as exc:  # noqa: BLE001 - surfaced in run()
+            self.logger.exception("agent %s failed", fn.__name__)
+            self._agent_exc.append(exc)
+            self.done.set()
+            return
+        if opts["critical"]:
+            self.logger.info("critical agent %s exited; shutting down", fn.__name__)
+            self.done.set()
+
+    def _run_result_processor(self, fn: Callable) -> None:
+        opts = fn._colmena_opts
+        getter = (
+            (lambda: self.queues.get_result(topic=opts["topic"], timeout=_POLL_S))
+            if opts["on"] == "result"
+            else (lambda: self.queues.get_completion(topic=opts["topic"], timeout=_POLL_S))
+        )
+        try:
+            while not self.done.is_set():
+                item = getter()
+                if item is None:
+                    continue
+                fn(item)
+                if isinstance(item, Result):
+                    item.mark("decision_made")
+                    item.finalize_timings()
+        except BaseException as exc:  # noqa: BLE001
+            self.logger.exception("result processor %s failed", fn.__name__)
+            self._agent_exc.append(exc)
+            self.done.set()
+
+    def _run_event_responder(self, fn: Callable) -> None:
+        opts = fn._colmena_opts
+        ev = self.event(opts["event_name"])
+        realloc = opts["reallocate"]
+        try:
+            while not self.done.is_set():
+                if not ev.wait(timeout=_POLL_S):
+                    continue
+                if realloc:
+                    self.rec.reallocate(realloc["src"], realloc["dst"], realloc["n"], stop_event=self.done)
+                try:
+                    fn()
+                finally:
+                    if realloc:
+                        self.rec.reallocate(realloc["dst"], realloc["src"], realloc["n"], stop_event=self.done)
+                if opts["clear_after"]:
+                    ev.clear()
+        except BaseException as exc:  # noqa: BLE001
+            self.logger.exception("event responder %s failed", fn.__name__)
+            self._agent_exc.append(exc)
+            self.done.set()
+
+    def _run_task_submitter(self, fn: Callable) -> None:
+        opts = fn._colmena_opts
+        try:
+            while not self.done.is_set():
+                ok = self.rec.acquire(opts["task_type"], opts["n_slots"], timeout=_POLL_S, stop_event=self.done)
+                if not ok:
+                    continue
+                if self.done.is_set():
+                    self.rec.release(opts["task_type"], opts["n_slots"])
+                    break
+                fn()
+        except BaseException as exc:  # noqa: BLE001
+            self.logger.exception("task submitter %s failed", fn.__name__)
+            self._agent_exc.append(exc)
+            self.done.set()
+
+    # ------------------------------------------------------------------ run
+    def run(self, timeout: Optional[float] = None) -> None:
+        """Start every agent thread; block until the Thinker is done."""
+        agents = self._collect_agents()
+        if not agents:
+            raise RuntimeError("Thinker has no agents; decorate methods first")
+
+        runners = {
+            "agent": self._run_agent,
+            "result_processor": self._run_result_processor,
+            "event_responder": self._run_event_responder,
+            "task_submitter": self._run_task_submitter,
+        }
+        startup = [f for f in agents if f._colmena_opts.get("startup")]
+        rest = [f for f in agents if not f._colmena_opts.get("startup")]
+
+        # Startup agents run to completion first (task seeding).
+        for fn in startup:
+            self._run_agent(fn)
+
+        for fn in rest:
+            t = threading.Thread(
+                target=runners[fn._colmena_kind],
+                args=(fn,),
+                daemon=self.daemon,
+                name=f"{type(self).__name__}.{fn.__name__}",
+            )
+            t.start()
+            self._threads.append(t)
+
+        self.done.wait(timeout=timeout)
+        self.done.set()  # in case we got here via timeout
+        for t in self._threads:
+            t.join(timeout=2.0)
+        if self._agent_exc:
+            raise RuntimeError(f"{len(self._agent_exc)} agent(s) failed") from self._agent_exc[0]

@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the perf-critical compute of the model substrate.
+
+Each kernel directory contains:
+  * ``kernel.py`` — the Pallas TPU kernel (pl.pallas_call + BlockSpec),
+    validated on CPU with ``interpret=True``;
+  * ``ops.py``    — the public jit'd wrapper with impl dispatch
+    (pallas on TPU / XLA or ref elsewhere);
+  * ``ref.py``    — the pure-jnp oracle used by tests.
+"""
+
+from .flash_attention.ops import flash_attention
+from .decode_attention.ops import decode_attention
+from .rglru_scan.ops import rglru_scan
+from .wkv6.ops import wkv6
+from .rmsnorm.ops import rmsnorm
+
+__all__ = ["flash_attention", "decode_attention", "rglru_scan", "wkv6", "rmsnorm"]

@@ -1,0 +1,123 @@
+"""Pallas TPU flash-decode kernel: one query token vs. a long KV cache.
+
+Decode attention is *memory-bound*: the whole KV cache (up to 32k x
+kv_heads x 128 per sequence here) streams through VMEM once per step
+while compute is a rank-1 product. The kernel therefore tiles the cache
+sequence dimension — grid = (B * H, S / block_k), sequential over the
+cache — and keeps the online-softmax state for the single query row in
+VMEM scratch. block_k = 1024 x d=128 x bf16 = 256 kB per kv operand,
+sized so double-buffered HBM->VMEM streams saturate bandwidth.
+
+GQA is folded into the index maps (kv head = q head // group), so the
+cache is read once per kv head group rather than once per q head.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(
+    len_ref,                      # (1, 1) int32 in SMEM-ish block
+    q_ref, k_ref, v_ref,          # VMEM blocks
+    o_ref,
+    m_ref, l_ref, acc_ref,        # scratch
+    *,
+    sm_scale: float,
+    block_k: int,
+    window: int,
+):
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...].astype(jnp.float32)          # (1, d)
+    k = k_ref[0].astype(jnp.float32)            # (bk, d)
+    v = v_ref[0].astype(jnp.float32)            # (bk, d)
+    length = len_ref[0, 0]
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * sm_scale                                 # (1, bk)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+    mask = k_pos < length
+    if window > 0:
+        mask &= k_pos >= length - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[0, 0]
+    l_prev = l_ref[0, 0]
+    m_cur = jnp.maximum(m_prev, s.max())
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur)
+    p = jnp.where(mask, p, 0.0)
+    l_cur = l_prev * alpha + p.sum()
+
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = jnp.full_like(m_ref, m_cur)
+    l_ref[...] = jnp.full_like(l_ref, l_cur)
+
+    @pl.when(ki == pl.num_programs(1) - 1)
+    def _finish():
+        o_ref[...] = (acc_ref[...] / jnp.maximum(l_ref[0, 0], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(
+    q: jnp.ndarray,          # (B, H, D)
+    k: jnp.ndarray,          # (B, KVH, S, D)
+    v: jnp.ndarray,
+    lengths: jnp.ndarray,    # (B,) int32
+    *,
+    sm_scale: Optional[float] = None,
+    window: Optional[int] = None,
+    block_k: int = 1024,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, h, d = q.shape
+    kvh, s = k.shape[1], k.shape[2]
+    group = h // kvh
+    block_k = min(block_k, s)
+    assert s % block_k == 0, (s, block_k)
+    scale = sm_scale if sm_scale is not None else d ** -0.5
+
+    qf = q.reshape(b * h, d)
+    kf = k.reshape(b * kvh, s, d)
+    vf = v.reshape(b * kvh, s, d)
+    lens = jnp.broadcast_to(lengths[:, None], (b, h)).reshape(b * h, 1).astype(jnp.int32)
+
+    kernel = functools.partial(
+        _decode_kernel, sm_scale=scale, block_k=block_k, window=window or 0
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, s // block_k),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda bh, ki: (bh, 0)),
+            pl.BlockSpec((1, d), lambda bh, ki: (bh, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bh, ki, g=group: (bh // g, ki, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bh, ki, g=group: (bh // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda bh, ki: (bh, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, 128), jnp.float32),
+            pltpu.VMEM((1, 128), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lens, qf, kf, vf)
+    return out.reshape(b, h, d)

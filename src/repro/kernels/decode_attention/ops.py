@@ -1,0 +1,51 @@
+"""Public decode-attention op with implementation dispatch.
+
+The XLA path is a plain masked einsum: for one query token the score
+tensor is only (B, H, S) — bounded — and XLA fuses the mask+softmax
+chain well. The Pallas kernel wins on real TPUs by streaming the cache
+through VMEM once (see kernel.py); ``REPRO_ATTN_IMPL`` forces a choice.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import decode_attention_pallas
+from .ref import decode_attention_ref
+
+
+def _default_impl() -> str:
+    env = os.environ.get("REPRO_ATTN_IMPL")
+    if env:
+        return env if env != "xla" else "ref"
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def decode_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    lengths: jnp.ndarray,
+    *,
+    sm_scale: Optional[float] = None,
+    window: Optional[int] = None,
+    impl: Optional[str] = None,
+    block_k: int = 1024,
+) -> jnp.ndarray:
+    impl = impl or _default_impl()
+    if impl == "pallas":
+        return decode_attention_pallas(
+            q, k, v, lengths, sm_scale=sm_scale, window=window, block_k=block_k
+        )
+    if impl == "interpret":
+        return decode_attention_pallas(
+            q, k, v, lengths, sm_scale=sm_scale, window=window, block_k=block_k,
+            interpret=True,
+        )
+    if impl == "ref":
+        return decode_attention_ref(q, k, v, lengths, sm_scale=sm_scale, window=window)
+    raise ValueError(f"unknown decode attention impl {impl!r}")

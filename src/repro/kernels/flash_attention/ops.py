@@ -1,0 +1,73 @@
+"""Public flash-attention op: dispatches to the best implementation.
+
+Order of preference:
+  * ``pallas``     — the TPU kernel (kernel.py), on TPU backends;
+  * ``xla``        — lax.scan online softmax (memory-bounded, SPMD-safe);
+  * ``ref``        — naive oracle (tests only);
+  * ``interpret``  — the Pallas kernel interpreted on CPU (tests only).
+
+Set ``REPRO_ATTN_IMPL`` to force one globally.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_pallas
+from .ref import attention_ref
+from .xla import flash_attention_xla, flash_attention_vjp
+
+
+def _default_impl() -> str:
+    env = os.environ.get("REPRO_ATTN_IMPL")
+    if env:
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    sm_scale: Optional[float] = None,
+    q_offset: int = 0,
+    impl: Optional[str] = None,
+    block_q: int = 512,
+    block_k: int = 512,
+    skip_masked_blocks: bool = False,
+) -> jnp.ndarray:
+    impl = impl or _default_impl()
+    if impl == "pallas":
+        return flash_attention_pallas(
+            q, k, v, causal=causal, window=window, sm_scale=sm_scale,
+            block_q=block_q, block_k=block_k, q_offset=q_offset,
+        )
+    if impl == "interpret":
+        return flash_attention_pallas(
+            q, k, v, causal=causal, window=window, sm_scale=sm_scale,
+            block_q=block_q, block_k=block_k, q_offset=q_offset, interpret=True,
+        )
+    if impl == "xla":
+        # custom-VJP path: backward recomputes probabilities blockwise
+        # instead of letting scan-autodiff stack them (see xla.py)
+        return flash_attention_vjp(
+            q, k, v, causal=causal, window=window, sm_scale=sm_scale,
+            block_k=block_k, q_offset=q_offset,
+        )
+    if impl == "xla_scan":
+        return flash_attention_xla(
+            q, k, v, causal=causal, window=window, sm_scale=sm_scale,
+            block_k=block_k, q_offset=q_offset, skip_masked_blocks=skip_masked_blocks,
+        )
+    if impl == "ref":
+        return attention_ref(
+            q, k, v, causal=causal, window=window, sm_scale=sm_scale, q_offset=q_offset
+        )
+    raise ValueError(f"unknown attention impl {impl!r}")

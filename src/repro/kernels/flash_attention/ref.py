@@ -1,0 +1,54 @@
+"""Pure-jnp oracle for flash attention (naive softmax attention).
+
+Materializes the full (Sq, Skv) score matrix — O(S^2) memory — so it is
+only used for correctness testing against the Pallas/XLA implementations.
+Supports causal masking, sliding windows, and GQA (n_q_heads a multiple
+of n_kv_heads).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+def repeat_kv(k: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    """(B, KVH, S, D) -> (B, H, S, D) by repeating each kv head."""
+    b, kvh, s, d = k.shape
+    group = n_heads // kvh
+    return jnp.repeat(k, group, axis=1)
+
+
+def attention_ref(
+    q: jnp.ndarray,                 # (B, H, Sq, D)
+    k: jnp.ndarray,                 # (B, KVH, Skv, D)
+    v: jnp.ndarray,                 # (B, KVH, Skv, D)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,   # sliding window size (keys in (i-w, i])
+    sm_scale: Optional[float] = None,
+    q_offset: int = 0,              # absolute position of q[0] (decode/prefill chunks)
+) -> jnp.ndarray:
+    b, h, sq, d = q.shape
+    skv = k.shape[2]
+    if k.shape[1] != h:
+        k = repeat_kv(k, h)
+        v = repeat_kv(v, h)
+    scale = sm_scale if sm_scale is not None else d ** -0.5
+
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    q_pos = jnp.arange(sq)[:, None] + q_offset
+    k_pos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), dtype=bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None and window > 0:
+        mask &= k_pos > q_pos - window
+    scores = jnp.where(mask[None, None], scores, -jnp.inf)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = jnp.where(mask[None, None], probs, 0.0)
+    denom = probs.sum(axis=-1, keepdims=True)
+    probs = probs / jnp.maximum(denom, 1e-30)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,90 @@
+"""Pallas TPU kernel for the RG-LRU gated linear recurrence.
+
+The recurrence is sequential in time but embarrassingly parallel over
+(batch, channel). Tiling: grid = (B, D / block_d, S / block_s) with the
+time axis innermost (sequential on TPU), so the running state vector
+h (block_d,) lives in VMEM scratch and carries across time blocks.
+
+The op is memory-bound — every element of (log_a, b) is read exactly
+once and every h written once — so the kernel's job is purely to stream
+HBM->VMEM at full bandwidth while the VPU does 2 flops/element. Inside a
+block we run the scan with a fori_loop over rows of the VMEM-resident
+tile; block_s x block_d = 256 x 512 (f32) = 512 kB per operand keeps the
+working set well inside VMEM with room for double buffering.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_kernel(
+    log_a_ref, b_ref, h0_ref,      # inputs
+    hs_ref, hlast_ref,             # outputs
+    h_ref,                         # VMEM scratch: carried state (1, block_d)
+    *,
+    block_s: int,
+):
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        h_ref[...] = h0_ref[...].astype(jnp.float32)
+
+    a = jnp.exp(log_a_ref[0].astype(jnp.float32))    # (block_s, block_d)
+    b = b_ref[0].astype(jnp.float32)
+
+    def step(t, h):
+        h = a[t] * h + b[t]
+        hs_ref[0, t, :] = h.astype(hs_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, block_s, step, h_ref[0, :])
+    h_ref[...] = h[None]
+
+    @pl.when(si == pl.num_programs(2) - 1)
+    def _finish():
+        hlast_ref[...] = h[None].astype(hlast_ref.dtype)
+
+
+def rglru_scan_pallas(
+    log_a: jnp.ndarray,   # (B, S, D)
+    b: jnp.ndarray,       # (B, S, D)
+    h0: jnp.ndarray,      # (B, D)
+    *,
+    block_s: int = 256,
+    block_d: int = 512,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    B, S, D = b.shape
+    block_s = min(block_s, S)
+    block_d = min(block_d, D)
+    assert S % block_s == 0 and D % block_d == 0, (S, block_s, D, block_d)
+
+    kernel = functools.partial(_rglru_kernel, block_s=block_s)
+    hs, hlast = pl.pallas_call(
+        kernel,
+        grid=(B, D // block_d, S // block_s),
+        in_specs=[
+            pl.BlockSpec((1, block_s, block_d), lambda bi, di, si: (bi, si, di)),
+            pl.BlockSpec((1, block_s, block_d), lambda bi, di, si: (bi, si, di)),
+            pl.BlockSpec((1, block_d), lambda bi, di, si: (bi, di)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_s, block_d), lambda bi, di, si: (bi, si, di)),
+            pl.BlockSpec((1, block_d), lambda bi, di, si: (bi, di)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, D), b.dtype),
+            jax.ShapeDtypeStruct((B, D), b.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, block_d), jnp.float32)],
+        interpret=interpret,
+    )(log_a, b, h0)
+    return hs, hlast

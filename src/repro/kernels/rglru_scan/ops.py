@@ -1,0 +1,39 @@
+"""Public gated-linear-recurrence op with implementation dispatch."""
+
+from __future__ import annotations
+
+import os
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import rglru_scan_pallas
+from .ref import rglru_scan_ref
+from .xla import rglru_scan_xla
+
+
+def _default_impl() -> str:
+    env = os.environ.get("REPRO_SCAN_IMPL")
+    if env:
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def rglru_scan(
+    log_a: jnp.ndarray,
+    b: jnp.ndarray,
+    h0: jnp.ndarray,
+    *,
+    impl: Optional[str] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    impl = impl or _default_impl()
+    if impl == "pallas":
+        return rglru_scan_pallas(log_a, b, h0)
+    if impl == "interpret":
+        return rglru_scan_pallas(log_a, b, h0, interpret=True)
+    if impl == "xla":
+        return rglru_scan_xla(log_a, b, h0)
+    if impl == "ref":
+        return rglru_scan_ref(log_a, b, h0)
+    raise ValueError(f"unknown rglru impl {impl!r}")

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the gated linear recurrence  h_t = a_t * h_{t-1} + b_t.
+
+This is the primitive under RG-LRU (RecurrentGemma): the caller computes
+``a_t = exp(log_a_t)`` gates and pre-gated inputs ``b_t`` and we run the
+diagonal linear recurrence, returning all states and the final state.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(
+    log_a: jnp.ndarray,   # (B, S, D) log decay per step (<= 0)
+    b: jnp.ndarray,       # (B, S, D) pre-gated input
+    h0: jnp.ndarray,      # (B, D) initial state
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    a = jnp.exp(log_a.astype(jnp.float32))
+    bf = b.astype(jnp.float32)
+
+    def step(h, inputs):
+        a_t, b_t = inputs
+        h = a_t * h + b_t
+        return h, h
+
+    h_final, hs = jax.lax.scan(
+        step, h0.astype(jnp.float32), (a.swapaxes(0, 1), bf.swapaxes(0, 1))
+    )
+    return hs.swapaxes(0, 1).astype(b.dtype), h_final.astype(b.dtype)

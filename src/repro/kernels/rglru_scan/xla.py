@@ -1,0 +1,33 @@
+"""XLA path for the gated linear recurrence: associative scan.
+
+``(a, b) o (a', b') = (a*a', a'*b + b')`` is associative, so
+``lax.associative_scan`` computes all states in O(log S) depth — the
+SPMD-friendly form the dry run compiles. Sequence stays unsharded
+(recurrence is sequential); batch and channel dims shard freely.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_xla(
+    log_a: jnp.ndarray,   # (B, S, D)
+    b: jnp.ndarray,       # (B, S, D)
+    h0: jnp.ndarray,      # (B, D)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    a = jnp.exp(log_a.astype(jnp.float32))
+    bf = b.astype(jnp.float32)
+    # fold h0 into the first step: b_0' = a_0 * h0 + b_0
+    bf = bf.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(left, right):
+        a_l, b_l = left
+        a_r, b_r = right
+        return a_l * a_r, a_r * b_l + b_r
+
+    _, hs = jax.lax.associative_scan(combine, (a, bf), axis=1)
+    return hs.astype(b.dtype), hs[:, -1].astype(b.dtype)

@@ -1,0 +1,37 @@
+"""Public fused-RMSNorm op with implementation dispatch."""
+
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import rmsnorm_pallas
+from .ref import rmsnorm_ref
+
+
+def _default_impl() -> str:
+    env = os.environ.get("REPRO_NORM_IMPL")
+    if env:
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def rmsnorm(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    eps: float = 1e-6,
+    scale_offset: float = 0.0,
+    impl: Optional[str] = None,
+) -> jnp.ndarray:
+    impl = impl or _default_impl()
+    if impl == "pallas":
+        return rmsnorm_pallas(x, w, eps=eps, scale_offset=scale_offset)
+    if impl == "interpret":
+        return rmsnorm_pallas(x, w, eps=eps, scale_offset=scale_offset, interpret=True)
+    if impl == "ref":
+        return rmsnorm_ref(x, w, eps=eps, scale_offset=scale_offset)
+    raise ValueError(f"unknown rmsnorm impl {impl!r}")

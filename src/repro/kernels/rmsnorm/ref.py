@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for fused RMSNorm: y = x * rsqrt(mean(x^2)+eps) * (off+w).
+
+``scale_offset=1.0`` reproduces the Gemma convention (weight stored as a
+delta around 1); ``0.0`` gives the Llama convention.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    eps: float = 1e-6,
+    scale_offset: float = 0.0,
+) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * (var + eps) ** -0.5
+    return (y * (scale_offset + w.astype(jnp.float32))).astype(x.dtype)

@@ -1,0 +1,43 @@
+"""Public WKV-6 op with implementation dispatch."""
+
+from __future__ import annotations
+
+import os
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import wkv6_pallas
+from .ref import wkv6_ref
+from .xla import wkv6_xla
+
+
+def _default_impl() -> str:
+    env = os.environ.get("REPRO_SCAN_IMPL")
+    if env:
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def wkv6(
+    r: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    lw: jnp.ndarray,
+    u: jnp.ndarray,
+    state0: jnp.ndarray,
+    *,
+    chunk: int = 64,
+    impl: Optional[str] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    impl = impl or _default_impl()
+    if impl == "pallas":
+        return wkv6_pallas(r, k, v, lw, u, state0, chunk=chunk)
+    if impl == "interpret":
+        return wkv6_pallas(r, k, v, lw, u, state0, chunk=chunk, interpret=True)
+    if impl == "xla":
+        return wkv6_xla(r, k, v, lw, u, state0, chunk=chunk)
+    if impl == "ref":
+        return wkv6_ref(r, k, v, lw, u, state0)
+    raise ValueError(f"unknown wkv6 impl {impl!r}")

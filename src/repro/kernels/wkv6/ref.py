@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the RWKV-6 WKV recurrence (naive time scan).
+
+Per head with state S in R^{K x V}:
+    out_t = r_t @ (S_{t-1} + (u * k_t)^T v_t)
+    S_t   = diag(exp(lw_t)) S_{t-1} + k_t^T v_t
+where lw_t <= 0 is the (data-dependent) log-decay, u is the per-channel
+"bonus" applied to the current token only.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(
+    r: jnp.ndarray,       # (B, H, S, K)
+    k: jnp.ndarray,       # (B, H, S, K)
+    v: jnp.ndarray,       # (B, H, S, V)
+    lw: jnp.ndarray,      # (B, H, S, K) log decay, <= 0
+    u: jnp.ndarray,       # (H, K) bonus
+    state0: jnp.ndarray,  # (B, H, K, V)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    rf, kf, vf = (x.astype(jnp.float32) for x in (r, k, v))
+    lwf = lw.astype(jnp.float32)
+    uf = u.astype(jnp.float32)
+
+    def step(S, inputs):
+        r_t, k_t, v_t, lw_t = inputs             # (B,H,K),(B,H,K),(B,H,V),(B,H,K)
+        kv = k_t[..., :, None] * v_t[..., None, :]           # (B,H,K,V)
+        S_eff = S + uf[None, :, :, None] * kv                # bonus on current token
+        out_t = jnp.einsum("bhk,bhkv->bhv", r_t, S_eff)
+        S = jnp.exp(lw_t)[..., None] * S + kv
+        return S, out_t
+
+    xs = tuple(jnp.moveaxis(x, 2, 0) for x in (rf, kf, vf, lwf))  # (S, B, H, *)
+    S_final, outs = jax.lax.scan(step, state0.astype(jnp.float32), xs)
+    out = jnp.moveaxis(outs, 0, 2)               # (B, H, S, V)
+    return out.astype(v.dtype), S_final.astype(state0.dtype)

@@ -1,0 +1,86 @@
+"""Chunked WKV-6 in pure XLA (GLA-style chunkwise-parallel form).
+
+The naive recurrence is sequential over S. The chunked form processes
+chunks of C tokens: within a chunk, pairwise decay factors are computed
+in log space with *non-positive exponents only* (numerically safe — no
+exp overflow regardless of decay magnitude), and cross-chunk state is
+carried by a lax.scan. Compute per chunk is dominated by
+(C,K)@(K,V) matmuls — MXU-shaped — plus one (C,C,K) pairwise tensor
+(bounded: C=64 keeps it at 64*64*K floats).
+
+All math in f32; inputs may be bf16.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _chunk_step(u, carry_S, chunk):
+    r, k, v, lw = chunk                     # (B,H,C,K/V)
+    B, H, C, K = r.shape
+    cum_incl = jnp.cumsum(lw, axis=2)       # sum_{s<=t} lw_s
+    cum_excl = cum_incl - lw                # sum_{s<t} lw_s
+    total = cum_incl[:, :, -1:, :]          # (B,H,1,K)
+
+    # inter-chunk: tokens see the carried state decayed to their position
+    r_dec = r * jnp.exp(cum_excl)                       # exponent <= 0
+    out_inter = jnp.einsum("bhck,bhkv->bhcv", r_dec, carry_S)
+
+    # intra-chunk, strictly causal (s < t): pairwise decay exponent
+    # cum_excl[t] - cum_incl[s] = sum_{u=s+1..t-1} lw_u <= 0  -> safe
+    pair = cum_excl[:, :, :, None, :] - cum_incl[:, :, None, :, :]  # (B,H,C,C,K)
+    mask = jnp.tril(jnp.ones((C, C), bool), k=-1)[None, None, :, :, None]
+    pair = jnp.where(mask, pair, -jnp.inf)
+    A = jnp.einsum("bhtk,bhsk,bhtsk->bhts", r, k, jnp.exp(pair))
+    # diagonal (current token) with bonus u
+    diag = jnp.einsum("bhtk,k,bhtk->bht", r, u, k) if u.ndim == 1 else \
+        jnp.einsum("bhtk,hk,bhtk->bht", r, u, k)
+    out_intra = jnp.einsum("bhts,bhsv->bhtv", A, v) + diag[..., None] * v
+
+    # state update: S' = diag(exp(total)) S + sum_s (k_s * exp(total - cum_incl[s]))^T v_s
+    k_dec = k * jnp.exp(total - cum_incl)               # exponent <= 0
+    S_new = jnp.exp(total)[:, :, 0, :, None] * carry_S + jnp.einsum(
+        "bhck,bhcv->bhkv", k_dec, v
+    )
+    return S_new, out_inter + out_intra
+
+
+def wkv6_xla(
+    r: jnp.ndarray,       # (B, H, S, K)
+    k: jnp.ndarray,
+    v: jnp.ndarray,       # (B, H, S, V)
+    lw: jnp.ndarray,      # (B, H, S, K) log decay <= 0
+    u: jnp.ndarray,       # (H, K)
+    state0: jnp.ndarray,  # (B, H, K, V)
+    *,
+    chunk: int = 64,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    B, H, S, K = r.shape
+    V = v.shape[-1]
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        r = jnp.pad(r, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        lw = jnp.pad(lw, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    n_chunks = (S + pad) // chunk
+
+    rf, kf, vf, lwf = (x.astype(jnp.float32) for x in (r, k, v, lw))
+    uf = u.astype(jnp.float32)
+
+    def to_chunks(x):
+        return jnp.moveaxis(
+            x.reshape(B, H, n_chunks, chunk, x.shape[-1]), 2, 0
+        )  # (n, B, H, C, *)
+
+    xs = (to_chunks(rf), to_chunks(kf), to_chunks(vf), to_chunks(lwf))
+    step = functools.partial(_chunk_step, uf)
+    S_final, outs = jax.lax.scan(step, state0.astype(jnp.float32), xs)
+    out = jnp.moveaxis(outs, 0, 2).reshape(B, H, n_chunks * chunk, V)
+    return out[:, :, :S].astype(v.dtype), S_final.astype(state0.dtype)

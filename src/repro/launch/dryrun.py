@@ -1,0 +1,322 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+# The dry run — and ONLY the dry run — builds the 512-chip production mesh
+# on CPU placeholder devices; smoke tests and benches see 1 device.
+
+"""Multi-pod dry run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves, without hardware:
+  * the sharding config is coherent (SPMD partitioning succeeds),
+  * the program fits (memory_analysis per device),
+  * and it yields the roofline terms (cost_analysis + HLO collectives).
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-6b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all [--mesh both] [--out experiments/dryrun]
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import ARCH_IDS, get_config
+from ..configs.base import SHAPES, shape_applicable
+from ..models import mesh_context
+from ..models.layers import axis_rules, param_pspecs, resolve_pspec
+from ..models.model_api import build_model
+from ..serve.decode import make_dryrun_serve_step
+from ..train.optimizer import OptimizerConfig, init_opt_state
+from ..train.train_step import make_train_step
+from .mesh import make_production_mesh
+from .roofline import RooflineReport, model_flops, parse_collectives
+
+
+def _sds(tree: Any, pspecs: Any, mesh) -> Any:
+    """ShapeDtypeStruct tree with shardings from a pspec tree."""
+    return jax.tree_util.tree_map(
+        lambda t, s: jax.ShapeDtypeStruct(t.shape, t.dtype, sharding=NamedSharding(mesh, s)),
+        tree, pspecs,
+    )
+
+
+def _opt_pspecs(params_specs: Any, opt_shapes: Dict[str, Any], oc: OptimizerConfig) -> Dict[str, Any]:
+    """PartitionSpecs for optimizer state mirroring the param specs.
+
+    Specs are padded to the param rank before dropping dims, because
+    PartitionSpec strips trailing Nones (a P('data',) on a rank-4 param
+    means dim0 only)."""
+
+    out: Dict[str, Any] = {"step": P()}
+    out["m"] = params_specs
+    if oc.name == "adafactor":
+        def build(shape_node, spec):
+            if isinstance(shape_node, dict) and "vr" in shape_node:
+                rank = len(shape_node["vr"].shape) + 1
+                parts = list(spec) + [None] * (rank - len(list(spec)))
+                return {
+                    "vr": P(*parts[:-1]),                    # mean over last dim
+                    "vc": P(*(parts[:-2] + parts[-1:])),     # mean over 2nd-last
+                }
+            if isinstance(shape_node, dict) and "v" in shape_node:
+                return {"v": spec}
+            raise TypeError(shape_node)
+
+        out["v"] = jax.tree_util.tree_map(
+            build, opt_shapes["v"], params_specs,
+            is_leaf=lambda x: isinstance(x, dict) and ("v" in x or "vr" in x),
+        )
+    else:
+        out["v"] = params_specs
+    return out
+
+
+def _cost_of(compiled) -> Dict[str, float]:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    return cost
+
+
+def _analysis_cost(cfg, shape, mesh, multi_pod: bool) -> Dict[str, Any]:
+    """Trip-count-corrected cost: XLA's cost_analysis counts a scan body
+    ONCE, so the scanned full-depth compile under-reports flops by ~L x
+    grad_accum. We re-lower an UNROLLED, single-microbatch variant at two
+    depths (La, Lb), take the per-layer slope, and extrapolate:
+
+        per_step = accum * (const + slope * L_full) + (analytic optimizer)
+
+    Layers are homogeneous so the extrapolation is exact up to fusion
+    differences at the stack boundary. Collective wire bytes get the same
+    treatment. The real (scanned) compile remains the memory/fit proof.
+    """
+    period = cfg.attn_every if cfg.attn_every > 0 else 1
+    la, lb = 1 * period, 2 * period
+    accum = cfg.grad_accum if shape.kind == "train" else 1
+    micro_batch = max(shape.global_batch // accum, 1)
+    pod_size = 256 if multi_pod else None
+
+    def cost_at(n_layers: int):
+        c = cfg.with_(
+            n_layers=n_layers, scan_layers=False, grad_accum=1,
+            encoder_layers=n_layers if cfg.family == "whisper" else cfg.encoder_layers,
+        )
+        model = build_model(c)
+        with mesh_context(mesh, c):
+            p_specs = model.pspecs(mesh)
+            p_sds = _sds(model.shapes(), p_specs, mesh)
+            if shape.kind == "train":
+                def grads_only(params, batch):
+                    loss, _ = model.loss(params, batch)
+                    return loss
+
+                micro_shape = type(shape)(shape.name, shape.seq_len, micro_batch, "train")
+                batch_sds = model.input_specs(micro_shape, mesh)
+                lowered = jax.jit(jax.grad(grads_only)).lower(p_sds, batch_sds)
+            elif shape.kind == "prefill":
+                batch_sds = model.input_specs(shape, mesh)
+
+                def prefill_step(params, batch):
+                    logits, _ = model.forward(params, batch, last_only=True)
+                    return jnp.argmax(logits[:, -1], axis=-1)
+
+                lowered = jax.jit(prefill_step).lower(p_sds, batch_sds)
+            else:
+                cache_shapes = model.cache_shapes(shape.global_batch, shape.seq_len)
+                cache_specs = model.cache_pspecs(mesh, shape.global_batch, shape.seq_len)
+                c_sds = _sds(cache_shapes, cache_specs, mesh)
+                io_sds = model.input_specs(shape, mesh)
+                serve = make_dryrun_serve_step(model)
+                lowered = jax.jit(serve).lower(p_sds, c_sds, io_sds["tokens"], io_sds["lengths"])
+            compiled = lowered.compile()
+        cost = _cost_of(compiled)
+        coll = parse_collectives(compiled.as_text(), mesh.size, pod_size=pod_size)
+        return (float(cost.get("flops", 0.0)), float(cost.get("bytes accessed", 0.0)),
+                coll.wire_bytes, coll.cross_pod_wire_bytes)
+
+    fa, ba, wa, xa = cost_at(la)
+    fb, bb, wb, xb = cost_at(lb)
+    L = cfg.n_layers
+
+    def extrap(a, b):
+        slope = (b - a) / (lb - la)
+        const = a - slope * la
+        return max(const + slope * L, 0.0)
+
+    flops = accum * extrap(fa, fb)
+    bytes_acc = accum * extrap(ba, bb)
+    wire = accum * extrap(wa, wb)
+    cross = accum * extrap(xa, xb)
+    if shape.kind == "train":
+        # optimizer update: ~12 flops/param, touches params+grads+state once
+        n_local = cfg.n_params / mesh.size
+        flops += 12.0 * n_local
+        state_mult = {"adamw": 4, "adafactor": 2}.get(cfg.optimizer, 4)
+        bytes_acc += n_local * (2 + 4 + state_mult * 2) * 2
+    return {"flops": flops, "bytes accessed": bytes_acc,
+            "wire_bytes": wire, "cross_pod_wire_bytes": cross,
+            "points": {"la": la, "lb": lb, "fa": fa, "fb": fb}}
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool, *,
+               cfg_overrides: Optional[dict] = None, verbose: bool = True,
+               opt: bool = False) -> Dict[str, Any]:
+    """Lower + compile one (arch, shape, mesh) cell; return the report dict.
+
+    ``opt=True`` applies the post-hillclimb per-shape policies on top of
+    the per-arch configs: decode cells of attention-cache families use
+    the tp2d (weight-resident) sharding; llama training drops to
+    grad_accum=8 on the multi-pod mesh (see EXPERIMENTS.md §Perf)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if opt:
+        if shape.kind == "decode" and cfg.family in ("dense", "moe", "vlm", "whisper"):
+            cfg = cfg.with_(sharding="tp2d")
+        if arch == "llama3-405b" and shape.kind == "train" and multi_pod:
+            cfg = cfg.with_(grad_accum=8)
+    if cfg_overrides:
+        cfg = cfg.with_(**cfg_overrides)
+    mesh_name = "pod2x256" if multi_pod else "pod256"
+
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "skipped", "reason": reason}
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_devices = mesh.size
+    model = build_model(cfg)
+    rules = axis_rules(cfg)
+
+    with mesh_context(mesh, cfg):
+        if shape.kind == "train":
+            oc = OptimizerConfig(name=cfg.optimizer, state_dtype=cfg.opt_state_dtype)
+            p_specs = model.pspecs(mesh)
+            p_sds = _sds(model.shapes(), p_specs, mesh)
+            opt_shapes = jax.eval_shape(lambda p: init_opt_state(p, oc), p_sds)
+            o_specs = _opt_pspecs(p_specs, opt_shapes, oc)
+            o_sds = _sds(opt_shapes, o_specs, mesh)
+            batch_sds = model.input_specs(shape, mesh)
+            step = make_train_step(model, oc, mesh)
+            jitted = jax.jit(step, donate_argnums=(0, 1))
+            lowered = jitted.lower(p_sds, o_sds, batch_sds)
+        elif shape.kind == "prefill":
+            p_specs = model.pspecs(mesh)
+            p_sds = _sds(model.shapes(), p_specs, mesh)
+            batch_sds = model.input_specs(shape, mesh)
+
+            def prefill_step(params, batch):
+                logits, _ = model.forward(params, batch, last_only=True)
+                return jnp.argmax(logits[:, -1], axis=-1)
+
+            lowered = jax.jit(prefill_step).lower(p_sds, batch_sds)
+        else:  # decode
+            p_specs = model.pspecs(mesh)
+            p_sds = _sds(model.shapes(), p_specs, mesh)
+            cache_shapes = model.cache_shapes(shape.global_batch, shape.seq_len)
+            cache_specs = model.cache_pspecs(mesh, shape.global_batch, shape.seq_len)
+            c_sds = _sds(cache_shapes, cache_specs, mesh)
+            io_sds = model.input_specs(shape, mesh)
+            serve = make_dryrun_serve_step(model)
+            jitted = jax.jit(serve, donate_argnums=(1,))
+            lowered = jitted.lower(p_sds, c_sds, io_sds["tokens"], io_sds["lengths"])
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    pod_size = 256 if multi_pod else None
+    coll = parse_collectives(hlo, n_devices, pod_size=pod_size)
+
+    # trip-count-corrected flops/bytes/wire (see _analysis_cost docstring)
+    corrected = _analysis_cost(cfg, shape, mesh, multi_pod)
+    coll.wire_bytes = corrected["wire_bytes"]
+    coll.cross_pod_wire_bytes = corrected["cross_pod_wire_bytes"]
+
+    peak_bytes = int(
+        mem.argument_size_in_bytes + mem.temp_size_in_bytes
+        + mem.output_size_in_bytes - mem.alias_size_in_bytes
+    )
+    report = RooflineReport.build(
+        arch, shape_name, mesh_name, n_devices, corrected, peak_bytes, coll,
+        model_flops(cfg, shape),
+    ).to_dict()
+    report.update(
+        status="ok",
+        lower_s=round(t_lower, 1),
+        compile_s=round(t_compile, 1),
+        argument_bytes=int(mem.argument_size_in_bytes),
+        temp_bytes=int(mem.temp_size_in_bytes),
+        output_bytes=int(mem.output_size_in_bytes),
+        alias_bytes=int(mem.alias_size_in_bytes),
+        cross_pod_wire_bytes=coll.cross_pod_wire_bytes,
+        scanned_compile_flops=float(_cost_of(compiled).get("flops", 0.0)),
+        extrap_points=corrected["points"],
+    )
+    if verbose:
+        gb = peak_bytes / 2**30
+        print(f"[{arch} x {shape_name} x {mesh_name}] OK "
+              f"compile={t_compile:.0f}s peak={gb:.2f}GiB/dev "
+              f"compute={report['compute_s']:.3f}s memory={report['memory_s']:.3f}s "
+              f"collective={report['collective_s']:.3f}s -> {report['bottleneck']}-bound "
+              f"useful={report['useful_flops_ratio']:.2f}", flush=True)
+    return report
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--override", default=None, help="JSON dict of ModelConfig overrides")
+    ap.add_argument("--opt", action="store_true", help="apply post-hillclimb per-shape policies")
+    args = ap.parse_args()
+
+    cells = []
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    for a in archs:
+        for s in shapes:
+            for m in meshes:
+                cells.append((a, s, m))
+
+    os.makedirs(args.out, exist_ok=True)
+    overrides = json.loads(args.override) if args.override else None
+    failures = 0
+    for arch, shape_name, multi in cells:
+        tag = f"{arch}__{shape_name}__{'multi' if multi else 'single'}"
+        if overrides:
+            tag += "__" + "-".join(f"{k}={v}" for k, v in sorted(overrides.items()))
+        out_path = os.path.join(args.out, tag + ".json")
+        if os.path.exists(out_path) and not overrides:
+            print(f"[{tag}] cached", flush=True)
+            continue
+        try:
+            report = lower_cell(arch, shape_name, multi, cfg_overrides=overrides, opt=args.opt)
+        except Exception as exc:  # noqa: BLE001
+            failures += 1
+            report = {"arch": arch, "shape": shape_name,
+                      "mesh": "pod2x256" if multi else "pod256",
+                      "status": "error", "error": f"{type(exc).__name__}: {exc}",
+                      "traceback": traceback.format_exc()[-2000:]}
+            print(f"[{tag}] FAILED: {exc}", flush=True)
+        with open(out_path, "w") as f:
+            json.dump(report, f, indent=2, default=str)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

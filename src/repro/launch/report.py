@@ -1,0 +1,86 @@
+"""Render the dry-run/roofline JSON cells into the EXPERIMENTS.md tables."""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, List
+
+
+def load_cells(directory: str) -> List[dict]:
+    cells = []
+    for name in sorted(os.listdir(directory)):
+        if name.endswith(".json"):
+            with open(os.path.join(directory, name)) as f:
+                r = json.load(f)
+            r["_file"] = name
+            cells.append(r)
+    return cells
+
+
+def fmt_bytes(n) -> str:
+    return f"{n / 2**30:.2f}"
+
+
+def roofline_table(cells: List[dict], mesh: str = "pod256") -> str:
+    rows = [
+        "| arch | shape | compute s | memory s | collective s | bottleneck | "
+        "peak GiB/dev | useful | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in cells:
+        if r.get("mesh") != mesh and r.get("status") != "skipped":
+            continue
+        if r.get("status") == "skipped":
+            if mesh == "pod256" and "single" in r["_file"]:
+                rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                            f"skipped | — | — | — |")
+            continue
+        if r.get("status") != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | ERROR | | | | | | |")
+            continue
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | {r['bottleneck']} | "
+            f"{fmt_bytes(r['peak_memory_bytes'])} | {r['useful_flops_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.2f} |"
+        )
+    return "\n".join(rows)
+
+
+def dryrun_table(cells: List[dict]) -> str:
+    rows = [
+        "| arch | shape | mesh | status | compile s | args GiB | temp GiB | collectives |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in cells:
+        if r.get("status") == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | skipped (sub-quadratic rule) | | | | |")
+            continue
+        if r.get("status") != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | {r.get('mesh','?')} | ERROR | | | | |")
+            continue
+        colls = ", ".join(f"{k}:{v}" for k, v in sorted(r.get("collective_counts", {}).items()))
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | {r['compile_s']} | "
+            f"{fmt_bytes(r['argument_bytes'])} | {fmt_bytes(r['temp_bytes'])} | {colls} |"
+        )
+    return "\n".join(rows)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--table", choices=["roofline", "dryrun"], default="roofline")
+    ap.add_argument("--mesh", default="pod256")
+    args = ap.parse_args()
+    cells = load_cells(args.dir)
+    if args.table == "roofline":
+        print(roofline_table(cells, args.mesh))
+    else:
+        print(dryrun_table(cells))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,178 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds-per-step on TPU v5e:
+
+    compute    = HLO_flops_per_device / 197e12
+    memory     = HLO_bytes_per_device / 819e9
+    collective = wire_bytes_per_device / 50e9
+
+``cost_analysis()`` is per-device post-SPMD (verified empirically on this
+jax build). Collective bytes are NOT in cost_analysis: we parse the
+post-optimization HLO and apply ring-algorithm wire-byte conventions:
+
+    all-gather       S_out * (n-1)/n
+    reduce-scatter   S_in  * (n-1)/n      (S_in = unreduced input)
+    all-reduce       2 * S * (n-1)/n
+    all-to-all       S * (n-1)/n
+    collective-permute  S
+
+with n = replica-group size parsed per op. MODEL_FLOPS (6*N_active*D for
+training, 2*N_active*D for decode/prefill) measures how much compiled
+compute is "useful" — remat and redundant-compute waste shows up as
+MODEL_FLOPS / (chips * HLO_flops) << 1.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .mesh import V5E_HBM_BW, V5E_ICI_LINK_BW, V5E_PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+# result types of an HLO op: "bf16[128,4096]{1,0}" or tuple "(f32[2], f32[4])"
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(?P<rtype>\([^)]*\)|[\w\[\],{}]+)\s+"
+    r"(?P<op>all-reduce-start|all-reduce|all-gather-start|all-gather|"
+    r"reduce-scatter|all-to-all|collective-permute-start|collective-permute)\b"
+)
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    counts: Dict[str, int] = field(default_factory=dict)
+    result_bytes: Dict[str, int] = field(default_factory=dict)
+    wire_bytes: float = 0.0                     # per-device, ring model
+    cross_pod_wire_bytes: float = 0.0           # collectives spanning pods
+    details: List[dict] = field(default_factory=list)
+
+
+def parse_collectives(hlo_text: str, n_devices: int, pod_size: Optional[int] = None) -> CollectiveStats:
+    """Sum per-device wire bytes of every collective in post-opt HLO."""
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if m is None:
+            continue
+        op = m.group("op").replace("-start", "")
+        rbytes = _type_bytes(m.group("rtype"))
+        gm = _GROUPS_IOTA_RE.search(line)
+        if gm:
+            group_size = int(gm.group(2))
+            n_groups = int(gm.group(1))
+        else:
+            gl = _GROUPS_LIST_RE.search(line)
+            group_size = len(gl.group(1).split(",")) if gl else n_devices
+            n_groups = n_devices // max(group_size, 1)
+        n = max(group_size, 1)
+        frac = (n - 1) / n
+        # result_bytes is the per-device output size in SPMD HLO.
+        if op == "all-gather":
+            wire = rbytes * frac                     # gathered result streams in
+        elif op == "reduce-scatter":
+            wire = rbytes * n * frac                 # input = n * output
+        elif op == "all-reduce":
+            wire = 2 * rbytes * frac
+        elif op == "all-to-all":
+            wire = rbytes * frac
+        else:  # collective-permute
+            wire = rbytes
+        stats.counts[op] = stats.counts.get(op, 0) + 1
+        stats.result_bytes[op] = stats.result_bytes.get(op, 0) + rbytes
+        stats.wire_bytes += wire
+        crosses_pod = bool(pod_size) and group_size > pod_size
+        if crosses_pod:
+            stats.cross_pod_wire_bytes += wire
+        stats.details.append(
+            {"op": op, "result_bytes": rbytes, "group_size": group_size,
+             "wire_bytes": wire, "cross_pod": crosses_pod}
+        )
+    return stats
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    flops_per_device: float
+    bytes_per_device: float
+    wire_bytes_per_device: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops_total: float
+    useful_flops_ratio: float        # MODEL_FLOPS / (chips * HLO_flops)
+    roofline_fraction: float         # compute_s / max(all terms)
+    peak_memory_bytes: int
+    collective_counts: Dict[str, int]
+    note: str = ""
+
+    @staticmethod
+    def build(arch, shape, mesh_name, n_devices, cost, memory_stats,
+              coll: CollectiveStats, model_flops_total: float, note: str = ""):
+        flops = float(cost.get("flops", 0.0))
+        bytes_acc = float(cost.get("bytes accessed", 0.0))
+        compute_s = flops / V5E_PEAK_FLOPS_BF16
+        memory_s = bytes_acc / V5E_HBM_BW
+        collective_s = coll.wire_bytes / V5E_ICI_LINK_BW
+        terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+        bottleneck = max(terms, key=terms.get)
+        denom = n_devices * flops
+        useful = model_flops_total / denom if denom else 0.0
+        tmax = max(terms.values()) or 1.0
+        return RooflineReport(
+            arch=arch, shape=shape, mesh=mesh_name, n_devices=n_devices,
+            flops_per_device=flops, bytes_per_device=bytes_acc,
+            wire_bytes_per_device=coll.wire_bytes,
+            compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+            bottleneck=bottleneck, model_flops_total=model_flops_total,
+            useful_flops_ratio=useful,
+            roofline_fraction=compute_s / tmax,
+            peak_memory_bytes=memory_stats,
+            collective_counts=dict(coll.counts),
+            note=note,
+        )
+
+    def to_dict(self) -> dict:
+        return dict(self.__dict__)
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS: 6*N_active*tokens (train), 2*N_active*tokens (fwd-only)."""
+    n = cfg.n_active_params
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch

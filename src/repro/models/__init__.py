@@ -1,0 +1,7 @@
+"""Model substrate: the 10 assigned architectures in pure JAX."""
+
+from .model_api import Model, build_model
+from .layers import mesh_context, set_mesh, clear_mesh, shard, resolve_pspec, axis_rules
+
+__all__ = ["Model", "build_model", "mesh_context", "set_mesh", "clear_mesh",
+           "shard", "resolve_pspec", "axis_rules"]

@@ -1,0 +1,231 @@
+"""RWKV-6 "Finch": attention-free LM with data-dependent decay.
+
+Per layer: a *time-mixing* block (token shift -> r/k/v/gate/decay
+projections -> multi-head WKV linear-attention recurrence with per-step
+data-dependent decay -> group norm -> output proj) and a *channel-mixing*
+block (token shift -> squared-ReLU MLP). The WKV recurrence runs through
+the chunked kernel (``repro.kernels.wkv6``); decode keeps an O(1) state
+(per-head KxV matrix + last-token shift states), which is what makes the
+long_500k shape tractable for this family.
+
+Faithful-with-noted-simplifications: the five per-projection static
+token-shift mixes are kept; the data-dependent LoRA modulation is applied
+to the decay (the component that matters for the recurrence) rather than
+to all five mixes.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..kernels import wkv6
+from .layers import ParamDef, cross_entropy, embed_tokens, rms_norm, shard, stack_defs, unembed
+
+LORA_RANK = 32
+
+
+def _heads(cfg: ModelConfig) -> Tuple[int, int]:
+    hd = cfg.rwkv_head_dim
+    return cfg.d_model // hd, hd
+
+
+def layer_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    d, f = cfg.d_model, cfg.d_ff
+    H, K = _heads(cfg)
+    return {
+        "ln1": {"w": ParamDef((d,), (None,), init="ones")},
+        "tmix": {
+            "mu_r": ParamDef((d,), (None,), init="zeros"),
+            "mu_k": ParamDef((d,), (None,), init="zeros"),
+            "mu_v": ParamDef((d,), (None,), init="zeros"),
+            "mu_w": ParamDef((d,), (None,), init="zeros"),
+            "mu_g": ParamDef((d,), (None,), init="zeros"),
+            "wr": ParamDef((d, d), ("embed_w", "heads_flat")),
+            "wk": ParamDef((d, d), ("embed_w", "heads_flat")),
+            "wv": ParamDef((d, d), ("embed_w", "heads_flat")),
+            "wg": ParamDef((d, d), ("embed_w", "heads_flat")),
+            "w0": ParamDef((d,), (None,), init="zeros"),
+            "w_lora_a": ParamDef((d, LORA_RANK), ("embed_w", None)),
+            "w_lora_b": ParamDef((LORA_RANK, d), (None, None)),
+            "u": ParamDef((H, K), (None, None), init="zeros"),
+            "ln_x": ParamDef((d,), (None,), init="ones"),
+            "wo": ParamDef((d, d), ("heads_flat", "embed_w")),
+        },
+        "ln2": {"w": ParamDef((d,), (None,), init="ones")},
+        "cmix": {
+            "mu_k": ParamDef((d,), (None,), init="zeros"),
+            "mu_r": ParamDef((d,), (None,), init="zeros"),
+            "wk": ParamDef((d, f), ("embed_w", "ff")),
+            "wv": ParamDef((f, d), ("ff", "embed_w")),
+            "wr": ParamDef((d, d), ("embed_w", None)),
+        },
+    }
+
+
+def model_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    defs = {
+        "embed": ParamDef((cfg.vocab_padded, cfg.d_model), ("vocab", "embed_w")),
+        "final_norm": {"w": ParamDef((cfg.d_model,), (None,), init="ones")},
+        "unembed": ParamDef((cfg.vocab_padded, cfg.d_model), ("vocab", "embed_w")),
+    }
+    if cfg.scan_layers:
+        defs["layers"] = stack_defs(layer_defs(cfg), cfg.n_layers)
+    else:
+        defs["layers"] = [layer_defs(cfg) for _ in range(cfg.n_layers)]
+    return defs
+
+
+def _shift(x: jnp.ndarray, last: jnp.ndarray) -> jnp.ndarray:
+    """Token shift: x_{t-1} with ``last`` filling position 0. x: (B,S,D)."""
+    return jnp.concatenate([last[:, None], x[:, :-1]], axis=1)
+
+
+def _mix(x, xx, mu):
+    return x + (xx - x) * mu
+
+
+def _tmix_inputs(cfg, p, x, last_x):
+    """Compute r,k,v,g,log-decay for a sequence (B,S,D)."""
+    H, K = _heads(cfg)
+    B, S, d = x.shape
+    xx = _shift(x, last_x)
+    r = jnp.einsum("bsd,de->bse", _mix(x, xx, p["mu_r"]), p["wr"])
+    k = jnp.einsum("bsd,de->bse", _mix(x, xx, p["mu_k"]), p["wk"])
+    v = jnp.einsum("bsd,de->bse", _mix(x, xx, p["mu_v"]), p["wv"])
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", _mix(x, xx, p["mu_g"]), p["wg"]))
+    xw = _mix(x, xx, p["mu_w"])
+    lora = jnp.einsum("bsr,rd->bsd", jnp.tanh(jnp.einsum("bsd,dr->bsr", xw, p["w_lora_a"])), p["w_lora_b"])
+    lw = -jnp.exp(jnp.clip(p["w0"] + lora, -8.0, 6.0).astype(jnp.float32))  # log decay <= 0
+
+    def to_heads(t, dim=K):
+        return t.reshape(B, S, H, dim).swapaxes(1, 2)   # (B,H,S,K)
+
+    return to_heads(r), to_heads(k), to_heads(v), to_heads(lw.astype(x.dtype)), g
+
+
+def _group_norm(x: jnp.ndarray, w: jnp.ndarray, H: int, eps: float = 64e-5) -> jnp.ndarray:
+    """Per-head group norm over the flattened head outputs. x: (B,S,D)."""
+    B, S, d = x.shape
+    xg = x.reshape(B, S, H, d // H).astype(jnp.float32)
+    mean = xg.mean(-1, keepdims=True)
+    var = ((xg - mean) ** 2).mean(-1, keepdims=True)
+    xg = (xg - mean) * jax.lax.rsqrt(var + eps)
+    return (xg.reshape(B, S, d) * w).astype(x.dtype)
+
+
+def tmix_block(cfg, p, x, last_x, state0):
+    """x: (B,S,D) normed. Returns (out, new_last_x, new_state)."""
+    H, K = _heads(cfg)
+    r, k, v, lw, g = _tmix_inputs(cfg, p, x, last_x)
+    lwf = lw.astype(jnp.float32)
+    out, state = wkv6(r, k, v, lwf, p["u"].astype(jnp.float32), state0)
+    B, _, S, _ = out.shape  # (B,H,S,K)
+    out = out.swapaxes(1, 2).reshape(B, S, cfg.d_model)
+    out = _group_norm(out, p["ln_x"], H) * g
+    out = jnp.einsum("bsd,de->bse", out, p["wo"])
+    return shard(out, "batch", "seq", "embed"), x[:, -1], state
+
+
+def cmix_block(cfg, p, x, last_x):
+    xx = _shift(x, last_x)
+    k = jnp.einsum("bsd,df->bsf", _mix(x, xx, p["mu_k"]), p["wk"])
+    k = jnp.square(jax.nn.relu(k))
+    k = shard(k, "batch", "seq", "ff")
+    kv = jnp.einsum("bsf,fd->bsd", k, p["wv"])
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", _mix(x, xx, p["mu_r"]), p["wr"]))
+    return shard(r * kv, "batch", "seq", "embed"), x[:, -1]
+
+
+def _layer(cfg, p, x, st):
+    """st: dict(tmix_x (B,D), cmix_x (B,D), wkv (B,H,K,K))."""
+    y, tlast, wkv_state = tmix_block(cfg, p["tmix"], rms_norm(x, p["ln1"]["w"], eps=cfg.norm_eps), st["tmix_x"], st["wkv"])
+    x = x + y
+    y, clast = cmix_block(cfg, p["cmix"], rms_norm(x, p["ln2"]["w"], eps=cfg.norm_eps), st["cmix_x"])
+    x = x + y
+    return x, {"tmix_x": tlast, "cmix_x": clast, "wkv": wkv_state}
+
+
+def state_defs(cfg: ModelConfig, batch: int) -> Dict[str, Any]:
+    H, K = _heads(cfg)
+    per = {
+        "tmix_x": ParamDef((batch, cfg.d_model), ("batch", "state"), init="zeros"),
+        "cmix_x": ParamDef((batch, cfg.d_model), ("batch", "state"), init="zeros"),
+        "wkv": ParamDef((batch, H, K, K), ("batch", "heads", None, None), init="zeros", dtype="float32"),
+    }
+    if cfg.scan_layers:
+        return {"layers": stack_defs(per, cfg.n_layers)}
+    return {"layers": [per for _ in range(cfg.n_layers)]}
+
+
+def _zero_state(cfg, batch_size, dtype):
+    H, K = _heads(cfg)
+    per = {
+        "tmix_x": jnp.zeros((batch_size, cfg.d_model), dtype),
+        "cmix_x": jnp.zeros((batch_size, cfg.d_model), dtype),
+        "wkv": jnp.zeros((batch_size, H, K, K), jnp.float32),
+    }
+    return per
+
+
+def forward(cfg: ModelConfig, params, batch, *, last_only: bool = False):
+    tokens = batch["tokens"]
+    x = embed_tokens(params["embed"], tokens)
+    B = x.shape[0]
+    zero = _zero_state(cfg, B, x.dtype)
+
+    if cfg.scan_layers:
+        def body(x, lp):
+            x, _ = _layer(cfg, lp, x, zero)
+            return x, None
+
+        if cfg.remat != "none":
+            body = jax.checkpoint(body, prevent_cse=False)
+        x, _ = jax.lax.scan(body, x, params["layers"])
+    else:
+        for lp in params["layers"]:
+            blk = (lambda p_, x_: _layer(cfg, p_, x_, zero))
+            if cfg.remat != "none":
+                blk = jax.checkpoint(blk, prevent_cse=False)
+            x, _ = blk(lp, x)
+    x = rms_norm(x, params["final_norm"]["w"], eps=cfg.norm_eps)
+    if last_only:
+        x = x[:, -1:]
+    logits = unembed(x, params["unembed"], valid=cfg.vocab_size)
+    return logits, {}
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    logits, _ = forward(cfg, params, batch)
+    loss = cross_entropy(logits, batch["labels"], batch.get("loss_mask"))
+    return loss, {"loss": loss, "ce_loss": loss}
+
+
+def cache_defs(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    return state_defs(cfg, batch)
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, lengths):
+    """Single-token step: runs the same layer code with S=1."""
+    x = embed_tokens(params["embed"], tokens)       # (B, 1, D)
+
+    if cfg.scan_layers:
+        def body(x, scanned):
+            lp, st = scanned
+            x, st = _layer(cfg, lp, x, st)
+            return x, st
+
+        x, new_states = jax.lax.scan(body, x, (params["layers"], cache["layers"]))
+        cache = {"layers": new_states}
+    else:
+        new_states = []
+        for lp, st in zip(params["layers"], cache["layers"]):
+            x, st = _layer(cfg, lp, x, st)
+            new_states.append(st)
+        cache = {"layers": new_states}
+    x = rms_norm(x, params["final_norm"]["w"], eps=cfg.norm_eps)
+    logits = unembed(x, params["unembed"], valid=cfg.vocab_size)
+    return logits, cache

@@ -1,0 +1,213 @@
+"""Whisper-large-v3 backbone: encoder-decoder with cross-attention.
+
+Per the assignment the conv/mel frontend is a STUB: ``input_specs``
+supplies precomputed frame embeddings (B, encoder_seq, d_model). The
+encoder is a bidirectional transformer with fixed sinusoidal positions;
+the decoder is a causal transformer with self- + cross-attention.
+
+Hardware adaptation note (DESIGN.md): the decoder uses RoPE instead of
+Whisper's 448-slot learned positions so the assigned 4k-train / 32k-decode
+backbone shapes are well-defined; pre-LN layernorm (with bias) is kept.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import (
+    ParamDef,
+    attention_block,
+    attn_defs,
+    cross_attention_block,
+    cross_entropy,
+    embed_tokens,
+    mlp_block,
+    mlp_defs,
+    shard,
+    stack_defs,
+    unembed,
+)
+from .kvcache import attn_cache_defs, decode_attention_step
+from .transformer import norm_def, apply_norm
+
+
+def _sinusoid(seq: int, d: int, dtype) -> jnp.ndarray:
+    pos = jnp.arange(seq)[:, None].astype(jnp.float32)
+    dim = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+    inv = jnp.exp(-dim * (jnp.log(10000.0) / (d // 2 - 1)))
+    ang = pos * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+def enc_layer_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    return {
+        "ln1": norm_def(cfg),
+        "attn": attn_defs(cfg),
+        "ln2": norm_def(cfg),
+        "ffn": mlp_defs(cfg),
+    }
+
+
+def dec_layer_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    return {
+        "ln1": norm_def(cfg),
+        "self_attn": attn_defs(cfg),
+        "ln_x": norm_def(cfg),
+        "cross_attn": attn_defs(cfg),
+        "ln2": norm_def(cfg),
+        "ffn": mlp_defs(cfg),
+    }
+
+
+def model_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    if cfg.scan_layers:
+        enc = stack_defs(enc_layer_defs(cfg), cfg.encoder_layers)
+        dec = stack_defs(dec_layer_defs(cfg), cfg.n_layers)
+    else:
+        enc = [enc_layer_defs(cfg) for _ in range(cfg.encoder_layers)]
+        dec = [dec_layer_defs(cfg) for _ in range(cfg.n_layers)]
+    return {
+        "embed": ParamDef((cfg.vocab_padded, cfg.d_model), ("vocab", "embed_w")),
+        "enc_layers": enc,
+        "enc_norm": norm_def(cfg),
+        "dec_layers": dec,
+        "final_norm": norm_def(cfg),
+    }
+
+
+def _remat(cfg, fn):
+    if cfg.remat == "none":
+        return fn
+    return jax.checkpoint(fn, prevent_cse=False)
+
+
+def encode(cfg: ModelConfig, params, frames: jnp.ndarray) -> jnp.ndarray:
+    """frames: (B, Se, D) stub embeddings -> encoder states (B, Se, D)."""
+    x = frames + _sinusoid(frames.shape[1], cfg.d_model, frames.dtype)[None]
+    x = shard(x, "batch", "seq", "embed")
+    def enc_block(x, lp):
+        # bidirectional self-attention, no rope (sinusoidal positions above)
+        y = apply_norm(cfg, lp["ln1"], x)
+        from .layers import apply_qkv, context_parallel_attention, shard as _shard
+        from ..kernels import flash_attention
+        q, k, v = apply_qkv(lp["attn"], y)
+        if context_parallel_attention(cfg):
+            q = _shard(q, "batch", "seq_cp", None, None)
+        att = flash_attention(q.swapaxes(1, 2), k.swapaxes(1, 2), v.swapaxes(1, 2),
+                              causal=False).swapaxes(1, 2)
+        att = jnp.einsum("bshk,hkd->bsd", att, lp["attn"]["wo"])
+        x = x + shard(att, "batch", "seq", "embed")
+        y = apply_norm(cfg, lp["ln2"], x)
+        return x + mlp_block(cfg, lp["ffn"], y), None
+
+    enc_block = _remat(cfg, enc_block)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(enc_block, x, params["enc_layers"])
+    else:
+        for lp in params["enc_layers"]:
+            x, _ = enc_block(x, lp)
+    return apply_norm(cfg, params["enc_norm"], x)
+
+
+def _cross_kv(cfg, p, enc: jnp.ndarray):
+    k = jnp.einsum("bsd,dhk->bshk", enc, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc, p["wv"])
+    return k, v
+
+
+def decode_stack(cfg: ModelConfig, params, x: jnp.ndarray, enc: jnp.ndarray) -> jnp.ndarray:
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1], dtype=jnp.int32)[None], x.shape[:2])
+
+    def dec_block(x, lp):
+        y = apply_norm(cfg, lp["ln1"], x)
+        x = x + attention_block(cfg, lp["self_attn"], y, positions, causal=True)
+        y = apply_norm(cfg, lp["ln_x"], x)
+        x = x + cross_attention_block(cfg, lp["cross_attn"], y, _cross_kv(cfg, lp["cross_attn"], enc))
+        y = apply_norm(cfg, lp["ln2"], x)
+        return x + mlp_block(cfg, lp["ffn"], y), None
+
+    dec_block = _remat(cfg, dec_block)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(dec_block, x, params["dec_layers"])
+    else:
+        for lp in params["dec_layers"]:
+            x, _ = dec_block(x, lp)
+    return apply_norm(cfg, params["final_norm"], x)
+
+
+def forward(cfg: ModelConfig, params, batch, *, last_only: bool = False):
+    enc = encode(cfg, params, batch["frames"])
+    x = embed_tokens(params["embed"], batch["tokens"])
+    x = decode_stack(cfg, params, x, enc)
+    if last_only:
+        x = x[:, -1:]
+    logits = unembed(x, params["embed"], valid=cfg.vocab_size)   # whisper ties embeddings
+    return logits, {}
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    logits, _ = forward(cfg, params, batch)
+    loss = cross_entropy(logits, batch["labels"], batch.get("loss_mask"))
+    return loss, {"loss": loss, "ce_loss": loss}
+
+
+# ---------------------------------------------------------------------------
+# Decode: self-attn KV cache + precomputed cross-attn KV
+# ---------------------------------------------------------------------------
+
+
+def cache_defs(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    per = {
+        "self": attn_cache_defs(cfg, batch, max_len),
+        "cross_k": ParamDef((batch, cfg.encoder_seq, cfg.n_kv_heads, cfg.head_dim),
+                            ("batch", None, "cache_kv_heads", "cache_head_dim"), init="zeros"),
+        "cross_v": ParamDef((batch, cfg.encoder_seq, cfg.n_kv_heads, cfg.head_dim),
+                            ("batch", None, "cache_kv_heads", "cache_head_dim"), init="zeros"),
+    }
+    if cfg.scan_layers:
+        return {"layers": stack_defs(per, cfg.n_layers)}
+    return {"layers": [per for _ in range(cfg.n_layers)]}
+
+
+def prefill_cross(cfg: ModelConfig, params, cache, frames: jnp.ndarray):
+    """Run the encoder on stub frames and fill the per-layer cross-attn KV."""
+    enc = encode(cfg, params, frames)
+
+    def per_layer(lp):
+        k = jnp.einsum("bsd,dhk->bshk", enc, lp["cross_attn"]["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", enc, lp["cross_attn"]["wv"])
+        return k, v
+
+    ks, vs = jax.vmap(per_layer)(params["dec_layers"])
+    return {"layers": {**cache["layers"], "cross_k": ks, "cross_v": vs}}
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, lengths):
+    x = embed_tokens(params["embed"], tokens)
+
+    def body(x, scanned):
+        lp, cl = scanned
+        y = apply_norm(cfg, lp["ln1"], x)
+        att, new_self = decode_attention_step(cfg, lp["self_attn"], cl["self"], y, lengths)
+        x = x + att
+        y = apply_norm(cfg, lp["ln_x"], x)
+        x = x + cross_attention_block(cfg, lp["cross_attn"], y, (cl["cross_k"], cl["cross_v"]))
+        y = apply_norm(cfg, lp["ln2"], x)
+        x = x + mlp_block(cfg, lp["ffn"], y)
+        return x, {"self": new_self, "cross_k": cl["cross_k"], "cross_v": cl["cross_v"]}
+
+    if cfg.scan_layers:
+        x, new_layers = jax.lax.scan(body, x, (params["dec_layers"], cache["layers"]))
+    else:
+        new_layers = []
+        for lp, cl in zip(params["dec_layers"], cache["layers"]):
+            x, cl = body(x, (lp, cl))
+            new_layers.append(cl)
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = unembed(x, params["embed"], valid=cfg.vocab_size)
+    return logits, {"layers": new_layers}

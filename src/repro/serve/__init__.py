@@ -1,0 +1,4 @@
+"""Serving substrate: jitted decode step + continuous-batching engine."""
+
+from .decode import make_serve_step, make_dryrun_serve_step
+from .engine import ServingEngine, Request, EngineStats

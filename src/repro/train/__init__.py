@@ -1,0 +1,14 @@
+"""Training substrate: optimizer, train step, compression, checkpoint, data."""
+
+from .optimizer import OptimizerConfig, init_opt_state, apply_updates, lr_at
+from .train_step import make_train_step, init_train_state
+from .checkpoint import CheckpointManager
+from .data import SyntheticLM, PrefetchLoader, DataConfig
+from .grad_compress import (
+    CompressedSync,
+    compress_tree,
+    decompress_tree,
+    payload_bytes,
+    quantize_int8,
+    dequantize_int8,
+)

@@ -1,0 +1,108 @@
+"""Deterministic synthetic data pipeline with host prefetch.
+
+Produces language-model batches (tokens/labels and stub modality inputs)
+from a seeded generator — reproducible across restarts (the pipeline
+state is just ``(seed, step)``, which rides in the checkpoint `extra`).
+A background prefetch thread keeps ``depth`` batches ready so host data
+generation overlaps device compute (the paper's asynchronous-I/O lesson
+applied to the input pipeline).
+
+The token stream is not uniform noise: it is a Zipfian unigram mix with
+a Markov bigram component so the model has learnable structure and the
+end-to-end driver example shows a genuinely decreasing loss curve.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from dataclasses import dataclass
+from typing import Any, Dict, Iterator, Optional
+
+import numpy as np
+
+from ..configs.base import ModelConfig, ShapeConfig
+
+
+@dataclass
+class DataConfig:
+    seed: int = 0
+    zipf_a: float = 1.2
+    markov_strength: float = 0.7
+
+
+class SyntheticLM:
+    """Zipf + Markov synthetic token stream."""
+
+    def __init__(self, cfg: ModelConfig, seq_len: int, batch: int, dc: DataConfig = DataConfig()):
+        self.cfg = cfg
+        self.seq = seq_len
+        self.batch = batch
+        self.dc = dc
+        v = cfg.vocab_size
+        rng = np.random.default_rng(dc.seed)
+        ranks = np.arange(1, v + 1, dtype=np.float64)
+        self.unigram = ranks ** -dc.zipf_a
+        self.unigram /= self.unigram.sum()
+        # sparse deterministic bigram: each token prefers (t*7 + 11) % v
+        self.next_pref = (np.arange(v) * 7 + 11) % v
+
+    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        rng = np.random.default_rng((self.dc.seed, step))
+        v = self.cfg.vocab_size
+        toks = np.empty((self.batch, self.seq + 1), np.int32)
+        toks[:, 0] = rng.choice(v, size=self.batch, p=self.unigram)
+        draws = rng.random((self.batch, self.seq))
+        fresh = rng.choice(v, size=(self.batch, self.seq), p=self.unigram)
+        for t in range(1, self.seq + 1):
+            follow = self.next_pref[toks[:, t - 1]]
+            toks[:, t] = np.where(draws[:, t - 1] < self.dc.markov_strength, follow, fresh[:, t - 1])
+        out = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+        cfg = self.cfg
+        if cfg.family == "whisper":
+            out["frames"] = rng.standard_normal(
+                (self.batch, cfg.encoder_seq, cfg.d_model), np.float32) * 0.1
+        if cfg.family == "vlm":
+            out["patches"] = rng.standard_normal(
+                (self.batch, cfg.vision_patches, cfg.d_model), np.float32) * 0.1
+        return out
+
+
+class PrefetchLoader:
+    """Background-thread prefetch over SyntheticLM (or any step->batch fn)."""
+
+    def __init__(self, source: SyntheticLM, start_step: int = 0, depth: int = 2):
+        self.source = source
+        self.step = start_step
+        self._q: "queue.Queue[Any]" = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._work, daemon=True, name="data-prefetch")
+        self._thread.start()
+
+    def _work(self) -> None:
+        s = self.step
+        while not self._stop.is_set():
+            b = self.source.batch_at(s)
+            while not self._stop.is_set():
+                try:
+                    self._q.put((s, b), timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+            s += 1
+
+    def __iter__(self) -> Iterator:
+        return self
+
+    def __next__(self):
+        step, batch = self._q.get()
+        self.step = step + 1
+        return step, batch
+
+    def close(self) -> None:
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass

@@ -1,0 +1,119 @@
+"""Gradient compression with error feedback (cross-pod / multi-site sync).
+
+Two mechanisms, mirroring the paper's two communication regimes:
+
+1. **Within a pod** (ICI-connected): gradients are synced by the XLA SPMD
+   partitioner; "compression" is dtype-level — ``cfg.grad_accum_dtype=
+   bfloat16`` halves all-reduce bytes. Nothing to do here.
+
+2. **Across pods / sites** (the paper's Globus multi-site deployments,
+   where data moves through the ProxyStore fabric): gradients are
+   quantized to int8 with per-row scales before transmission, and a
+   local f32 *error-feedback* buffer accumulates the quantization
+   residual so the compressed sync remains unbiased over time
+   (EF-SGD). ~4x fewer fabric bytes per sync.
+
+``CompressedSync`` is used by the multi-pod training driver: each pod
+publishes its compressed gradient tree through the data fabric; the
+reducer averages dequantized trees.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-row symmetric int8 quantization. x: (..., d)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(grads: Any, error_buf: Optional[Any] = None):
+    """Quantize a gradient pytree; returns (payload tree, new error buffer).
+
+    The error buffer holds ``g_total - dequant(q)`` per leaf and is added
+    to the next step's gradient before quantization (error feedback)."""
+    leaves, tdef = jax.tree_util.tree_flatten(grads)
+    err_leaves = (
+        jax.tree_util.tree_flatten(error_buf)[0] if error_buf is not None
+        else [jnp.zeros_like(l, jnp.float32) for l in leaves]
+    )
+    payload, new_err = [], []
+    for g, e in zip(leaves, err_leaves):
+        total = g.astype(jnp.float32) + e
+        flat = total.reshape(-1, total.shape[-1]) if total.ndim > 1 else total.reshape(1, -1)
+        q, scale = quantize_int8(flat)
+        deq = dequantize_int8(q, scale).reshape(total.shape)
+        payload.append({"q": q, "scale": scale, "shape": total.shape})
+        new_err.append(total - deq)
+    return (
+        jax.tree_util.tree_unflatten(tdef, payload),
+        jax.tree_util.tree_unflatten(tdef, new_err),
+    )
+
+
+def decompress_tree(payload: Any) -> Any:
+    def one(p):
+        return dequantize_int8(p["q"], p["scale"]).reshape(p["shape"])
+
+    return jax.tree_util.tree_map(
+        one, payload, is_leaf=lambda x: isinstance(x, dict) and "q" in x
+    )
+
+
+def payload_bytes(payload: Any) -> int:
+    total = 0
+    for p in jax.tree_util.tree_leaves(
+        payload, is_leaf=lambda x: isinstance(x, dict) and "q" in x
+    ):
+        total += p["q"].size + p["scale"].size * 4
+    return total
+
+
+@dataclass
+class CompressedSync:
+    """Cross-pod gradient averaging through the data fabric.
+
+    Each participant calls ``contribute(pod_id, grads)``; once all
+    ``n_pods`` arrive, ``reduce()`` returns the dequantized average.
+    Error-feedback buffers are per-pod local state."""
+
+    n_pods: int
+    error_bufs: Dict[int, Any] = field(default_factory=dict)
+    _inbox: Dict[int, Any] = field(default_factory=dict)
+    bytes_sent: int = 0
+    bytes_uncompressed: int = 0
+
+    def contribute(self, pod_id: int, grads: Any) -> Any:
+        payload, new_err = compress_tree(grads, self.error_bufs.get(pod_id))
+        self.error_bufs[pod_id] = new_err
+        self._inbox[pod_id] = payload
+        self.bytes_sent += payload_bytes(payload)
+        self.bytes_uncompressed += sum(
+            l.size * 4 for l in jax.tree_util.tree_leaves(grads)
+        )
+        return payload
+
+    def ready(self) -> bool:
+        return len(self._inbox) >= self.n_pods
+
+    def reduce(self) -> Any:
+        assert self.ready()
+        trees = [decompress_tree(p) for p in self._inbox.values()]
+        self._inbox.clear()
+        return jax.tree_util.tree_map(
+            lambda *xs: sum(xs) / len(xs), *trees
+        )

@@ -1,0 +1,187 @@
+"""Optimizers (hand-rolled: no optax in this environment).
+
+* ``adamw`` — standard AdamW with decoupled weight decay.
+* ``adafactor`` — factored second moment (row/col statistics for >=2-D
+  params) + optional bf16 first moment. This is the memory lever that
+  fits llama3-405B training on 256 x 16 GB chips: m in bf16 (2 B/param)
+  + factored v (~0 B/param) instead of AdamW's 8 B/param.
+
+Optimizer state dtype is configurable (``cfg.opt_state_dtype``); update
+math always runs in f32.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"            # adamw | adafactor
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+    state_dtype: str = "float32"   # float32 | bfloat16
+
+
+def lr_at(oc: OptimizerConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Linear warmup -> cosine decay to min_lr_frac."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(oc.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - oc.warmup_steps) / jnp.maximum(oc.total_steps - oc.warmup_steps, 1), 0.0, 1.0
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    frac = oc.min_lr_frac + (1 - oc.min_lr_frac) * cos
+    return oc.lr * warm * frac
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(tree: Any, max_norm: float) -> Tuple[Any, jnp.ndarray]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), tree), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw_init(params: Any, oc: OptimizerConfig) -> Dict[str, Any]:
+    dt = jnp.dtype(oc.state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "m": jax.tree_util.tree_map(zeros, params),
+        "v": jax.tree_util.tree_map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(params, grads, state, oc: OptimizerConfig):
+    step = state["step"] + 1
+    lr = lr_at(oc, step)
+    b1, b2 = oc.b1, oc.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+    dt = jnp.dtype(oc.state_dtype)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        v_new = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+        mh = m_new / bc1
+        vh = v_new / bc2
+        delta = lr * (mh / (jnp.sqrt(vh) + oc.eps) + oc.weight_decay * p.astype(jnp.float32))
+        return (p.astype(jnp.float32) - delta).astype(p.dtype), m_new.astype(dt), v_new.astype(dt)
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_flatten(grads)[0]
+    flat_m = jax.tree_util.tree_flatten(state["m"])[0]
+    flat_v = jax.tree_util.tree_flatten(state["v"])[0]
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(tdef, [o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment; memory-efficient for 405B)
+# ---------------------------------------------------------------------------
+
+
+def _factored(shape: Tuple[int, ...]) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def adafactor_init(params: Any, oc: OptimizerConfig) -> Dict[str, Any]:
+    dt = jnp.dtype(oc.state_dtype)
+
+    def v_init(p):
+        if _factored(p.shape):
+            return {
+                "vr": jnp.zeros(p.shape[:-1], jnp.float32),         # row stats
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),  # col stats
+            }
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    return {
+        "m": jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, dt), params),
+        "v": jax.tree_util.tree_map(v_init, params, is_leaf=lambda x: hasattr(x, "shape")),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adafactor_update(params, grads, state, oc: OptimizerConfig):
+    step = state["step"] + 1
+    lr = lr_at(oc, step)
+    b2 = oc.b2
+    dt = jnp.dtype(oc.state_dtype)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        g2 = gf * gf + 1e-30
+        if _factored(p.shape):
+            vr = b2 * v["vr"] + (1 - b2) * g2.mean(-1)
+            vc = b2 * v["vc"] + (1 - b2) * g2.mean(-2)
+            denom = (vr[..., None] * vc[..., None, :]) / jnp.maximum(
+                vr.mean(-1)[..., None, None], 1e-30
+            )
+            precond = gf * jax.lax.rsqrt(denom + oc.eps)
+            v_new = {"vr": vr, "vc": vc}
+        else:
+            vv = b2 * v["v"] + (1 - b2) * g2
+            precond = gf * jax.lax.rsqrt(vv + oc.eps)
+            v_new = {"v": vv}
+        m_new = oc.b1 * m.astype(jnp.float32) + (1 - oc.b1) * precond
+        delta = lr * (m_new + oc.weight_decay * p.astype(jnp.float32))
+        return (p.astype(jnp.float32) - delta).astype(p.dtype), m_new.astype(dt), v_new
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_flatten(grads)[0]
+    flat_m = jax.tree_util.tree_flatten(state["m"])[0]
+    flat_v = jax.tree_util.tree_leaves(
+        state["v"], is_leaf=lambda x: isinstance(x, dict) and ("v" in x or "vr" in x)
+    )
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(tdef, [o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}
+
+
+# ---------------------------------------------------------------------------
+# Facade
+# ---------------------------------------------------------------------------
+
+
+def init_opt_state(params: Any, oc: OptimizerConfig) -> Dict[str, Any]:
+    return adafactor_init(params, oc) if oc.name == "adafactor" else adamw_init(params, oc)
+
+
+def apply_updates(params, grads, state, oc: OptimizerConfig):
+    if oc.clip_norm:
+        grads, gnorm = clip_by_global_norm(grads, oc.clip_norm)
+    else:
+        gnorm = global_norm(grads)
+    if oc.name == "adafactor":
+        new_p, new_s = adafactor_update(params, grads, state, oc)
+    else:
+        new_p, new_s = adamw_update(params, grads, state, oc)
+    return new_p, new_s, {"grad_norm": gnorm, "lr": lr_at(oc, new_s["step"])}

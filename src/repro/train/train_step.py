@@ -1,0 +1,104 @@
+"""Train step: loss -> grads (with microbatch accumulation) -> update.
+
+Key levers (all config-driven, all measured in EXPERIMENTS.md §Perf):
+  * ``cfg.grad_accum``       — microbatches per step (lax.scan over
+    microbatches keeps peak activation memory ~1/grad_accum);
+  * ``cfg.grad_accum_dtype`` — f32 (default) or bf16 accumulation; bf16
+    halves both the accumulator memory and the DP all-reduce bytes
+    (gradient compression at the collective level);
+  * ``cfg.remat``            — activation checkpointing policy (in model);
+  * sharding constraints re-applied to the gradient tree so the XLA SPMD
+    partitioner keeps grads co-sharded with params (FSDP reduce-scatter).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+
+from ..configs.base import ModelConfig
+from ..models.model_api import Model
+from .optimizer import OptimizerConfig, apply_updates, init_opt_state
+
+
+def _split_microbatches(batch: Dict[str, jnp.ndarray], n: int) -> Dict[str, jnp.ndarray]:
+    """(B, ...) -> (n, B/n, ...) for every array in the batch."""
+
+    def split(x):
+        b = x.shape[0]
+        assert b % n == 0, f"global batch {b} not divisible by grad_accum {n}"
+        return x.reshape((n, b // n) + x.shape[1:])
+
+    return {k: split(v) for k, v in batch.items()}
+
+
+def make_train_step(
+    model: Model,
+    oc: OptimizerConfig,
+    mesh: Optional[Mesh] = None,
+) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+    cfg = model.cfg
+    accum_dt = jnp.dtype(cfg.grad_accum_dtype)
+
+    def loss_fn(params, microbatch):
+        loss, metrics = model.loss(params, microbatch)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def constrain_like_params(tree):
+        if mesh is None:
+            return tree
+        specs = model.pspecs(mesh)
+        return jax.tree_util.tree_map(
+            lambda x, s: jax.lax.with_sharding_constraint(x, NamedSharding(mesh, s)),
+            tree, specs,
+        )
+
+    def train_step(params, opt_state, batch):
+        n = cfg.grad_accum
+        if n <= 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            micro = _split_microbatches(batch, n)
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, accum_dt), params
+            )
+            zeros = constrain_like_params(zeros)
+
+            def body(carry, mb):
+                acc, loss_acc = carry
+                (loss, _), grads = grad_fn(params, mb)
+                acc = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(accum_dt), acc, grads
+                )
+                acc = constrain_like_params(acc)
+                return (acc, loss_acc + loss), None
+
+            (grads, loss_sum), _ = jax.lax.scan(
+                body, (zeros, jnp.zeros((), jnp.float32)), micro
+            )
+            grads = jax.tree_util.tree_map(lambda g: (g / n).astype(accum_dt), grads)
+            loss = loss_sum / n
+            metrics = {"loss": loss}
+
+        grads = constrain_like_params(grads)
+        new_params, new_opt, opt_metrics = apply_updates(params, grads, opt_state, oc)
+        new_params = constrain_like_params(new_params)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def init_train_state(model: Model, oc: OptimizerConfig, rng: jax.Array):
+    params = model.init(rng)
+    opt_state = init_opt_state(params, oc)
+    return params, opt_state

@@ -1,0 +1,196 @@
+"""Unit tests: task queues, thinker agents, resource counter."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    BaseThinker,
+    InMemoryConnector,
+    KillSignal,
+    LocalColmenaQueues,
+    PipeColmenaQueues,
+    Proxy,
+    ResourceCounter,
+    Store,
+    agent,
+    event_responder,
+    result_processor,
+    task_submitter,
+)
+
+
+def _serve_n(queues, fns, n):
+    """Minimal inline server: run n tasks synchronously."""
+    for _ in range(n):
+        task = queues.get_task(timeout=2)
+        assert task is not None
+        task.mark("compute_started")
+        try:
+            task.set_success(fns[task.method](*task.args, **task.kwargs))
+        except Exception as e:  # noqa: BLE001
+            from repro.core import FailureKind
+
+            task.set_failure(FailureKind.EXCEPTION, str(e))
+        task.mark("compute_ended")
+        queues.send_result(task)
+
+
+class TestQueues:
+    @pytest.mark.parametrize("qcls", [LocalColmenaQueues, PipeColmenaQueues])
+    def test_roundtrip(self, qcls):
+        q = qcls(topics=["a"])
+        tid = q.send_inputs(2, 3, method="add", topic="a")
+        _serve_n(q, {"add": lambda x, y: x + y}, 1)
+        r = q.get_result(topic="a", timeout=2)
+        assert r.task_id == tid and r.success and r.value == 5
+        assert r.timing.compute is not None
+
+    def test_topics_independent(self):
+        q = LocalColmenaQueues(topics=["t1", "t2"])
+        q.send_inputs(1, method="f", topic="t1")
+        q.send_inputs(2, method="f", topic="t2")
+        _serve_n(q, {"f": lambda x: x}, 2)
+        r2 = q.get_result(topic="t2", timeout=2)
+        r1 = q.get_result(topic="t1", timeout=2)
+        assert r1.value == 1 and r2.value == 2
+
+    def test_completion_notice_before_result(self):
+        q = LocalColmenaQueues()
+        q.send_inputs(7, method="f")
+        _serve_n(q, {"f": lambda x: x}, 1)
+        notice = q.get_completion(timeout=2)
+        assert notice is not None and notice.success
+        r = q.get_result(timeout=2)
+        assert r.value == 7
+        # act-on-completion: notice timestamp precedes result return
+        assert r.time.completion_notified <= r.time.returned
+
+    def test_kill_signal(self):
+        q = LocalColmenaQueues()
+        q.send_kill_signal()
+        with pytest.raises(KillSignal):
+            q.get_task(timeout=2)
+
+    def test_auto_proxy_large_results(self):
+        store = Store("q-test", InMemoryConnector())
+        q = LocalColmenaQueues(proxystore=store, proxy_threshold=100)
+        q.send_inputs(np.zeros(1000), method="f")
+        task = q.get_task(timeout=2)
+        assert isinstance(task.args[0], Proxy)   # input auto-proxied
+        task.mark("compute_started")
+        task.set_success(np.ones(1000))
+        task.mark("compute_ended")
+        q.send_result(task)
+        r = q.get_result(timeout=2)
+        assert isinstance(r.value, Proxy)        # output auto-proxied
+        assert np.allclose(r.value.resolve(), np.ones(1000))
+        assert q.metrics.proxied_bytes >= 16000
+
+    def test_timeout_returns_none(self):
+        q = LocalColmenaQueues()
+        assert q.get_result(timeout=0.05) is None
+        assert q.get_task(timeout=0.05) is None
+
+
+class TestResourceCounter:
+    def test_acquire_release(self):
+        rc = ResourceCounter(4)
+        assert rc.acquire("default", 3, timeout=0.1)
+        assert not rc.acquire("default", 2, timeout=0.1)
+        rc.release("default", 3)
+        assert rc.available("default") == 4
+
+    def test_reallocate(self):
+        rc = ResourceCounter(8, pools=["sim", "ml"])
+        assert rc.available("sim") == 8
+        assert rc.reallocate("sim", "ml", 3, timeout=0.5)
+        assert rc.available("ml") == 3 and rc.available("sim") == 5
+
+    def test_elastic_grow_shrink(self):
+        rc = ResourceCounter(2)
+        rc.grow("default", 4)
+        assert rc.total_slots == 6 and rc.available("default") == 6
+        assert rc.shrink("default", 3, timeout=0.5)
+        assert rc.total_slots == 3
+
+    def test_blocking_acquire_wakes(self):
+        rc = ResourceCounter(1)
+        assert rc.acquire("default", 1, timeout=0.1)
+        ok = []
+
+        def waiter():
+            ok.append(rc.acquire("default", 1, timeout=2))
+
+        t = threading.Thread(target=waiter)
+        t.start()
+        time.sleep(0.05)
+        rc.release("default", 1)
+        t.join()
+        assert ok == [True]
+
+
+class TestThinkerAgents:
+    def test_all_agent_types_cooperate(self):
+        q = LocalColmenaQueues()
+        seen = []
+
+        class T(BaseThinker):
+            def __init__(self):
+                super().__init__(q, ResourceCounter(2))
+                self.submitted = 0
+
+            @agent(startup=True)
+            def boot(self):
+                seen.append("boot")
+
+            @task_submitter(task_type="default", n_slots=1)
+            def submit(self):
+                self.submitted += 1
+                self.queues.send_inputs(self.submitted, method="echo")
+                if self.submitted >= 3:
+                    self.set_event("enough")
+
+            @result_processor()
+            def recv(self, result):
+                seen.append(("result", result.value))
+                self.rec.release("default", 1)
+
+            @event_responder(event_name="enough")
+            def finish(self):
+                time.sleep(0.1)  # let results drain
+                self.done.set()
+
+        thinker = T()
+        server = threading.Thread(
+            target=_serve_n, args=(q, {"echo": lambda x: x}, 3), daemon=True
+        )
+        server.start()
+        thinker.run(timeout=10)
+        assert "boot" in seen
+        assert len([s for s in seen if isinstance(s, tuple)]) >= 2
+
+    def test_critical_agent_exit_sets_done(self):
+        q = LocalColmenaQueues()
+
+        class T(BaseThinker):
+            @agent
+            def main(self):
+                time.sleep(0.02)
+
+        t = T(q)
+        t.run(timeout=5)
+        assert t.done.is_set()
+
+    def test_agent_exception_propagates(self):
+        q = LocalColmenaQueues()
+
+        class T(BaseThinker):
+            @agent
+            def main(self):
+                raise ValueError("boom")
+
+        with pytest.raises(RuntimeError):
+            T(q).run(timeout=5)

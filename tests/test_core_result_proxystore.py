@@ -1,0 +1,134 @@
+"""Unit tests: Result ledger + ProxyStore data fabric."""
+
+import pickle
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    FailureKind,
+    FileConnector,
+    InMemoryConnector,
+    Proxy,
+    ResourceRequest,
+    Result,
+    Store,
+    apply_threshold,
+    prefetch_all,
+    resolve_all,
+)
+from repro.core.proxystore import get_store
+from repro.core.serialization import object_nbytes
+
+
+class TestResult:
+    def test_timing_derivation(self):
+        r = Result(method="f", args=(1,))
+        r.mark("created")
+        r.mark("compute_started")
+        time.sleep(0.01)
+        r.mark("compute_ended")
+        r.mark("result_received")
+        r.mark("decision_made")
+        t = r.finalize_timings()
+        assert t.compute >= 0.01
+        assert t.dispatch >= 0
+        assert t.reaction is not None and t.decision is not None
+
+    def test_retry_clone_fresh(self):
+        r = Result(method="f", args=(1, 2), kwargs={"a": 3}, topic="t")
+        r.set_failure(FailureKind.WORKER_DIED, "boom")
+        c = r.clone_for_retry()
+        assert c.retries == 1
+        assert c.task_id != r.task_id
+        assert c.args == (1, 2) and c.kwargs == {"a": 3} and c.topic == "t"
+        assert c.success is None
+
+    def test_speculative_clone_same_id(self):
+        r = Result(method="f")
+        c = r.clone_for_speculation()
+        assert c.task_id == r.task_id
+        assert c.speculative
+
+    def test_success_failure_transitions(self):
+        r = Result(method="f")
+        r.set_success(42)
+        assert r.success and r.value == 42
+        r.set_failure(FailureKind.TIMEOUT, "too slow")
+        assert not r.success and r.failure is FailureKind.TIMEOUT
+
+
+class TestProxyStore:
+    def test_roundtrip_memory(self):
+        store = Store("t1", InMemoryConnector())
+        key = store.put({"x": 1})
+        assert store.get(key) == {"x": 1}
+
+    def test_proxy_lazy_and_transparent(self):
+        store = Store("t2", InMemoryConnector())
+        arr = np.arange(10.0)
+        p = store.proxy(arr)
+        assert not p.is_resolved
+        assert p.nbytes == arr.nbytes
+        # transparent ops
+        assert np.allclose(np.asarray(p), arr)
+        assert p.is_resolved
+        assert (p + 1)[0] == 1.0
+        assert p.shape == (10,)
+
+    def test_proxy_pickles_small(self):
+        store = Store("t3", InMemoryConnector())
+        big = np.zeros(100_000)
+        p = store.proxy(big)
+        blob = pickle.dumps(p)
+        assert len(blob) < 1000  # control-channel payload stays tiny
+
+    def test_proxy_cross_process_via_file(self, tmp_path):
+        store = Store("t4", FileConnector(str(tmp_path)))
+        p = store.proxy(np.ones(5))
+        blob = pickle.dumps(p)
+        # simulate a fresh process: drop the registry entry
+        from repro.core import proxystore as ps
+
+        with ps._REGISTRY_LOCK:
+            ps._REGISTRY.pop("t4")
+        p2 = pickle.loads(blob)
+        assert np.allclose(p2.resolve(), np.ones(5))
+
+    def test_threshold_proxying(self):
+        store = Store("t5", InMemoryConnector())
+        args = (np.zeros(10_000), 5, "small")
+        out, moved = apply_threshold(args, store, threshold_bytes=1000)
+        assert isinstance(out[0], Proxy)
+        assert out[1] == 5 and out[2] == "small"
+        assert moved == args[0].nbytes
+        resolved = resolve_all(out)
+        assert np.allclose(resolved[0], args[0])
+
+    def test_worker_cache_hits(self):
+        store = Store("t6", InMemoryConnector(), cache_size=4)
+        key = store.put(np.ones(10))
+        store.get(key)
+        store.get(key)
+        assert store.metrics.cache_hits >= 1
+
+    def test_prefetch_overlap(self):
+        store = Store("t7", InMemoryConnector())
+        p = store.proxy(np.ones(100))
+        prefetch_all((p,))
+        deadline = time.time() + 2
+        while not p.is_resolved and time.time() < deadline:
+            time.sleep(0.005)
+        assert np.allclose(p.resolve(), np.ones(100))
+
+    def test_evict_after_resolve(self):
+        store = Store("t8", InMemoryConnector())
+        p = store.proxy(np.ones(3), evict_after_resolve=True)
+        p.resolve()
+        assert not store.connector.exists(p.key)
+
+    def test_object_nbytes(self):
+        assert object_nbytes(np.zeros(10, np.float64)) == 80
+        assert object_nbytes(b"abc") == 3
+        assert object_nbytes([np.zeros(2), np.zeros(3)]) == 40

@@ -1,0 +1,188 @@
+"""Integration tests: TaskServer reliability machinery (the 1000-node story).
+
+Covers: retries on injected node failures, heartbeat-based worker
+replacement, straggler speculation, multi-pool routing, task timeouts via
+wall-clock monitoring, elastic pool resize, and campaign checkpoint/resume.
+"""
+
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    BaseThinker,
+    Campaign,
+    ConstantInflightThinker,
+    FailureInjector,
+    FailureKind,
+    LocalColmenaQueues,
+    ResourceRequest,
+    RetryPolicy,
+    StragglerPolicy,
+    TaskServer,
+    WorkerPool,
+    agent,
+    result_processor,
+    stateful_task,
+)
+
+
+def sleepy(x, dt=0.01):
+    time.sleep(dt)
+    return x
+
+
+class TestTaskServer:
+    def test_basic_dispatch(self):
+        q = LocalColmenaQueues()
+        server = TaskServer(q, {"f": lambda x: x * 2}, n_workers=2).start()
+        q.send_inputs(21, method="f")
+        r = q.get_result(timeout=5)
+        assert r.success and r.value == 42
+        server.stop()
+
+    def test_unknown_method_fails_cleanly(self):
+        q = LocalColmenaQueues()
+        server = TaskServer(q, {}, n_workers=1).start()
+        q.send_inputs(1, method="nope")
+        r = q.get_result(timeout=5)
+        assert not r.success and "unknown method" in r.failure_info
+        server.stop()
+
+    def test_retries_survive_node_failures(self):
+        q = LocalColmenaQueues()
+        inj = FailureInjector(task_failure_rate=0.3, seed=42)
+        server = TaskServer(
+            q, {"f": sleepy}, n_workers=4, injector=inj,
+            retry=RetryPolicy(max_retries=10),
+        ).start()
+        work = [((i,), {}) for i in range(25)]
+        thinker = ConstantInflightThinker(q, work, method="f", n_parallel=4)
+        thinker.run(timeout=30)
+        assert len(thinker.results) == 25
+        assert all(r.success for r in thinker.results)
+        assert server.metrics.tasks_retried > 0
+        assert server.metrics.workers_replaced > 0
+        server.stop()
+
+    def test_heartbeat_failover(self):
+        q = LocalColmenaQueues()
+        pool = WorkerPool("default", 2)
+        server = TaskServer(
+            q, {"slow": lambda: sleepy(1, 0.6)}, pools={"default": pool},
+            heartbeat_timeout_s=0.2,
+        ).start()
+        q.send_inputs(method="slow")
+        time.sleep(0.15)
+        # kill the worker running the task -> heartbeat monitor fails over
+        busy = [w for w in pool.worker_states() if w.busy]
+        assert busy
+        pool.kill_worker(busy[0].worker_id)
+        r = q.get_result(timeout=10)
+        assert r.success  # retried on a replacement worker
+        server.stop()
+
+    def test_straggler_speculation(self):
+        q = LocalColmenaQueues()
+        inj = FailureInjector(slow_workers={0: 1.5})   # worker 0 is a straggler
+        server = TaskServer(
+            q, {"f": sleepy}, n_workers=2, injector=inj,
+            straggler=StragglerPolicy(enabled=True, factor=3.0, min_history=3,
+                                      check_interval_s=0.05),
+        ).start()
+        for i in range(8):
+            q.send_inputs(i, method="f")
+        got = [q.get_result(timeout=20) for _ in range(8)]
+        assert all(r.success for r in got)
+        assert server.metrics.speculative_launched >= 1
+        server.stop()
+
+    def test_multi_pool_routing(self):
+        q = LocalColmenaQueues(topics=["sim", "ml"])
+        pools = {
+            "sim": WorkerPool("sim", 2),
+            "ml": WorkerPool("ml", 1),
+            "default": WorkerPool("default", 1),
+        }
+        hits = {"sim": 0, "ml": 0}
+
+        @stateful_task
+        def tag(x, registry=None):
+            registry.setdefault("n", 0)
+            registry["n"] += 1
+            return threading.current_thread().name
+
+        server = TaskServer(q, {"tag": tag}, pools=pools).start()
+        q.send_inputs(1, method="tag", topic="sim", resources=ResourceRequest(pool="sim"))
+        q.send_inputs(2, method="tag", topic="ml", resources=ResourceRequest(pool="ml"))
+        r_sim = q.get_result(topic="sim", timeout=5)
+        r_ml = q.get_result(topic="ml", timeout=5)
+        assert "sim-worker" in r_sim.value
+        assert "ml-worker" in r_ml.value
+        server.stop()
+
+    def test_stateful_worker_registry_persists(self):
+        q = LocalColmenaQueues()
+
+        @stateful_task
+        def counter(registry=None):
+            registry["n"] = registry.get("n", 0) + 1
+            return registry["n"]
+
+        server = TaskServer(q, {"counter": counter}, n_workers=1).start()
+        for _ in range(3):
+            q.send_inputs(method="counter")
+        vals = sorted(q.get_result(timeout=5).value for _ in range(3))
+        assert vals == [1, 2, 3]   # cache survives across invocations
+        server.stop()
+
+    def test_elastic_resize(self):
+        pool = WorkerPool("default", 2)
+        assert pool.n_workers == 2
+        pool.add_workers(3)
+        assert pool.n_workers == 5
+        pool.remove_workers(4)
+        deadline = time.time() + 2
+        while pool.n_workers > 1 and time.time() < deadline:
+            time.sleep(0.02)
+        assert pool.n_workers == 1
+        pool.shutdown()
+
+
+class TestCampaign:
+    def test_checkpoint_resume(self, tmp_path):
+        q = LocalColmenaQueues()
+
+        class T(BaseThinker):
+            def __init__(self):
+                super().__init__(q)
+                self.progress = 0
+
+            def get_state(self):
+                return {"progress": self.progress}
+
+            def set_state(self, s):
+                self.progress = s["progress"]
+
+            @agent
+            def main(self):
+                for _ in range(3):
+                    self.progress += 1
+                    time.sleep(0.01)
+
+        server = TaskServer(q, {"f": lambda: 1}, n_workers=1)
+        camp = Campaign(T(), server, state_dir=str(tmp_path), checkpoint_interval_s=0.05)
+        report = camp.run(timeout=5)
+        assert report.completed and report.checkpoints_written >= 1
+
+        # resume restores thinker state
+        t2 = T()
+        server2 = TaskServer(LocalColmenaQueues(), {"f": lambda: 1}, n_workers=1)
+        camp2 = Campaign(t2, server2, state_dir=str(tmp_path))
+        assert camp2.try_resume()
+        assert t2.progress == 3
+        server.stop()
+        server2.stop()
