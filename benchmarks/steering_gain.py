@@ -21,6 +21,7 @@ from repro.core import (
     TaskServer,
     WorkerPool,
 )
+from repro.observe import EventLog, build_report, render_text
 
 DIM = 6
 THRESHOLD = -0.5     # property above this = "high-performing"
@@ -63,17 +64,22 @@ class Steered(BatchRetrainThinker):
             self.w = np.asarray(result.value)
 
 
-def run_steered(budget: int) -> int:
-    q = LocalColmenaQueues(topics=["simulate", "train"])
-    pools = {"simulate": WorkerPool("simulate", 3), "ml": WorkerPool("ml", 1),
-             "default": WorkerPool("default", 1)}
+def run_steered(budget: int) -> Tuple[int, dict]:
+    """AI-steered campaign; the event log supplies the per-task lifecycle
+    trace (queue/compute/result overheads, utilization) instead of
+    ad-hoc timestamp bookkeeping."""
+    log = EventLog()
+    q = LocalColmenaQueues(topics=["simulate", "train"], event_log=log)
+    pool_sizes = {"simulate": 3, "ml": 1, "default": 1}
+    pools = {name: WorkerPool(name, n) for name, n in pool_sizes.items()}
     thinker = Steered(q, n_slots=3, retrain_after=max(8, budget // 8),
                       max_results=budget, ml_slots=1)
     server = TaskServer(q, {"simulate": _landscape, "train": _train}, pools=pools).start()
     thinker.run(timeout=300)
     server.stop()
     hits = sum(1 for r in thinker.database if r.value > THRESHOLD)
-    return hits
+    report = build_report(log, slots_by_pool=pool_sizes)
+    return hits, report
 
 
 def run_random(budget: int) -> int:
@@ -89,12 +95,16 @@ def run_random(budget: int) -> int:
 def main(quick: bool = True) -> Tuple[int, int]:
     budget = 60 if quick else 240
     rnd = run_random(budget)
-    steered = run_steered(budget)
+    steered, report = run_steered(budget)
     gain = (steered - rnd) / max(rnd, 1) * 100
     print(f"steering_gain,budget,{budget}")
     print(f"steering_gain,random_hits,{rnd}")
     print(f"steering_gain,steered_hits,{steered}")
     print(f"steering_gain,gain_pct,{gain:.0f}")
+    util = report["utilization"].get("simulate", 0.0)
+    print(f"steering_gain,simulate_util,{util:.3f}")
+    print(f"steering_gain,lifecycle_complete,{int(report['lifecycle']['complete'])}")
+    print(render_text(report))
     return steered, rnd
 
 

@@ -95,10 +95,12 @@ class WorkerPool:
         n_workers: int = 4,
         injector: Optional[FailureInjector] = None,
         prefetch_proxies: bool = True,
+        event_log: Optional[Any] = None,  # repro.observe.EventLog (duck-typed)
     ) -> None:
         self.name = name
         self.injector = injector or FailureInjector()
         self.prefetch_proxies = prefetch_proxies
+        self.event_log = event_log
         self._queue: "queue.Queue[Any]" = queue.Queue()
         self._workers: Dict[int, WorkerState] = {}
         self._threads: Dict[int, threading.Thread] = {}
@@ -146,8 +148,16 @@ class WorkerPool:
                 w.alive = False
 
     # --------------------------------------------------------------- submit
+    def _emit(self, stage: str, result: Result, **info: Any) -> None:
+        log = self.event_log
+        if log is not None:
+            # pool = the executing pool (may differ from the requested one)
+            log.task_event(stage, result, pool=self.name,
+                           requested_pool=result.resources.pool, **info)
+
     def submit(self, result: Result, fn: Callable, on_done: Callable[[Result], None]) -> None:
         result.mark("dispatched")
+        self._emit("dispatched", result)
         if self.prefetch_proxies:
             prefetch_all(result.args)
             prefetch_all(result.kwargs)
@@ -177,6 +187,7 @@ class WorkerPool:
             state.last_heartbeat = time.monotonic()
             result.worker_id = state.worker_id
             result.mark("compute_started")
+            self._emit("running", result, worker_id=state.worker_id)
             try:
                 self.injector.before_task(state.worker_id, result)
                 wants_reg = getattr(fn, "_wants_registry", False)
@@ -189,9 +200,12 @@ class WorkerPool:
                 self.injector.after_task(state.worker_id)
                 result.mark("compute_ended")
                 result.set_success(value)
+                self._emit("completed", result, worker_id=state.worker_id)
             except WorkerDied as exc:
                 result.mark("compute_ended")
                 result.set_failure(FailureKind.WORKER_DIED, str(exc))
+                self._emit("failed", result, worker_id=state.worker_id,
+                           kind=FailureKind.WORKER_DIED.value)
                 with self._lock:
                     state.alive = False
                 state.busy = False
@@ -203,6 +217,8 @@ class WorkerPool:
             except Exception as exc:  # noqa: BLE001 - task exception
                 result.mark("compute_ended")
                 result.set_failure(FailureKind.EXCEPTION, f"{type(exc).__name__}: {exc}")
+                self._emit("failed", result, worker_id=state.worker_id,
+                           kind=FailureKind.EXCEPTION.value)
             state.busy = False
             state.current_task = None
             state.tasks_done += 1

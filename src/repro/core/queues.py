@@ -69,18 +69,27 @@ class ColmenaQueues:
         topics: Iterable[str] = ("default",),
         proxystore: Optional[Store] = None,
         proxy_threshold: int = 10_000_000,  # 10 MB, as in the paper
+        event_log: Optional[Any] = None,  # repro.observe.EventLog (duck-typed)
     ) -> None:
         self.topics = list(dict.fromkeys(list(topics) + ["default"]))
         self.proxystore = proxystore
         self.proxy_threshold = proxy_threshold
         self.metrics = QueueMetrics()
+        self.event_log = event_log
         self._metrics_lock = threading.Lock()
 
+    def _emit(self, stage: str, result: Result, **info: Any) -> None:
+        log = self.event_log
+        if log is not None:
+            log.task_event(stage, result, **info)
+
     # queues cross process boundaries (the server may run in its own
-    # process); locks are per-process and recreated on unpickle.
+    # process); locks and the event log are per-process (each side of a
+    # PipeColmenaQueues records its own lifecycle stages).
     def __getstate__(self) -> dict:
         state = dict(self.__dict__)
         state.pop("_metrics_lock", None)
+        state["event_log"] = None
         return state
 
     def __setstate__(self, state: dict) -> None:
@@ -135,6 +144,7 @@ class ColmenaQueues:
             topic=topic,
         )
         result.mark("created")
+        self._emit("submitted", result)
         if self.proxystore is not None:
             new_args, moved_a = apply_threshold(result.args, self.proxystore, self.proxy_threshold)
             new_kwargs, moved_k = apply_threshold(result.kwargs, self.proxystore, self.proxy_threshold)
@@ -146,6 +156,7 @@ class ColmenaQueues:
                 with self._metrics_lock:
                     self.metrics.proxied_bytes += moved
         result.mark("queued")
+        self._emit("queued", result)
         self._push_request(self._encode(result))
         with self._metrics_lock:
             self.metrics.tasks_sent += 1
@@ -154,7 +165,9 @@ class ColmenaQueues:
     def send_task(self, result: Result) -> str:
         """Submit a pre-built Result (used for retries / speculation)."""
         result.mark("created")
+        self._emit("submitted", result)
         result.mark("queued")
+        self._emit("queued", result)
         self._push_request(self._encode(result))
         with self._metrics_lock:
             self.metrics.tasks_sent += 1
@@ -166,6 +179,7 @@ class ColmenaQueues:
             return None
         result: Result = self._decode(payload)
         result.mark("result_received")
+        self._emit("result_received", result, success=bool(result.success))
         result.finalize_timings()
         with self._metrics_lock:
             self.metrics.results_received += 1
@@ -189,6 +203,7 @@ class ColmenaQueues:
             raise KillSignal()
         result: Result = self._decode(payload)
         result.mark("picked_up")
+        self._emit("picked_up", result)
         return result
 
     def send_result(self, result: Result) -> None:

@@ -100,30 +100,38 @@ class PriorityQueueThinker(BaseThinker):
         self.max_tasks = max_tasks
         self._heap: List[Tuple[float, int, tuple, dict]] = []
         self._tie = itertools.count()
-        self._heap_lock = threading.Lock()
+        # Condition instead of a bare lock: the submitter parks on it while
+        # the heap is empty (holding its already-acquired slot) and wakes
+        # on push() / shutdown — no release();sleep() slot-thrash.
+        self._work_cond = threading.Condition()
         self._completed = 0
         self.results: List[Result] = []
 
     # -------------------------------------------------------------- queue ops
     def push(self, args: tuple, kwargs: Optional[dict] = None, priority: float = 0.0) -> None:
         """Lower priority value = run sooner."""
-        with self._heap_lock:
+        with self._work_cond:
             heapq.heappush(self._heap, (priority, next(self._tie), args, kwargs or {}))
+            self._work_cond.notify()
 
     def pending(self) -> int:
-        with self._heap_lock:
+        with self._work_cond:
             return len(self._heap)
 
     # --------------------------------------------------------------- agents
     @task_submitter(task_type="default", n_slots=1)
     def submit_next(self) -> None:
         item = None
-        with self._heap_lock:
+        with self._work_cond:
+            # The timeout only bounds shutdown latency for done-setters
+            # that cannot notify (e.g. run(timeout=...)); arriving work
+            # wakes the submitter immediately via push().
+            while not self._heap and not self.done.is_set():
+                self._work_cond.wait(timeout=0.2)
             if self._heap:
                 item = heapq.heappop(self._heap)
-        if item is None:
+        if item is None:  # shutting down with an empty heap
             self.rec.release("default", 1)
-            time.sleep(0.01)
             return
         _, _, args, kwargs = item
         self.queues.send_inputs(*args, method=self.method, topic=self.topic, keyword_args=kwargs)
@@ -136,6 +144,8 @@ class PriorityQueueThinker(BaseThinker):
         self.on_result(result)
         if self.max_tasks is not None and self._completed >= self.max_tasks:
             self.done.set()
+            with self._work_cond:
+                self._work_cond.notify_all()
 
     # ---------------------------------------------------------------- hooks
     def on_result(self, result: Result) -> None:
@@ -171,7 +181,9 @@ class BatchRetrainThinker(BaseThinker):
         self._new_since_train = 0
         self._total = 0
         self._ml_inflight = 0
-        self._drain = False
+        # Event (not a polled flag): once set, the simulation submitter
+        # parks on ``done`` instead of thrashing its slot.
+        self._drain = threading.Event()
         self._state_lock = threading.Lock()
         self.train_rounds = 0
         self.database: List[Result] = []
@@ -180,7 +192,7 @@ class BatchRetrainThinker(BaseThinker):
         """Finish only when the sim budget is spent AND no ML task is in
         flight — otherwise the final retrain's result would be dropped."""
         with self._state_lock:
-            ready = self._drain and self._ml_inflight == 0
+            ready = self._drain.is_set() and self._ml_inflight == 0
         if ready:
             self.done.set()
 
@@ -200,11 +212,11 @@ class BatchRetrainThinker(BaseThinker):
     # --------------------------------------------------------------- agents
     @task_submitter(task_type="simulate", n_slots=1)
     def submit_simulation(self) -> None:
-        with self._state_lock:
-            drained = self._drain
-        if drained:   # budget spent: stop feeding the pool
+        if self._drain.is_set():   # budget spent: stop feeding the pool
             self.rec.release("simulate", 1)
-            time.sleep(0.01)
+            # Park until shutdown (set by _maybe_finish once ML drains, or
+            # externally) — no wakeup/release cycle while draining.
+            self.done.wait()
             return
         args = self.simulate_args()
         self.queues.send_inputs(
@@ -220,14 +232,11 @@ class BatchRetrainThinker(BaseThinker):
             self._new_since_train += 1
             self._total += 1
             self.on_simulation(result)
-            with self._state_lock:
-                drained = self._drain
-            if self._new_since_train >= self.retrain_after and not drained:
+            if self._new_since_train >= self.retrain_after and not self._drain.is_set():
                 self._new_since_train = 0
                 self.set_event("retrain")
         if self.max_results is not None and self._total >= self.max_results:
-            with self._state_lock:
-                self._drain = True
+            self._drain.set()
             self._maybe_finish()
 
     @event_responder(event_name="retrain")

@@ -88,10 +88,17 @@ class TaskServer:
         injector: Optional[FailureInjector] = None,
         heartbeat_timeout_s: float = 10.0,
         replace_dead_workers: bool = True,
+        event_log: Optional[object] = None,  # repro.observe.EventLog (duck-typed)
     ) -> None:
         self.queues = queues
         self.methods = dict(methods)
         self.pools = pools or {"default": WorkerPool("default", n_workers, injector=injector)}
+        # Telemetry: default to the queues' log so one wiring point covers
+        # the whole lifecycle; pools without their own log inherit it.
+        self.event_log = event_log if event_log is not None else getattr(queues, "event_log", None)
+        for pool in self.pools.values():
+            if getattr(pool, "event_log", None) is None:
+                pool.event_log = self.event_log
         self.retry = retry or RetryPolicy()
         self.straggler = straggler or StragglerPolicy()
         self.heartbeat_timeout_s = heartbeat_timeout_s
@@ -145,6 +152,8 @@ class TaskServer:
         fn = self.methods.get(task.method)
         if fn is None:
             task.set_failure(FailureKind.EXCEPTION, f"unknown method {task.method!r}")
+            if self.event_log is not None:
+                self.event_log.task_event("failed", task, kind="unknown_method")
             self.queues.send_result(task)
             self.metrics.tasks_failed += 1
             return
@@ -189,6 +198,11 @@ class TaskServer:
                 time.sleep(backoff)
             retry = result.clone_for_retry()
             retry.mark("created")
+            if self.event_log is not None:
+                self.event_log.task_event(
+                    "retried", retry, origin=result.task_id, attempt=retry.retries,
+                    after=result.failure.value,
+                )
             logger.info("retrying %s (attempt %d) after %s", result.task_id, retry.retries, result.failure)
             self._dispatch(retry)
             return
@@ -217,6 +231,11 @@ class TaskServer:
                             f"worker {w.worker_id} heartbeat lost",
                         )
                         failed.mark("compute_ended")
+                        if self.event_log is not None:
+                            self.event_log.task_event(
+                                "failed", failed, pool=entry.pool,
+                                worker_id=w.worker_id, kind="heartbeat_lost",
+                            )
                         w.current_task = None
                         self._on_done(failed)
                 if self.replace_dead_workers and not w.alive:
@@ -249,6 +268,8 @@ class TaskServer:
                 entry.speculated = True
                 copy = entry.result.clone_for_speculation()
                 copy.mark("created")
+                if self.event_log is not None:
+                    self.event_log.task_event("speculated", copy, pool=entry.pool)
                 self.metrics.speculative_launched += 1
                 logger.info(
                     "straggler: %s running %.2fs > %.1fx median %.2fs; speculating",

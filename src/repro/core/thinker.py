@@ -58,7 +58,25 @@ class ResourceCounter:
         pools = pools or ["default"]
         self._pools = {p: 0 for p in pools}
         self._pools[pools[0]] = total_slots
+        # Allocation = slots assigned to a pool (busy + free); only
+        # reallocate/grow/shrink move it, acquire/release do not.
+        self._alloc: Dict[str, int] = dict(self._pools)
         self._total = total_slots
+        self._event_log: Optional[Any] = None
+
+    @property
+    def event_log(self) -> Optional[Any]:
+        """Optional repro.observe.EventLog (duck-typed; set post-init).
+        Allocation changes emit per-pool ``slots`` gauges so reports can
+        integrate capacity over time even while slots move mid-run."""
+        return self._event_log
+
+    @event_log.setter
+    def event_log(self, log: Optional[Any]) -> None:
+        self._event_log = log
+        # Baseline gauges: without them the capacity integral would only
+        # start at the first post-attach allocation change.
+        self._emit_allocations()
 
     @property
     def total_slots(self) -> int:
@@ -72,26 +90,47 @@ class ResourceCounter:
         with self._cond:
             return self._pools.get(pool, 0)
 
+    def allocation(self, pool: str = "default") -> int:
+        """Slots currently assigned to ``pool`` (busy + idle)."""
+        with self._cond:
+            return self._alloc.get(pool, 0)
+
+    def allocations(self) -> Dict[str, int]:
+        with self._cond:
+            return dict(self._alloc)
+
+    def _emit_allocations(self) -> None:
+        log = self._event_log
+        if log is not None:
+            for pool, slots in self.allocations().items():
+                log.gauge("slots", slots, pool=pool)
+
     def add_pool(self, pool: str, slots: int = 0) -> None:
         with self._cond:
             self._pools.setdefault(pool, 0)
             self._pools[pool] += slots
+            self._alloc[pool] = self._alloc.get(pool, 0) + slots
             self._total += slots
             self._cond.notify_all()
+        self._emit_allocations()
 
     def grow(self, pool: str, slots: int) -> None:
         """Elastic scale-up: new capacity appears in ``pool``."""
         with self._cond:
             self._pools[pool] = self._pools.get(pool, 0) + slots
+            self._alloc[pool] = self._alloc.get(pool, 0) + slots
             self._total += slots
             self._cond.notify_all()
+        self._emit_allocations()
 
     def shrink(self, pool: str, slots: int, timeout: Optional[float] = None) -> bool:
         """Elastic scale-down: remove capacity once it is idle."""
         if not self.acquire(pool, slots, timeout=timeout):
             return False
         with self._cond:
+            self._alloc[pool] = self._alloc.get(pool, 0) - slots
             self._total -= slots
+        self._emit_allocations()
         return True
 
     def acquire(
@@ -131,7 +170,12 @@ class ResourceCounter:
         """Move ``n`` slots from ``src`` to ``dst`` (blocks until idle)."""
         if not self.acquire(src, n, timeout=timeout, stop_event=stop_event):
             return False
-        self.release(dst, n)
+        with self._cond:
+            self._alloc[src] = self._alloc.get(src, 0) - n
+            self._alloc[dst] = self._alloc.get(dst, 0) + n
+            self._pools[dst] = self._pools.get(dst, 0) + n
+            self._cond.notify_all()
+        self._emit_allocations()
         return True
 
 
@@ -266,6 +310,9 @@ class BaseThinker:
                 if isinstance(item, Result):
                     item.mark("decision_made")
                     item.finalize_timings()
+                    log = getattr(self.queues, "event_log", None)
+                    if log is not None:
+                        log.task_event("decision_made", item, processor=fn.__name__)
         except BaseException as exc:  # noqa: BLE001
             self.logger.exception("result processor %s failed", fn.__name__)
             self._agent_exc.append(exc)

@@ -1,0 +1,104 @@
+"""repro.observe — workflow telemetry + adaptive resource reallocation.
+
+The paper's first scaling pillar is *steering strategies that maximize
+node utilization*; its evaluation rests on per-task lifecycle traces.
+This subsystem provides both: a structured event log every core
+component emits into, streaming metrics over it, and an adaptive
+reallocator that closes the loop by moving slots toward demand.
+
+Quick wiring::
+
+    from repro.core import LocalColmenaQueues, TaskServer
+    from repro.observe import EventLog, MetricsAggregator, build_report
+
+    log = EventLog(jsonl_path="run.jsonl")       # optional persistent sink
+    queues = LocalColmenaQueues(event_log=log)   # client-side stages
+    server = TaskServer(queues, methods).start() # server/worker stages
+    ... run a thinker ...
+    print(render_text(build_report(log, total_slots=8)))
+
+Event schema
+------------
+Every record is an ``Event`` (see ``events.py``), JSONL-serialized when a
+sink path is given. Fields:
+
+===========  ============================================================
+``t``        ``time.monotonic()`` seconds at emission (``t_rel`` in the
+             JSONL sink is relative to log creation)
+``kind``     ``task`` (lifecycle stage), ``gauge`` (named scalar sample),
+             or ``realloc`` (slot move)
+``stage``    lifecycle stage for tasks — in causal order: ``submitted``,
+             ``queued``, ``picked_up``, ``dispatched``, ``running``,
+             ``completed``/``failed``, ``result_received``,
+             ``decision_made``; plus out-of-band ``retried`` /
+             ``speculated`` / ``reallocated``. For gauges: the gauge
+             name (e.g. ``slots``).
+``task_id``  the ``Result.task_id`` (``task`` events only; speculative
+             twins share the original's id, retry clones get a fresh id
+             linked via ``info["origin"]``)
+``method``   task-server method name
+``topic``    result-queue topic
+``pool``     requested pool on client-side stages; the *executing*
+             WorkerPool name on ``running``/``completed``/``failed``
+``value``    gauge value / slots moved
+``info``     free-form extras (``worker_id``, failure kind, ``src``/
+             ``dst`` of a reallocation, ...)
+===========  ============================================================
+
+Emission points: ``ColmenaQueues.send_inputs`` (submitted, queued),
+``ColmenaQueues.get_task`` (picked_up), ``WorkerPool.submit``
+(dispatched), the worker loop (running, completed, failed),
+``TaskServer`` (retried, speculated), ``ColmenaQueues.get_result``
+(result_received), ``BaseThinker`` result processors (decision_made),
+``ResourceCounter`` (``slots`` gauges on allocation changes).
+
+Cross-process note: ``event_log`` is process-local (it is dropped on
+pickling). With ``PipeColmenaQueues`` each side records its own stages;
+merge the JSONL sinks offline for a full trace.
+"""
+
+from .events import (
+    AUX_STAGES,
+    Event,
+    EventLog,
+    STAGE_ORDER,
+    lifecycle_gaps,
+    lifecycle_order_violations,
+)
+from .metrics import LatencyHistogram, MetricsAggregator, PoolStats
+from .reallocator import (
+    AdaptiveReallocator,
+    EMABacklogPolicy,
+    GreedyBacklogPolicy,
+    Move,
+    PoolView,
+    ReallocationPolicy,
+    ReallocatorMixin,
+)
+from .report import build_report, dump_json, render_text
+from .synthetic import PoolWorkloadThinker, run_pool_workload, run_two_pool
+
+__all__ = [
+    "AdaptiveReallocator",
+    "AUX_STAGES",
+    "build_report",
+    "dump_json",
+    "EMABacklogPolicy",
+    "Event",
+    "EventLog",
+    "GreedyBacklogPolicy",
+    "LatencyHistogram",
+    "lifecycle_gaps",
+    "lifecycle_order_violations",
+    "MetricsAggregator",
+    "Move",
+    "PoolStats",
+    "PoolView",
+    "PoolWorkloadThinker",
+    "ReallocationPolicy",
+    "ReallocatorMixin",
+    "render_text",
+    "run_pool_workload",
+    "run_two_pool",
+    "STAGE_ORDER",
+]

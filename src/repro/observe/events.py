@@ -1,0 +1,237 @@
+"""Structured workflow event log: ring buffer + optional JSONL sink.
+
+Every component of the core (queues, task server, worker pools, thinker)
+emits ``Event`` records at each hop of a task's life. The log is the
+single source of truth for the paper-style evaluation: utilization
+timelines, overhead breakdowns, and steering-gain comparisons are all
+derived from it (``repro.observe.metrics`` / ``repro.observe.report``)
+instead of ad-hoc timestamps.
+
+Design notes:
+  * **cheap hot path** — events land in a ``collections.deque`` ring
+    buffer under a short lock (append + optional JSONL write only);
+    subscribers run outside it. Snapshots (``events``/``by_task``) take
+    the same lock so readers never observe a mid-mutation deque.
+  * **bounded memory** — the ring buffer keeps the most recent
+    ``capacity`` events; the JSONL sink (when enabled) keeps everything.
+  * **streaming consumers** — ``subscribe`` registers a callback invoked
+    inline at emit time (``MetricsAggregator`` uses this to aggregate
+    without ever materializing the full trace).
+
+Core modules hold an ``event_log`` attribute that defaults to ``None``
+and duck-type against this class, so ``repro.core`` never imports
+``repro.observe`` (no import cycle) and instrumentation costs one
+attribute check when disabled.
+"""
+
+from __future__ import annotations
+
+import json
+import threading
+import time
+from collections import defaultdict, deque
+from dataclasses import asdict, dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+# Canonical lifecycle stages, in causal order. ``completed`` / ``failed``
+# are alternatives at the same position; ``speculated`` / ``retried``
+# mark server-side recovery actions and sit outside the happy path.
+STAGE_ORDER: tuple = (
+    "submitted",          # Thinker built the request (queues.send_inputs)
+    "queued",             # request pushed onto the task queue
+    "picked_up",          # TaskServer popped the request
+    "dispatched",         # handed to a WorkerPool slot
+    "running",            # a worker began executing
+    "completed",          # worker finished successfully
+    "failed",             # worker raised / node died / timed out
+    "result_received",    # Thinker popped the result
+    "decision_made",      # Thinker's result processor finished reacting
+)
+
+# Stages emitted outside the linear lifecycle.
+AUX_STAGES: tuple = ("speculated", "retried", "reallocated")
+
+
+@dataclass
+class Event:
+    """One observation. ``kind`` is ``task`` (lifecycle stage for a task),
+    ``gauge`` (a named scalar sample, e.g. per-pool slot allocation), or
+    ``realloc`` (a resource move)."""
+
+    t: float                              # time.monotonic() at emit
+    kind: str                             # task | gauge | realloc
+    stage: str                            # lifecycle stage or gauge name
+    task_id: Optional[str] = None
+    method: Optional[str] = None
+    topic: Optional[str] = None
+    pool: Optional[str] = None
+    value: Optional[float] = None         # gauges only
+    info: Dict[str, Any] = field(default_factory=dict)
+
+
+class EventLog:
+    """Append-only event collector shared by every workflow component."""
+
+    def __init__(
+        self,
+        capacity: int = 1 << 16,
+        jsonl_path: Optional[str] = None,
+        clock: Callable[[], float] = time.monotonic,
+    ) -> None:
+        self._clock = clock
+        self._buf: "deque[Event]" = deque(maxlen=capacity)
+        self._lock = threading.Lock()
+        self._subs: List[Callable[[Event], None]] = []
+        self._jsonl = open(jsonl_path, "w") if jsonl_path else None
+        self.t0 = clock()
+
+    # ------------------------------------------------------------------ emit
+    def emit(self, event: Event) -> Event:
+        with self._lock:
+            self._buf.append(event)
+            if self._jsonl is not None:
+                row = asdict(event)
+                row["t_rel"] = event.t - self.t0
+                self._jsonl.write(json.dumps(row) + "\n")
+            # Snapshot under the lock: a subscriber registering right now
+            # replays the buffer (including this event) and lands in the
+            # *next* emit's snapshot — never both, so no double delivery.
+            subs = self._subs
+        for fn in subs:
+            fn(event)
+        return event
+
+    def task_event(self, stage: str, result: Any, pool: Optional[str] = None, **info: Any) -> Event:
+        """Record a lifecycle stage for a ``repro.core.result.Result``.
+        ``pool`` overrides the requested pool (worker pools pass their own
+        name so execution-side stages carry the executing pool)."""
+        return self.emit(
+            Event(
+                t=self._clock(),
+                kind="task",
+                stage=stage,
+                task_id=result.task_id,
+                method=result.method,
+                topic=result.topic,
+                pool=pool if pool is not None else getattr(result.resources, "pool", None),
+                info=info,
+            )
+        )
+
+    def gauge(self, name: str, value: float, pool: Optional[str] = None, **info: Any) -> Event:
+        """Record a scalar sample (e.g. ``slots`` per pool, queue backlog)."""
+        return self.emit(
+            Event(t=self._clock(), kind="gauge", stage=name, pool=pool, value=float(value), info=info)
+        )
+
+    def realloc(self, src: str, dst: str, n: int, **info: Any) -> Event:
+        return self.emit(
+            Event(t=self._clock(), kind="realloc", stage="reallocated", pool=dst,
+                  value=float(n), info={"src": src, "dst": dst, "n": n, **info})
+        )
+
+    # ------------------------------------------------------------- consumers
+    def subscribe(self, fn: Callable[[Event], None], replay: bool = True) -> None:
+        """Register a streaming consumer; with ``replay`` it first receives
+        every buffered event, so late subscribers see a consistent view."""
+        with self._lock:
+            if replay:
+                for ev in list(self._buf):
+                    fn(ev)
+            self._subs = self._subs + [fn]
+
+    def events(self) -> List[Event]:
+        with self._lock:
+            return list(self._buf)
+
+    def by_task(self) -> Dict[str, List[Event]]:
+        out: Dict[str, List[Event]] = defaultdict(list)
+        for ev in self.events():
+            if ev.kind == "task" and ev.task_id is not None:
+                out[ev.task_id].append(ev)
+        return dict(out)
+
+    def __len__(self) -> int:
+        return len(self._buf)
+
+    def close(self) -> None:
+        if self._jsonl is not None:
+            with self._lock:
+                self._jsonl.flush()
+                self._jsonl.close()
+                self._jsonl = None
+
+    def __enter__(self) -> "EventLog":
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        self.close()
+
+
+def _grouped(log_or_by_task) -> Dict[str, List[Event]]:
+    """Accept an EventLog or an already-grouped ``by_task()`` mapping, so
+    callers validating several properties pay for one grouping pass."""
+    if hasattr(log_or_by_task, "by_task"):
+        return log_or_by_task.by_task()
+    return log_or_by_task
+
+
+def lifecycle_gaps(log_or_by_task) -> Dict[str, List[str]]:
+    """Validate lifecycle completeness: for every task seen in the log
+    (or pre-grouped ``by_task()`` mapping), return the stages that are
+    missing from its expected chain.
+
+    Tasks created server-side (retry clones carry a ``retried`` stage;
+    speculative twins share the original task_id) are exempt from the
+    client-side stages; tasks that failed terminally before reaching a
+    worker are exempt from ``running``. An empty dict means every task
+    has a complete ``submitted -> queued -> dispatched -> running ->
+    completed|failed -> result_received`` record.
+    """
+    by_task = _grouped(log_or_by_task)
+    # Originals superseded by a retry never produce their own final result.
+    retried_origins = {
+        ev.info.get("origin")
+        for evs in by_task.values()
+        for ev in evs
+        if ev.stage == "retried"
+    }
+    gaps: Dict[str, List[str]] = {}
+    for tid, evs in by_task.items():
+        stages = {e.stage for e in evs}
+        missing: List[str] = []
+        if "retried" not in stages:  # retry clones skip the client submit path
+            missing += [s for s in ("submitted", "queued") if s not in stages]
+        ran = "running" in stages
+        terminal_fail = "failed" in stages and "completed" not in stages
+        if not (terminal_fail and not ran):  # pre-dispatch failures never run
+            missing += [s for s in ("dispatched", "running") if s not in stages]
+        if "completed" not in stages and "failed" not in stages:
+            missing.append("completed|failed")
+        superseded = tid in retried_origins
+        if not superseded and "result_received" not in stages:
+            missing.append("result_received")
+        if missing:
+            gaps[tid] = missing
+    return gaps
+
+
+def lifecycle_order_violations(log_or_by_task) -> List[str]:
+    """Check per-task causal ordering: the first occurrence of each stage
+    must be non-decreasing in ``STAGE_ORDER``. Returns human-readable
+    violation strings (empty list = ordering holds)."""
+    rank = {s: i for i, s in enumerate(STAGE_ORDER)}
+    out: List[str] = []
+    for tid, evs in _grouped(log_or_by_task).items():
+        first: Dict[str, float] = {}
+        for ev in evs:
+            if ev.stage in rank and ev.stage not in first:
+                first[ev.stage] = ev.t
+        seq = sorted(first.items(), key=lambda kv: rank[kv[0]])
+        for (s_a, t_a), (s_b, t_b) in zip(seq, seq[1:]):
+            # completed/failed share a rank slot; skip comparing them.
+            if {s_a, s_b} == {"completed", "failed"}:
+                continue
+            if t_b < t_a:
+                out.append(f"{tid}: {s_b} (t={t_b:.6f}) before {s_a} (t={t_a:.6f})")
+    return out

@@ -1,0 +1,338 @@
+"""Streaming aggregation of the workflow event log.
+
+``MetricsAggregator`` consumes ``Event``s one at a time (subscribe it to
+an ``EventLog`` or feed it a recorded trace) and maintains:
+
+  * **per-pool stats** — in-flight counts, queue backlog (submitted but
+    not yet running), completed/failed totals, and the busy-slot-seconds
+    integral that utilization timelines are built from;
+  * **per-method latency histograms** — log-spaced streaming histograms
+    of compute time with approximate quantiles;
+  * **overhead breakdown** — the paper's timeline decomposition of each
+    task into queue / dispatch / compute / result-communication spans;
+  * **capacity integrals** — piecewise-constant integration of per-pool
+    ``slots`` gauges, so per-pool utilization stays correct while an
+    ``AdaptiveReallocator`` moves slots mid-run.
+
+All state is O(pools + methods + in-flight tasks): per-task marks are
+dropped once the task's result is received, so the aggregator can watch
+arbitrarily long campaigns.
+"""
+
+from __future__ import annotations
+
+import math
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from .events import Event, EventLog
+
+
+class LatencyHistogram:
+    """Fixed log-spaced bucket histogram with streaming quantiles."""
+
+    def __init__(self, lo: float = 1e-4, hi: float = 1e3, n_buckets: int = 64) -> None:
+        self._log_lo = math.log(lo)
+        self._log_hi = math.log(hi)
+        self._n = n_buckets
+        self.counts = [0] * (n_buckets + 2)  # + underflow / overflow
+        self.count = 0
+        self.total = 0.0
+        self.min: Optional[float] = None
+        self.max: Optional[float] = None
+
+    def _bucket(self, x: float) -> int:
+        if x <= 0 or math.log(x) < self._log_lo:
+            return 0
+        if math.log(x) >= self._log_hi:
+            return self._n + 1
+        frac = (math.log(x) - self._log_lo) / (self._log_hi - self._log_lo)
+        return 1 + int(frac * self._n)
+
+    def _bucket_upper(self, i: int) -> float:
+        if i <= 0:
+            return math.exp(self._log_lo)
+        if i >= self._n + 1:
+            return math.inf
+        return math.exp(self._log_lo + (self._log_hi - self._log_lo) * i / self._n)
+
+    def observe(self, x: float) -> None:
+        self.counts[self._bucket(x)] += 1
+        self.count += 1
+        self.total += x
+        self.min = x if self.min is None else min(self.min, x)
+        self.max = x if self.max is None else max(self.max, x)
+
+    @property
+    def mean(self) -> float:
+        return self.total / self.count if self.count else 0.0
+
+    def quantile(self, q: float) -> float:
+        """Approximate quantile: upper edge of the bucket holding rank q."""
+        if not self.count:
+            return 0.0
+        target = q * self.count
+        seen = 0
+        for i, c in enumerate(self.counts):
+            seen += c
+            if seen >= target:
+                return min(self._bucket_upper(i), self.max if self.max is not None else math.inf)
+        return self.max or 0.0
+
+
+@dataclass
+class PoolStats:
+    pool: str
+    submitted: int = 0
+    backlog: int = 0          # submitted/queued/dispatched but not yet running
+    running: int = 0
+    completed: int = 0
+    failed: int = 0
+    busy_seconds: float = 0.0  # integral of (tasks running) over time
+
+
+@dataclass
+class SpanStats:
+    """Mean/total accumulator for one overhead span."""
+
+    count: int = 0
+    total: float = 0.0
+
+    def add(self, x: float) -> None:
+        self.count += 1
+        self.total += x
+
+    @property
+    def mean(self) -> float:
+        return self.total / self.count if self.count else 0.0
+
+
+@dataclass
+class _Capacity:
+    """Piecewise-constant capacity track for one pool."""
+
+    value: float = 0.0
+    since: Optional[float] = None
+    integral: float = 0.0
+
+    def set(self, t: float, value: float) -> None:
+        if self.since is not None:
+            self.integral += self.value * (t - self.since)
+        self.value = value
+        self.since = t
+
+    def integral_until(self, t: float) -> float:
+        extra = self.value * (t - self.since) if self.since is not None else 0.0
+        return self.integral + extra
+
+
+# Overhead spans: (name, start stage, end stage).
+_SPANS: Tuple[Tuple[str, str, str], ...] = (
+    ("queue", "submitted", "dispatched"),
+    ("dispatch", "dispatched", "running"),
+    ("compute", "running", "completed"),
+    ("result", "completed", "result_received"),
+)
+
+# Stages that may introduce per-task transient state. Later stages never
+# (re)create it: a straggler twin finishing after ``result_received``
+# already dropped the task's marks must not resurrect them (that would
+# leak one dict per task and re-count the task as a fresh completion).
+_INTRO_STAGES = frozenset(
+    ("submitted", "queued", "picked_up", "dispatched", "retried", "speculated")
+)
+
+
+class MetricsAggregator:
+    """Consume events, expose live workflow metrics. Thread-safe."""
+
+    def __init__(self, log: Optional[EventLog] = None) -> None:
+        self._lock = threading.Lock()
+        self._pools: Dict[str, PoolStats] = {}
+        self._methods: Dict[str, LatencyHistogram] = {}
+        self._spans: Dict[str, SpanStats] = {}
+        self._capacity: Dict[str, _Capacity] = {}
+        # transient per-task state, dropped at result_received; running
+        # intervals key on (task_id, worker_id) so speculative copies
+        # executing concurrently stay distinct
+        self._marks: Dict[str, Dict[str, float]] = {}
+        self._run_pool: Dict[Tuple[str, Optional[int]], str] = {}
+        self._run_start: Dict[Tuple[str, Optional[int]], float] = {}
+        self.t_first: Optional[float] = None
+        self.t_last: Optional[float] = None
+        self.reallocations: List[Event] = []
+        if log is not None:
+            log.subscribe(self.observe, replay=True)
+
+    # ----------------------------------------------------------------- ingest
+    def _pool(self, name: Optional[str]) -> PoolStats:
+        name = name or "default"
+        st = self._pools.get(name)
+        if st is None:
+            st = self._pools[name] = PoolStats(pool=name)
+        return st
+
+    def observe(self, ev: Event) -> None:
+        with self._lock:
+            self.t_first = ev.t if self.t_first is None else min(self.t_first, ev.t)
+            self.t_last = ev.t if self.t_last is None else max(self.t_last, ev.t)
+            if ev.kind == "gauge":
+                if ev.stage == "slots" and ev.pool is not None:
+                    self._capacity.setdefault(ev.pool, _Capacity()).set(ev.t, ev.value or 0.0)
+                return
+            if ev.kind == "realloc":
+                self.reallocations.append(ev)
+                return
+            if ev.kind != "task" or ev.task_id is None:
+                return
+
+            tid, stage = ev.task_id, ev.stage
+            marks = self._marks.get(tid)
+            # "first" = first time this stage is seen for a still-tracked
+            # task; speculative twins share a task_id, so their duplicate
+            # running/completed events must not re-count the task.
+            first = marks is not None and stage not in marks
+            if marks is None and stage in _INTRO_STAGES:
+                marks = self._marks[tid] = {}
+                first = True
+            if marks is not None:
+                marks.setdefault(stage, ev.t)
+
+            if stage == "submitted":
+                st = self._pool(ev.pool)
+                st.submitted += 1
+                st.backlog += 1
+            elif stage == "running":
+                # Pool name on running/completed events is the executing
+                # WorkerPool's name — the ground truth for busy accounting.
+                # Busy intervals key on (task, worker) so concurrent
+                # speculative copies are each accounted for.
+                pool = ev.pool or "default"
+                self._pool(pool).running += 1
+                key = (tid, ev.info.get("worker_id"))
+                self._run_pool[key] = pool
+                self._run_start[key] = ev.t
+                if first:  # only the first copy leaves the backlog
+                    # Backlog was counted under the *requested* pool.
+                    origin = self._pool(ev.info.get("requested_pool") or pool)
+                    if origin.backlog > 0:
+                        origin.backlog -= 1
+            elif stage in ("completed", "failed"):
+                key = (tid, ev.info.get("worker_id"))
+                pool = self._run_pool.pop(key, ev.pool or "default")
+                st = self._pool(pool)
+                start = self._run_start.pop(key, None)
+                if start is not None:
+                    # Every copy's worker time is real busy time, even a
+                    # speculative loser's — count it all.
+                    st.busy_seconds += ev.t - start
+                    if st.running > 0:
+                        st.running -= 1
+                elif marks is not None and "running" not in marks:
+                    # failed before running (e.g. unknown method): clear backlog
+                    if st.backlog > 0:
+                        st.backlog -= 1
+                if stage == "completed":
+                    if first:  # one completion per task, not per copy
+                        st.completed += 1
+                        hist = self._methods.get(ev.method or "?")
+                        if hist is None:
+                            hist = self._methods[ev.method or "?"] = LatencyHistogram()
+                        if start is not None:
+                            hist.observe(ev.t - start)
+                elif first:
+                    st.failed += 1
+            elif stage == "result_received":
+                if marks is not None:
+                    for name, a, b in _SPANS:
+                        if a in marks and b in marks and marks[b] >= marks[a]:
+                            self._spans.setdefault(name, SpanStats()).add(marks[b] - marks[a])
+                # Drop transient state: keeps memory O(in-flight). Later
+                # stages (decision_made, a straggler loser's completion)
+                # find no marks and are ignored rather than re-created.
+                self._marks.pop(tid, None)
+
+    # -------------------------------------------------------------- accessors
+    def pool_stats(self) -> Dict[str, PoolStats]:
+        with self._lock:
+            return {k: PoolStats(**vars(v)) for k, v in self._pools.items()}
+
+    def method_stats(self) -> Dict[str, Dict[str, float]]:
+        with self._lock:
+            return {
+                m: {
+                    "count": h.count,
+                    "mean_s": h.mean,
+                    "p50_s": h.quantile(0.5),
+                    "p95_s": h.quantile(0.95),
+                    "min_s": h.min or 0.0,
+                    "max_s": h.max or 0.0,
+                }
+                for m, h in self._methods.items()
+            }
+
+    def method_histogram(self, method: str) -> Optional[LatencyHistogram]:
+        with self._lock:
+            return self._methods.get(method)
+
+    def overhead(self) -> Dict[str, Dict[str, float]]:
+        """Per-span mean/total seconds: queue, dispatch, compute, result."""
+        with self._lock:
+            return {
+                name: {"mean_s": s.mean, "total_s": s.total, "count": s.count}
+                for name, s in self._spans.items()
+            }
+
+    def backlog(self, pool: str) -> int:
+        with self._lock:
+            st = self._pools.get(pool)
+            return st.backlog if st else 0
+
+    def makespan(self) -> float:
+        with self._lock:
+            if self.t_first is None or self.t_last is None:
+                return 0.0
+            return self.t_last - self.t_first
+
+    def capacity_slot_seconds(self, pool: str, until: Optional[float] = None) -> Optional[float]:
+        """Integral of the pool's ``slots`` gauge over the observed window
+        (None when no gauge was ever recorded for the pool)."""
+        with self._lock:
+            cap = self._capacity.get(pool)
+            if cap is None:
+                return None
+            return cap.integral_until(until if until is not None else (self.t_last or 0.0))
+
+    def utilization(
+        self,
+        total_slots: Optional[int] = None,
+        slots_by_pool: Optional[Dict[str, int]] = None,
+    ) -> Dict[str, float]:
+        """Busy-fraction per pool (and ``total``) over the observed window.
+
+        Pool capacity comes from, in order of preference: recorded
+        ``slots`` gauges (reallocation-aware), the ``slots_by_pool``
+        mapping, or — for ``total`` only — ``total_slots``.
+        """
+        span = self.makespan()
+        out: Dict[str, float] = {}
+        if span <= 0:
+            return out
+        busy_total = 0.0
+        with self._lock:
+            pools = list(self._pools.items())
+        for name, st in pools:
+            busy_total += st.busy_seconds
+            cap_ss = self.capacity_slot_seconds(name)
+            if cap_ss is None and slots_by_pool and name in slots_by_pool:
+                cap_ss = slots_by_pool[name] * span
+            if cap_ss and cap_ss > 0:
+                out[name] = st.busy_seconds / cap_ss
+        if total_slots:
+            out["total"] = busy_total / (total_slots * span)
+        elif slots_by_pool:
+            denom = sum(slots_by_pool.values()) * span
+            if denom > 0:
+                out["total"] = busy_total / denom
+        return out

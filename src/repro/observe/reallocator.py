@@ -1,0 +1,214 @@
+"""Adaptive resource reallocation: the paper's utilization-maximizing
+steering, driven by live telemetry.
+
+``AdaptiveReallocator`` watches per-pool state (idle slots, backlog,
+allocation) and moves ``ResourceCounter`` slots between pools — e.g.
+simulation <-> ML — through a pluggable policy:
+
+  * ``GreedyBacklogPolicy`` — move idle slots from pools with no waiting
+    work to the most backlogged pool, as many per tick as are free;
+  * ``EMABacklogPolicy`` — exponential-moving-average backlog pressure
+    with hysteresis, shifting one slot at a time toward the pool whose
+    *smoothed* demand per slot is highest (predictive: reacts to trends,
+    not instantaneous spikes).
+
+Backlog can come from a user probe (``backlog=lambda pool: ...``, e.g. a
+Thinker's pending-work count) or from a ``MetricsAggregator`` watching
+the event log (submitted-but-not-running tasks per pool).
+
+Use it standalone (``start()``/``stop()`` runs a daemon thread) or mix
+``ReallocatorMixin`` into a ``BaseThinker`` so the reallocation loop runs
+as one of the thinker's own agents and shuts down with it.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from ..core.thinker import ResourceCounter, agent
+from .events import EventLog
+from .metrics import MetricsAggregator
+
+
+@dataclass
+class PoolView:
+    """Snapshot of one pool, handed to the policy each tick."""
+
+    name: str
+    allocation: int   # slots currently assigned to the pool (busy + free)
+    free: int         # idle slots
+    backlog: int      # work waiting for a slot
+
+
+@dataclass
+class Move:
+    src: str
+    dst: str
+    n: int
+
+
+class ReallocationPolicy:
+    """Interface: inspect pool views, optionally propose a slot move."""
+
+    def decide(self, views: Sequence[PoolView]) -> Optional[Move]:
+        raise NotImplementedError
+
+
+class GreedyBacklogPolicy(ReallocationPolicy):
+    """Shift idle capacity to the most backlogged pool.
+
+    A pool donates only when it has free slots and no backlog of its own;
+    the most backlogged pool receives as many slots as the donor can
+    spare (bounded by the backlog itself).
+    """
+
+    def __init__(self, min_backlog: int = 1) -> None:
+        self.min_backlog = min_backlog
+
+    def decide(self, views: Sequence[PoolView]) -> Optional[Move]:
+        needy = [v for v in views if v.backlog >= self.min_backlog]
+        if not needy:
+            return None
+        dst = max(needy, key=lambda v: (v.backlog, -v.allocation))
+        donors = [v for v in views if v.name != dst.name and v.free > 0 and v.backlog == 0]
+        if not donors:
+            return None
+        src = max(donors, key=lambda v: v.free)
+        n = min(src.free, dst.backlog)
+        return Move(src.name, dst.name, n) if n > 0 else None
+
+
+class EMABacklogPolicy(ReallocationPolicy):
+    """Predictive balancing on smoothed backlog-per-slot pressure.
+
+    Keeps an EMA of each pool's backlog and moves a slot from the pool
+    with the lowest smoothed pressure (which must have an idle slot) to
+    the highest, but only when the gap exceeds ``hysteresis`` — avoiding
+    thrash on noisy, bursty arrival patterns.
+    """
+
+    def __init__(self, alpha: float = 0.3, hysteresis: float = 1.0) -> None:
+        self.alpha = alpha
+        self.hysteresis = hysteresis
+        self._ema: Dict[str, float] = {}
+
+    def pressure(self, view: PoolView) -> float:
+        return self._ema.get(view.name, 0.0) / max(view.allocation, 1)
+
+    def decide(self, views: Sequence[PoolView]) -> Optional[Move]:
+        for v in views:
+            prev = self._ema.get(v.name, float(v.backlog))
+            self._ema[v.name] = self.alpha * v.backlog + (1 - self.alpha) * prev
+        dst = max(views, key=self.pressure)
+        donors = [v for v in views if v.name != dst.name and v.free > 0]
+        if not donors:
+            return None
+        src = min(donors, key=self.pressure)
+        if self.pressure(dst) - self.pressure(src) <= self.hysteresis / max(dst.allocation, 1):
+            return None
+        return Move(src.name, dst.name, 1)
+
+
+class AdaptiveReallocator:
+    """Watch live metrics; move ResourceCounter slots toward demand."""
+
+    def __init__(
+        self,
+        rec: ResourceCounter,
+        pools: Optional[Sequence[str]] = None,
+        policy: Optional[ReallocationPolicy] = None,
+        backlog: Optional[Callable[[str], int]] = None,
+        metrics: Optional[MetricsAggregator] = None,
+        interval: float = 0.02,
+        min_slots: Optional[Dict[str, int]] = None,
+        event_log: Optional[EventLog] = None,
+        acquire_timeout: float = 0.05,
+    ) -> None:
+        if backlog is None and metrics is None:
+            raise ValueError("need a backlog probe or a MetricsAggregator")
+        self.rec = rec
+        self.pool_names = list(pools) if pools is not None else rec.pools()
+        self.policy = policy or GreedyBacklogPolicy()
+        self.metrics = metrics
+        self._backlog = backlog if backlog is not None else metrics.backlog
+        self.interval = interval
+        self.min_slots = dict(min_slots or {})
+        self.event_log = event_log
+        self.acquire_timeout = acquire_timeout
+        self.moves: List[Tuple[float, str, str, int]] = []
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------ state
+    def views(self) -> List[PoolView]:
+        return [
+            PoolView(
+                name=p,
+                allocation=self.rec.allocation(p),
+                free=self.rec.available(p),
+                backlog=int(self._backlog(p)),
+            )
+            for p in self.pool_names
+        ]
+
+    # ------------------------------------------------------------------- tick
+    def step(self) -> bool:
+        """One policy tick; returns True when a move happened."""
+        views = self.views()
+        move = self.policy.decide(views)
+        if move is None:
+            return False
+        by_name = {v.name: v for v in views}
+        src = by_name.get(move.src)
+        if src is None or move.src == move.dst:
+            return False
+        spare = src.allocation - self.min_slots.get(move.src, 0)
+        n = max(0, min(move.n, src.free, spare))
+        if n <= 0:
+            return False
+        # Only idle slots move: acquire() with a short timeout never yanks
+        # capacity out from under a running task.
+        if not self.rec.reallocate(move.src, move.dst, n, timeout=self.acquire_timeout,
+                                   stop_event=self._stop):
+            return False
+        self.moves.append((time.monotonic(), move.src, move.dst, n))
+        if self.event_log is not None:
+            self.event_log.realloc(move.src, move.dst, n)
+        return True
+
+    # -------------------------------------------------------------- lifecycle
+    def run(self, stop: Optional[threading.Event] = None) -> None:
+        stop = stop or self._stop
+        while not stop.is_set() and not self._stop.is_set():
+            self.step()
+            stop.wait(self.interval)
+
+    def start(self) -> "AdaptiveReallocator":
+        self._thread = threading.Thread(target=self.run, daemon=True, name="adaptive-reallocator")
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=2.0)
+
+
+class ReallocatorMixin:
+    """Mix into a ``BaseThinker`` subclass; set ``self.reallocator`` to an
+    ``AdaptiveReallocator`` before ``run()`` and the reallocation loop
+    runs as a non-critical agent, stopping when the thinker finishes."""
+
+    reallocator: Optional[AdaptiveReallocator] = None
+
+    @agent(critical=False)
+    def reallocation_agent(self) -> None:
+        r = self.reallocator
+        if r is None:
+            return
+        while not self.done.is_set():
+            r.step()
+            self.done.wait(r.interval)

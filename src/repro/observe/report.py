@@ -1,0 +1,122 @@
+"""Utilization / overhead reports rendered from the event log.
+
+``build_report`` replays an ``EventLog`` through a ``MetricsAggregator``
+and returns a plain-dict report (JSON-serializable) with the paper's
+evaluation quantities: makespan, per-pool busy time and utilization,
+per-method latency stats, the queue/dispatch/compute/result overhead
+breakdown, reallocation history, and a lifecycle-completeness check.
+``render_text`` pretty-prints it for benchmark output.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Dict, Optional
+
+from .events import EventLog, lifecycle_gaps, lifecycle_order_violations
+from .metrics import MetricsAggregator
+
+
+def build_report(
+    log: EventLog,
+    total_slots: Optional[int] = None,
+    slots_by_pool: Optional[Dict[str, int]] = None,
+) -> dict:
+    # One snapshot of the buffer; aggregate, count stages, and group by
+    # task in a single pass instead of re-copying the log per consumer.
+    events = log.events()
+    agg = MetricsAggregator()
+    counts: Dict[str, int] = {}
+    by_task: Dict[str, list] = {}
+    for ev in events:
+        agg.observe(ev)
+        if ev.kind == "task":
+            counts[ev.stage] = counts.get(ev.stage, 0) + 1
+            if ev.task_id is not None:
+                by_task.setdefault(ev.task_id, []).append(ev)
+
+    pools = {}
+    for name, st in sorted(agg.pool_stats().items()):
+        pools[name] = {
+            "submitted": st.submitted,
+            "completed": st.completed,
+            "failed": st.failed,
+            "busy_s": round(st.busy_seconds, 6),
+            "backlog_final": st.backlog,
+        }
+    util = agg.utilization(total_slots=total_slots, slots_by_pool=slots_by_pool)
+    for name, u in util.items():
+        if name in pools:
+            pools[name]["utilization"] = round(u, 4)
+
+    gaps = lifecycle_gaps(by_task)
+    ooo = lifecycle_order_violations(by_task)
+
+    return {
+        "makespan_s": round(agg.makespan(), 6),
+        "events": len(events),
+        "stage_counts": counts,
+        "pools": pools,
+        "utilization": {k: round(v, 4) for k, v in util.items()},
+        "methods": {
+            m: {k: (round(v, 6) if isinstance(v, float) else v) for k, v in s.items()}
+            for m, s in sorted(agg.method_stats().items())
+        },
+        "overhead": {
+            name: {k: round(v, 6) for k, v in s.items()}
+            for name, s in agg.overhead().items()
+        },
+        "reallocations": [
+            {"t": round(ev.t, 6), **ev.info} for ev in agg.reallocations
+        ],
+        "lifecycle": {
+            "complete": not gaps,
+            "ordered": not ooo,
+            "gaps": gaps,
+            "order_violations": ooo,
+        },
+    }
+
+
+def render_text(report: dict) -> str:
+    lines = []
+    lines.append(f"makespan         {report['makespan_s']:.3f} s   "
+                 f"({report['events']} events)")
+    util = report.get("utilization", {})
+    if "total" in util:
+        lines.append(f"utilization      total {util['total']:.1%}")
+    lines.append("pools:")
+    for name, p in report["pools"].items():
+        u = f"  util {p['utilization']:.1%}" if "utilization" in p else ""
+        lines.append(
+            f"  {name:<12} done {p['completed']:>5}  failed {p['failed']:>3}  "
+            f"busy {p['busy_s']:.2f} s{u}"
+        )
+    if report["methods"]:
+        lines.append("methods:")
+        for m, s in report["methods"].items():
+            lines.append(
+                f"  {m:<14} n={s['count']:<5} mean {s['mean_s']*1e3:8.2f} ms  "
+                f"p50 {s['p50_s']*1e3:8.2f} ms  p95 {s['p95_s']*1e3:8.2f} ms"
+            )
+    if report["overhead"]:
+        lines.append("overhead breakdown (mean per task):")
+        for name in ("queue", "dispatch", "compute", "result"):
+            s = report["overhead"].get(name)
+            if s:
+                lines.append(f"  {name:<10} {s['mean_s']*1e3:8.2f} ms  (total {s['total_s']:.2f} s)")
+    if report["reallocations"]:
+        moves = ", ".join(f"{m['src']}->{m['dst']} x{m['n']}" for m in report["reallocations"])
+        lines.append(f"reallocations:   {moves}")
+    lc = report["lifecycle"]
+    lines.append(
+        "lifecycle:       "
+        + ("complete & ordered" if lc["complete"] and lc["ordered"]
+           else f"{len(lc['gaps'])} gap(s), {len(lc['order_violations'])} order violation(s)")
+    )
+    return "\n".join(lines)
+
+
+def dump_json(report: dict, path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2)

@@ -1,0 +1,191 @@
+"""Synthetic imbalanced-pool workloads for benchmarking the reallocator.
+
+``PoolWorkloadThinker`` drains fixed per-pool work lists through
+slot-gated task submitters (one per pool, installed dynamically), so the
+``ResourceCounter`` split — not the executor — is the binding resource,
+exactly the regime where the paper's adaptive steering pays off: a
+static split strands slots on a pool whose work has drained, while an
+``AdaptiveReallocator`` shifts them to the backlogged pool.
+
+``run_pool_workload`` wires the full stack (event log -> queues -> task
+server -> thinker [-> reallocator]) and returns the event-log report;
+``run_two_pool`` is the canonical sim/ml instance used by
+``benchmarks/utilization.py`` and the acceptance test.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from ..core.queues import LocalColmenaQueues
+from ..core.executors import WorkerPool
+from ..core.result import ResourceRequest, Result
+from ..core.task_server import TaskServer
+from ..core.thinker import BaseThinker, ResourceCounter, result_processor
+from .events import EventLog
+from .reallocator import AdaptiveReallocator, GreedyBacklogPolicy, ReallocationPolicy, ReallocatorMixin
+from .report import build_report
+
+WorkItem = Tuple[tuple, dict]
+
+
+class PoolWorkloadThinker(ReallocatorMixin, BaseThinker):
+    """Drain per-pool work lists; submissions gated by per-pool slots.
+
+    ``allocations`` sets the initial slot split; ``work`` maps each pool
+    to its task list; ``methods`` maps each pool to the task-server
+    method it calls. One task submitter per pool is installed at
+    construction time. When a pool's list drains, its submitter parks on
+    ``done`` after returning the held slot — leaving the slot free for
+    the reallocator to move.
+    """
+
+    def __init__(
+        self,
+        queues: LocalColmenaQueues,
+        allocations: Dict[str, int],
+        work: Dict[str, Sequence[WorkItem]],
+        methods: Dict[str, str],
+        reallocator: Optional[AdaptiveReallocator] = None,
+    ) -> None:
+        pool_names = list(allocations)
+        rec = ResourceCounter(sum(allocations.values()), pools=pool_names)
+        for pool in pool_names[1:]:  # initial split (all slots start in pool 0)
+            if allocations[pool]:
+                rec.reallocate(pool_names[0], pool, allocations[pool])
+        super().__init__(queues, rec)
+        self.reallocator = reallocator
+        self._methods = dict(methods)
+        self._work: Dict[str, List[WorkItem]] = {p: list(reversed(list(w))) for p, w in work.items()}
+        self._expected = sum(len(w) for w in self._work.values())
+        self._n_done = 0
+        self._lock = threading.Lock()
+        self.results: List[Result] = []
+        for pool in pool_names:
+            self._install_submitter(pool)
+
+    # ----------------------------------------------------------- submitters
+    def _install_submitter(self, pool: str) -> None:
+        def submit() -> None:
+            self._submit_one(pool)
+
+        submit.__name__ = f"submit_{pool}"
+        submit._colmena_kind = "task_submitter"
+        submit._colmena_opts = {"task_type": pool, "n_slots": 1}
+        setattr(self, f"submit_{pool}", submit)
+
+    def _submit_one(self, pool: str) -> None:
+        with self._lock:
+            queue = self._work[pool]
+            item = queue.pop() if queue else None
+        if item is None:
+            # Pool drained for good: hand the slot back and park until
+            # shutdown so the reallocator can migrate the idle capacity.
+            self.rec.release(pool, 1)
+            self.done.wait()
+            return
+        args, kwargs = item
+        self.queues.send_inputs(
+            *args,
+            method=self._methods[pool],
+            keyword_args=kwargs,
+            resources=ResourceRequest(pool=pool),
+            task_info={"slot_pool": pool},
+        )
+
+    def pending(self, pool: str) -> int:
+        with self._lock:
+            return len(self._work.get(pool, ()))
+
+    # -------------------------------------------------------------- results
+    @result_processor()
+    def _on_result(self, result: Result) -> None:
+        self.rec.release(result.task_info.get("slot_pool", "default"), 1)
+        self.results.append(result)
+        with self._lock:
+            self._n_done += 1
+            finished = self._n_done >= self._expected
+        if finished:
+            self.done.set()
+
+
+def run_pool_workload(
+    allocations: Dict[str, int],
+    work: Dict[str, Sequence[WorkItem]],
+    methods: Dict[str, str],
+    task_fns: Dict[str, Callable[..., Any]],
+    adaptive: bool = False,
+    policy: Optional[ReallocationPolicy] = None,
+    interval: float = 0.01,
+    jsonl_path: Optional[str] = None,
+    workers_per_pool: Optional[int] = None,
+    timeout: float = 120.0,
+) -> Tuple[dict, EventLog, PoolWorkloadThinker]:
+    """Run one campaign; returns (report, event_log, thinker).
+
+    Worker pools are oversized (``workers_per_pool`` defaults to the
+    total slot count) so the ResourceCounter split is the only binding
+    resource, matching the paper's node-allocation model.
+    """
+    total = sum(allocations.values())
+    n_workers = workers_per_pool or total
+    log = EventLog(jsonl_path=jsonl_path)
+    queues = LocalColmenaQueues(event_log=log)
+    pools = {p: WorkerPool(p, n_workers) for p in allocations}
+    pools.setdefault("default", WorkerPool("default", 1))
+    server = TaskServer(queues, dict(task_fns), pools=pools)
+
+    thinker = PoolWorkloadThinker(queues, allocations, work, methods)
+    thinker.rec.event_log = log  # record per-pool slot gauges for the report
+    if adaptive:
+        thinker.reallocator = AdaptiveReallocator(
+            thinker.rec,
+            pools=list(allocations),
+            policy=policy or GreedyBacklogPolicy(),
+            backlog=thinker.pending,
+            interval=interval,
+            event_log=log,
+        )
+    server.start()
+    try:
+        thinker.run(timeout=timeout)
+    finally:
+        server.stop()
+        log.close()
+    report = build_report(log, total_slots=total)
+    return report, log, thinker
+
+
+def _sleep_task(duration: float) -> float:
+    time.sleep(duration)
+    return duration
+
+
+def run_two_pool(
+    n_slots: int = 6,
+    n_sim: int = 36,
+    n_ml: int = 6,
+    task_s: float = 0.03,
+    ml_share: Optional[int] = None,
+    adaptive: bool = False,
+    policy: Optional[ReallocationPolicy] = None,
+    jsonl_path: Optional[str] = None,
+) -> Tuple[dict, EventLog, PoolWorkloadThinker]:
+    """The canonical imbalanced sim/ml workload: many short ``sim`` tasks,
+    few ``ml`` tasks, slots split evenly by default. The static split
+    strands the ml slots once ml work drains (~utilization loss the
+    adaptive policy recovers)."""
+    ml_slots = n_slots // 2 if ml_share is None else ml_share
+    allocations = {"sim": n_slots - ml_slots, "ml": ml_slots}
+    work = {
+        "sim": [((task_s,), {}) for _ in range(n_sim)],
+        "ml": [((task_s,), {}) for _ in range(n_ml)],
+    }
+    methods = {"sim": "sim_task", "ml": "ml_task"}
+    fns = {"sim_task": _sleep_task, "ml_task": _sleep_task}
+    return run_pool_workload(
+        allocations, work, methods, fns,
+        adaptive=adaptive, policy=policy, jsonl_path=jsonl_path,
+    )

@@ -5,6 +5,7 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
+pytest.importorskip("hypothesis")  # optional dep: pip install -e .[test]
 from hypothesis import given, settings, strategies as st, HealthCheck
 
 from repro.kernels.flash_attention.ops import flash_attention

@@ -1,0 +1,317 @@
+"""Tests for repro.observe: event lifecycle completeness/ordering (incl.
+under concurrent task servers), metrics aggregation on a synthetic trace,
+reallocator policies, and the static-vs-adaptive acceptance comparison."""
+
+import json
+import threading
+import time
+
+import pytest
+
+from repro.core import (
+    LocalColmenaQueues,
+    ResourceRequest,
+    Result,
+    ResourceCounter,
+    TaskServer,
+    WorkerPool,
+)
+from repro.observe import (
+    AdaptiveReallocator,
+    EMABacklogPolicy,
+    Event,
+    EventLog,
+    GreedyBacklogPolicy,
+    MetricsAggregator,
+    PoolView,
+    build_report,
+    lifecycle_gaps,
+    lifecycle_order_violations,
+    render_text,
+    run_two_pool,
+)
+
+REQUIRED = ("submitted", "queued", "picked_up", "dispatched", "running",
+            "completed", "result_received")
+
+
+def _run_tasks(log, n_tasks=12, n_servers=1, pools=("alpha", "beta")):
+    """Push n_tasks through n_servers sharing one queue; drain results."""
+    q = LocalColmenaQueues(event_log=log)
+    servers = [
+        TaskServer(
+            q, {"work": lambda x: x * 2},
+            pools={p: WorkerPool(p, 2) for p in (*pools, "default")},
+        ).start()
+        for _ in range(n_servers)
+    ]
+    for i in range(n_tasks):
+        q.send_inputs(i, method="work",
+                      resources=ResourceRequest(pool=pools[i % len(pools)]))
+    results = [q.get_result(timeout=30) for _ in range(n_tasks)]
+    for s in servers:
+        s.stop()
+    return q, results
+
+
+class TestEventLifecycle:
+    def test_full_lifecycle_recorded(self):
+        log = EventLog()
+        _, results = _run_tasks(log, n_tasks=10)
+        assert all(r is not None and r.success for r in results)
+        by_task = log.by_task()
+        assert len(by_task) == 10
+        for tid, evs in by_task.items():
+            stages = [e.stage for e in evs]
+            for s in REQUIRED:
+                assert s in stages, f"{tid} missing {s}: {stages}"
+        assert lifecycle_gaps(log) == {}
+        assert lifecycle_order_violations(log) == []
+
+    def test_lifecycle_under_concurrent_servers(self):
+        log = EventLog()
+        _, results = _run_tasks(log, n_tasks=24, n_servers=3)
+        assert all(r is not None and r.success for r in results)
+        assert lifecycle_gaps(log) == {}
+        assert lifecycle_order_violations(log) == []
+        # Each task is picked up by exactly one of the competing servers.
+        counts = {}
+        for ev in log.events():
+            if ev.kind == "task" and ev.stage == "picked_up":
+                counts[ev.task_id] = counts.get(ev.task_id, 0) + 1
+        assert len(counts) == 24
+        assert set(counts.values()) == {1}
+
+    def test_failed_task_lifecycle(self):
+        log = EventLog()
+        q = LocalColmenaQueues(event_log=log)
+        def boom(x):
+            raise ValueError("nope")
+        server = TaskServer(q, {"boom": boom}, n_workers=1).start()
+        q.send_inputs(1, method="boom")
+        r = q.get_result(timeout=30)
+        server.stop()
+        assert r is not None and not r.success
+        stages = {e.stage for e in log.by_task()[r.task_id]}
+        assert "failed" in stages and "completed" not in stages
+        assert lifecycle_gaps(log) == {}
+
+    def test_ring_buffer_capacity_and_jsonl_sink(self, tmp_path):
+        path = tmp_path / "events.jsonl"
+        log = EventLog(capacity=4, jsonl_path=str(path))
+        for i in range(10):
+            log.gauge("slots", i, pool="p")
+        log.close()
+        assert len(log) == 4  # ring keeps only the most recent
+        assert [e.value for e in log.events()] == [6.0, 7.0, 8.0, 9.0]
+        rows = [json.loads(line) for line in path.read_text().splitlines()]
+        assert len(rows) == 10  # the sink keeps everything
+        assert rows[0]["stage"] == "slots" and rows[0]["kind"] == "gauge"
+        assert "t_rel" in rows[0]
+
+    def test_subscribe_replays_buffered_events(self):
+        log = EventLog()
+        log.gauge("slots", 3, pool="p")
+        seen = []
+        log.subscribe(seen.append, replay=True)
+        log.gauge("slots", 4, pool="p")
+        assert [e.value for e in seen] == [3.0, 4.0]
+
+
+def _task(tid, stage, t, pool="sim", method="work", **info):
+    return Event(t=t, kind="task", stage=stage, task_id=tid,
+                 method=method, topic="default", pool=pool, info=info)
+
+
+class TestMetricsAggregation:
+    def test_synthetic_trace_aggregation(self):
+        agg = MetricsAggregator()
+        # Two tasks on pool sim: compute 1.0s and 3.0s; one on ml: 2.0s.
+        trace = []
+        for tid, pool, t0, dur in (("a", "sim", 0.0, 1.0),
+                                   ("b", "sim", 0.5, 3.0),
+                                   ("c", "ml", 1.0, 2.0)):
+            trace += [
+                _task(tid, "submitted", t0, pool=pool),
+                _task(tid, "queued", t0 + 0.01, pool=pool),
+                _task(tid, "picked_up", t0 + 0.02, pool=pool),
+                _task(tid, "dispatched", t0 + 0.1, pool=pool),
+                _task(tid, "running", t0 + 0.2, pool=pool),
+                _task(tid, "completed", t0 + 0.2 + dur, pool=pool),
+                _task(tid, "result_received", t0 + 0.3 + dur, pool=pool),
+            ]
+        for ev in sorted(trace, key=lambda e: e.t):
+            agg.observe(ev)
+
+        pools = agg.pool_stats()
+        assert pools["sim"].completed == 2
+        assert pools["ml"].completed == 1
+        assert pools["sim"].busy_seconds == pytest.approx(4.0)
+        assert pools["ml"].busy_seconds == pytest.approx(2.0)
+        assert pools["sim"].backlog == 0 and pools["sim"].running == 0
+
+        methods = agg.method_stats()
+        assert methods["work"]["count"] == 3
+        assert methods["work"]["mean_s"] == pytest.approx(2.0)
+
+        over = agg.overhead()
+        assert over["queue"]["mean_s"] == pytest.approx(0.1)
+        assert over["dispatch"]["mean_s"] == pytest.approx(0.1)
+        assert over["compute"]["mean_s"] == pytest.approx(2.0)
+        assert over["result"]["mean_s"] == pytest.approx(0.1)
+
+        # makespan: first submit (t=0.0) to last result (b at 0.5+0.3+3.0)
+        assert agg.makespan() == pytest.approx(3.8)
+        util = agg.utilization(slots_by_pool={"sim": 2, "ml": 2})
+        assert util["sim"] == pytest.approx(4.0 / (2 * 3.8))
+        assert util["total"] == pytest.approx(6.0 / (4 * 3.8))
+
+    def test_backlog_tracks_submitted_not_running(self):
+        agg = MetricsAggregator()
+        agg.observe(_task("a", "submitted", 0.0))
+        agg.observe(_task("b", "submitted", 0.1))
+        assert agg.backlog("sim") == 2
+        agg.observe(_task("a", "running", 0.2, info={}))
+        assert agg.backlog("sim") == 1
+
+    def test_speculative_twin_not_double_counted(self):
+        agg = MetricsAggregator()
+        agg.observe(_task("a", "submitted", 0.0))
+        agg.observe(_task("a", "running", 1.0, worker_id=0))
+        agg.observe(_task("a", "speculated", 5.0))
+        agg.observe(_task("a", "running", 5.1, worker_id=1))      # twin
+        agg.observe(_task("a", "completed", 6.1, worker_id=1))    # twin wins
+        agg.observe(_task("a", "result_received", 6.2))
+        agg.observe(_task("a", "decision_made", 6.3))
+        agg.observe(_task("a", "completed", 7.0, worker_id=0))    # late loser
+        st = agg.pool_stats()["sim"]
+        assert st.completed == 1           # one task, not one per copy
+        assert st.running == 0             # both copies retired
+        # busy time covers BOTH copies' real worker occupancy
+        assert st.busy_seconds == pytest.approx((6.1 - 5.1) + (7.0 - 1.0))
+        assert agg.method_stats()["work"]["count"] == 1
+        # transient per-task state fully dropped (no leak from the
+        # decision_made / late-loser events arriving after result_received)
+        assert agg._marks == {} and agg._run_start == {}
+
+    def test_capacity_integral_from_slot_gauges(self):
+        agg = MetricsAggregator()
+        agg.observe(Event(t=0.0, kind="gauge", stage="slots", pool="sim", value=4))
+        agg.observe(Event(t=10.0, kind="gauge", stage="slots", pool="sim", value=2))
+        agg.observe(_task("x", "submitted", 20.0))
+        # 4 slots for 10 s + 2 slots for 10 s = 60 slot-seconds
+        assert agg.capacity_slot_seconds("sim", until=20.0) == pytest.approx(60.0)
+
+
+class TestReallocator:
+    def test_greedy_shifts_toward_backlogged_pool(self):
+        rec = ResourceCounter(4, pools=["a", "b"])  # all 4 slots in "a"
+        backlog = {"a": 0, "b": 5}
+        r = AdaptiveReallocator(rec, pools=["a", "b"],
+                                policy=GreedyBacklogPolicy(),
+                                backlog=lambda p: backlog[p])
+        assert r.step() is True
+        assert rec.allocation("b") == 4  # all idle slots migrate at once
+        assert rec.allocation("a") == 0
+        assert r.step() is False  # nothing left to move
+
+    def test_min_slots_floor_respected(self):
+        rec = ResourceCounter(4, pools=["a", "b"])
+        r = AdaptiveReallocator(rec, pools=["a", "b"],
+                                policy=GreedyBacklogPolicy(),
+                                backlog=lambda p: 9 if p == "b" else 0,
+                                min_slots={"a": 3})
+        r.step()
+        assert rec.allocation("a") == 3
+        assert rec.allocation("b") == 1
+
+    def test_busy_slots_never_move(self):
+        rec = ResourceCounter(2, pools=["a", "b"])
+        assert rec.acquire("a", 2, timeout=1)  # both slots busy
+        r = AdaptiveReallocator(rec, pools=["a", "b"],
+                                policy=GreedyBacklogPolicy(),
+                                backlog=lambda p: 5 if p == "b" else 0,
+                                acquire_timeout=0.01)
+        assert r.step() is False
+        assert rec.allocation("a") == 2
+
+    def test_ema_policy_has_hysteresis(self):
+        policy = EMABacklogPolicy(alpha=1.0, hysteresis=1.0)
+        views = [PoolView("a", allocation=2, free=1, backlog=0),
+                 PoolView("b", allocation=2, free=0, backlog=1)]
+        assert policy.decide(views) is None  # gap too small: no thrash
+        views[1] = PoolView("b", allocation=2, free=0, backlog=8)
+        mv = policy.decide(views)
+        assert mv is not None and mv.src == "a" and mv.dst == "b" and mv.n == 1
+
+    def test_resource_counter_allocation_tracking(self):
+        rec = ResourceCounter(6, pools=["x", "y"])
+        assert rec.allocations() == {"x": 6, "y": 0}
+        rec.reallocate("x", "y", 2)
+        assert rec.allocations() == {"x": 4, "y": 2}
+        assert rec.acquire("y", 1, timeout=1)
+        assert rec.allocation("y") == 2  # acquire does not change allocation
+        rec.grow("y", 3)
+        assert rec.allocations() == {"x": 4, "y": 5}
+        assert rec.shrink("x", 4, timeout=1)
+        assert rec.allocations() == {"x": 0, "y": 5}
+
+
+class TestAdaptiveBeatsStatic:
+    """The acceptance comparison: on the imbalanced two-pool workload the
+    AdaptiveReallocator must reach at least the static split's
+    utilization, with a complete lifecycle trace for every task."""
+
+    @pytest.fixture(scope="class")
+    def runs(self):
+        static, _, _ = run_two_pool(
+            n_slots=6, n_sim=30, n_ml=5, task_s=0.03, adaptive=False)
+        adaptive, log, thinker = run_two_pool(
+            n_slots=6, n_sim=30, n_ml=5, task_s=0.03, adaptive=True)
+        return static, adaptive, log, thinker
+
+    def test_all_tasks_complete(self, runs):
+        static, adaptive, _, thinker = runs
+        assert static["pools"]["sim"]["completed"] == 30
+        assert static["pools"]["ml"]["completed"] == 5
+        assert adaptive["pools"]["sim"]["completed"] == 30
+        assert adaptive["pools"]["ml"]["completed"] == 5
+        assert len(thinker.results) == 35
+
+    def test_adaptive_utilization_at_least_static(self, runs):
+        static, adaptive, _, _ = runs
+        # The static split strands the ml slots once ml work drains
+        # (~half the slots idle for most of the run), so adaptive wins by
+        # a wide margin — the >= assertion is robust to scheduling noise.
+        assert adaptive["utilization"]["total"] >= static["utilization"]["total"]
+
+    def test_reallocation_happened(self, runs):
+        _, adaptive, _, thinker = runs
+        assert thinker.reallocator is not None
+        assert len(thinker.reallocator.moves) >= 1
+        assert adaptive["reallocations"]  # recorded in the event log too
+        assert all(m["dst"] == "sim" for m in adaptive["reallocations"])
+
+    def test_event_log_has_every_lifecycle_stage(self, runs):
+        _, _, log, _ = runs
+        assert lifecycle_gaps(log) == {}
+        assert lifecycle_order_violations(log) == []
+        by_task = log.by_task()
+        assert len(by_task) == 35
+        for tid, evs in by_task.items():
+            stages = {e.stage for e in evs}
+            missing = [s for s in REQUIRED if s not in stages]
+            assert not missing, f"{tid} missing {missing}"
+
+
+class TestReportRendering:
+    def test_build_and_render(self):
+        log = EventLog()
+        _run_tasks(log, n_tasks=6)
+        report = build_report(log, total_slots=4)
+        assert report["lifecycle"]["complete"]
+        assert report["stage_counts"]["completed"] == 6
+        assert 0 < report["utilization"]["total"] <= 1.0
+        text = render_text(report)
+        assert "lifecycle:       complete & ordered" in text
+        assert "overhead breakdown" in text

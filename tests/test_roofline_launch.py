@@ -6,6 +6,7 @@ import os
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional dep: pip install -e .[test]
 from hypothesis import given, settings, strategies as st
 
 from repro.launch.roofline import (

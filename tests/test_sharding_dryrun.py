@@ -13,6 +13,7 @@ import sys
 import textwrap
 
 import pytest
+pytest.importorskip("hypothesis")  # optional dep: pip install -e .[test]
 from hypothesis import given, settings, strategies as st
 
 import jax

@@ -9,6 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional dep: pip install -e .[test]
 from hypothesis import given, settings, strategies as st, HealthCheck
 
 from repro.configs import smoke_config
