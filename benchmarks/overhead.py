@@ -1,57 +1,147 @@
-"""Paper §Task Queues: queue + serialization overhead microbenchmarks.
+"""Dispatch-path overhead: warm-worker caching x batched dispatch.
 
-Measures per-message cost of the two queue implementations across payload
-sizes (the paper's Redis-vs-Pipes tradeoff) and the serializer in
-isolation, plus proxy creation/resolution cost (the fabric's overhead
-floor)."""
+Reproduces the paper's two remaining headline optimizations — "data
+fabrics that reduce communication overhead" and "workflow tasks that
+cache costly operations between invocations" — on a small-task workload
+where every task references the same proxied model payload through the
+fabric.
+
+Four configurations are compared (cold/warm x unbatched/batched); every
+number is derived from the ``repro.observe`` event log (makespan, span
+breakdown, cache hit-rate, batch occupancy), not ad-hoc wall-clock
+deltas. The store's own cache is disabled so "cold" pays the real
+fabric fetch per task, as separate worker nodes would.
+
+Acceptance: warm-cache batched dispatch must cut per-task overhead by
+>= 2x vs cold unbatched (the benchmark raises otherwise, so the CI
+smoke job fails fast on dispatch-path regressions).
+"""
 
 from __future__ import annotations
 
-import time
+import pickle
+import uuid
 
 import numpy as np
 
-from repro.core import InMemoryConnector, LocalColmenaQueues, PipeColmenaQueues, Store
-from repro.core.serialization import SERIALIZER
+from repro.core import (
+    BatchPolicy,
+    FileConnector,
+    LocalColmenaQueues,
+    Store,
+    TaskServer,
+    WorkerPool,
+)
+from repro.observe import EventLog, MetricsAggregator
 
 
-def _bench(fn, n: int = 50) -> float:
-    t0 = time.monotonic()
-    for _ in range(n):
-        fn()
-    return (time.monotonic() - t0) / n * 1e6  # us
+def _clone_proxy(proxy):
+    """Fresh Proxy instance per task (as a cross-process control message
+    would carry), so resolution cost is paid per task, not per object."""
+    return pickle.loads(pickle.dumps(proxy))
 
 
-def queue_roundtrip_us(qcls, payload: np.ndarray, n: int = 30) -> float:
-    q = qcls()
+def _score(model, i):
+    # The small task: touch the resolved payload, return a scalar.
+    return float(model[0]) + i
 
-    def once():
-        q.send_inputs(payload, method="f")
-        task = q.get_task(timeout=5)
-        task.mark("compute_started")
-        task.set_success(None)
-        task.mark("compute_ended")
-        q.send_result(task)
-        q.get_result(timeout=5)
 
-    return _bench(once, n)
+def run_config(
+    n_tasks: int,
+    payload: np.ndarray,
+    warm: bool,
+    batch: bool,
+    n_workers: int = 4,
+) -> dict:
+    warmup_log = EventLog()   # thrown away: absorbs spin-up transients
+    # cache_size=0: every fabric get pays the connector (disk) cost, the
+    # honest stand-in for per-node fetches; only the warm-worker cache
+    # (when enabled) may short-circuit it.
+    store = Store(f"ovh-{uuid.uuid4().hex[:8]}", FileConnector(), cache_size=0)
+    queues = LocalColmenaQueues(proxystore=store, event_log=warmup_log)
+    model_ref = store.proxy(payload)
+    pool = WorkerPool(
+        "default", n_workers,
+        warm_capacity=32 if warm else 0,
+        event_log=warmup_log,
+    )
+    server = TaskServer(
+        queues, {"score": _score}, pools={"default": pool},
+        batching=BatchPolicy(max_batch=8, linger_s=0.002) if batch else None,
+        event_log=warmup_log,
+    ).start()
+
+    def run_tasks(n: int) -> list:
+        for i in range(n):
+            queues.send_inputs(_clone_proxy(model_ref), i, method="score")
+        return [queues.get_result(timeout=120) for _ in range(n)]
+
+    # Warmup: spin up worker threads, page-cache the payload file, and (in
+    # the warm config) populate the per-worker caches, so the measured
+    # phase reflects steady state for every configuration.
+    run_tasks(2 * n_workers)
+    # Rebind telemetry to a fresh log: components read ``event_log`` at
+    # emit time, so the measured phase records only measured tasks.
+    log = EventLog()
+    queues.event_log = log
+    server.event_log = log
+    pool.event_log = log
+    results = run_tasks(n_tasks)
+    server.stop()
+    assert all(r is not None and r.success for r in results), "benchmark tasks failed"
+
+    agg = MetricsAggregator(log)
+    spans = agg.overhead()
+    cache = agg.cache_stats()["total"]
+    batches = agg.batch_stats()["total"]
+    # Per-task dispatch overhead: the server-side window (first submission
+    # to last worker completion) over task count. The task function itself
+    # is ~free, so this IS the dispatch+resolution cost per task; the
+    # client-side result drain is reported separately via the result span.
+    task_evs = [e for e in log.events() if e.kind == "task"]
+    t_start = min(e.t for e in task_evs if e.stage == "submitted")
+    t_end = max(e.t for e in task_evs if e.stage in ("completed", "failed"))
+    per_task_us = (t_end - t_start) / n_tasks * 1e6
+    return {
+        "per_task_us": per_task_us,
+        "span_means_us": {k: v["mean_s"] * 1e6 for k, v in spans.items()},
+        "cache_hit_rate": cache.hit_rate,
+        "cache_hits": cache.hits,
+        "cache_misses": cache.misses,
+        "mean_batch_occupancy": batches.mean_occupancy,
+        "fabric_gets": store.metrics.gets,
+    }
 
 
 def main(quick: bool = True):
-    sizes = [1_000, 1_000_000] if quick else [1_000, 100_000, 1_000_000, 10_000_000]
-    rows = []
-    for size in sizes:
-        payload = np.zeros(size // 8)
-        blob, m = SERIALIZER.serialize(payload)
-        ser_us = _bench(lambda: SERIALIZER.serialize(payload), 20)
-        de_us = _bench(lambda: SERIALIZER.deserialize(blob), 20)
-        local_us = queue_roundtrip_us(LocalColmenaQueues, payload, 20 if quick else 50)
-        pipe_us = queue_roundtrip_us(PipeColmenaQueues, payload, 10 if quick else 30)
-        store = Store(f"ovh-{size}", InMemoryConnector())
-        proxy_us = _bench(lambda: store.proxy(payload).resolve(), 20)
-        rows.append((size, ser_us, de_us, local_us, pipe_us, proxy_us))
-        print(f"overhead,{size},{ser_us:.1f},{de_us:.1f},{local_us:.1f},{pipe_us:.1f},{proxy_us:.1f}")
-    return rows
+    n_tasks = 128 if quick else 512
+    payload = np.random.default_rng(0).random(250_000 if quick else 500_000)  # 2 / 4 MB
+    configs = [
+        ("cold_unbatched", False, False),
+        ("cold_batched", False, True),
+        ("warm_unbatched", True, False),
+        ("warm_batched", True, True),
+    ]
+    out = {}
+    print("overhead,config,per_task_us,queue_us,dispatch_us,compute_us,result_us,"
+          "cache_hit_rate,mean_batch_occupancy,fabric_gets")
+    for name, warm, batch in configs:
+        r = run_config(n_tasks, payload, warm=warm, batch=batch)
+        out[name] = r
+        s = r["span_means_us"]
+        print(
+            f"overhead,{name},{r['per_task_us']:.0f},{s.get('queue', 0):.0f},"
+            f"{s.get('dispatch', 0):.0f},{s.get('compute', 0):.0f},{s.get('result', 0):.0f},"
+            f"{r['cache_hit_rate']:.2f},{r['mean_batch_occupancy']:.1f},{r['fabric_gets']}"
+        )
+    ratio = out["cold_unbatched"]["per_task_us"] / max(out["warm_batched"]["per_task_us"], 1e-9)
+    ok = ratio >= 2.0
+    print(f"acceptance,warm_batched_speedup,{ratio:.1f}x,{'PASS' if ok else 'FAIL'}")
+    if not ok:
+        raise RuntimeError(
+            f"warm-batched dispatch only {ratio:.2f}x faster than cold unbatched (need >= 2x)"
+        )
+    return out
 
 
 if __name__ == "__main__":

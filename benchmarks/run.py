@@ -2,7 +2,9 @@
 
 ``python -m benchmarks.run`` runs the quick suite and prints
 ``name,...`` CSV rows per benchmark (plus a summary line per suite).
-``--full`` runs the paper-scale sweeps.
+``--full`` runs the paper-scale sweeps; ``--smoke`` runs only the fast
+dispatch-path benchmarks (the CI regression gate: ``overhead`` enforces
+the warm-batched >= 2x acceptance bound and raises on regression).
 
 Figure map:
   proxy_app      -> Fig. 7 (reaction/decision/dispatch latencies)
@@ -10,7 +12,8 @@ Figure map:
   utilization    -> Figs. 2/5 (busy fractions, stateful-cache ablation)
   multisite      -> Fig. 4 (local vs federated backends)
   steering_gain  -> '+20% high-performers' claim
-  overhead       -> §Task Queues (serialization/queue microbench)
+  overhead       -> warm-worker cache x batched dispatch (event-log
+                    per-task overhead, cache hit-rate, batch occupancy)
   kernel_bench   -> kernels/ (XLA timings + TPU roofline estimates)
 """
 
@@ -24,6 +27,8 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-scale sweeps")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast dispatch-path subset (CI regression gate)")
     ap.add_argument("--only", default=None, help="run a single benchmark")
     args = ap.parse_args()
     quick = not args.full
@@ -39,6 +44,8 @@ def main() -> None:
         "steering_gain": steering_gain.main,
         "kernel_bench": kernel_bench.main,
     }
+    if args.smoke:
+        suites = {name: suites[name] for name in ("overhead", "utilization")}
     if args.only:
         suites = {args.only: suites[args.only]}
 

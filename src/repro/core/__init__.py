@@ -6,15 +6,25 @@ Task Queues and a Task Server, with a ProxyStore-style data fabric
 keeping bulk tensors off the control path.
 """
 
-from .executors import FailureInjector, WorkerDied, WorkerPool, stateful_task
+from .executors import (
+    FailureInjector,
+    WarmCache,
+    WarmCacheStats,
+    WorkerDied,
+    WorkerPool,
+    resolve_warm,
+    stateful_task,
+)
 from .proxystore import (
     Connector,
     FileConnector,
     InMemoryConnector,
     Proxy,
+    SharedMemoryConnector,
     Store,
     apply_threshold,
     get_store,
+    iter_proxies,
     prefetch_all,
     resolve_all,
 )
@@ -26,7 +36,14 @@ from .queues import (
     PipeColmenaQueues,
 )
 from .result import FailureKind, ResourceRequest, Result, TimingInfo, Timestamps
-from .task_server import RetryPolicy, ServerMetrics, StragglerPolicy, TaskServer, serve_forever
+from .task_server import (
+    BatchPolicy,
+    RetryPolicy,
+    ServerMetrics,
+    StragglerPolicy,
+    TaskServer,
+    serve_forever,
+)
 from .thinker import (
     BaseThinker,
     ResourceCounter,
@@ -42,6 +59,7 @@ __all__ = [
     "agent",
     "apply_threshold",
     "BaseThinker",
+    "BatchPolicy",
     "BatchRetrainThinker",
     "Campaign",
     "CampaignReport",
@@ -55,6 +73,7 @@ __all__ = [
     "FileConnector",
     "get_store",
     "InMemoryConnector",
+    "iter_proxies",
     "KillSignal",
     "LocalColmenaQueues",
     "PipeColmenaQueues",
@@ -62,6 +81,7 @@ __all__ = [
     "PriorityQueueThinker",
     "Proxy",
     "resolve_all",
+    "resolve_warm",
     "ResourceCounter",
     "ResourceRequest",
     "Result",
@@ -69,9 +89,12 @@ __all__ = [
     "RetryPolicy",
     "serve_forever",
     "ServerMetrics",
+    "SharedMemoryConnector",
     "stateful_task",
     "Store",
     "StragglerPolicy",
+    "WarmCache",
+    "WarmCacheStats",
     "task_submitter",
     "TaskServer",
     "TimingInfo",

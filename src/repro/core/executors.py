@@ -7,6 +7,21 @@ tables) between task invocations, instead of reloading per task. Task
 functions opt in with the ``@stateful_task`` decorator, which injects the
 worker registry as a keyword argument.
 
+On top of the registry sits the **warm-worker cache**: a per-worker LRU
+of resolved proxy payloads keyed by ``(method, store, proxy key)``, the
+paper's "workflow tasks that cache costly operations between
+invocations". Repeated inference tasks that reference the same proxied
+model weights resolve them through the fabric once per worker instead of
+once per task; hits and misses are emitted as ``repro.observe`` cache
+events. The cache dies with its worker, so failed-over tasks re-resolve
+cold on their new worker.
+
+Work arrives in *batches*: ``submit_batch`` enqueues several same-method
+tasks as one queue item (a single worker round-trip), and the worker
+runs them back-to-back with correct per-task timestamps. A mid-batch
+node death fails the remaining tasks with ``WORKER_DIED`` so the
+TaskServer's retry machinery re-runs them elsewhere.
+
 The pool also provides the failure surface used for fault-tolerance
 testing: probabilistic task failures, explicit worker kills (node loss),
 per-worker slowdowns (stragglers / heterogeneous nodes), heartbeats, and
@@ -20,10 +35,11 @@ import queue
 import random
 import threading
 import time
+from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
-from .proxystore import prefetch_all, resolve_all
+from .proxystore import Proxy, iter_proxies, prefetch_all, resolve_all
 from .result import FailureKind, Result
 
 logger = logging.getLogger("repro.executors")
@@ -34,6 +50,87 @@ def stateful_task(fn: Callable) -> Callable:
     keyword argument ``registry`` (worker-side cache between invocations)."""
     fn._wants_registry = True
     return fn
+
+
+# --------------------------------------------------------------------------
+# Warm-worker cache
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class WarmCacheStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
+class WarmCache:
+    """Per-worker sticky LRU of resolved proxy payloads.
+
+    Keys are ``(method, store_name, proxy_key)`` so two methods sharing a
+    payload keep independent entries (they may post-process it
+    differently via the registry). Only accessed from the owning worker
+    thread — no lock needed.
+    """
+
+    _MISS = object()
+
+    def __init__(self, capacity: int = 32) -> None:
+        self.capacity = capacity
+        self.stats = WarmCacheStats()
+        self._data: "OrderedDict[tuple, Any]" = OrderedDict()
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    def lookup(self, key: tuple) -> Any:
+        """Return the cached value or ``WarmCache._MISS``."""
+        if key in self._data:
+            self._data.move_to_end(key)
+            self.stats.hits += 1
+            return self._data[key]
+        self.stats.misses += 1
+        return self._MISS
+
+    def insert(self, key: tuple, value: Any) -> None:
+        self._data[key] = value
+        self._data.move_to_end(key)
+        while len(self._data) > self.capacity:
+            self._data.popitem(last=False)
+            self.stats.evictions += 1
+
+
+def resolve_warm(
+    obj: Any, method: str, warm: WarmCache,
+    events: List[Tuple[str, Proxy]],
+) -> Any:
+    """Like ``resolve_all`` but Proxy leaves go through the warm cache.
+
+    Appends ``("hit"|"miss", proxy)`` per leaf to ``events`` so the
+    caller can emit observe events with full task context.
+    """
+    if isinstance(obj, Proxy):
+        key = (method, obj.store_name, obj.key)
+        value = warm.lookup(key)
+        if value is not WarmCache._MISS:
+            events.append(("hit", obj))
+            return value
+        value = obj.resolve()
+        warm.insert(key, value)
+        events.append(("miss", obj))
+        return value
+    if isinstance(obj, tuple):
+        return tuple(resolve_warm(x, method, warm, events) for x in obj)
+    if isinstance(obj, list):
+        return [resolve_warm(x, method, warm, events) for x in obj]
+    if isinstance(obj, dict):
+        return {k: resolve_warm(v, method, warm, events) for k, v in obj.items()}
+    return obj
 
 
 class WorkerDied(RuntimeError):
@@ -75,9 +172,13 @@ class WorkerState:
     busy: bool = False
     alive: bool = True
     current_task: Optional[str] = None
+    # Task ids of the batch this worker is executing that have not yet
+    # finished (heartbeat failover fails them all over together).
+    current_batch: List[str] = field(default_factory=list)
     last_heartbeat: float = field(default_factory=time.monotonic)
     tasks_done: int = 0
     registry: Dict[str, Any] = field(default_factory=dict)
+    warm: Optional[WarmCache] = None
 
 
 class WorkerPool:
@@ -85,8 +186,11 @@ class WorkerPool:
 
     ``submit(result, fn, on_done)`` enqueues work; a free worker runs
     ``fn(*result.args, **result.kwargs)`` and invokes ``on_done(result)``.
+    ``submit_batch`` enqueues several same-method tasks as one round-trip.
     Proxies in the args are prefetched (async resolution) before the call
-    so fabric I/O overlaps any remaining queue wait.
+    so fabric I/O overlaps any remaining queue wait; with
+    ``warm_capacity > 0`` each worker keeps an LRU of resolved payloads
+    keyed by (method, proxy id) so reused inputs resolve once per worker.
     """
 
     def __init__(
@@ -95,13 +199,20 @@ class WorkerPool:
         n_workers: int = 4,
         injector: Optional[FailureInjector] = None,
         prefetch_proxies: bool = True,
+        warm_capacity: int = 32,
         event_log: Optional[Any] = None,  # repro.observe.EventLog (duck-typed)
     ) -> None:
         self.name = name
         self.injector = injector or FailureInjector()
         self.prefetch_proxies = prefetch_proxies
+        self.warm_capacity = warm_capacity
         self.event_log = event_log
         self._queue: "queue.Queue[Any]" = queue.Queue()
+        # Recently-prefetched proxy keys: with warm caching on, a payload
+        # already flowing toward a worker cache is not prefetched again
+        # for every task in every batch that references it.
+        self._recent_prefetch: "OrderedDict[tuple, None]" = OrderedDict()
+        self._prefetch_lock = threading.Lock()
         self._workers: Dict[int, WorkerState] = {}
         self._threads: Dict[int, threading.Thread] = {}
         self._next_id = 0
@@ -122,7 +233,10 @@ class WorkerPool:
             with self._lock:
                 wid = self._next_id
                 self._next_id += 1
-                state = WorkerState(worker_id=wid)
+                state = WorkerState(
+                    worker_id=wid,
+                    warm=WarmCache(self.warm_capacity) if self.warm_capacity > 0 else None,
+                )
                 self._workers[wid] = state
             t = threading.Thread(
                 target=self._worker_loop, args=(state,), daemon=True,
@@ -146,6 +260,14 @@ class WorkerPool:
             w = self._workers.get(worker_id)
             if w:
                 w.alive = False
+        self._forget_prefetched()
+
+    def _forget_prefetched(self) -> None:
+        """Drop the prefetch-dedup window. Called when a worker dies: its
+        warm cache died with it, so payloads it kept warm must become
+        prefetchable again for the tasks that fail over elsewhere."""
+        with self._prefetch_lock:
+            self._recent_prefetch.clear()
 
     # --------------------------------------------------------------- submit
     def _emit(self, stage: str, result: Result, **info: Any) -> None:
@@ -156,17 +278,99 @@ class WorkerPool:
                            requested_pool=result.resources.pool, **info)
 
     def submit(self, result: Result, fn: Callable, on_done: Callable[[Result], None]) -> None:
-        result.mark("dispatched")
-        self._emit("dispatched", result)
+        self.submit_batch([result], fn, on_done)
+
+    def submit_batch(
+        self, batch: List[Result], fn: Callable, on_done: Callable[[Result], None]
+    ) -> None:
+        """Enqueue several same-method tasks as ONE worker round-trip.
+
+        Every proxy across the batch is prefetched up front so fabric
+        resolution overlaps the earlier tasks' compute."""
+        size = len(batch)
+        for result in batch:
+            result.mark("dispatched")
+            self._emit("dispatched", result, batch_size=size)
         if self.prefetch_proxies:
-            prefetch_all(result.args)
-            prefetch_all(result.kwargs)
-        self._queue.put((result, fn, on_done))
+            self._prefetch_batch(batch)
+        self._queue.put((list(batch), fn, on_done))
+
+    def _prefetch_batch(self, batch: List[Result]) -> None:
+        """Start async resolution so fabric I/O overlaps compute. With warm
+        caching on, each payload key is prefetched once per batch and
+        skipped while still in the recent-prefetch window (workers keep it
+        warm); without warm caching every proxy instance is prefetched."""
+        dedup = self.warm_capacity > 0
+        for result in batch:
+            for p in iter_proxies((result.args, result.kwargs)):
+                if dedup:
+                    key = (p.store_name, p.key)
+                    with self._prefetch_lock:
+                        if key in self._recent_prefetch:
+                            continue
+                        self._recent_prefetch[key] = None
+                        while len(self._recent_prefetch) > 256:
+                            self._recent_prefetch.popitem(last=False)
+                p.prefetch()
 
     def queued(self) -> int:
         return self._queue.qsize()
 
     # ----------------------------------------------------------- worker loop
+    def _emit_cache_events(
+        self, result: Result, state: WorkerState, events: List[Tuple[str, Proxy]]
+    ) -> None:
+        log = self.event_log
+        cache_event = getattr(log, "cache_event", None) if log is not None else None
+        if cache_event is None:
+            return
+        for outcome, proxy in events:
+            cache_event(outcome, result, pool=self.name,
+                        worker_id=state.worker_id, key=proxy.key,
+                        nbytes=proxy.nbytes)
+
+    def _run_task(self, state: WorkerState, result: Result, fn: Callable) -> bool:
+        """Execute one task on this worker; returns False when the 'node'
+        died (the caller fails the rest of its batch and exits)."""
+        state.current_task = result.task_id
+        state.last_heartbeat = time.monotonic()
+        result.worker_id = state.worker_id
+        result.mark("compute_started")
+        self._emit("running", result, worker_id=state.worker_id)
+        try:
+            self.injector.before_task(state.worker_id, result)
+            wants_reg = getattr(fn, "_wants_registry", False)
+            if state.warm is not None:
+                cache_events: List[Tuple[str, Proxy]] = []
+                args = resolve_warm(result.args, result.method, state.warm, cache_events)
+                kwargs = resolve_warm(result.kwargs, result.method, state.warm, cache_events)
+                self._emit_cache_events(result, state, cache_events)
+            else:
+                args = resolve_all(result.args)
+                kwargs = resolve_all(result.kwargs)
+            if wants_reg:
+                kwargs = dict(kwargs)
+                kwargs["registry"] = state.registry
+            value = fn(*args, **kwargs)
+            self.injector.after_task(state.worker_id)
+            result.mark("compute_ended")
+            result.set_success(value)
+            self._emit("completed", result, worker_id=state.worker_id)
+        except WorkerDied as exc:
+            result.mark("compute_ended")
+            result.set_failure(FailureKind.WORKER_DIED, str(exc))
+            self._emit("failed", result, worker_id=state.worker_id,
+                       kind=FailureKind.WORKER_DIED.value)
+            with self._lock:
+                state.alive = False
+            return False
+        except Exception as exc:  # noqa: BLE001 - task exception
+            result.mark("compute_ended")
+            result.set_failure(FailureKind.EXCEPTION, f"{type(exc).__name__}: {exc}")
+            self._emit("failed", result, worker_id=state.worker_id,
+                       kind=FailureKind.EXCEPTION.value)
+        return True
+
     def _worker_loop(self, state: WorkerState) -> None:
         while not self._shutdown.is_set():
             try:
@@ -177,53 +381,49 @@ class WorkerPool:
             if item is None:  # poison pill (scale-down)
                 with self._lock:
                     state.alive = False
+                self._forget_prefetched()
                 return
-            result, fn, on_done = item
+            batch, fn, on_done = item
             if not state.alive:  # killed while idle: drop back and exit
                 self._queue.put(item)
                 return
             state.busy = True
-            state.current_task = result.task_id
-            state.last_heartbeat = time.monotonic()
-            result.worker_id = state.worker_id
-            result.mark("compute_started")
-            self._emit("running", result, worker_id=state.worker_id)
-            try:
-                self.injector.before_task(state.worker_id, result)
-                wants_reg = getattr(fn, "_wants_registry", False)
-                args = resolve_all(result.args)
-                kwargs = resolve_all(result.kwargs)
-                if wants_reg:
-                    kwargs = dict(kwargs)
-                    kwargs["registry"] = state.registry
-                value = fn(*args, **kwargs)
-                self.injector.after_task(state.worker_id)
-                result.mark("compute_ended")
-                result.set_success(value)
-                self._emit("completed", result, worker_id=state.worker_id)
-            except WorkerDied as exc:
-                result.mark("compute_ended")
-                result.set_failure(FailureKind.WORKER_DIED, str(exc))
-                self._emit("failed", result, worker_id=state.worker_id,
-                           kind=FailureKind.WORKER_DIED.value)
-                with self._lock:
-                    state.alive = False
-                state.busy = False
-                try:
+            state.current_batch = [r.task_id for r in batch]
+            died = False
+            for result in batch:
+                if died:
+                    # The 'node' is gone: fail the rest of the batch so
+                    # the TaskServer retries each task cold elsewhere.
+                    result.set_failure(
+                        FailureKind.WORKER_DIED,
+                        f"worker {state.worker_id} died mid-batch",
+                    )
+                    self._emit("failed", result, worker_id=state.worker_id,
+                               kind=FailureKind.WORKER_DIED.value)
+                    try:
+                        state.current_batch.remove(result.task_id)
+                    except ValueError:
+                        pass
                     on_done(result)
-                finally:
+                    continue
+                alive = self._run_task(state, result, fn)
+                try:
+                    state.current_batch.remove(result.task_id)
+                except ValueError:
                     pass
-                return  # the 'node' is gone; thread exits
-            except Exception as exc:  # noqa: BLE001 - task exception
-                result.mark("compute_ended")
-                result.set_failure(FailureKind.EXCEPTION, f"{type(exc).__name__}: {exc}")
-                self._emit("failed", result, worker_id=state.worker_id,
-                           kind=FailureKind.EXCEPTION.value)
+                state.current_task = None
+                state.last_heartbeat = time.monotonic()
+                if alive:
+                    state.tasks_done += 1
+                else:
+                    died = True
+                on_done(result)
             state.busy = False
+            state.current_batch = []
             state.current_task = None
-            state.tasks_done += 1
-            state.last_heartbeat = time.monotonic()
-            on_done(result)
+            if died:
+                self._forget_prefetched()
+                return  # thread exits with its warm cache/registry
 
     # ------------------------------------------------------------ monitoring
     def worker_states(self) -> List[WorkerState]:
@@ -238,7 +438,13 @@ class WorkerPool:
                 if not w.alive:
                     out.append(w)
                 elif w.busy and now - w.last_heartbeat > heartbeat_timeout_s:
-                    out.append(w)
+                    thread = self._threads.get(w.worker_id)
+                    if thread is not None and thread.is_alive():
+                        # The 'node' still pings — a long-running task is
+                        # not a death (straggler speculation covers hangs).
+                        w.last_heartbeat = now
+                    else:
+                        out.append(w)
         return out
 
     def shutdown(self) -> None:

@@ -19,8 +19,10 @@ Features reproduced from the paper / ProxyStore:
 Hardware adaptation (see DESIGN.md): on a TPU pod, tensors that already
 live on device are proxied *by reference* (the connector stores the
 ``jax.Array`` handle; no serialization) — the ICI fabric is the side
-channel. Host-side objects use the memory or file connectors, standing in
-for Redis / RDMA / Globus in the paper.
+channel. Host-side objects use the memory, file, or shared-memory
+connectors, standing in for Redis / RDMA / Globus in the paper; the
+``SharedMemoryConnector`` hands workers zero-copy ``ndarray`` views over
+one POSIX shm segment.
 """
 
 from __future__ import annotations
@@ -31,6 +33,8 @@ import tempfile
 import threading
 import time
 import uuid
+
+import numpy as np
 from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Optional, Tuple
@@ -130,11 +134,140 @@ class FileConnector(Connector):
         return {"kind": self.name, "root": self.root}
 
 
+class SharedMemoryConnector(Connector):
+    """Cross-process store over POSIX shared memory with **zero-copy**
+    array views (stands in for the paper's RDMA channel / a node-local
+    object store like the plasma store Colmena deployments use).
+
+    Arrays (numpy, or anything exposing ``__array__`` such as host
+    ``jax.Array``\\ s) are written as raw bytes after a small pickled
+    header; ``get`` attaches to the segment and returns an ``ndarray``
+    *view* over the shared buffer — no copy, no deserialization. Other
+    objects fall back to pickling into the segment.
+
+    Segment lifetime: the connector keeps every attached ``SharedMemory``
+    handle alive (views borrow its buffer). ``evict``/``close`` unlink the
+    segment name so the OS reclaims it once every process unmaps, but the
+    local mapping is *retired*, not closed — ``SharedMemory.close()``
+    unmaps even under live buffer exports, which would turn later view
+    reads into a segfault. Retired mappings are freed at process exit.
+    """
+
+    name = "shm"
+
+    _HEADER_LEN = 8  # uint64 little-endian pickled-header size prefix
+
+    def __init__(self, prefix: str = "repro") -> None:
+        self.prefix = prefix
+        self._segments: Dict[str, Any] = {}   # key -> SharedMemory (keeps views valid)
+        self._created: set = set()            # keys this process must unlink
+        self._retired: list = []              # evicted handles kept mapped for views
+        self._lock = threading.Lock()
+
+    def _seg_name(self, key: str) -> str:
+        return f"{self.prefix}-{key}"
+
+    def put(self, key: str, obj: Any) -> int:
+        from multiprocessing import shared_memory
+
+        if hasattr(obj, "__array__"):
+            arr = np.ascontiguousarray(np.asarray(obj))
+            header = pickle.dumps(
+                {"kind": "ndarray", "shape": arr.shape, "dtype": arr.dtype.str},
+                protocol=pickle.HIGHEST_PROTOCOL,
+            )
+            payload_nbytes = arr.nbytes
+        else:
+            arr = None
+            blob = pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
+            header = pickle.dumps({"kind": "pickle"}, protocol=pickle.HIGHEST_PROTOCOL)
+            payload_nbytes = len(blob)
+        total = self._HEADER_LEN + len(header) + max(payload_nbytes, 1)
+        shm = shared_memory.SharedMemory(name=self._seg_name(key), create=True, size=total)
+        shm.buf[: self._HEADER_LEN] = len(header).to_bytes(self._HEADER_LEN, "little")
+        off = self._HEADER_LEN
+        shm.buf[off : off + len(header)] = header
+        off += len(header)
+        if arr is not None:
+            dst = np.ndarray(arr.shape, dtype=arr.dtype, buffer=shm.buf, offset=off)
+            dst[...] = arr
+        else:
+            shm.buf[off : off + payload_nbytes] = blob
+        with self._lock:
+            self._segments[key] = shm
+            self._created.add(key)
+        return payload_nbytes
+
+    def get(self, key: str) -> Any:
+        from multiprocessing import shared_memory
+
+        with self._lock:
+            shm = self._segments.get(key)
+        if shm is None:
+            shm = shared_memory.SharedMemory(name=self._seg_name(key))
+            with self._lock:
+                self._segments.setdefault(key, shm)
+        hlen = int.from_bytes(bytes(shm.buf[: self._HEADER_LEN]), "little")
+        off = self._HEADER_LEN
+        meta = pickle.loads(bytes(shm.buf[off : off + hlen]))
+        off += hlen
+        if meta["kind"] == "ndarray":
+            # Zero-copy view over the shared buffer (read-mostly by
+            # convention: writes would be visible to every process).
+            return np.ndarray(meta["shape"], dtype=np.dtype(meta["dtype"]),
+                              buffer=shm.buf, offset=off)
+        return pickle.loads(bytes(shm.buf[off:]))
+
+    def evict(self, key: str) -> None:
+        with self._lock:
+            shm = self._segments.pop(key, None)
+            created = key in self._created
+            self._created.discard(key)
+        if shm is not None:
+            if created:
+                # Unlink the name: POSIX frees the memory once the last
+                # process unmaps.
+                try:
+                    shm.unlink()
+                except FileNotFoundError:
+                    pass
+            # Never shm.close() here — zero-copy views handed out by get()
+            # may still borrow the mapping, and close() unmaps under them.
+            with self._lock:
+                self._retired.append(shm)
+
+    def exists(self, key: str) -> bool:
+        from multiprocessing import shared_memory
+
+        with self._lock:
+            if key in self._segments:
+                return True
+        try:
+            shm = shared_memory.SharedMemory(name=self._seg_name(key))
+        except FileNotFoundError:
+            return False
+        shm.close()
+        return True
+
+    def close(self) -> None:
+        """Unlink every segment this process created (mappings with live
+        views stay retired until process exit)."""
+        with self._lock:
+            keys = list(self._segments)
+        for key in keys:
+            self.evict(key)
+
+    def spec(self) -> dict:
+        return {"kind": self.name, "prefix": self.prefix}
+
+
 def connector_from_spec(spec: dict) -> Connector:
     if spec["kind"] == "memory":
         return InMemoryConnector()
     if spec["kind"] == "file":
         return FileConnector(spec["root"])
+    if spec["kind"] == "shm":
+        return SharedMemoryConnector(spec.get("prefix", "repro"))
     raise ValueError(f"unknown connector kind {spec['kind']!r}")
 
 
@@ -452,14 +585,20 @@ def resolve_all(obj: Any) -> Any:
     return obj
 
 
-def prefetch_all(obj: Any) -> Any:
-    """Start async resolution for every proxy found (overlap compute/I-O)."""
+def iter_proxies(obj: Any):
+    """Yield every Proxy leaf in (possibly nested) containers."""
     if isinstance(obj, Proxy):
-        obj.prefetch()
+        yield obj
     elif isinstance(obj, (list, tuple)):
         for x in obj:
-            prefetch_all(x)
+            yield from iter_proxies(x)
     elif isinstance(obj, dict):
         for v in obj.values():
-            prefetch_all(v)
+            yield from iter_proxies(v)
+
+
+def prefetch_all(obj: Any) -> Any:
+    """Start async resolution for every proxy found (overlap compute/I-O)."""
+    for p in iter_proxies(obj):
+        p.prefetch()
     return obj

@@ -13,7 +13,10 @@ Reproduces Colmena's queue layer:
   * *act-on-completion*: ``send_result`` first publishes a tiny completion
     notice before the (possibly large) result payload, letting the Thinker
     react ~100x sooner and hide data-transfer latency (paper §Scaling,
-    lesson 3).
+    lesson 3);
+  * *batched pops*: ``get_task_batch`` coalesces queued requests inside a
+    configurable linger window so the Task Server can dispatch many small
+    tasks in one worker round-trip.
 
 Every message is size- and time-metered so Results report their own
 communication overheads, as in the paper.
@@ -77,6 +80,9 @@ class ColmenaQueues:
         self.metrics = QueueMetrics()
         self.event_log = event_log
         self._metrics_lock = threading.Lock()
+        # A kill signal observed mid-batch is deferred so already-popped
+        # tasks in that batch are still dispatched before shutdown.
+        self._kill_pending = False
 
     def _emit(self, stage: str, result: Result, **info: Any) -> None:
         log = self.event_log
@@ -196,6 +202,9 @@ class ColmenaQueues:
 
     # ------------------------------------------------------------- server API
     def get_task(self, timeout: Optional[float] = None) -> Optional[Result]:
+        if self._kill_pending:
+            self._kill_pending = False
+            raise KillSignal()
         payload = self._pop_request(timeout)
         if payload is None:
             return None
@@ -205,6 +214,39 @@ class ColmenaQueues:
         result.mark("picked_up")
         self._emit("picked_up", result)
         return result
+
+    def get_task_batch(
+        self,
+        max_batch: int,
+        timeout: Optional[float] = None,
+        linger_s: float = 0.0,
+    ) -> list:
+        """Pop up to ``max_batch`` task requests in one call.
+
+        Blocks up to ``timeout`` for the first task, then keeps popping
+        until the batch is full or ``linger_s`` elapses — the coalescing
+        window of batched dispatch. A kill signal seen after the first
+        pop is deferred to the next ``get_task``/``get_task_batch`` call
+        so no already-popped task is lost.
+        """
+        first = self.get_task(timeout)
+        if first is None:
+            return []
+        batch = [first]
+        deadline = time.monotonic() + linger_s
+        while len(batch) < max_batch:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                break
+            try:
+                task = self.get_task(timeout=remaining)
+            except KillSignal:
+                self._kill_pending = True
+                break
+            if task is None:
+                break
+            batch.append(task)
+        return batch
 
     def send_result(self, result: Result) -> None:
         """Publish completion notice first (act-on-completion), then the

@@ -15,6 +15,10 @@ machinery a 1000+-node deployment needs:
   * **straggler mitigation**: speculative re-execution of tasks running
     far beyond the historical duration for their method — first finisher
     wins, the copy is dropped;
+  * **batched dispatch** (``BatchPolicy``): small same-method tasks are
+    coalesced inside a linger window into a single worker round-trip,
+    with results split back into individual ``Result``s carrying correct
+    per-task timing;
   * **timeouts** per task.
 
 The server runs as a thread by default (1 process on this container) but
@@ -55,6 +59,21 @@ class StragglerPolicy:
 
 
 @dataclass
+class BatchPolicy:
+    """Batched dispatch: coalesce small same-method tasks into a single
+    worker round-trip (the data-fabric optimization for dispatch-bound
+    workloads). ``linger_s`` bounds how long a partial batch waits for
+    company; ``methods=None`` batches every method."""
+
+    max_batch: int = 8
+    linger_s: float = 0.002
+    methods: Optional[tuple] = None
+
+    def eligible(self, method: str) -> bool:
+        return self.methods is None or method in self.methods
+
+
+@dataclass
 class ServerMetrics:
     tasks_received: int = 0
     tasks_completed: int = 0
@@ -85,6 +104,7 @@ class TaskServer:
         n_workers: int = 4,
         retry: Optional[RetryPolicy] = None,
         straggler: Optional[StragglerPolicy] = None,
+        batching: Optional[BatchPolicy] = None,
         injector: Optional[FailureInjector] = None,
         heartbeat_timeout_s: float = 10.0,
         replace_dead_workers: bool = True,
@@ -101,6 +121,7 @@ class TaskServer:
                 pool.event_log = self.event_log
         self.retry = retry or RetryPolicy()
         self.straggler = straggler or StragglerPolicy()
+        self.batching = batching
         self.heartbeat_timeout_s = heartbeat_timeout_s
         self.replace_dead_workers = replace_dead_workers
         self.metrics = ServerMetrics()
@@ -136,17 +157,57 @@ class TaskServer:
 
     # -------------------------------------------------------------- dispatch
     def _dispatch_loop(self) -> None:
+        bp = self.batching
         while not self._stop.is_set():
             try:
-                task = self.queues.get_task(timeout=0.05)
+                if bp is None:
+                    task = self.queues.get_task(timeout=0.05)
+                    tasks = [task] if task is not None else []
+                else:
+                    tasks = self.queues.get_task_batch(
+                        bp.max_batch, timeout=0.05, linger_s=bp.linger_s
+                    )
             except KillSignal:
                 logger.info("kill signal received; stopping task server")
                 self.stop()
                 return
-            if task is None:
+            if not tasks:
                 continue
-            self.metrics.tasks_received += 1
-            self._dispatch(task)
+            self.metrics.tasks_received += len(tasks)
+            if bp is None:
+                self._dispatch(tasks[0])
+                continue
+            # Coalesce same-(method, pool) runs; ineligible methods fall
+            # through to the plain path. Singleton groups still go through
+            # _dispatch_batch so occupancy gauges cover every dispatch.
+            groups: Dict[tuple, List[Result]] = {}
+            for task in tasks:
+                if bp.eligible(task.method):
+                    groups.setdefault((task.method, task.resources.pool), []).append(task)
+                else:
+                    self._dispatch(task)
+            for group in groups.values():
+                self._dispatch_batch(group)
+
+    def _dispatch_batch(self, batch: List[Result]) -> None:
+        """One worker round-trip for several same-method tasks."""
+        fn = self.methods.get(batch[0].method)
+        if fn is None:
+            for task in batch:
+                self._dispatch(task)  # fails each cleanly
+            return
+        pool_name = batch[0].resources.pool if batch[0].resources.pool in self.pools else "default"
+        pool = self.pools[pool_name]
+        with self._inflight_lock:
+            now = time.monotonic()
+            for task in batch:
+                if task.task_id not in self._inflight:
+                    self._inflight[task.task_id] = _InFlight(result=task, started=now, pool=pool_name)
+        if self.event_log is not None:
+            self.event_log.gauge(
+                "batch_occupancy", len(batch), pool=pool_name, method=batch[0].method
+            )
+        pool.submit_batch(batch, fn, self._on_done)
 
     def _dispatch(self, task: Result) -> None:
         fn = self.methods.get(task.method)
@@ -169,17 +230,22 @@ class TaskServer:
     def _on_done(self, result: Result) -> None:
         with self._inflight_lock:
             entry = self._inflight.get(result.task_id)
-            if entry is not None and entry.done:
-                # A speculative twin already finished; drop this copy.
-                if result.speculative or entry.speculated:
-                    logger.info("dropping late copy of %s", result.task_id)
+            if entry is None:
+                # Every live task has an in-flight entry (registered at
+                # dispatch). No entry means this copy lost a race: a
+                # speculative loser, or a zombie worker's late result
+                # after the monitor failed the task over. Exactly one
+                # copy per task reaches the client — drop the rest.
+                logger.info("dropping late copy of %s", result.task_id)
                 return
-            if entry is not None:
-                entry.done = True
-                del self._inflight[result.task_id]
-                if result.speculative:
-                    self.metrics.speculative_wins += 1
+            entry.done = True
+            del self._inflight[result.task_id]
+            if result.speculative:
+                self.metrics.speculative_wins += 1
+        self._complete(result)
 
+    def _complete(self, result: Result) -> None:
+        """Route a finished task: record success, or retry/fail it."""
         if result.success:
             dur = (result.time.compute_ended or 0) - (result.time.compute_started or 0)
             self._history.setdefault(result.method, []).append(dur)
@@ -215,15 +281,56 @@ class TaskServer:
         while not self._stop.is_set():
             time.sleep(self.straggler.check_interval_s)
             self._check_heartbeats()
+            self._check_timeouts()
             if self.straggler.enabled:
                 self._check_stragglers()
+
+    def _check_timeouts(self) -> None:
+        """Enforce ``ResourceRequest.timeout_s``: a task running past its
+        wall-time limit is failed with TIMEOUT (and retried per policy)
+        even though its worker thread is still alive — the recovery path
+        for hung task functions."""
+        now = time.monotonic()
+        with self._inflight_lock:
+            expired = [
+                tid for tid, e in self._inflight.items()
+                if e.result.resources.timeout_s is not None
+                and not e.done
+                and e.result.time.compute_started is not None
+                and now - e.result.time.compute_started > e.result.resources.timeout_s
+            ]
+        for tid in expired:
+            with self._inflight_lock:
+                entry = self._inflight.pop(tid, None)
+            if entry is None or entry.done:
+                continue
+            failed = entry.result
+            failed.set_failure(
+                FailureKind.TIMEOUT,
+                f"exceeded wall-time limit {failed.resources.timeout_s}s",
+            )
+            failed.mark("compute_ended")
+            if self.event_log is not None:
+                self.event_log.task_event(
+                    "failed", failed, pool=entry.pool, kind="timeout",
+                )
+            logger.info("task %s timed out after %.2fs", tid, now - entry.started)
+            self._complete(failed)
 
     def _check_heartbeats(self) -> None:
         for name, pool in self.pools.items():
             for w in pool.dead_workers(self.heartbeat_timeout_s):
-                if w.current_task:
+                # Fail over everything the worker was holding: the task it
+                # was executing plus the not-yet-started rest of its batch.
+                pending = list(w.current_batch)
+                if w.current_task and w.current_task not in pending:
+                    pending.append(w.current_task)
+                for tid in pending:
+                    # Popping the entry claims the task: the zombie worker
+                    # thread may still finish it, but its late copy finds
+                    # no entry in _on_done and is dropped, not re-sent.
                     with self._inflight_lock:
-                        entry = self._inflight.pop(w.current_task, None)
+                        entry = self._inflight.pop(tid, None)
                     if entry is not None and not entry.done:
                         failed = entry.result
                         failed.set_failure(
@@ -236,8 +343,9 @@ class TaskServer:
                                 "failed", failed, pool=entry.pool,
                                 worker_id=w.worker_id, kind="heartbeat_lost",
                             )
-                        w.current_task = None
-                        self._on_done(failed)
+                        self._complete(failed)
+                w.current_task = None
+                w.current_batch = []
                 if self.replace_dead_workers and not w.alive:
                     with pool._lock:
                         still_there = w.worker_id in pool._workers

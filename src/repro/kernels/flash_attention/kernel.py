@@ -41,6 +41,7 @@ def _flash_kernel(
     block_q: int,
     block_k: int,
     q_offset: int,
+    kv_len: int,
 ):
     qi = pl.program_id(1)
     ki = pl.program_id(2)
@@ -61,7 +62,9 @@ def _flash_kernel(
 
     q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0) + q_offset
     k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
-    mask = jnp.ones((block_q, block_k), dtype=bool)
+    # kv padding rows (sequence padded up to a block multiple) never
+    # contribute; padded q rows are sliced off by the caller.
+    mask = k_pos < kv_len
     if causal:
         mask &= k_pos <= q_pos
     if window > 0:
@@ -110,14 +113,23 @@ def flash_attention_pallas(
     group = h // kvh
     block_q = min(block_q, sq)
     block_k = min(block_k, skv)
-    assert sq % block_q == 0 and skv % block_k == 0, (sq, block_q, skv, block_k)
+    # Odd (non-multiple-of-block) sequence lengths: pad up to block
+    # multiples; padded kv positions are masked out inside the kernel
+    # (k_pos < kv_len) and padded q rows are sliced off below.
+    pad_q = (-sq) % block_q
+    pad_k = (-skv) % block_k
     scale = sm_scale if sm_scale is not None else d ** -0.5
 
     qf = q.reshape(b * h, sq, d)
     kf = k.reshape(b * kvh, skv, d)
     vf = v.reshape(b * kvh, skv, d)
+    if pad_q:
+        qf = jnp.pad(qf, ((0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        kf = jnp.pad(kf, ((0, 0), (0, pad_k), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, pad_k), (0, 0)))
 
-    grid = (b * h, sq // block_q, skv // block_k)
+    grid = (b * h, (sq + pad_q) // block_q, (skv + pad_k) // block_k)
 
     kernel = functools.partial(
         _flash_kernel,
@@ -127,6 +139,7 @@ def flash_attention_pallas(
         block_q=block_q,
         block_k=block_k,
         q_offset=q_offset,
+        kv_len=skv,
     )
 
     out = pl.pallas_call(
@@ -138,7 +151,7 @@ def flash_attention_pallas(
             pl.BlockSpec((1, block_k, d), lambda bh, qi, ki, g=group: (bh // g, ki, 0)),
         ],
         out_specs=pl.BlockSpec((1, block_q, d), lambda bh, qi, ki: (bh, qi, 0)),
-        out_shape=jax.ShapeDtypeStruct((b * h, sq, d), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq + pad_q, d), q.dtype),
         scratch_shapes=[
             pltpu.VMEM((block_q, 128), jnp.float32),   # m (running max, lane-padded)
             pltpu.VMEM((block_q, 128), jnp.float32),   # l (running denom)
@@ -146,4 +159,4 @@ def flash_attention_pallas(
         ],
         interpret=interpret,
     )(qf, kf, vf)
-    return out.reshape(b, h, sq, d)
+    return out[:, :sq].reshape(b, h, sq, d)

@@ -25,8 +25,10 @@ sink path is given. Fields:
 ===========  ============================================================
 ``t``        ``time.monotonic()`` seconds at emission (``t_rel`` in the
              JSONL sink is relative to log creation)
-``kind``     ``task`` (lifecycle stage), ``gauge`` (named scalar sample),
-             or ``realloc`` (slot move)
+``kind``     ``task`` (lifecycle stage), ``gauge`` (named scalar sample,
+             e.g. ``slots`` or ``batch_occupancy``), ``cache``
+             (warm-worker cache ``hit``/``miss``), or ``realloc``
+             (slot move)
 ``stage``    lifecycle stage for tasks — in causal order: ``submitted``,
              ``queued``, ``picked_up``, ``dispatched``, ``running``,
              ``completed``/``failed``, ``result_received``,
@@ -65,7 +67,13 @@ from .events import (
     lifecycle_gaps,
     lifecycle_order_violations,
 )
-from .metrics import LatencyHistogram, MetricsAggregator, PoolStats
+from .metrics import (
+    BatchStats,
+    CacheStats,
+    LatencyHistogram,
+    MetricsAggregator,
+    PoolStats,
+)
 from .reallocator import (
     AdaptiveReallocator,
     EMABacklogPolicy,
@@ -81,7 +89,9 @@ from .synthetic import PoolWorkloadThinker, run_pool_workload, run_two_pool
 __all__ = [
     "AdaptiveReallocator",
     "AUX_STAGES",
+    "BatchStats",
     "build_report",
+    "CacheStats",
     "dump_json",
     "EMABacklogPolicy",
     "Event",

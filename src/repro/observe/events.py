@@ -55,8 +55,9 @@ AUX_STAGES: tuple = ("speculated", "retried", "reallocated")
 @dataclass
 class Event:
     """One observation. ``kind`` is ``task`` (lifecycle stage for a task),
-    ``gauge`` (a named scalar sample, e.g. per-pool slot allocation), or
-    ``realloc`` (a resource move)."""
+    ``gauge`` (a named scalar sample, e.g. per-pool slot allocation),
+    ``cache`` (a warm-worker cache ``hit``/``miss``), or ``realloc`` (a
+    resource move)."""
 
     t: float                              # time.monotonic() at emit
     kind: str                             # task | gauge | realloc
@@ -114,6 +115,23 @@ class EventLog:
                 method=result.method,
                 topic=result.topic,
                 pool=pool if pool is not None else getattr(result.resources, "pool", None),
+                info=info,
+            )
+        )
+
+    def cache_event(self, outcome: str, result: Any, pool: Optional[str] = None, **info: Any) -> Event:
+        """Record a warm-worker cache ``hit``/``miss`` for a task's proxy
+        resolution (``info`` carries ``worker_id``, the proxy ``key`` and
+        its ``nbytes``)."""
+        return self.emit(
+            Event(
+                t=self._clock(),
+                kind="cache",
+                stage=outcome,
+                task_id=result.task_id,
+                method=result.method,
+                topic=result.topic,
+                pool=pool,
                 info=info,
             )
         )

@@ -93,6 +93,33 @@ class PoolStats:
 
 
 @dataclass
+class CacheStats:
+    """Warm-worker cache counters for one method."""
+
+    hits: int = 0
+    misses: int = 0
+    bytes_saved: int = 0   # fabric bytes NOT re-fetched thanks to hits
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
+@dataclass
+class BatchStats:
+    """Dispatch batch occupancy (from ``batch_occupancy`` gauges)."""
+
+    batches: int = 0
+    tasks: int = 0
+    max_occupancy: int = 0
+
+    @property
+    def mean_occupancy(self) -> float:
+        return self.tasks / self.batches if self.batches else 0.0
+
+
+@dataclass
 class SpanStats:
     """Mean/total accumulator for one overhead span."""
 
@@ -153,6 +180,8 @@ class MetricsAggregator:
         self._methods: Dict[str, LatencyHistogram] = {}
         self._spans: Dict[str, SpanStats] = {}
         self._capacity: Dict[str, _Capacity] = {}
+        self._cache: Dict[str, CacheStats] = {}
+        self._batches: Dict[str, BatchStats] = {}
         # transient per-task state, dropped at result_received; running
         # intervals key on (task_id, worker_id) so speculative copies
         # executing concurrently stay distinct
@@ -180,6 +209,20 @@ class MetricsAggregator:
             if ev.kind == "gauge":
                 if ev.stage == "slots" and ev.pool is not None:
                     self._capacity.setdefault(ev.pool, _Capacity()).set(ev.t, ev.value or 0.0)
+                elif ev.stage == "batch_occupancy":
+                    st = self._batches.setdefault(ev.info.get("method") or "?", BatchStats())
+                    n = int(ev.value or 0)
+                    st.batches += 1
+                    st.tasks += n
+                    st.max_occupancy = max(st.max_occupancy, n)
+                return
+            if ev.kind == "cache":
+                cs = self._cache.setdefault(ev.method or "?", CacheStats())
+                if ev.stage == "hit":
+                    cs.hits += 1
+                    cs.bytes_saved += int(ev.info.get("nbytes") or 0)
+                else:
+                    cs.misses += 1
                 return
             if ev.kind == "realloc":
                 self.reallocations.append(ev)
@@ -283,6 +326,32 @@ class MetricsAggregator:
                 name: {"mean_s": s.mean, "total_s": s.total, "count": s.count}
                 for name, s in self._spans.items()
             }
+
+    def cache_stats(self) -> Dict[str, CacheStats]:
+        """Warm-worker cache hit/miss counters per method, plus a
+        ``total`` roll-up (hit_rate is the cache-hit-rate gauge)."""
+        with self._lock:
+            out = {m: CacheStats(**vars(c)) for m, c in self._cache.items()}
+        total = CacheStats()
+        for c in out.values():
+            total.hits += c.hits
+            total.misses += c.misses
+            total.bytes_saved += c.bytes_saved
+        out["total"] = total
+        return out
+
+    def batch_stats(self) -> Dict[str, BatchStats]:
+        """Dispatch batch occupancy per method, plus a ``total`` roll-up
+        (mean_occupancy is the batch-occupancy gauge)."""
+        with self._lock:
+            out = {m: BatchStats(**vars(b)) for m, b in self._batches.items()}
+        total = BatchStats()
+        for b in out.values():
+            total.batches += b.batches
+            total.tasks += b.tasks
+            total.max_occupancy = max(total.max_occupancy, b.max_occupancy)
+        out["total"] = total
+        return out
 
     def backlog(self, pool: str) -> int:
         with self._lock:

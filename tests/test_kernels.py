@@ -194,6 +194,63 @@ class TestWkv6:
         assert rel_err(s2, s_full) < 1e-4
 
 
+class TestOddLengthParity:
+    """Pallas kernels vs refs on odd (non-multiple-of-block) sequence
+    lengths: the padding/masking path must be exact in both dtypes."""
+
+    @given(st.sampled_from([33, 40, 72, 100]),
+           st.sampled_from([jnp.float32, jnp.bfloat16]),
+           st.booleans())
+    @settings(**SETTINGS)
+    def test_flash_attention_odd_seq(self, s, dtype, causal):
+        key = jax.random.PRNGKey(s)
+        q = jax.random.normal(key, (1, 2, s, 16), dtype)
+        k = jax.random.normal(jax.random.fold_in(key, 1), (1, 1, s, 16), dtype)
+        v = jax.random.normal(jax.random.fold_in(key, 2), (1, 1, s, 16), dtype)
+        ref = flash_attention(q, k, v, causal=causal, impl="ref")
+        out = flash_attention(q, k, v, causal=causal, impl="interpret",
+                              block_q=32, block_k=32)
+        tol = 2e-2 if dtype == jnp.bfloat16 else 1e-4
+        assert rel_err(out, ref) < tol
+
+    def test_flash_attention_odd_seq_with_window_and_offset(self):
+        key = jax.random.PRNGKey(7)
+        q = jax.random.normal(key, (1, 2, 17, 16))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (1, 2, 50, 16))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (1, 2, 50, 16))
+        for kwargs in ({"q_offset": 33}, {"window": 24, "q_offset": 33}):
+            ref = flash_attention(q, k, v, causal=True, impl="ref", **kwargs)
+            out = flash_attention(q, k, v, causal=True, impl="interpret",
+                                  block_q=16, block_k=16, **kwargs)
+            assert rel_err(out, ref) < 1e-4
+
+    def test_flash_attention_odd_kv_only(self):
+        """kv padding must not leak into the softmax when sq != skv."""
+        key = jax.random.PRNGKey(11)
+        q = jax.random.normal(key, (2, 2, 32, 16))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (2, 2, 45, 16))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (2, 2, 45, 16))
+        ref = flash_attention(q, k, v, causal=False, impl="ref")
+        out = flash_attention(q, k, v, causal=False, impl="interpret",
+                              block_q=16, block_k=16)
+        assert rel_err(out, ref) < 1e-4
+
+    @given(st.sampled_from([(3, 5, 48), (7, 40), (13, 33)]),
+           st.sampled_from([jnp.float32, jnp.bfloat16]))
+    @settings(**SETTINGS)
+    def test_rmsnorm_odd_rows(self, shape, dtype):
+        from repro.kernels.rmsnorm.kernel import rmsnorm_pallas
+
+        key = jax.random.PRNGKey(shape[-1])
+        x = jax.random.normal(key, shape, dtype)
+        w = jax.random.normal(jax.random.fold_in(key, 1), (shape[-1],), dtype) * 0.1
+        ref = rmsnorm(x, w, impl="ref")
+        # block_rows=4 forces row padding for every odd row count here
+        out = rmsnorm_pallas(x, w, block_rows=4, interpret=True)
+        tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+        assert rel_err(out, ref) < tol
+
+
 class TestRmsnorm:
     @given(st.sampled_from([(4, 32), (2, 3, 64), (1, 128)]),
            st.sampled_from([jnp.float32, jnp.bfloat16]),

@@ -1,0 +1,212 @@
+"""Property-based tests for the ProxyStore data fabric.
+
+Round-trip invariants: arbitrary nested payloads pushed through the
+auto-proxy threshold + the queue serializer come back identical whether
+or not individual leaves crossed the threshold, and no LRU cache (store
+cache or warm-worker cache) ever exceeds its configured capacity.
+"""
+
+import pickle
+import uuid
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: pip install -e .[test]
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core import (
+    InMemoryConnector,
+    Proxy,
+    SharedMemoryConnector,
+    Store,
+    WarmCache,
+    apply_threshold,
+    resolve_all,
+)
+from repro.core.serialization import SERIALIZER, object_nbytes
+
+SETTINGS = dict(
+    max_examples=25, deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+
+THRESHOLD = 800  # bytes — arrays of >= 100 float64s get proxied
+
+
+def _fresh_store(**kwargs) -> Store:
+    return Store(f"prop-{uuid.uuid4().hex[:12]}", InMemoryConnector(), **kwargs)
+
+
+def _leaves():
+    return st.one_of(
+        st.integers(-1_000_000, 1_000_000),
+        st.floats(allow_nan=False, allow_infinity=False),
+        st.text(max_size=12),
+        st.binary(max_size=32),
+        st.none(),
+        # both sides of the threshold: 8..64 B and 1600..4000 B
+        st.integers(1, 8).map(lambda n: np.arange(n, dtype=np.float64)),
+        st.integers(200, 500).map(lambda n: np.linspace(0.0, 1.0, n)),
+    )
+
+
+def _payloads():
+    return st.recursive(
+        _leaves(),
+        lambda ch: st.one_of(
+            st.lists(ch, max_size=4),
+            st.dictionaries(st.text(max_size=4), ch, max_size=4),
+            st.lists(ch, max_size=3).map(tuple),
+        ),
+        max_leaves=8,
+    )
+
+
+def _deep_equal(a, b) -> bool:
+    if isinstance(a, np.ndarray) or isinstance(b, np.ndarray):
+        return (
+            isinstance(a, np.ndarray) and isinstance(b, np.ndarray)
+            and a.shape == b.shape and a.dtype == b.dtype
+            and np.array_equal(a, b)
+        )
+    if isinstance(a, (list, tuple)):
+        return (
+            type(a) is type(b) and len(a) == len(b)
+            and all(_deep_equal(x, y) for x, y in zip(a, b))
+        )
+    if isinstance(a, dict):
+        return (
+            isinstance(b, dict) and a.keys() == b.keys()
+            and all(_deep_equal(a[k], b[k]) for k in a)
+        )
+    return type(a) is type(b) and a == b
+
+
+class TestRoundtripProperties:
+    @given(_payloads())
+    @settings(**SETTINGS)
+    def test_threshold_serialize_roundtrip(self, payload):
+        """proxy-above-threshold -> pickle -> unpickle -> resolve == id."""
+        store = _fresh_store()
+        converted, moved = apply_threshold(payload, store, THRESHOLD)
+        blob, _ = SERIALIZER.serialize(converted)
+        back, _ = SERIALIZER.deserialize(blob)
+        assert _deep_equal(resolve_all(back), payload)
+        assert moved >= 0
+        # every proxied byte really was above the threshold
+        if moved:
+            assert moved >= THRESHOLD
+
+    @given(_payloads())
+    @settings(**SETTINGS)
+    def test_threshold_moves_exactly_the_large_leaves(self, payload):
+        store = _fresh_store()
+        converted, moved = apply_threshold(payload, store, THRESHOLD)
+        # apply_threshold walks one container level (Colmena semantics)
+        top = (
+            list(converted) if isinstance(converted, (list, tuple))
+            else list(converted.values()) if isinstance(converted, dict)
+            else [converted]
+        )
+        orig = (
+            list(payload) if isinstance(payload, (list, tuple))
+            else list(payload.values()) if isinstance(payload, dict)
+            else [payload]
+        )
+        expect_moved = sum(
+            object_nbytes(x) for x in orig
+            if not isinstance(x, Proxy) and object_nbytes(x) >= THRESHOLD
+        )
+        assert moved == expect_moved
+        for x, o in zip(top, orig):
+            if isinstance(x, Proxy):
+                assert object_nbytes(o) >= THRESHOLD
+
+    @given(st.integers(200, 500))
+    @settings(max_examples=10, deadline=None)
+    def test_proxy_control_message_stays_small(self, n):
+        store = _fresh_store()
+        p = store.proxy(np.zeros(n))
+        assert len(pickle.dumps(p)) < 1000
+
+
+class TestLRUProperties:
+    @given(
+        st.integers(1, 8),
+        st.lists(st.integers(0, 24), min_size=1, max_size=80),
+    )
+    @settings(**SETTINGS)
+    def test_store_cache_never_exceeds_capacity(self, capacity, accesses):
+        store = _fresh_store(cache_size=capacity)
+        keys = {}
+        for i in accesses:
+            if i not in keys:
+                keys[i] = store.put(np.full(4, float(i)))
+            got = store.get(keys[i])
+            assert got[0] == float(i)
+            assert len(store._cache) <= capacity
+        # eviction never corrupted the backing connector
+        for i, k in keys.items():
+            assert store.get(k, use_cache=False)[0] == float(i)
+
+    @given(
+        st.integers(1, 8),
+        st.lists(st.tuples(st.integers(0, 24), st.integers(0, 99)),
+                 min_size=1, max_size=80),
+    )
+    @settings(**SETTINGS)
+    def test_warm_cache_never_exceeds_capacity(self, capacity, ops):
+        warm = WarmCache(capacity)
+        shadow = {}
+        for key_i, value in ops:
+            key = ("method", "store", str(key_i))
+            got = warm.lookup(key)
+            if got is not WarmCache._MISS:
+                # a hit must return the last inserted value for the key
+                assert got == shadow[key]
+            else:
+                warm.insert(key, value)
+                shadow[key] = value
+            assert len(warm) <= capacity
+        assert warm.stats.hits + warm.stats.misses == len(ops)
+
+
+class TestSharedMemoryConnector:
+    @given(
+        st.sampled_from([np.float32, np.float64, np.int32]),
+        st.integers(1, 400),
+    )
+    @settings(max_examples=10, deadline=None)
+    def test_array_roundtrip_zero_copy(self, dtype, n):
+        conn = SharedMemoryConnector(prefix=f"t{uuid.uuid4().hex[:6]}")
+        try:
+            arr = np.arange(n, dtype=dtype)
+            conn.put("k", arr)
+            out = conn.get("k")
+            assert isinstance(out, np.ndarray)
+            assert out.dtype == arr.dtype and np.array_equal(out, arr)
+            assert out.base is not None  # a view over the shm buffer, not a copy
+        finally:
+            conn.close()
+
+    def test_pickle_fallback_and_evict(self):
+        conn = SharedMemoryConnector(prefix=f"t{uuid.uuid4().hex[:6]}")
+        try:
+            conn.put("k", {"a": [1, 2], "b": "text"})
+            assert conn.get("k") == {"a": [1, 2], "b": "text"}
+            assert conn.exists("k")
+            conn.evict("k")
+            assert not conn.exists("k")
+        finally:
+            conn.close()
+
+    def test_proxy_pickle_roundtrip_through_shm(self):
+        conn = SharedMemoryConnector(prefix=f"t{uuid.uuid4().hex[:6]}")
+        try:
+            store = Store(f"shm-{uuid.uuid4().hex[:8]}", conn)
+            arr = np.linspace(0, 1, 64)
+            p = pickle.loads(pickle.dumps(store.proxy(arr)))
+            assert np.allclose(np.asarray(p.resolve()), arr)
+        finally:
+            conn.close()

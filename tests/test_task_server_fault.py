@@ -139,6 +139,61 @@ class TestTaskServer:
         assert vals == [1, 2, 3]   # cache survives across invocations
         server.stop()
 
+    def test_timeout_fails_over_hung_task(self):
+        q = LocalColmenaQueues()
+        hang_once = threading.Event()
+        hang_once.set()
+
+        def f(x):
+            if hang_once.is_set():
+                hang_once.clear()
+                time.sleep(30)       # a hung 'first attempt'
+            return x
+
+        server = TaskServer(
+            q, {"f": f}, n_workers=2,
+            straggler=StragglerPolicy(enabled=False, check_interval_s=0.05),
+        ).start()
+        q.send_inputs(7, method="f",
+                      resources=ResourceRequest(timeout_s=0.3))
+        r = q.get_result(timeout=10)
+        assert r.success and r.value == 7   # retried after the timeout
+        assert server.metrics.tasks_retried >= 1
+        # the hung attempt's eventual completion must not double-send
+        assert q.get_result(timeout=0.5) is None
+        server.stop()
+
+    def test_timeout_exhausts_retries(self):
+        q = LocalColmenaQueues()
+        server = TaskServer(
+            q, {"f": lambda: sleepy(0, 10)}, n_workers=1,
+            retry=RetryPolicy(max_retries=0),
+            straggler=StragglerPolicy(enabled=False, check_interval_s=0.05),
+        ).start()
+        q.send_inputs(method="f", resources=ResourceRequest(timeout_s=0.2))
+        r = q.get_result(timeout=10)
+        assert not r.success and r.failure is FailureKind.TIMEOUT
+        server.stop()
+
+    def test_speculative_loser_not_delivered_twice(self):
+        q = LocalColmenaQueues()
+        inj = FailureInjector(slow_workers={0: 1.0})   # worker 0 straggles
+        server = TaskServer(
+            q, {"f": sleepy}, n_workers=2, injector=inj,
+            straggler=StragglerPolicy(enabled=True, factor=3.0, min_history=3,
+                                      check_interval_s=0.05),
+        ).start()
+        n = 8
+        for i in range(n):
+            q.send_inputs(i, method="f")
+        got = [q.get_result(timeout=20) for _ in range(n)]
+        assert all(r.success for r in got)
+        assert len({r.task_id for r in got}) == n
+        assert server.metrics.speculative_launched >= 1
+        # exactly one result per task: the twin that lost the race is dropped
+        assert q.get_result(timeout=1.2) is None
+        server.stop()
+
     def test_elastic_resize(self):
         pool = WorkerPool("default", 2)
         assert pool.n_workers == 2

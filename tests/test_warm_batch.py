@@ -1,0 +1,228 @@
+"""Warm-worker cache + batched dispatch: correctness and fault injection.
+
+Covers the warm-worker execution layer: per-worker sticky caches resolve
+shared proxied payloads once per worker (hits/misses in the event log),
+batched dispatch coalesces same-method tasks into one worker round-trip
+with correct per-task timing, and a worker dying mid-batch (exception or
+heartbeat loss) gets its whole batch retried cold on another worker with
+no lost or duplicated Results.
+"""
+
+import pickle
+import threading
+import time
+import uuid
+
+import numpy as np
+
+from repro.core import (
+    BatchPolicy,
+    InMemoryConnector,
+    LocalColmenaQueues,
+    RetryPolicy,
+    Store,
+    StragglerPolicy,
+    TaskServer,
+    WorkerDied,
+    WorkerPool,
+)
+from repro.observe import EventLog, MetricsAggregator, lifecycle_gaps
+
+
+def _clone(proxy):
+    """Fresh Proxy instance, as a cross-process control message carries."""
+    return pickle.loads(pickle.dumps(proxy))
+
+
+def _fresh_store(**kwargs) -> Store:
+    # cache_size=0 so only the warm-worker cache can short-circuit fetches
+    return Store(f"wb-{uuid.uuid4().hex[:12]}", InMemoryConnector(), **kwargs)
+
+
+class TestWarmCache:
+    def test_one_miss_then_hits_per_worker(self):
+        log = EventLog()
+        store = _fresh_store(cache_size=0)
+        queues = LocalColmenaQueues(proxystore=store, event_log=log)
+        ref = store.proxy(np.ones(64))
+        server = TaskServer(
+            queues, {"f": lambda m, i: float(np.sum(m)) + i},
+            pools={"default": WorkerPool("default", 1, warm_capacity=8)},
+            event_log=log,
+        ).start()
+        for i in range(6):
+            queues.send_inputs(_clone(ref), i, method="f")
+        results = [queues.get_result(timeout=10) for _ in range(6)]
+        server.stop()
+        assert all(r is not None and r.success for r in results)
+        assert sorted(r.value for r in results) == [64.0 + i for i in range(6)]
+
+        cache = MetricsAggregator(log).cache_stats()
+        assert cache["f"].misses == 1          # resolved once on the worker
+        assert cache["f"].hits == 5            # served warm thereafter
+        assert cache["total"].hit_rate > 0.8
+        assert store.metrics.gets <= 2         # fabric touched once (+prefetch)
+
+    def test_disabled_cache_emits_no_events(self):
+        log = EventLog()
+        store = _fresh_store(cache_size=0)
+        queues = LocalColmenaQueues(proxystore=store, event_log=log)
+        ref = store.proxy(np.ones(8))
+        server = TaskServer(
+            queues, {"f": lambda m: float(np.sum(m))},
+            pools={"default": WorkerPool("default", 1, warm_capacity=0)},
+            event_log=log,
+        ).start()
+        for _ in range(3):
+            queues.send_inputs(_clone(ref), method="f")
+        results = [queues.get_result(timeout=10) for _ in range(3)]
+        server.stop()
+        assert all(r.success for r in results)
+        total = MetricsAggregator(log).cache_stats()["total"]
+        assert total.hits == 0 and total.misses == 0
+
+
+class TestBatchedDispatch:
+    def test_batch_coalesces_with_correct_results(self):
+        log = EventLog()
+        queues = LocalColmenaQueues(event_log=log)
+        # enqueue before the server starts so one full batch forms
+        for i in range(12):
+            queues.send_inputs(i, method="sq")
+        server = TaskServer(
+            queues, {"sq": lambda x: x * x}, n_workers=2,
+            batching=BatchPolicy(max_batch=4, linger_s=0.05),
+            event_log=log,
+        ).start()
+        results = [queues.get_result(timeout=10) for _ in range(12)]
+        server.stop()
+        assert all(r is not None and r.success for r in results)
+        assert sorted(r.value for r in results) == sorted(i * i for i in range(12))
+        assert len({r.task_id for r in results}) == 12  # split back 1:1
+
+        batches = MetricsAggregator(log).batch_stats()["sq"]
+        assert batches.tasks == 12
+        assert batches.batches < 12            # real coalescing happened
+        assert batches.max_occupancy >= 2
+        assert not lifecycle_gaps(log)
+
+    def test_per_task_timing_within_batch(self):
+        queues = LocalColmenaQueues()
+        for i in range(3):
+            queues.send_inputs(i, method="nap")
+        server = TaskServer(
+            queues, {"nap": lambda i: time.sleep(0.02) or i},
+            pools={"default": WorkerPool("default", 1)},
+            batching=BatchPolicy(max_batch=3, linger_s=0.05),
+        ).start()
+        results = [queues.get_result(timeout=10) for _ in range(3)]
+        server.stop()
+        assert all(r.success for r in results)
+        spans = sorted(
+            (r.time.compute_started, r.time.compute_ended) for r in results
+        )
+        for start, end in spans:
+            assert end - start >= 0.02          # each task carries its own span
+        for (_, prev_end), (next_start, _) in zip(spans, spans[1:]):
+            assert next_start >= prev_end       # batch members ran back-to-back
+
+    def test_method_filter_limits_batching(self):
+        log = EventLog()
+        queues = LocalColmenaQueues(event_log=log)
+        for i in range(4):
+            queues.send_inputs(i, method="a")
+            queues.send_inputs(i, method="b")
+        server = TaskServer(
+            queues, {"a": lambda x: x, "b": lambda x: -x}, n_workers=2,
+            batching=BatchPolicy(max_batch=4, linger_s=0.05, methods=("a",)),
+            event_log=log,
+        ).start()
+        results = [queues.get_result(timeout=10) for _ in range(8)]
+        server.stop()
+        assert all(r.success for r in results)
+        stats = MetricsAggregator(log).batch_stats()
+        assert stats.get("a") is not None and stats["a"].tasks == 4
+        assert "b" not in stats                 # ineligible: never batched
+
+
+class TestMidBatchWorkerDeath:
+    def test_batch_retried_cold_no_lost_or_duplicated_results(self):
+        log = EventLog()
+        store = _fresh_store(cache_size=0)
+        queues = LocalColmenaQueues(proxystore=store, event_log=log)
+        ref = store.proxy(np.arange(8.0))
+        bomb_armed = threading.Event()
+        bomb_armed.set()
+
+        def f(m, i):
+            if i == 1 and bomb_armed.is_set():
+                bomb_armed.clear()             # only the first attempt dies
+                raise WorkerDied("injected mid-batch node loss")
+            return float(m[0]) + i
+
+        for i in range(4):                      # full batch forms pre-start
+            queues.send_inputs(_clone(ref), i, method="f")
+        server = TaskServer(
+            queues, {"f": f},
+            pools={"default": WorkerPool("default", 2, warm_capacity=8)},
+            batching=BatchPolicy(max_batch=4, linger_s=0.05),
+            retry=RetryPolicy(max_retries=2),
+            event_log=log,
+        ).start()
+        results = [queues.get_result(timeout=15) for _ in range(4)]
+        # no lost results ...
+        assert all(r is not None and r.success for r in results)
+        assert sorted(r.value for r in results) == [0.0, 1.0, 2.0, 3.0]
+        # ... and no duplicated ones
+        assert queues.get_result(timeout=0.3) is None
+        assert len({r.task_id for r in results}) == 4
+
+        # tasks 1 (the bomb), 2, 3 (mid-batch victims) were retried ...
+        assert server.metrics.tasks_retried == 3
+        # ... on a different worker than the one that died
+        dead_wid = next(
+            r.worker_id for r in results
+            if r.value == 0.0                   # task 0 completed pre-death
+        )
+        retried_events = [e for e in log.events() if e.stage == "retried"]
+        assert len(retried_events) == 3
+        retried_values = {1.0, 2.0, 3.0}
+        assert all(
+            r.worker_id != dead_wid for r in results if r.value in retried_values
+        )
+        # retries resolved the payload cold (fresh cache miss elsewhere):
+        # one miss on the dead worker, one on the retry worker
+        cache = MetricsAggregator(log).cache_stats()["f"]
+        assert cache.misses >= 2
+        assert not lifecycle_gaps(log)
+        server.stop()
+
+    def test_heartbeat_failover_drops_zombie_duplicates(self):
+        log = EventLog()
+        queues = LocalColmenaQueues(event_log=log)
+        pool = WorkerPool("default", 2)
+        for i in range(3):
+            queues.send_inputs(i, method="slow")
+        server = TaskServer(
+            queues, {"slow": lambda i: time.sleep(0.4) or i},
+            pools={"default": pool},
+            batching=BatchPolicy(max_batch=3, linger_s=0.05),
+            straggler=StragglerPolicy(enabled=False, check_interval_s=0.05),
+            heartbeat_timeout_s=0.2,
+        ).start()
+        deadline = time.time() + 5
+        while time.time() < deadline:           # wait for the batch to start
+            busy = [w for w in pool.worker_states() if w.busy]
+            if busy:
+                break
+            time.sleep(0.01)
+        assert busy
+        # node loss while holding a 3-task batch: the thread keeps running
+        # (a zombie), but all 3 tasks must fail over and be retried
+        pool.kill_worker(busy[0].worker_id)
+        results = [queues.get_result(timeout=15) for _ in range(3)]
+        assert all(r is not None and r.success for r in results)
+        assert sorted(r.value for r in results) == [0, 1, 2]
+        # the zombie's late completions were dropped, not double-sent
+        assert queues.get_result(timeout=0.6) is None
+        server.stop()
