@@ -11,7 +11,9 @@ Figure map:
   weak_scaling   -> Fig. 3 (inference rate vs workers, fabric vs control)
   utilization    -> Figs. 2/5 (busy fractions, stateful-cache ablation)
   multisite      -> Fig. 4 (local vs federated backends)
-  steering_gain  -> '+20% high-performers' claim
+  steering_gain  -> '+20% high-performers' claim: scenario x acquisition
+                    policy sweep over repro.surrogate (random vs greedy/
+                    UCB/EI/Thompson, steered >= 1.2x random gate)
   overhead       -> warm-worker cache x batched dispatch (event-log
                     per-task overhead, cache hit-rate, batch occupancy)
   kernel_bench   -> kernels/ (XLA timings + TPU roofline estimates)
@@ -45,7 +47,10 @@ def main() -> None:
         "kernel_bench": kernel_bench.main,
     }
     if args.smoke:
+        # steering_gain's smoke form is the CI quadratic gate: steered
+        # must find >= the random baseline's high-performers (seeded).
         suites = {name: suites[name] for name in ("overhead", "utilization")}
+        suites["steering_gain"] = lambda quick: steering_gain.main_ci_gate()
     if args.only:
         suites = {args.only: suites[args.only]}
 

@@ -1,11 +1,15 @@
 """DeepDriveMD-style steering of a molecular-dynamics ensemble (Fig. 6).
 
 An ensemble of synthetic MD trajectories (overdamped Langevin walkers on
-a double-well landscape) runs as continuous chunked tasks. A JAX
-autoencoder-style outlier scorer (random-projection reconstruction
-error) is retrained asynchronously on the accumulating trajectory frames;
-walkers judged stuck in already-sampled basins are RESTARTED from the
-most novel frames — the paper's rare-event-sampling loop.
+a double-well landscape) runs as continuous chunked tasks. The novelty
+model is a ``repro.surrogate.DeepEnsemble`` trained asynchronously to
+predict the potential energy of visited frames: where the walkers have
+sampled densely the members agree, and the *epistemic disagreement*
+(prediction std) is high exactly in under-sampled regions — so novelty
+scoring and restart-bank selection run server-side on the warm-started
+ensemble, and walkers judged stuck in already-sampled basins are
+RESTARTED from the most novel frames — the paper's rare-event-sampling
+loop.
 
 Success metrics: state-space coverage (fraction of the reaction
 coordinate explored — what outlier-driven sampling directly targets) and
@@ -17,8 +21,6 @@ Run:  PYTHONPATH=src python examples/md_steering.py
 import time
 from typing import Dict, List
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (
@@ -33,10 +35,15 @@ from repro.core import (
     stateful_task,
 )
 from repro.observe import EventLog, build_report, render_text, run_pool_workload
+from repro.surrogate import DeepEnsemble, EnsembleConfig, warmup_jit
 
 DIM = 2
 CHUNK = 40          # MD steps per task
 BETA = 8.0          # inverse temperature (deep rare-event regime)
+
+# Novelty-scorer ensemble: small + fixed pad so every retrain reuses one
+# compiled fit/predict shape (see repro.surrogate.ensemble).
+SCORER_CFG = EnsembleConfig(n_members=3, hidden=(16, 16), epochs=20, pad_to=512)
 
 
 def _force(x):
@@ -58,48 +65,44 @@ def md_chunk(x0: np.ndarray, seed: int) -> Dict:
     return {"traj": traj, "x_final": x}
 
 
-@stateful_task
-def train_scorer(frames: np.ndarray, registry=None) -> Dict:
-    """Density-based novelty model: keep a reference subsample of visited
-    frames; a frame is novel if it sits in a low-density (under-sampled)
-    region — for the double well, that is the transition barrier."""
-    X = np.asarray(frames)
-    rng = np.random.default_rng(registry.get("seed", 0))
-    registry["seed"] = registry.get("seed", 0) + 1
-    ref = X[rng.choice(len(X), size=min(512, len(X)), replace=False)]
-    # cached jit: kNN mean distance to the reference set
-    fn = registry.get("knn_fn")
-    if fn is None:
-        def knn(ref, q):
-            d = jnp.linalg.norm(q[:, None, :] - ref[None, :, :], axis=-1)
-            k = jnp.minimum(16, d.shape[1])
-            return jnp.sort(d, axis=1)[:, :16].mean(axis=1)
-        fn = registry["knn_fn"] = jax.jit(knn)
-    registry["ref"] = ref
-    return {"ref": ref}
-
-
-def novelty(model, frames: np.ndarray) -> np.ndarray:
-    ref = np.asarray(model["ref"])
-    q = np.asarray(frames)
-    d = np.linalg.norm(q[:, None, :] - ref[None, :, :], axis=-1)
-    k = min(16, d.shape[1])
-    return np.sort(d, axis=1)[:, :k].mean(axis=1)
-
-
 def _potential(frames: np.ndarray) -> np.ndarray:
     x0, x1 = frames[:, 0], frames[:, 1]
     return (x0 ** 2 - 1) ** 2 + 0.5 * x1 ** 2
 
 
-def restart_scores(model, frames: np.ndarray) -> np.ndarray:
-    """Novelty tempered by energy: pure density-novelty favors high-energy
+@stateful_task
+def train_scorer(frames: np.ndarray, registry=None) -> Dict:
+    """Epistemic-novelty model: a warm-started ``DeepEnsemble`` learns to
+    predict the potential at visited frames; member disagreement (the
+    prediction std) is high precisely in under-sampled regions. Restart
+    scores temper novelty by energy: pure novelty favors high-energy
     tails the walker immediately relaxes out of; the paper notes that
     'domain-specific biophysical calculations are still needed to guide
     AI-driven sampling properly' — here the potential plays that role,
-    pointing restarts at under-sampled low-barrier states (the saddle)."""
-    nov = novelty(model, frames)
-    return np.where(_potential(frames) < 1.2, nov, -np.inf)
+    pointing restarts at under-sampled low-barrier states (the saddle).
+    Novelty is scored on a fixed low-energy grid over the reaction
+    domain, not on the visited frames themselves (those are in-
+    distribution by construction, so members agree there); grid states
+    the walkers never sampled are where the disagreement lives. The
+    ensemble lives in the worker registry, so each retrain is a warm
+    continuation; the task returns the restart bank, not the model."""
+    X = np.asarray(frames)
+    # Strided subsample across the whole history (ceil stride so the
+    # newest frames are included): keeps every retrain at one compiled
+    # shape (SCORER_CFG.pad_to) and ms-scale on CPU.
+    X = X[:: max(1, -(-len(X) // 512))]
+    ens = registry.get("ensemble")
+    if ens is None:
+        ens = registry["ensemble"] = DeepEnsemble(
+            DIM, SCORER_CFG, seed=registry.get("seed", 0))
+        g0, g1 = np.meshgrid(np.linspace(-1.8, 1.8, 32), np.linspace(-1.2, 1.2, 16))
+        registry["grid"] = np.stack([g0.ravel(), g1.ravel()], axis=1)
+    metrics = ens.fit(X, _potential(X), warm_start=True)
+    grid = registry["grid"]
+    _, std = ens.predict(grid)
+    scores = np.where(_potential(grid) < 1.2, std, -np.inf)
+    top = np.argsort(-scores)[:16]
+    return {"bank": grid[top], "rmse": metrics["rmse"], "fit_count": ens.fit_count}
 
 
 class MDThinker(BaseThinker):
@@ -136,12 +139,13 @@ class MDThinker(BaseThinker):
         if result.method == "train_scorer":
             if result.success:
                 self.model = result.value
-                # rank accumulated frames by novelty; refresh restart bank
-                if self.frames:
-                    allf = np.concatenate(self.frames)[-2000:]
-                    scores = restart_scores(self.model, allf)
-                    top = np.argsort(-scores)[:16]
-                    self._novel_bank = [allf[i] for i in top]
+                # the restart bank was ranked server-side on the warm
+                # ensemble's epistemic disagreement
+                self._novel_bank = list(result.value["bank"])
+                log = getattr(self.queues, "event_log", None)
+                if log is not None:
+                    log.surrogate_event("retrain", value=result.value["rmse"],
+                                        round=result.value["fit_count"])
             return
         if not result.success:
             self._submit(result.task_info["walker"])
@@ -229,6 +233,9 @@ def reallocation_demo(n_slots: int = 6, n_md: int = 60, n_ml: int = 6) -> None:
 
 
 def main():
+    # Pre-compile the scorer's fit/predict graphs so the first in-run
+    # retrain returns in ms instead of stalling on XLA.
+    warmup_jit(DIM, SCORER_CFG, predict_rows=512)
     base = run(steer=False)
     steered = run(steer=True)
     for r in (base, steered):

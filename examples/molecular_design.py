@@ -1,166 +1,98 @@
-"""Molecular design campaign — the paper's flagship application (Fig. 2).
+"""Molecular design campaign — the paper's flagship application (Fig. 2),
+now steered by the ``repro.surrogate`` subsystem.
 
-Three task types share a worker fleet:
-  * simulate — evaluates a candidate 'molecule' (synthetic landscape),
-  * train    — refits a JAX ridge surrogate on all results so far,
-  * infer    — scores a large candidate pool with the surrogate
-               (inputs shipped once through the ProxyStore fabric).
+A synthetic molecular property landscape is searched under a fixed task
+budget. The ``ActiveLearningThinker`` owns the paper's online loop: as
+simulations land, it shifts worker slots to the training pool, retrains
+a jit-compiled deep-ensemble surrogate (warm-started from the previous
+round), re-ranks the candidate queue with an acquisition policy, and
+shifts the slots back — with every retrain, re-rank, and reallocation
+recorded in the ``repro.observe`` event log.
 
-The Thinker reallocates resources between simulation and ML when
-retraining triggers, steers further sampling toward surrogate optima,
-and reports the outcome vs. an unsteered random baseline (the paper's
-'+20% high-performing molecules' claim).
+The campaign still runs through the batched dispatch path: simulate
+tasks are coalesced into shared worker round-trips, so the run report
+shows steering telemetry (retrain cadence, prediction error,
+acquisition regret) next to dispatch telemetry (batch occupancy) from
+one event log. (The proxystore fabric and warm-worker caches are
+exercised by benchmarks/overhead.py — this campaign's payloads are
+8-float candidates, far below any proxy threshold.)
 
-The campaign runs on the warm-worker data fabric: simulation tasks are
-coalesced by batched dispatch, inference inputs stay warm in per-worker
-caches, and the run report includes cache hit-rate and batch occupancy
-from the event log. ``__main__`` runs the warm+batched and cold+unbatched
-configurations back to back so both dispatch paths are exercised.
+``__main__`` compares an unsteered random baseline against a steered
+policy on the same budget — the paper's '+20% high-performing
+molecules' claim — then prints the steered run's full report.
 
 Run:  PYTHONPATH=src python examples/molecular_design.py
 """
 
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (
     BatchPolicy,
-    BatchRetrainThinker,
-    InMemoryConnector,
     LocalColmenaQueues,
-    ResourceRequest,
-    Store,
     TaskServer,
     WorkerPool,
-    stateful_task,
 )
-from repro.observe import EventLog, MetricsAggregator
+from repro.observe import EventLog, MetricsAggregator, build_report, render_text
+from repro.surrogate import (
+    ActiveLearningThinker,
+    DeepEnsemble,
+    EnsembleConfig,
+    make_policy,
+    SyntheticScenario,
+    warmup_jit,
+)
 
 DIM = 8
-THRESH = -1.0
+N_CANDIDATES = 1024
+BUDGET = 96
 
 
-def simulate(x: np.ndarray) -> float:
-    time.sleep(0.01)
-    x = np.asarray(x)
-    return float(-np.sum((x - 0.35) ** 2) + 0.05 * np.sin(4 * x).sum())
+class MolecularLandscape(SyntheticScenario):
+    """Stand-in for the quantum-chemistry property: a smooth basin with
+    sinusoidal structure (the shape the paper's surrogate learns)."""
+
+    name = "molecular"
+
+    def true_batch(self, X: np.ndarray) -> np.ndarray:
+        return -((X - 0.35) ** 2).sum(axis=1) + 0.05 * np.sin(4 * X).sum(axis=1)
+
+    def evaluate(self, x: np.ndarray, seed: int = 0) -> float:
+        time.sleep(0.008)  # the "expensive" simulation
+        return self.true_value(x)
 
 
-def _features(X):
-    """Quadratic features: the surrogate must capture curvature."""
-    return jnp.concatenate([X, X ** 2, jnp.ones((X.shape[0], 1))], axis=1)
-
-
-def train(X, y) -> np.ndarray:
-    X = jnp.asarray(np.asarray(X))
-    y = jnp.asarray(np.asarray(y))
-    Xb = _features(X)
-    w = jnp.linalg.solve(Xb.T @ Xb + 1e-3 * jnp.eye(Xb.shape[1]), Xb.T @ y)
-    return np.asarray(w)
-
-
-@stateful_task
-def infer(w, pool, registry=None):
-    """Score a candidate pool; the pool rides the fabric and is cached."""
-    fn = registry.get("score_fn")
-    if fn is None:
-        fn = registry["score_fn"] = jax.jit(lambda w, X: _features(X) @ w)
-    scores = fn(jnp.asarray(np.asarray(w)), jnp.asarray(np.asarray(pool)))
-    return np.asarray(scores)
-
-
-class MolecularDesign(BatchRetrainThinker):
-    def __init__(self, queues, store, candidate_pool, **kw):
-        super().__init__(queues, **kw)
-        self.rng = np.random.default_rng(0)
-        self.store = store
-        # bulk ahead-of-time transfer: pool proxied ONCE, reused by every
-        # inference task (the paper's manual-proxy optimization)
-        self.pool_ref = store.proxy(candidate_pool)
-        self.pool = candidate_pool
-        self.w = None
-        self.ranked = None
-
-    def simulate_args(self):
-        r = self.rng.random()
-        if self.database and r < 0.6:
-            # exploit: refine around the best simulations so far
-            top = sorted(self.database, key=lambda rr: -rr.value)[:8]
-            pick = top[self.rng.integers(len(top))]
-            x = np.clip(np.asarray(pick.args[0]) + self.rng.normal(0, 0.15, DIM), -1, 1)
-        elif self.ranked is not None and r < 0.85:
-            # surrogate-ranked candidates from the proxied pool
-            idx = self.ranked[self.rng.integers(0, 32)]
-            x = np.clip(self.pool[idx] + self.rng.normal(0, 0.1, DIM), -1, 1)
-        else:
-            x = self.rng.uniform(-1, 1, DIM)
-        return (x,)
-
-    def make_train_task(self):
-        X = np.stack([np.asarray(r.args[0]) for r in self.database])
-        y = np.asarray([r.value for r in self.database])
-        return (X, y), {}
-
-    def on_train(self, result):
-        if not result.success:
-            return
-        self.w = np.asarray(result.value)
-        # act on new model: launch inference over the full candidate pool
-        self.queues.send_inputs(
-            self.w, self.pool_ref, method="infer", topic="train",
-            resources=ResourceRequest(pool="ml"),
-        )
-
-    from repro.core import result_processor as _rp
-
-    @_rp(topic="train")
-    def receive_training(self, result):  # route infer results too
-        if result.method == "infer":
-            if result.success:
-                self.ranked = np.argsort(-np.asarray(result.value))
-            return
-        # train results: base-class bookkeeping
-        with self._state_lock:
-            self._ml_inflight = max(0, self._ml_inflight - 1)
-        self.train_rounds += 1
-        self.on_train(result)
-        self._maybe_finish()
-
-
-def main(budget: int = 120, warm: bool = True, batch: bool = True):
-    tag = f"{'warm' if warm else 'cold'}+{'batched' if batch else 'unbatched'}"
-    rng = np.random.default_rng(1)
-    candidate_pool = rng.uniform(-1, 1, (4096, DIM))
-
-    # Warm up jax op compilation outside the campaign so the first retrain
-    # (and cross-config comparisons under __main__) aren't dominated by it.
-    w0 = train(np.zeros((4, DIM)), np.zeros(4))
-    infer(w0, np.zeros((4, DIM)), registry={})
+def run_campaign(policy_name: str, budget: int = BUDGET, seed: int = 0) -> dict:
+    scenario = MolecularLandscape(dim=DIM)
+    rng = np.random.default_rng(seed)
+    candidates = scenario.sample(rng, N_CANDIDATES)
 
     log = EventLog()
-    store = Store(f"moldesign-{tag}", InMemoryConnector())
-    queues = LocalColmenaQueues(topics=["simulate", "train"],
-                                proxystore=store, proxy_threshold=10_000,
-                                event_log=log)
-    warm_cap = 32 if warm else 0
-    pools = {"simulate": WorkerPool("simulate", 4, warm_capacity=warm_cap),
-             "ml": WorkerPool("ml", 1, warm_capacity=warm_cap),
-             "default": WorkerPool("default", 1, warm_capacity=warm_cap)}
-    thinker = MolecularDesign(
-        queues, store, candidate_pool,
-        n_slots=4, retrain_after=20, max_results=budget, ml_slots=1,
+    queues = LocalColmenaQueues(topics=["simulate", "train"], event_log=log)
+    pools = {"simulate": WorkerPool("simulate", 4),
+             "ml": WorkerPool("ml", 1),
+             "default": WorkerPool("default", 1)}
+    cfg = EnsembleConfig(pad_to=128)
+    thinker = ActiveLearningThinker(
+        queues,
+        ensemble=DeepEnsemble(DIM, cfg, seed=seed),
+        policy=make_policy(policy_name),
+        candidates=candidates,
+        n_slots=4,
+        retrain_after=16,
+        max_results=budget,
+        ml_slots=1,
+        optimum_value=scenario.optimum_value,
+        seed=seed,
     )
+    thinker.rec.event_log = log
     server = TaskServer(
-        queues, {"simulate": simulate, "train": train, "infer": infer},
+        queues, {"simulate": scenario.evaluate},
         pools=pools,
-        # max_batch=2: simulations are compute-bound (10 ms each), so deep
-        # batches would serialize them on one worker; a shallow batch still
-        # halves the dispatch round-trips without costing parallelism.
-        batching=BatchPolicy(max_batch=2, linger_s=0.001,
-                             methods=("simulate", "infer")) if batch else None,
+        # Shallow batches: simulations are compute-bound, deep batches
+        # would serialize them on one worker.
+        batching=BatchPolicy(max_batch=2, linger_s=0.001, methods=("simulate",)),
         event_log=log,
     ).start()
     t0 = time.monotonic()
@@ -168,31 +100,35 @@ def main(budget: int = 120, warm: bool = True, batch: bool = True):
     wall = time.monotonic() - t0
     server.stop()
 
-    steered_hits = sum(1 for r in thinker.database if r.value > THRESH)
-    base_hits = sum(1 for _ in range(budget)
-                    if simulate(rng.uniform(-1, 1, DIM)) > THRESH)
+    X, y = thinker.observed
+    X, y = X[:budget], y[:budget]
+    hits = int(sum(scenario.true_value(x) > scenario.threshold for x in X))
     agg = MetricsAggregator(log)
-    cache = agg.cache_stats()["total"]
     batches = agg.batch_stats()["total"]
-    print(f"[{tag}] campaign: {len(thinker.database)} simulations, "
-          f"{thinker.train_rounds} retrains in {wall:.1f}s")
-    print(f"[{tag}] high-performing molecules: steered={steered_hits} random={base_hits} "
-          f"({(steered_hits - base_hits) / max(base_hits, 1) * 100:+.0f}%)")
-    print(f"[{tag}] fabric: {store.metrics.fabric_bytes_out/1e6:.2f} MB moved, "
-          f"warm-cache hit rate {cache.hit_rate:.2f} "
-          f"({cache.hits} hits / {cache.misses} misses), "
-          f"mean batch occupancy {batches.mean_occupancy:.1f} "
-          f"over {batches.batches} batches")
-    return {"wall_s": wall, "cache_hit_rate": cache.hit_rate,
-            "mean_batch_occupancy": batches.mean_occupancy,
-            "steered_hits": steered_hits, "base_hits": base_hits}
+    return {
+        "policy": policy_name, "hits": hits,
+        "best": float(y.max()) if len(y) else float("-inf"),
+        "retrains": thinker.train_rounds, "wall_s": wall,
+        "mean_batch_occupancy": batches.mean_occupancy,
+        "report": build_report(log, slots_by_pool={"simulate": 4, "ml": 1}),
+    }
+
+
+def main():
+    warmup_jit(DIM, EnsembleConfig(pad_to=128), predict_rows=N_CANDIDATES)
+    random = run_campaign("random")
+    steered = run_campaign("ucb")
+    for r in (random, steered):
+        print(f"[{r['policy']:>6}] {r['hits']} high-performing molecules, "
+              f"best {r['best']:.3f}, {r['retrains']} retrains, "
+              f"batch occupancy {r['mean_batch_occupancy']:.1f} "
+              f"({r['wall_s']:.1f}s)")
+    gain = (steered["hits"] - random["hits"]) / max(random["hits"], 1) * 100
+    print(f"steering gain: {gain:+.0f}% high-performers within the same budget")
+    print("\n--- steered-run telemetry (event log) ---")
+    print(render_text(steered["report"]))
+    return random, steered
 
 
 if __name__ == "__main__":
-    fast = main(warm=True, batch=True)
-    slow = main(warm=False, batch=False)
-    print(f"comparison: warm+batched {fast['wall_s']:.1f}s "
-          f"(hit rate {fast['cache_hit_rate']:.2f}, "
-          f"occupancy {fast['mean_batch_occupancy']:.1f}) vs "
-          f"cold+unbatched {slow['wall_s']:.1f}s "
-          f"(dispatch-path speedups are measured in benchmarks/overhead.py)")
+    main()

@@ -47,10 +47,12 @@ from .task_server import (
 from .thinker import (
     BaseThinker,
     ResourceCounter,
+    WakeEvent,
     agent,
     event_responder,
     result_processor,
     task_submitter,
+    wait_event,
 )
 from .steering import BatchRetrainThinker, ConstantInflightThinker, PriorityQueueThinker
 from .campaign import Campaign, CampaignReport
@@ -97,6 +99,8 @@ __all__ = [
     "WarmCacheStats",
     "task_submitter",
     "TaskServer",
+    "WakeEvent",
+    "wait_event",
     "TimingInfo",
     "Timestamps",
     "WorkerDied",

@@ -102,8 +102,11 @@ class PriorityQueueThinker(BaseThinker):
         self._tie = itertools.count()
         # Condition instead of a bare lock: the submitter parks on it while
         # the heap is empty (holding its already-acquired slot) and wakes
-        # on push() / shutdown — no release();sleep() slot-thrash.
+        # on push() / shutdown — no release();sleep() slot-thrash. The
+        # done WakeEvent notifies it too, so *any* done-setter (including
+        # run(timeout=...)) wakes the parked submitter immediately.
         self._work_cond = threading.Condition()
+        self.done.watch(self._work_cond)
         self._completed = 0
         self.results: List[Result] = []
 
@@ -123,11 +126,10 @@ class PriorityQueueThinker(BaseThinker):
     def submit_next(self) -> None:
         item = None
         with self._work_cond:
-            # The timeout only bounds shutdown latency for done-setters
-            # that cannot notify (e.g. run(timeout=...)); arriving work
-            # wakes the submitter immediately via push().
+            # Pure condition sleep: woken by push() (arriving work) or by
+            # the done WakeEvent (watched in __init__) — no poll timeout.
             while not self._heap and not self.done.is_set():
-                self._work_cond.wait(timeout=0.2)
+                self._work_cond.wait()
             if self._heap:
                 item = heapq.heappop(self._heap)
         if item is None:  # shutting down with an empty heap

@@ -35,7 +35,81 @@ from .result import Result
 
 logger = logging.getLogger("repro.thinker")
 
-_POLL_S = 0.02  # agent wakeup granularity while waiting on queues/events
+# Fallback poll granularity, used only when a waiter is given a plain
+# ``threading.Event`` it cannot subscribe to. Thinker-internal waits use
+# ``WakeEvent`` condition wakeups and burn no CPU while idle.
+_POLL_S = 0.02
+
+# Result-processor pops block inside ``queue.get`` (an OS-level wait, not
+# a busy-poll); this timeout only bounds how long shutdown can lag a
+# ``done.set()`` that cannot interrupt the blocking pop.
+_GETTER_TIMEOUT_S = 0.2
+
+
+# --------------------------------------------------------------------------
+# Wakeups
+# --------------------------------------------------------------------------
+
+
+class WakeEvent(threading.Event):
+    """A ``threading.Event`` other waits can subscribe to.
+
+    ``set()`` additionally notifies every watched ``Condition``, so a
+    thread blocked on a *different* primitive (e.g. ``ResourceCounter``'s
+    condition, a work heap) wakes the moment the event fires instead of
+    polling for it. This is what lets idle agents park without a
+    poll-granularity timeout.
+    """
+
+    def __init__(self) -> None:
+        super().__init__()
+        self._watch_lock = threading.Lock()
+        self._watched: List[threading.Condition] = []
+
+    def watch(self, cond: threading.Condition) -> None:
+        """Have ``set()`` notify ``cond``. Call before checking
+        ``is_set`` so a concurrent ``set()`` is never missed."""
+        with self._watch_lock:
+            self._watched.append(cond)
+
+    def unwatch(self, cond: threading.Condition) -> None:
+        with self._watch_lock:
+            try:
+                self._watched.remove(cond)
+            except ValueError:
+                pass
+
+    def set(self) -> None:  # noqa: A003 - mirrors threading.Event API
+        super().set()
+        with self._watch_lock:
+            watched = list(self._watched)
+        for cond in watched:
+            with cond:
+                cond.notify_all()
+
+
+def wait_event(ev: threading.Event, done: threading.Event) -> bool:
+    """Block until ``ev`` or ``done`` is set; returns ``ev.is_set()``.
+
+    When both are ``WakeEvent``s the wait is a pure condition sleep (no
+    CPU while idle); plain ``Event``s fall back to ``_POLL_S`` polling.
+    """
+    if not (isinstance(ev, WakeEvent) and isinstance(done, WakeEvent)):
+        while not done.is_set():
+            if ev.wait(timeout=_POLL_S):
+                return True
+        return ev.is_set()
+    cond = threading.Condition()
+    ev.watch(cond)
+    done.watch(cond)
+    try:
+        with cond:
+            while not ev.is_set() and not done.is_set():
+                cond.wait()
+    finally:
+        ev.unwatch(cond)
+        done.unwatch(cond)
+    return ev.is_set()
 
 
 # --------------------------------------------------------------------------
@@ -141,18 +215,30 @@ class ResourceCounter:
         stop_event: Optional[threading.Event] = None,
     ) -> bool:
         deadline = None if timeout is None else time.monotonic() + timeout
-        with self._cond:
-            while self._pools.get(pool, 0) < n:
-                if stop_event is not None and stop_event.is_set():
-                    return False
-                remaining = _POLL_S
-                if deadline is not None:
-                    remaining = min(remaining, deadline - time.monotonic())
-                    if remaining <= 0:
+        # A WakeEvent stop_event notifies our condition on set(), so the
+        # wait needs no poll granularity; a plain Event (that cannot be
+        # subscribed to) forces the _POLL_S fallback.
+        subscribed = isinstance(stop_event, WakeEvent)
+        if subscribed:
+            stop_event.watch(self._cond)
+        try:
+            with self._cond:
+                while self._pools.get(pool, 0) < n:
+                    if stop_event is not None and stop_event.is_set():
                         return False
-                self._cond.wait(remaining)
-            self._pools[pool] -= n
-            return True
+                    remaining = None
+                    if deadline is not None:
+                        remaining = deadline - time.monotonic()
+                        if remaining <= 0:
+                            return False
+                    if stop_event is not None and not subscribed:
+                        remaining = _POLL_S if remaining is None else min(remaining, _POLL_S)
+                    self._cond.wait(remaining)
+                self._pools[pool] -= n
+                return True
+        finally:
+            if subscribed:
+                stop_event.unwatch(self._cond)
 
     def release(self, pool: str, n: int = 1) -> None:
         with self._cond:
@@ -252,7 +338,9 @@ class BaseThinker:
     ) -> None:
         self.queues = queues
         self.rec = resource_counter or ResourceCounter(1)
-        self.done = threading.Event()
+        # WakeEvents so waits on resources/heaps/named-events wake on
+        # set() instead of polling (see wait_event/ResourceCounter.acquire).
+        self.done = WakeEvent()
         self.daemon = daemon
         self.logger = logging.getLogger(f"repro.thinker.{type(self).__name__}")
         self._threads: List[threading.Thread] = []
@@ -263,7 +351,7 @@ class BaseThinker:
     def event(self, name: str) -> threading.Event:
         ev = self._events.get(name)
         if ev is None:
-            ev = self._events[name] = threading.Event()
+            ev = self._events[name] = WakeEvent()
         return ev
 
     def set_event(self, name: str) -> None:
@@ -297,9 +385,9 @@ class BaseThinker:
     def _run_result_processor(self, fn: Callable) -> None:
         opts = fn._colmena_opts
         getter = (
-            (lambda: self.queues.get_result(topic=opts["topic"], timeout=_POLL_S))
+            (lambda: self.queues.get_result(topic=opts["topic"], timeout=_GETTER_TIMEOUT_S))
             if opts["on"] == "result"
-            else (lambda: self.queues.get_completion(topic=opts["topic"], timeout=_POLL_S))
+            else (lambda: self.queues.get_completion(topic=opts["topic"], timeout=_GETTER_TIMEOUT_S))
         )
         try:
             while not self.done.is_set():
@@ -324,7 +412,7 @@ class BaseThinker:
         realloc = opts["reallocate"]
         try:
             while not self.done.is_set():
-                if not ev.wait(timeout=_POLL_S):
+                if not wait_event(ev, self.done):  # woken by set_event()/done
                     continue
                 if realloc:
                     self.rec.reallocate(realloc["src"], realloc["dst"], realloc["n"], stop_event=self.done)
@@ -344,7 +432,9 @@ class BaseThinker:
         opts = fn._colmena_opts
         try:
             while not self.done.is_set():
-                ok = self.rec.acquire(opts["task_type"], opts["n_slots"], timeout=_POLL_S, stop_event=self.done)
+                # Blocks on the resource condition until slots free or
+                # done is set (which wakes the wait) — no poll timeout.
+                ok = self.rec.acquire(opts["task_type"], opts["n_slots"], stop_event=self.done)
                 if not ok:
                     continue
                 if self.done.is_set():

@@ -27,8 +27,12 @@ sink path is given. Fields:
              JSONL sink is relative to log creation)
 ``kind``     ``task`` (lifecycle stage), ``gauge`` (named scalar sample,
              e.g. ``slots`` or ``batch_occupancy``), ``cache``
-             (warm-worker cache ``hit``/``miss``), or ``realloc``
-             (slot move)
+             (warm-worker cache ``hit``/``miss``), ``realloc``
+             (slot move), or ``surrogate`` (model lifecycle:
+             ``retrain`` with value=rmse, ``rerank`` with
+             value=acquisition regret). The kind set is OPEN:
+             consumers must tolerate (count, not crash on) kinds they
+             do not model — see ``MetricsAggregator.unknown_kinds``
 ``stage``    lifecycle stage for tasks — in causal order: ``submitted``,
              ``queued``, ``picked_up``, ``dispatched``, ``running``,
              ``completed``/``failed``, ``result_received``,

@@ -148,6 +148,18 @@ class EventLog:
                   value=float(n), info={"src": src, "dst": dst, "n": n, **info})
         )
 
+    def surrogate_event(self, stage: str, value: Optional[float] = None, **info: Any) -> Event:
+        """Record a surrogate-model lifecycle observation (``kind=
+        "surrogate"``): ``retrain`` (value = training rmse; ``info``
+        carries round/duration/n) and ``rerank`` (value = acquisition
+        regret; ``info`` carries the policy and batch size). Consumers
+        that predate this kind ignore it — reports must tolerate
+        unknown kinds rather than assume a closed set."""
+        return self.emit(
+            Event(t=self._clock(), kind="surrogate", stage=stage,
+                  value=None if value is None else float(value), info=info)
+        )
+
     # ------------------------------------------------------------- consumers
     def subscribe(self, fn: Callable[[Event], None], replay: bool = True) -> None:
         """Register a streaming consumer; with ``replay`` it first receives

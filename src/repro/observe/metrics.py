@@ -191,6 +191,11 @@ class MetricsAggregator:
         self.t_first: Optional[float] = None
         self.t_last: Optional[float] = None
         self.reallocations: List[Event] = []
+        self.surrogate_events: List[Event] = []
+        # Forward-compat: kinds this aggregator does not understand are
+        # counted, never dropped silently or crashed on — newer emitters
+        # may share a log with older consumers.
+        self.unknown_kinds: Dict[str, int] = {}
         if log is not None:
             log.subscribe(self.observe, replay=True)
 
@@ -227,7 +232,13 @@ class MetricsAggregator:
             if ev.kind == "realloc":
                 self.reallocations.append(ev)
                 return
-            if ev.kind != "task" or ev.task_id is None:
+            if ev.kind == "surrogate":
+                self.surrogate_events.append(ev)
+                return
+            if ev.kind != "task":
+                self.unknown_kinds[ev.kind] = self.unknown_kinds.get(ev.kind, 0) + 1
+                return
+            if ev.task_id is None:
                 return
 
             tid, stage = ev.task_id, ev.stage
@@ -352,6 +363,29 @@ class MetricsAggregator:
             total.max_occupancy = max(total.max_occupancy, b.max_occupancy)
         out["total"] = total
         return out
+
+    def surrogate_stats(self) -> Dict[str, object]:
+        """Summary of surrogate lifecycle events: retrain count/cadence,
+        the prediction-error (rmse) trajectory, and the acquisition-regret
+        trajectory. Empty-ish dict when no surrogate ran."""
+        with self._lock:
+            evs = list(self.surrogate_events)
+        retrains = [ev for ev in evs if ev.stage == "retrain"]
+        reranks = [ev for ev in evs if ev.stage == "rerank"]
+        ts = [ev.t for ev in retrains]
+        cadence = (
+            [round(b - a, 6) for a, b in zip(ts, ts[1:])] if len(ts) > 1 else []
+        )
+        return {
+            "retrains": len(retrains),
+            "retrain_cadence_s": cadence,
+            "rmse": [ev.value for ev in retrains if ev.value is not None],
+            "regret": [ev.value for ev in reranks if ev.value is not None],
+            "policy": next(
+                (ev.info.get("policy") for ev in reversed(reranks) if ev.info.get("policy")),
+                None,
+            ),
+        }
 
     def backlog(self, pool: str) -> int:
         with self._lock:

@@ -27,9 +27,11 @@ def build_report(
     events = log.events()
     agg = MetricsAggregator()
     counts: Dict[str, int] = {}
+    kinds: Dict[str, int] = {}
     by_task: Dict[str, list] = {}
     for ev in events:
         agg.observe(ev)
+        kinds[ev.kind] = kinds.get(ev.kind, 0) + 1
         if ev.kind == "task":
             counts[ev.stage] = counts.get(ev.stage, 0) + 1
             if ev.task_id is not None:
@@ -52,9 +54,10 @@ def build_report(
     gaps = lifecycle_gaps(by_task)
     ooo = lifecycle_order_violations(by_task)
 
-    return {
+    report = {
         "makespan_s": round(agg.makespan(), 6),
         "events": len(events),
+        "event_kinds": kinds,
         "stage_counts": counts,
         "pools": pools,
         "utilization": {k: round(v, 4) for k, v in util.items()},
@@ -76,44 +79,76 @@ def build_report(
             "order_violations": ooo,
         },
     }
+    if agg.surrogate_events:
+        report["surrogate"] = agg.surrogate_stats()
+    if agg.unknown_kinds:
+        # Forward-compat: kinds this build of observe does not model are
+        # surfaced (counted under event_kinds too) rather than dropped.
+        report["unknown_kinds"] = dict(agg.unknown_kinds)
+    return report
 
 
 def render_text(report: dict) -> str:
+    # Defensive throughout: reports may come from a newer/older build of
+    # ``build_report`` (extra sections, unknown event kinds, missing
+    # keys) — render what is recognized, summarize what is not.
     lines = []
-    lines.append(f"makespan         {report['makespan_s']:.3f} s   "
-                 f"({report['events']} events)")
+    lines.append(f"makespan         {report.get('makespan_s', 0.0):.3f} s   "
+                 f"({report.get('events', 0)} events)")
     util = report.get("utilization", {})
     if "total" in util:
         lines.append(f"utilization      total {util['total']:.1%}")
-    lines.append("pools:")
-    for name, p in report["pools"].items():
-        u = f"  util {p['utilization']:.1%}" if "utilization" in p else ""
-        lines.append(
-            f"  {name:<12} done {p['completed']:>5}  failed {p['failed']:>3}  "
-            f"busy {p['busy_s']:.2f} s{u}"
-        )
-    if report["methods"]:
-        lines.append("methods:")
-        for m, s in report["methods"].items():
+    pools = report.get("pools", {})
+    if pools:
+        lines.append("pools:")
+        for name, p in pools.items():
+            u = f"  util {p['utilization']:.1%}" if "utilization" in p else ""
             lines.append(
-                f"  {m:<14} n={s['count']:<5} mean {s['mean_s']*1e3:8.2f} ms  "
-                f"p50 {s['p50_s']*1e3:8.2f} ms  p95 {s['p95_s']*1e3:8.2f} ms"
+                f"  {name:<12} done {p.get('completed', 0):>5}  failed {p.get('failed', 0):>3}  "
+                f"busy {p.get('busy_s', 0.0):.2f} s{u}"
             )
-    if report["overhead"]:
+    methods = report.get("methods", {})
+    if methods:
+        lines.append("methods:")
+        for m, s in methods.items():
+            lines.append(
+                f"  {m:<14} n={s.get('count', 0):<5} "
+                f"mean {s.get('mean_s', 0.0)*1e3:8.2f} ms  "
+                f"p50 {s.get('p50_s', 0.0)*1e3:8.2f} ms  "
+                f"p95 {s.get('p95_s', 0.0)*1e3:8.2f} ms"
+            )
+    overhead = report.get("overhead", {})
+    if overhead:
         lines.append("overhead breakdown (mean per task):")
         for name in ("queue", "dispatch", "compute", "result"):
-            s = report["overhead"].get(name)
+            s = overhead.get(name)
             if s:
-                lines.append(f"  {name:<10} {s['mean_s']*1e3:8.2f} ms  (total {s['total_s']:.2f} s)")
-    if report["reallocations"]:
+                lines.append(f"  {name:<10} {s.get('mean_s', 0.0)*1e3:8.2f} ms  "
+                             f"(total {s.get('total_s', 0.0):.2f} s)")
+    if report.get("reallocations"):
         moves = ", ".join(f"{m['src']}->{m['dst']} x{m['n']}" for m in report["reallocations"])
         lines.append(f"reallocations:   {moves}")
-    lc = report["lifecycle"]
-    lines.append(
-        "lifecycle:       "
-        + ("complete & ordered" if lc["complete"] and lc["ordered"]
-           else f"{len(lc['gaps'])} gap(s), {len(lc['order_violations'])} order violation(s)")
-    )
+    sur = report.get("surrogate")
+    if sur:
+        cadence = sur.get("retrain_cadence_s") or []
+        cad = f", cadence ~{sum(cadence)/len(cadence):.2f} s" if cadence else ""
+        rmse = sur.get("rmse") or []
+        rm = f"  rmse {rmse[0]:.3f} -> {rmse[-1]:.3f}" if rmse else ""
+        regret = sur.get("regret") or []
+        rg = f"  regret {regret[0]:.3f} -> {regret[-1]:.3f}" if regret else ""
+        pol = f" [{sur['policy']}]" if sur.get("policy") else ""
+        lines.append(f"surrogate:       {sur.get('retrains', 0)} retrain(s){cad}{rm}{rg}{pol}")
+    if report.get("unknown_kinds"):
+        other = ", ".join(f"{k} x{n}" for k, n in sorted(report["unknown_kinds"].items()))
+        lines.append(f"other events:    {other} (kinds unknown to this build)")
+    lc = report.get("lifecycle")
+    if lc:
+        lines.append(
+            "lifecycle:       "
+            + ("complete & ordered" if lc.get("complete") and lc.get("ordered")
+               else f"{len(lc.get('gaps', ()))} gap(s), "
+                    f"{len(lc.get('order_violations', ()))} order violation(s)")
+        )
     return "\n".join(lines)
 
 

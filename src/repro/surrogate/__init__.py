@@ -1,0 +1,83 @@
+"""repro.surrogate — the active-learning steering engine.
+
+The paper's headline loop: a surrogate model is retrained *during* the
+campaign and its predictions bias which tasks run next, yielding ~20%
+more high-performing results per task budget (Fig. 2). This package is
+that loop as a reusable subsystem:
+
+  * ``ensemble``    — jit-compiled deep-ensemble MLP surrogate (vmapped
+                      members, warm-start incremental ``fit``, mean +
+                      epistemic std ``predict``) reusing the
+                      ``repro.train`` optimizer substrate;
+  * ``acquisition`` — pluggable batch-aware policies (greedy, UCB,
+                      expected improvement, Thompson sampling, and the
+                      epsilon-random baseline) over (mean, std);
+  * ``scenarios``   — quantile-calibrated synthetic landscapes
+                      (quadratic / multimodal / deceptive needle /
+                      heteroscedastic) behind a common ``Scenario``
+                      protocol so benchmarks sweep scenario x policy;
+  * ``thinker``     — ``ActiveLearningThinker``: the retrain-agent
+                      lifecycle (slot reallocation to the training pool,
+                      online ensemble retrain, joint re-rank of the
+                      candidate queue, ``surrogate_event`` telemetry
+                      into ``repro.observe``), plus the one-call
+                      ``run_active_campaign`` harness.
+
+Quick start::
+
+    from repro.surrogate import (
+        DeepEnsemble, make_policy, make_scenario, run_active_campaign,
+    )
+
+    scenario = make_scenario("quadratic", dim=4)
+    out = run_active_campaign(scenario, make_policy("ucb"), budget=48)
+    print(out["hits"], "high performers;", out["retrains"], "retrains")
+"""
+
+from .acquisition import (
+    AcquisitionPolicy,
+    EpsilonRandom,
+    ExpectedImprovement,
+    Greedy,
+    make_policy,
+    POLICIES,
+    Thompson,
+    UCB,
+)
+from .ensemble import DeepEnsemble, EnsembleConfig, warmup_jit
+from .scenarios import (
+    DeceptiveNeedle,
+    Heteroscedastic,
+    make_scenario,
+    MultimodalSinusoid,
+    Scenario,
+    SCENARIOS,
+    SeparableQuadratic,
+    SyntheticScenario,
+)
+from .thinker import ActiveLearningThinker, campaign_ensemble_config, run_active_campaign
+
+__all__ = [
+    "AcquisitionPolicy",
+    "ActiveLearningThinker",
+    "campaign_ensemble_config",
+    "DeceptiveNeedle",
+    "DeepEnsemble",
+    "EnsembleConfig",
+    "EpsilonRandom",
+    "ExpectedImprovement",
+    "Greedy",
+    "Heteroscedastic",
+    "make_policy",
+    "make_scenario",
+    "MultimodalSinusoid",
+    "POLICIES",
+    "run_active_campaign",
+    "Scenario",
+    "SCENARIOS",
+    "SeparableQuadratic",
+    "SyntheticScenario",
+    "Thompson",
+    "UCB",
+    "warmup_jit",
+]

@@ -1,0 +1,227 @@
+"""Acquisition policies: turn surrogate (mean, std) into task choices.
+
+Every policy answers the steering question "which k candidates should
+the campaign simulate next?" given the ensemble's mean prediction and
+epistemic std over a candidate pool. All policies are **batch-aware**:
+``select`` returns ``k`` *distinct* candidate indices chosen jointly —
+for the score-based policies that is top-k without replacement, for
+Thompson sampling it is k independent posterior draws (each draw's
+argmax), which spreads a batch across plausible optima instead of
+hammering one point k times.
+
+Policies (maximization convention — larger objective is better):
+
+  * ``Greedy``               — pure exploitation: score = mean.
+  * ``UCB(beta)``            — mean + beta * std.
+  * ``ExpectedImprovement``  — analytic EI over the incumbent best.
+  * ``Thompson``             — posterior-sample argmaxes (uses per-member
+                               predictions when available, else a
+                               Gaussian N(mean, std) draw).
+  * ``EpsilonRandom(eps)``   — eps-mix of random and greedy; ``eps=1``
+                               is the unsteered random-search baseline.
+
+``make_policy(name)`` resolves the registry used by benchmark sweeps.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+__all__ = [
+    "AcquisitionPolicy",
+    "EpsilonRandom",
+    "ExpectedImprovement",
+    "Greedy",
+    "make_policy",
+    "POLICIES",
+    "Thompson",
+    "UCB",
+]
+
+
+def _topk_unique(scores: np.ndarray, k: int, exclude: Optional[set] = None) -> List[int]:
+    """Indices of the k best scores, descending, skipping ``exclude``."""
+    order = np.argsort(-scores, kind="stable")
+    out: List[int] = []
+    for i in order:
+        if exclude and int(i) in exclude:
+            continue
+        out.append(int(i))
+        if len(out) == k:
+            break
+    return out
+
+
+class AcquisitionPolicy:
+    """Base policy. Subclasses implement ``scores`` (vector of per-
+    candidate desirabilities) or override ``select`` for joint logic."""
+
+    name = "base"
+
+    def scores(
+        self,
+        mean: np.ndarray,
+        std: np.ndarray,
+        *,
+        best_f: float,
+        rng: np.random.Generator,
+        members: Optional[np.ndarray] = None,
+    ) -> np.ndarray:
+        raise NotImplementedError
+
+    def select(
+        self,
+        k: int,
+        mean: np.ndarray,
+        std: np.ndarray,
+        *,
+        best_f: float = -math.inf,
+        rng: Optional[np.random.Generator] = None,
+        members: Optional[np.ndarray] = None,
+        exclude: Optional[set] = None,
+    ) -> List[int]:
+        """Jointly pick ``k`` distinct candidate indices."""
+        rng = rng or np.random.default_rng()
+        s = self.scores(np.asarray(mean), np.asarray(std),
+                        best_f=best_f, rng=rng, members=members)
+        return _topk_unique(s, k, exclude)
+
+
+class Greedy(AcquisitionPolicy):
+    name = "greedy"
+
+    def scores(self, mean, std, *, best_f, rng, members=None):
+        return mean
+
+
+class UCB(AcquisitionPolicy):
+    """Upper confidence bound: optimism proportional to uncertainty."""
+
+    name = "ucb"
+
+    def __init__(self, beta: float = 2.0) -> None:
+        self.beta = float(beta)
+
+    def scores(self, mean, std, *, best_f, rng, members=None):
+        return mean + self.beta * std
+
+
+def _norm_pdf(z: np.ndarray) -> np.ndarray:
+    return np.exp(-0.5 * z * z) / math.sqrt(2 * math.pi)
+
+
+def _norm_cdf(z: np.ndarray) -> np.ndarray:
+    # erf-based CDF; vectorized without scipy.
+    return 0.5 * (1.0 + np.vectorize(math.erf)(z / math.sqrt(2.0)))
+
+
+class ExpectedImprovement(AcquisitionPolicy):
+    """Analytic EI against the incumbent ``best_f``.
+
+    The std -> 0 limit is ``max(mean - best_f - xi, 0)``, so a
+    zero-uncertainty prediction at the incumbent scores exactly 0.
+    """
+
+    name = "ei"
+
+    def __init__(self, xi: float = 0.0) -> None:
+        self.xi = float(xi)
+
+    def scores(self, mean, std, *, best_f, rng, members=None):
+        if not np.isfinite(best_f):  # no incumbent yet: EI reduces to mean
+            return mean
+        impr = mean - best_f - self.xi
+        out = np.maximum(impr, 0.0)
+        pos = std > 0
+        if np.any(pos):
+            z = impr[pos] / std[pos]
+            out = out.astype(float)
+            out[pos] = impr[pos] * _norm_cdf(z) + std[pos] * _norm_pdf(z)
+        return out
+
+
+class Thompson(AcquisitionPolicy):
+    """Batch Thompson sampling: one posterior draw per batch slot.
+
+    Each of the ``k`` slots draws an independent function sample — a
+    randomly chosen ensemble member's prediction vector when ``members``
+    is provided, otherwise an independent N(mean, std) draw — and takes
+    its argmax among not-yet-selected candidates. Repeated draws that
+    agree fall through to their next-best candidate, so the batch stays
+    distinct while concentration still reflects posterior confidence.
+    """
+
+    name = "thompson"
+
+    def scores(self, mean, std, *, best_f, rng, members=None):
+        if members is not None and len(members):
+            return members[rng.integers(len(members))]
+        return rng.normal(mean, std)
+
+    def select(self, k, mean, std, *, best_f=-math.inf, rng=None,
+               members=None, exclude=None):
+        rng = rng or np.random.default_rng()
+        mean = np.asarray(mean)
+        std = np.asarray(std)
+        chosen: List[int] = []
+        taken = set(exclude or ())
+        for _ in range(min(k, mean.shape[0] - len(taken))):
+            draw = self.scores(mean, std, best_f=best_f, rng=rng, members=members)
+            idx = _topk_unique(draw, 1, taken)
+            if not idx:
+                break
+            chosen.append(idx[0])
+            taken.add(idx[0])
+        return chosen
+
+
+class EpsilonRandom(AcquisitionPolicy):
+    """Each batch slot is random w.p. ``eps``, else greedy next-best.
+    ``eps=1.0`` is the pure random-search baseline benchmarks compare
+    every steered policy against."""
+
+    name = "random"
+
+    def __init__(self, eps: float = 1.0) -> None:
+        self.eps = float(eps)
+        self.name = "random" if eps >= 1.0 else f"eps{eps:g}"
+
+    def select(self, k, mean, std, *, best_f=-math.inf, rng=None,
+               members=None, exclude=None):
+        rng = rng or np.random.default_rng()
+        mean = np.asarray(mean)
+        n = mean.shape[0]
+        taken = set(exclude or ())
+        chosen: List[int] = []
+        greedy_order = iter(_topk_unique(mean, n, taken))
+        avail = [i for i in range(n) if i not in taken]
+        rng.shuffle(avail)
+        avail_iter = iter(avail)
+        for _ in range(min(k, len(avail))):
+            if rng.random() < self.eps:
+                pick = next(i for i in avail_iter if i not in taken)
+            else:
+                pick = next(i for i in greedy_order if i not in taken)
+            chosen.append(pick)
+            taken.add(pick)
+        return chosen
+
+
+POLICIES: Dict[str, Callable[[], AcquisitionPolicy]] = {
+    "greedy": Greedy,
+    "ucb": UCB,
+    "ei": ExpectedImprovement,
+    "thompson": Thompson,
+    "random": EpsilonRandom,
+}
+
+
+def make_policy(name: str, **kwargs) -> AcquisitionPolicy:
+    try:
+        return POLICIES[name](**kwargs)
+    except KeyError:
+        raise ValueError(f"unknown acquisition policy {name!r}; "
+                         f"known: {sorted(POLICIES)}") from None

@@ -1,0 +1,267 @@
+"""Deep-ensemble MLP surrogate: the workflow's online-trainable "AI".
+
+The paper steers campaigns with a model that is retrained as results
+arrive and whose predictions re-prioritize the task queue. This module
+supplies that model as a *deep ensemble* (Lakshminarayanan et al.): K
+independently-initialized MLPs trained jointly, whose prediction spread
+is the epistemic uncertainty the acquisition policies in
+``repro.surrogate.acquisition`` consume.
+
+Implementation notes:
+
+  * **single-dispatch batched train/predict** — member parameters are
+    stacked along a leading ensemble axis and the forward pass is
+    ``vmap``-ed over it, so one jitted call trains/evaluates every
+    member (no per-member Python loop on the hot path).
+  * **optimizer reuse** — updates come from ``repro.train.optimizer``
+    (``init_opt_state``/``apply_updates``); the stacked parameter tree
+    is just another pytree to AdamW.
+  * **incremental fit** — ``fit(X, y, warm_start=True)`` keeps params
+    and optimizer moments between retrains, so each online retrain is a
+    short continuation rather than training from scratch.
+  * **bounded recompiles** — training rows are padded to the next power
+    of two (padding rows carry zero bootstrap weight), so a campaign
+    that grows its database by one result per task triggers O(log N)
+    recompiles, not O(N). Jitted steps are module-level functions keyed
+    on (shapes, config), so every ensemble instance in a policy sweep
+    shares one compile cache.
+  * **diversity** — besides distinct inits, each member trains under a
+    fixed per-fit Poisson bootstrap weighting of the rows.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.train.optimizer import OptimizerConfig, apply_updates, init_opt_state
+
+
+@dataclass(frozen=True)
+class EnsembleConfig:
+    n_members: int = 4
+    hidden: Tuple[int, ...] = (32, 32)
+    epochs: int = 60                  # gradient steps per fit() call
+    bootstrap: bool = True            # Poisson row-weights per member
+    # Fixed row padding: when set, every fit/predict call up to this many
+    # rows compiles exactly once (a campaign sets it to its budget's
+    # power-of-two); beyond it, pow2 padding takes over.
+    pad_to: Optional[int] = None
+    # Constant learning rate (warmup 0, min_lr_frac 1.0 disables the
+    # cosine schedule): online retrains are short continuations, not a
+    # single scheduled run.
+    opt: OptimizerConfig = field(
+        default_factory=lambda: OptimizerConfig(
+            name="adamw", lr=3e-3, warmup_steps=0, total_steps=1,
+            min_lr_frac=1.0, weight_decay=1e-4, clip_norm=1.0,
+        )
+    )
+
+
+# --------------------------------------------------------------------------
+# Pure functions (module-level so jit caches are shared across instances)
+# --------------------------------------------------------------------------
+
+
+def _init_member(key: jax.Array, in_dim: int, hidden: Tuple[int, ...]) -> Dict[str, jax.Array]:
+    sizes = (in_dim,) + hidden + (1,)
+    params: Dict[str, jax.Array] = {}
+    for i, (a, b) in enumerate(zip(sizes, sizes[1:])):
+        key, wk = jax.random.split(key)
+        params[f"w{i}"] = jax.random.normal(wk, (a, b)) * jnp.sqrt(2.0 / a)
+        params[f"b{i}"] = jnp.zeros((b,))
+    return params
+
+
+def _apply_member(params: Dict[str, jax.Array], x: jax.Array, n_layers: int) -> jax.Array:
+    h = x
+    for i in range(n_layers):
+        h = h @ params[f"w{i}"] + params[f"b{i}"]
+        if i < n_layers - 1:
+            h = jnp.tanh(h)
+    return h[..., 0]
+
+
+@partial(jax.jit, static_argnames=("in_dim", "hidden", "n_members"))
+def _init_stacked(key: jax.Array, in_dim: int, hidden: Tuple[int, ...], n_members: int):
+    keys = jax.random.split(key, n_members)
+    return jax.vmap(lambda k: _init_member(k, in_dim, hidden))(keys)
+
+
+@partial(jax.jit, static_argnames=("n_layers",))
+def _predict_members(params: Any, x: jax.Array, n_layers: int) -> jax.Array:
+    """(K-stacked params, [N, D]) -> [K, N] member predictions."""
+    return jax.vmap(lambda p: _apply_member(p, x, n_layers))(params)
+
+
+@partial(jax.jit, static_argnames=("n_layers", "oc", "epochs"))
+def _fit_epochs(params, opt_state, x, y, w, n_layers: int, oc: OptimizerConfig, epochs: int):
+    """Run ``epochs`` full-batch steps of per-member weighted MSE."""
+
+    def loss_fn(p):
+        preds = _predict_members(p, x, n_layers)          # [K, N]
+        err = (preds - y[None, :]) ** 2                   # [K, N]
+        per_member = (err * w).sum(axis=1) / jnp.maximum(w.sum(axis=1), 1.0)
+        return per_member.sum(), per_member.mean()
+
+    def step(carry, _):
+        p, s = carry
+        (_, mse), grads = jax.value_and_grad(loss_fn, has_aux=True)(p)
+        p, s, _ = apply_updates(p, grads, s, oc)
+        return (p, s), mse
+
+    (params, opt_state), mses = jax.lax.scan(step, (params, opt_state), None, length=epochs)
+    return params, opt_state, mses[-1]
+
+
+def _pad_pow2(n: int, floor: int = 16) -> int:
+    out = floor
+    while out < n:
+        out *= 2
+    return out
+
+
+# --------------------------------------------------------------------------
+# DeepEnsemble
+# --------------------------------------------------------------------------
+
+
+class DeepEnsemble:
+    """K MLPs over a common input space; predictions expose (mean, std).
+
+    ``std`` is the member disagreement — the epistemic signal that is
+    high where the campaign has not yet sampled — plus a small floor so
+    acquisition math never divides by zero.
+    """
+
+    def __init__(self, in_dim: int, config: Optional[EnsembleConfig] = None, seed: int = 0) -> None:
+        self.in_dim = in_dim
+        self.config = config or EnsembleConfig()
+        self._n_layers = len(self.config.hidden) + 1
+        self._rng = np.random.default_rng(seed)
+        key = jax.random.PRNGKey(seed)
+        self.params = _init_stacked(key, in_dim, self.config.hidden, self.config.n_members)
+        self.opt_state = init_opt_state(self.params, self.config.opt)
+        # Input/target normalization, frozen at first fit so warm-started
+        # parameters keep a stable target between retrains.
+        self._x_mu = np.zeros(in_dim)
+        self._x_sd = np.ones(in_dim)
+        self._y_mu = 0.0
+        self._y_sd = 1.0
+        self._norm_frozen = False
+        self.fit_count = 0
+
+    # ------------------------------------------------------------------- fit
+    def fit(self, X: np.ndarray, y: np.ndarray, warm_start: bool = True,
+            epochs: Optional[int] = None) -> Dict[str, float]:
+        """Train every member on (X, y); returns training metrics.
+
+        ``warm_start=False`` reinitializes parameters and optimizer state
+        (a from-scratch fit); the default continues from the last fit.
+        """
+        X = np.asarray(X, np.float32).reshape(len(y), self.in_dim)
+        y = np.asarray(y, np.float32).reshape(-1)
+        cfg = self.config
+        if not warm_start:
+            key = jax.random.PRNGKey(int(self._rng.integers(1 << 31)))
+            self.params = _init_stacked(key, self.in_dim, cfg.hidden, cfg.n_members)
+            self.opt_state = init_opt_state(self.params, cfg.opt)
+            self._norm_frozen = False
+        if not self._norm_frozen:
+            self._x_mu = X.mean(axis=0)
+            self._x_sd = X.std(axis=0) + 1e-6
+            self._y_mu = float(y.mean())
+            self._y_sd = float(y.std() + 1e-6)
+            self._norm_frozen = True
+
+        xn = (X - self._x_mu) / self._x_sd
+        yn = (y - self._y_mu) / self._y_sd
+        n = len(y)
+        n_pad = self._padded(n)
+        xp = np.zeros((n_pad, self.in_dim), np.float32)
+        yp = np.zeros((n_pad,), np.float32)
+        xp[:n], yp[:n] = xn, yn
+        if cfg.bootstrap:
+            w = self._rng.poisson(1.0, size=(cfg.n_members, n)).astype(np.float32)
+            w[w.sum(axis=1) == 0] = 1.0  # a member must see some data
+        else:
+            w = np.ones((cfg.n_members, n), np.float32)
+        wp = np.zeros((cfg.n_members, n_pad), np.float32)
+        wp[:, :n] = w
+
+        self.params, self.opt_state, mse = _fit_epochs(
+            self.params, self.opt_state, jnp.asarray(xp), jnp.asarray(yp),
+            jnp.asarray(wp), self._n_layers, cfg.opt,
+            int(epochs if epochs is not None else cfg.epochs),
+        )
+        self.fit_count += 1
+        pred, _ = self.predict(X)
+        rmse = float(np.sqrt(np.mean((pred - y) ** 2)))
+        return {"mse_norm": float(mse), "rmse": rmse, "n": n, "fit_count": self.fit_count}
+
+    def _padded(self, n: int) -> int:
+        return max(self.config.pad_to or 0, _pad_pow2(n))
+
+    # --------------------------------------------------------------- predict
+    def predict_members(self, X: np.ndarray) -> np.ndarray:
+        """Per-member predictions, shape [K, N] (Thompson sampling input).
+        Rows are padded to the fit shapes so predicts share compiles."""
+        X = np.asarray(X, np.float32).reshape(-1, self.in_dim)
+        n = len(X)
+        xn = np.zeros((self._padded(n), self.in_dim), np.float32)
+        xn[:n] = (X - self._x_mu) / self._x_sd
+        preds = _predict_members(self.params, jnp.asarray(xn), self._n_layers)
+        return np.asarray(preds)[:, :n] * self._y_sd + self._y_mu
+
+    def predict(self, X: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """Mean prediction and epistemic std (member disagreement), [N]."""
+        preds = self.predict_members(X)
+        return preds.mean(axis=0), preds.std(axis=0) + 1e-9
+
+    # ------------------------------------------------------------ checkpoint
+    def state_dict(self) -> Dict[str, Any]:
+        """Numpy-ified state for campaign checkpoints (pickle-friendly)."""
+        to_np = lambda tree: jax.tree_util.tree_map(np.asarray, tree)
+        return {
+            "in_dim": self.in_dim,
+            "config": self.config,
+            "params": to_np(self.params),
+            "opt_state": to_np(self.opt_state),
+            "x_mu": self._x_mu, "x_sd": self._x_sd,
+            "y_mu": self._y_mu, "y_sd": self._y_sd,
+            "norm_frozen": self._norm_frozen,
+            "fit_count": self.fit_count,
+            "rng": self._rng.bit_generator.state,
+        }
+
+    def load_state_dict(self, state: Dict[str, Any]) -> None:
+        if state["in_dim"] != self.in_dim:
+            raise ValueError(
+                f"checkpoint in_dim {state['in_dim']} != ensemble in_dim {self.in_dim}")
+        to_j = lambda tree: jax.tree_util.tree_map(jnp.asarray, tree)
+        self.params = to_j(state["params"])
+        self.opt_state = to_j(state["opt_state"])
+        self._x_mu, self._x_sd = state["x_mu"], state["x_sd"]
+        self._y_mu, self._y_sd = state["y_mu"], state["y_sd"]
+        self._norm_frozen = state["norm_frozen"]
+        self.fit_count = state["fit_count"]
+        self._rng.bit_generator.state = state["rng"]
+
+
+def warmup_jit(in_dim: int, config: EnsembleConfig, predict_rows: int = 0) -> None:
+    """Pre-compile the fit/predict graphs a campaign will use (on a
+    throwaway ensemble — jit caches are module-level, keyed on shapes +
+    config, so the real campaign's first retrain starts warm instead of
+    stalling its reallocated slots on XLA compilation)."""
+    ens = DeepEnsemble(in_dim, config, seed=0)
+    ens.fit(np.zeros((2, in_dim), np.float32), np.zeros(2, np.float32), epochs=config.epochs)
+    if predict_rows:
+        ens.predict(np.zeros((predict_rows, in_dim), np.float32))
+
+
+__all__ = ["DeepEnsemble", "EnsembleConfig", "warmup_jit"]

@@ -1,0 +1,159 @@
+"""Synthetic optimization landscapes for surrogate-steering benchmarks.
+
+A ``Scenario`` bundles everything a steering benchmark sweeps over: a
+bounded search domain, an (optionally noisy) expensive ``evaluate``
+standing in for the simulation task, the noiseless ``true_value`` used
+for scoring, and a calibrated high-performer ``threshold``.
+
+Thresholds are set by quantile over a large seeded uniform sample, so
+"high performer" means the same thing (top ``1 - quantile`` fraction of
+the domain) across otherwise wildly different landscapes, and an
+unsteered random search has the same expected hit-rate everywhere —
+steering gain is then directly comparable across scenarios, as in the
+paper's +20%-more-top-molecules framing.
+
+The four stock landscapes cover the failure modes that separate
+acquisition policies:
+
+  * ``quadratic``        — separable smooth bowl; pure exploitation wins.
+  * ``multimodal``       — sinusoid over an envelope; many local optima,
+                           exploration must escape them.
+  * ``needle``           — deceptive: the broad slope points *away* from
+                           a narrow needle of mass; greedy gets trapped.
+  * ``heteroscedastic``  — noisy observations whose noise grows away
+                           from the optimum; robustness to label noise.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Protocol, runtime_checkable
+
+import numpy as np
+
+__all__ = [
+    "DeceptiveNeedle",
+    "Heteroscedastic",
+    "make_scenario",
+    "MultimodalSinusoid",
+    "Scenario",
+    "SCENARIOS",
+    "SeparableQuadratic",
+    "SyntheticScenario",
+]
+
+
+@runtime_checkable
+class Scenario(Protocol):
+    """Protocol every steering benchmark sweeps over."""
+
+    name: str
+    dim: int
+    lo: float
+    hi: float
+    threshold: float      # true_value above this = "high performer"
+    optimum_value: float  # (approximate) max of true_value on the domain
+
+    def sample(self, rng: np.random.Generator, n: int) -> np.ndarray:
+        """Draw n candidate points, shape [n, dim]."""
+        ...
+
+    def evaluate(self, x: np.ndarray, seed: int = 0) -> float:
+        """The expensive simulation (may be noisy; seeded)."""
+        ...
+
+    def true_value(self, x: np.ndarray) -> float:
+        """Noiseless objective, used for scoring hits."""
+        ...
+
+
+class SyntheticScenario:
+    """Base: uniform box domain + quantile-calibrated threshold."""
+
+    name = "synthetic"
+
+    def __init__(self, dim: int = 4, lo: float = -1.0, hi: float = 1.0,
+                 quantile: float = 0.92, calibration_n: int = 20_000) -> None:
+        self.dim = dim
+        self.lo = lo
+        self.hi = hi
+        rng = np.random.default_rng(12345)
+        sample = self.sample(rng, calibration_n)
+        vals = self.true_batch(sample)
+        self.threshold = float(np.quantile(vals, quantile))
+        self.optimum_value = float(vals.max())
+
+    # ----------------------------------------------------------- domain
+    def sample(self, rng: np.random.Generator, n: int) -> np.ndarray:
+        return rng.uniform(self.lo, self.hi, (n, self.dim))
+
+    # -------------------------------------------------------- objective
+    def true_batch(self, X: np.ndarray) -> np.ndarray:
+        """Vectorized noiseless objective, [n, dim] -> [n]."""
+        raise NotImplementedError
+
+    def true_value(self, x: np.ndarray) -> float:
+        return float(self.true_batch(np.asarray(x, float).reshape(1, -1))[0])
+
+    def evaluate(self, x: np.ndarray, seed: int = 0) -> float:
+        return self.true_value(x)
+
+
+class SeparableQuadratic(SyntheticScenario):
+    """Smooth separable bowl centered off-origin: the easy case."""
+
+    name = "quadratic"
+
+    def true_batch(self, X: np.ndarray) -> np.ndarray:
+        return -((X - 0.3) ** 2).sum(axis=1)
+
+
+class MultimodalSinusoid(SyntheticScenario):
+    """Sinusoidal ripples over a quadratic envelope: many local maxima,
+    one global basin near x = 0.2."""
+
+    name = "multimodal"
+
+    def true_batch(self, X: np.ndarray) -> np.ndarray:
+        return np.sin(3.0 * X).sum(axis=1) - 0.7 * ((X - 0.2) ** 2).sum(axis=1)
+
+
+class DeceptiveNeedle(SyntheticScenario):
+    """A broad hill at one corner plus a taller, narrow Gaussian needle
+    elsewhere; the global gradient leads away from the needle."""
+
+    name = "needle"
+
+    def true_batch(self, X: np.ndarray) -> np.ndarray:
+        hill = -0.4 * ((X + 0.5) ** 2).sum(axis=1)
+        needle = 3.0 * np.exp(-((X - 0.55) ** 2).sum(axis=1) / (2 * 0.18 ** 2))
+        return hill + needle
+
+
+class Heteroscedastic(SyntheticScenario):
+    """Quadratic objective observed under state-dependent noise: the
+    noise floor grows away from the optimum, so the surrogate must
+    average out unreliable labels exactly where exploration happens."""
+
+    name = "heteroscedastic"
+
+    def true_batch(self, X: np.ndarray) -> np.ndarray:
+        return -((X - 0.1) ** 2).sum(axis=1)
+
+    def evaluate(self, x: np.ndarray, seed: int = 0) -> float:
+        x = np.asarray(x, float).reshape(-1)
+        sigma = 0.05 + 0.25 * np.abs(x - 0.1).mean()
+        noise = np.random.default_rng(seed).normal(0.0, sigma)
+        return self.true_value(x) + float(noise)
+
+
+SCENARIOS: Dict[str, type] = {
+    cls.name: cls
+    for cls in (SeparableQuadratic, MultimodalSinusoid, DeceptiveNeedle, Heteroscedastic)
+}
+
+
+def make_scenario(name: str, dim: int = 4, **kwargs) -> SyntheticScenario:
+    try:
+        return SCENARIOS[name](dim=dim, **kwargs)
+    except KeyError:
+        raise ValueError(f"unknown scenario {name!r}; known: {sorted(SCENARIOS)}") from None

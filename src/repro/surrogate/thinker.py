@@ -1,0 +1,357 @@
+"""ActiveLearningThinker: the online train -> infer -> reprioritize loop.
+
+This is the steering pattern the paper's Fig. 2 campaign runs: simulate
+continuously; once enough new results land, shift worker slots to the
+training pool, retrain the surrogate ensemble on everything observed,
+re-rank the candidate queue with an acquisition policy, and shift the
+slots back. Built on ``repro.core.steering.BatchRetrainThinker`` — the
+base class supplies the simulate/drain/finish machinery; this class owns
+the retrain-agent lifecycle:
+
+  * **resource shift** — ``ResourceCounter.reallocate("simulate", "ml")``
+    for the duration of each retrain (and back after), emitted as
+    ``realloc`` events so utilization reports integrate the move;
+  * **online ensemble retrain** — ``DeepEnsemble.fit(..., warm_start=
+    True)``, a short jitted continuation, run inside the responder while
+    the shifted slots are held;
+  * **re-ranking** — the acquisition policy jointly selects the next
+    batch of candidates from the ensemble's (mean, std) over the
+    unvisited pool;
+  * **telemetry** — ``surrogate_event``s (retrain rmse/cadence, rerank
+    regret) land in the same ``repro.observe`` log as task lifecycles,
+    so one report shows compute utilization *and* steering quality;
+  * **checkpointability** — ``get_state``/``set_state`` round-trip the
+    observed data, queue position, and full ensemble state through
+    ``repro.core.Campaign`` checkpoints, so a killed campaign resumes
+    from its last retrain instead of from scratch.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.queues import ColmenaQueues
+from repro.core.result import ResourceRequest
+from repro.core.steering import BatchRetrainThinker
+from repro.core.thinker import event_responder, task_submitter
+
+from .acquisition import AcquisitionPolicy
+from .ensemble import DeepEnsemble, EnsembleConfig, _pad_pow2
+
+
+class ActiveLearningThinker(BatchRetrainThinker):
+    """Steer a fixed candidate pool with an online-retrained ensemble.
+
+    Parameters beyond ``BatchRetrainThinker``'s:
+
+    :param ensemble: the ``DeepEnsemble`` retrained online.
+    :param policy: acquisition policy ranking unvisited candidates.
+    :param candidates: [N, D] pool the campaign selects from.
+    :param train_slots: simulate-slots shifted to the ``ml`` pool for
+        the duration of each retrain (the paper's node shift).
+    :param select_horizon: batch size of each joint re-rank (defaults to
+        2x ``retrain_after`` so the queue never starves between retrains).
+    :param optimum_value: optional known/approximate optimum, enabling
+        acquisition-regret telemetry.
+    """
+
+    def __init__(
+        self,
+        queues: ColmenaQueues,
+        *,
+        ensemble: DeepEnsemble,
+        policy: AcquisitionPolicy,
+        candidates: np.ndarray,
+        n_slots: int,
+        retrain_after: int,
+        max_results: Optional[int] = None,
+        simulate_method: str = "simulate",
+        ml_slots: int = 1,
+        train_slots: int = 1,
+        select_horizon: Optional[int] = None,
+        optimum_value: Optional[float] = None,
+        seed: int = 0,
+    ) -> None:
+        super().__init__(
+            queues,
+            n_slots=n_slots,
+            retrain_after=retrain_after,
+            simulate_method=simulate_method,
+            ml_slots=ml_slots,
+            max_results=max_results,
+        )
+        self.ensemble = ensemble
+        self.policy = policy
+        self.candidates = np.asarray(candidates, np.float32)
+        self.train_slots = train_slots
+        self.select_horizon = select_horizon or 2 * retrain_after
+        self.optimum_value = optimum_value
+        self._rng = np.random.default_rng(seed)
+        self._al_lock = threading.Lock()
+        self._visited: set = set()
+        self._selected: "deque[int]" = deque()
+        self._X: List[np.ndarray] = []
+        self._y: List[float] = []
+        self._best: float = -np.inf
+
+    # ---------------------------------------------------------------- helpers
+    def _event_log(self) -> Optional[Any]:
+        return getattr(self.queues, "event_log", None)
+
+    @property
+    def best_observed(self) -> float:
+        with self._al_lock:
+            return self._best
+
+    @property
+    def observed(self) -> Tuple[np.ndarray, np.ndarray]:
+        with self._al_lock:
+            if not self._y:
+                return np.empty((0, self.candidates.shape[1])), np.empty((0,))
+            return np.stack(self._X), np.asarray(self._y)
+
+    def _next_index(self) -> Optional[int]:
+        """Highest-priority unvisited candidate: the re-ranked queue
+        first, a uniform-random unvisited fallback before the first
+        retrain (or when the queue drains)."""
+        with self._al_lock:
+            while self._selected:
+                idx = self._selected.popleft()
+                if idx not in self._visited:
+                    self._visited.add(idx)
+                    return idx
+            unvisited = np.setdiff1d(
+                np.arange(len(self.candidates)), np.fromiter(self._visited, int, len(self._visited)),
+            )
+            if not len(unvisited):
+                return None
+            idx = int(self._rng.choice(unvisited))
+            self._visited.add(idx)
+            return idx
+
+    # ------------------------------------------------------------------ hooks
+    @task_submitter(task_type="simulate", n_slots=1)
+    def submit_simulation(self) -> None:
+        """Base-class submitter plus candidate-pool exhaustion: when every
+        candidate has been visited, drain instead of submitting junk."""
+        if self._drain.is_set():
+            self.rec.release("simulate", 1)
+            self.done.wait()
+            return
+        idx = self._next_index()
+        if idx is None:  # pool exhausted: stop feeding, let ML finish
+            self.rec.release("simulate", 1)
+            self._drain.set()
+            self._maybe_finish()
+            self.done.wait()
+            return
+        self.queues.send_inputs(
+            self.candidates[idx], int(self._rng.integers(1 << 31)),
+            method=self.simulate_method, topic="simulate",
+            resources=ResourceRequest(pool="simulate"),
+        )
+
+    def on_simulation(self, result) -> None:
+        x = np.asarray(result.args[0], np.float32)
+        y = float(result.value)
+        with self._al_lock:
+            self._X.append(x)
+            self._y.append(y)
+            self._best = max(self._best, y)
+
+    # ------------------------------------------------------------ retrain agent
+    def make_train_task(self):  # pragma: no cover - retraining is in-agent
+        raise NotImplementedError("ActiveLearningThinker retrains in-agent")
+
+    @event_responder(event_name="retrain")
+    def run_training(self) -> None:
+        """Shift slots to the training pool, retrain, re-rank, shift back."""
+        if self.done.is_set():
+            return
+        log = self._event_log()
+        moved = False
+        if self.train_slots:
+            moved = self.rec.reallocate(
+                "simulate", "ml", self.train_slots, stop_event=self.done)
+            if moved and log is not None:
+                log.realloc("simulate", "ml", self.train_slots, reason="retrain")
+        t0 = time.monotonic()
+        try:
+            X, y = self.observed
+            if not len(y):
+                return
+            metrics = self.ensemble.fit(X, y, warm_start=True)
+            self.train_rounds += 1
+            if log is not None:
+                log.surrogate_event(
+                    "retrain", value=metrics["rmse"], round=self.train_rounds,
+                    n=metrics["n"], duration_s=round(time.monotonic() - t0, 6),
+                )
+            self._rerank(log)
+        finally:
+            if moved:
+                self.rec.reallocate("ml", "simulate", self.train_slots,
+                                    stop_event=self.done)
+                if log is not None:
+                    log.realloc("ml", "simulate", self.train_slots,
+                                reason="retrain_done")
+
+    def _rerank(self, log: Optional[Any] = None) -> None:
+        """Jointly select the next batch of candidates from the freshly
+        retrained ensemble's (mean, std). The predict always covers the
+        full (fixed-shape) pool — one compile for the whole campaign —
+        and visited candidates are excluded at selection time."""
+        with self._al_lock:
+            visited = set(self._visited)
+            best = self._best
+        k = min(self.select_horizon, len(self.candidates) - len(visited))
+        if k <= 0:
+            return
+        members = self.ensemble.predict_members(self.candidates)
+        mean, std = members.mean(axis=0), members.std(axis=0) + 1e-9
+        ranked = self.policy.select(
+            k, mean, std, best_f=best, rng=self._rng, members=members,
+            exclude=visited)
+        with self._al_lock:
+            self._selected = deque(ranked)
+        if log is not None:
+            regret = (
+                self.optimum_value - best
+                if self.optimum_value is not None and np.isfinite(best) else None
+            )
+            log.surrogate_event(
+                "rerank", value=regret, policy=self.policy.name, k=len(ranked))
+
+    # ------------------------------------------------------------- checkpoint
+    def get_state(self) -> Dict[str, Any]:
+        """Campaign-checkpoint payload: everything needed to resume from
+        the last retrain (observed data, queue position, ensemble)."""
+        with self._al_lock, self._state_lock:
+            return {
+                "X": [np.asarray(x) for x in self._X],
+                "y": list(self._y),
+                "best": self._best,
+                "visited": sorted(self._visited),
+                "selected": list(self._selected),
+                "train_rounds": self.train_rounds,
+                "new_since_train": self._new_since_train,
+                "total": self._total,
+                "ensemble": self.ensemble.state_dict(),
+                "rng": self._rng.bit_generator.state,
+            }
+
+    def set_state(self, state: Dict[str, Any]) -> None:
+        if not state:
+            return
+        with self._al_lock, self._state_lock:
+            self._X = [np.asarray(x) for x in state["X"]]
+            self._y = list(state["y"])
+            self._best = state["best"]
+            self._visited = set(state["visited"])
+            self._selected = deque(state["selected"])
+            self.train_rounds = state["train_rounds"]
+            self._new_since_train = state["new_since_train"]
+            self._total = state["total"]
+            self._rng.bit_generator.state = state["rng"]
+        self.ensemble.load_state_dict(state["ensemble"])
+
+
+# --------------------------------------------------------------------------
+# One-call campaign runner (benchmarks, examples, tests)
+# --------------------------------------------------------------------------
+
+
+def campaign_ensemble_config(budget: int, **overrides) -> EnsembleConfig:
+    """The ensemble config ``run_active_campaign`` defaults to for a
+    given budget: ``pad_to`` = the budget's power of two, so every
+    retrain in the campaign (and every campaign in a same-budget sweep)
+    shares one compiled fit/predict shape. Warmup callers use this same
+    helper so pre-compiled shapes can never drift from the campaign's."""
+    return EnsembleConfig(pad_to=_pad_pow2(budget), **overrides)
+
+
+def run_active_campaign(
+    scenario,
+    policy: AcquisitionPolicy,
+    budget: int = 48,
+    *,
+    n_slots: int = 4,
+    retrain_after: Optional[int] = None,
+    n_candidates: int = 512,
+    seed: int = 0,
+    ensemble: Optional[DeepEnsemble] = None,
+    event_log: Optional[Any] = None,
+    sim_sleep_s: float = 0.0,
+    timeout: float = 300.0,
+) -> Dict[str, Any]:
+    """Run one surrogate-steered campaign over a ``Scenario``.
+
+    ``sim_sleep_s`` paces each simulation (the paper's tasks are
+    minutes-long; a few ms here lets retrains interleave with the
+    simulate stream instead of racing a sub-ms landscape evaluation).
+    Returns hits (candidates whose *noiseless* value clears the
+    scenario threshold), the best observation, retrain count, and the
+    observe report (with its surrogate section).
+    """
+    from repro.core import LocalColmenaQueues, TaskServer, WorkerPool
+    from repro.observe import EventLog, build_report
+
+    log = event_log if event_log is not None else EventLog()
+    rng = np.random.default_rng(seed)
+    candidates = scenario.sample(rng, n_candidates)
+    ens = ensemble or DeepEnsemble(
+        scenario.dim, campaign_ensemble_config(budget), seed=seed)
+
+    def simulate(x, seed=0):
+        if sim_sleep_s:
+            time.sleep(sim_sleep_s)
+        return scenario.evaluate(x, seed)
+
+    queues = LocalColmenaQueues(topics=["simulate", "train"], event_log=log)
+    pool_sizes = {"simulate": max(n_slots - 1, 1), "ml": 1, "default": 1}
+    pools = {name: WorkerPool(name, n) for name, n in pool_sizes.items()}
+    thinker = ActiveLearningThinker(
+        queues,
+        ensemble=ens,
+        policy=policy,
+        candidates=candidates,
+        n_slots=n_slots,
+        retrain_after=retrain_after or max(8, budget // 5),
+        max_results=budget,
+        ml_slots=1,
+        optimum_value=scenario.optimum_value,
+        seed=seed,
+    )
+    thinker.rec.event_log = log
+    server = TaskServer(
+        queues, {"simulate": simulate}, pools=pools, event_log=log,
+    ).start()
+    try:
+        thinker.run(timeout=timeout)
+    finally:
+        server.stop()
+
+    X, y = thinker.observed
+    # In-flight overshoot can deliver a result or two past max_results;
+    # score exactly ``budget`` observations so policy comparisons are fair.
+    X, y = X[:budget], y[:budget]
+    hits = int(sum(scenario.true_value(x) > scenario.threshold for x in X))
+    report = build_report(log, slots_by_pool=pool_sizes)
+    return {
+        "scenario": scenario.name,
+        "policy": policy.name,
+        "hits": hits,
+        "n": len(y),
+        "best": float(y.max()) if len(y) else float("-inf"),
+        "retrains": thinker.train_rounds,
+        "report": report,
+        "thinker": thinker,
+    }
+
+
+__all__ = ["ActiveLearningThinker", "campaign_ensemble_config", "run_active_campaign"]

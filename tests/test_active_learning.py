@@ -1,0 +1,201 @@
+"""Integration tests: ActiveLearningThinker online loop, campaign
+checkpoint/resume of surrogate state, and observe forward-compat with
+the surrogate event kind."""
+
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Campaign,
+    LocalColmenaQueues,
+    TaskServer,
+    WorkerPool,
+)
+from repro.observe import Event, EventLog, MetricsAggregator, build_report, render_text
+from repro.surrogate import (
+    ActiveLearningThinker,
+    DeepEnsemble,
+    EnsembleConfig,
+    make_policy,
+    make_scenario,
+    run_active_campaign,
+    warmup_jit,
+)
+
+DIM = 3
+CFG = EnsembleConfig(n_members=3, hidden=(16, 16), epochs=25, pad_to=64)
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _warm_jit():
+    """Compile the fit/predict graphs once for the whole module so no
+    test's first retrain stalls on XLA."""
+    warmup_jit(DIM, CFG, predict_rows=128)
+    warmup_jit(DIM, CFG, predict_rows=256)
+
+
+def _campaign_parts(candidates, scenario, *, max_results, seed=0, sleep_s=0.006):
+    log = EventLog()
+    queues = LocalColmenaQueues(topics=["simulate", "train"], event_log=log)
+    pools = {"simulate": WorkerPool("simulate", 3), "ml": WorkerPool("ml", 1),
+             "default": WorkerPool("default", 1)}
+
+    def simulate(x, task_seed=0):
+        time.sleep(sleep_s)
+        return scenario.evaluate(x, task_seed)
+
+    thinker = ActiveLearningThinker(
+        queues,
+        ensemble=DeepEnsemble(DIM, CFG, seed=seed),
+        policy=make_policy("ucb"),
+        candidates=candidates,
+        n_slots=4,
+        retrain_after=8,
+        max_results=max_results,
+        ml_slots=1,
+        optimum_value=scenario.optimum_value,
+        seed=seed,
+    )
+    thinker.rec.event_log = log
+    server = TaskServer(queues, {"simulate": simulate}, pools=pools, event_log=log)
+    return log, thinker, server
+
+
+class TestActiveLearningThinker:
+    def test_online_retrain_with_reallocation_and_telemetry(self):
+        """The acceptance loop: >=2 online retrains visible in the observe
+        report, slots shifted to the training pool during each retrain."""
+        scenario = make_scenario("quadratic", dim=DIM)
+        out = run_active_campaign(
+            scenario, make_policy("ucb"), budget=32, retrain_after=8,
+            n_candidates=128, seed=0, sim_sleep_s=0.006,
+            ensemble=DeepEnsemble(DIM, CFG, seed=0),
+        )
+        report = out["report"]
+        sur = report["surrogate"]
+        assert sur["retrains"] >= 2
+        assert len(sur["rmse"]) == sur["retrains"]
+        assert all(r is not None for r in sur["regret"])
+        # Every retrain shifted a slot into the training pool and back.
+        moves = report["reallocations"]
+        into_ml = [m for m in moves if m["dst"] == "ml"]
+        back = [m for m in moves if m["src"] == "ml"]
+        assert len(into_ml) >= 2 and len(back) >= 2
+        # And the telemetry renders.
+        text = render_text(report)
+        assert "surrogate:" in text and "retrain" in text
+
+    def test_steered_beats_random_on_quadratic(self):
+        """Miniature of the benchmark/CI gate: exploitation on a smooth
+        bowl must match or beat random search within the same budget."""
+        scenario = make_scenario("quadratic", dim=DIM)
+        kw = dict(budget=48, retrain_after=8, n_candidates=256, seed=0,
+                  sim_sleep_s=0.006)
+        steered = run_active_campaign(
+            scenario, make_policy("greedy"),
+            ensemble=DeepEnsemble(DIM, CFG, seed=0), **kw)
+        random = run_active_campaign(
+            scenario, make_policy("random"),
+            ensemble=DeepEnsemble(DIM, CFG, seed=0), **kw)
+        assert steered["hits"] >= random["hits"]
+
+    def test_candidate_pool_never_resampled(self):
+        """Joint selection + visited-set bookkeeping: no candidate is
+        simulated twice even across multiple reranks."""
+        scenario = make_scenario("multimodal", dim=DIM)
+        out = run_active_campaign(
+            scenario, make_policy("thompson"), budget=32, retrain_after=8,
+            n_candidates=128, seed=1, sim_sleep_s=0.004,
+            ensemble=DeepEnsemble(DIM, CFG, seed=1),
+        )
+        X, _ = out["thinker"].observed
+        uniq = {tuple(np.round(x, 6)) for x in X}
+        assert len(uniq) == len(X)
+
+
+class TestCampaignResume:
+    def test_killed_campaign_resumes_from_last_retrain(self, tmp_path):
+        scenario = make_scenario("quadratic", dim=DIM)
+        candidates = scenario.sample(np.random.default_rng(42), 256)
+
+        # --- first run: killed mid-campaign by timeout -------------------
+        log1, thinker1, server1 = _campaign_parts(
+            candidates, scenario, max_results=None, sleep_s=0.02)
+        camp1 = Campaign(thinker1, server1, state_dir=str(tmp_path),
+                         checkpoint_interval_s=0.2, name="al")
+        camp1.run(timeout=2.0)           # "kill": done forced while running
+        assert camp1.checkpoints_written >= 1
+        rounds1 = thinker1.train_rounds
+        n1 = len(thinker1.observed[1])
+        fits1 = thinker1.ensemble.fit_count
+        assert rounds1 >= 1 and n1 >= 8
+
+        # --- restart: a fresh thinker resumes from the checkpoint --------
+        log2, thinker2, server2 = _campaign_parts(
+            candidates, scenario, max_results=None, seed=7, sleep_s=0.004)
+        camp2 = Campaign(thinker2, server2, state_dir=str(tmp_path),
+                         checkpoint_interval_s=5.0, name="al")
+        assert camp2.try_resume()
+        # Continues from the last retrain, not from scratch:
+        assert thinker2.train_rounds == rounds1
+        assert thinker2.ensemble.fit_count == fits1 > 0
+        n_resumed = len(thinker2.observed[1])
+        assert n_resumed >= 8            # observed data survived the kill
+        visited_before = set(thinker2._visited)
+        assert visited_before            # queue position survived too
+
+        thinker2.max_results = n_resumed + 16
+        camp2.run(timeout=60, resume=False)
+        X2, y2 = thinker2.observed
+        assert len(y2) >= n_resumed + 16
+        # The resumed run never re-simulates checkpointed candidates.
+        assert visited_before <= set(thinker2._visited)
+        assert len(thinker2._visited) > len(visited_before)
+        # And keeps retraining the same ensemble onward.
+        assert thinker2.ensemble.fit_count > fits1
+
+
+class TestObserveForwardCompat:
+    def test_report_tolerates_unknown_event_kinds(self):
+        log = EventLog()
+        log.gauge("slots", 2, pool="simulate")
+        log.emit(Event(t=log.t0, kind="frobnicate", stage="warp", info={"x": 1}))
+        log.emit(Event(t=log.t0, kind="frobnicate", stage="weft"))
+        log.surrogate_event("retrain", value=0.5, round=1, n=8)
+        log.surrogate_event("rerank", value=0.25, policy="ucb", k=4)
+        report = build_report(log)
+        assert report["unknown_kinds"] == {"frobnicate": 2}
+        assert report["event_kinds"]["surrogate"] == 2
+        text = render_text(report)
+        assert "frobnicate x2" in text
+        assert "surrogate:" in text
+
+    def test_aggregator_counts_unknown_kinds(self):
+        agg = MetricsAggregator()
+        agg.observe(Event(t=0.0, kind="mystery", stage="s"))
+        agg.observe(Event(t=1.0, kind="mystery", stage="s"))
+        assert agg.unknown_kinds == {"mystery": 2}
+        assert agg.makespan() == 1.0     # still contributes to the window
+
+    def test_surrogate_stats_trajectories(self):
+        log = EventLog()
+        for i, rmse in enumerate((0.9, 0.5, 0.2)):
+            log.surrogate_event("retrain", value=rmse, round=i + 1, n=8 * (i + 1))
+            log.surrogate_event("rerank", value=1.0 - rmse, policy="ei", k=8)
+        agg = MetricsAggregator(log)
+        stats = agg.surrogate_stats()
+        assert stats["retrains"] == 3
+        assert stats["rmse"] == [0.9, 0.5, 0.2]
+        assert stats["regret"] == pytest.approx([0.1, 0.5, 0.8])
+        assert stats["policy"] == "ei"
+        assert len(stats["retrain_cadence_s"]) == 2
+
+    def test_render_text_tolerates_foreign_report_dicts(self):
+        """A report from another build: missing sections, extra ones."""
+        assert "makespan" in render_text({})
+        foreign = {"makespan_s": 1.0, "events": 3, "mystery_section": {"a": 1},
+                   "unknown_kinds": {"alien": 3}}
+        text = render_text(foreign)
+        assert "alien x3" in text

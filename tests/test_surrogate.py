@@ -1,0 +1,228 @@
+"""Unit tests for the repro.surrogate subsystem: deep-ensemble surrogate,
+acquisition-policy analytics, and scenario calibration."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.surrogate import (
+    DeepEnsemble,
+    EnsembleConfig,
+    EpsilonRandom,
+    ExpectedImprovement,
+    Greedy,
+    make_policy,
+    make_scenario,
+    Scenario,
+    SCENARIOS,
+    Thompson,
+    UCB,
+)
+
+
+# ---------------------------------------------------------------------------
+# DeepEnsemble
+# ---------------------------------------------------------------------------
+
+
+class TestDeepEnsemble:
+    def _data(self, n=64, dim=3, seed=0):
+        rng = np.random.default_rng(seed)
+        X = rng.uniform(-1, 1, (n, dim))
+        y = -((X - 0.3) ** 2).sum(axis=1)
+        return X, y
+
+    def test_fit_reduces_error_and_warm_start_continues(self):
+        X, y = self._data()
+        ens = DeepEnsemble(3, EnsembleConfig(epochs=40), seed=0)
+        m1 = ens.fit(X, y)
+        m2 = ens.fit(X, y)  # warm-start continuation
+        assert m2["fit_count"] == 2
+        assert m2["mse_norm"] < m1["mse_norm"]   # training continued, not reset
+        m3 = ens.fit(X, y, warm_start=False)     # cold restart forgets
+        assert m3["mse_norm"] > m2["mse_norm"]
+
+    def test_predict_shapes_and_epistemic_uncertainty(self):
+        X, y = self._data()
+        ens = DeepEnsemble(3, EnsembleConfig(epochs=80), seed=0)
+        ens.fit(X, y)
+        mean, std = ens.predict(X)
+        assert mean.shape == std.shape == (len(X),)
+        assert np.all(std > 0)
+        # Epistemic std must grow far outside the training support.
+        far = np.full((8, 3), 4.0)
+        _, std_far = ens.predict(far)
+        assert std_far.mean() > std.mean() * 2
+
+    def test_members_axis_is_ensemble(self):
+        X, y = self._data(n=16)
+        cfg = EnsembleConfig(n_members=5, epochs=10)
+        ens = DeepEnsemble(3, cfg, seed=0)
+        ens.fit(X, y)
+        members = ens.predict_members(X)
+        assert members.shape == (5, 16)
+        # Members disagree (distinct inits + bootstrap) — std not collapsed.
+        assert members.std(axis=0).mean() > 0
+
+    def test_state_dict_roundtrip_preserves_predictions(self):
+        X, y = self._data()
+        ens = DeepEnsemble(3, EnsembleConfig(epochs=20), seed=0)
+        ens.fit(X, y)
+        state = ens.state_dict()
+        clone = DeepEnsemble(3, EnsembleConfig(epochs=20), seed=99)
+        clone.load_state_dict(state)
+        np.testing.assert_allclose(clone.predict(X)[0], ens.predict(X)[0], rtol=1e-6)
+        assert clone.fit_count == ens.fit_count
+        with pytest.raises(ValueError):
+            DeepEnsemble(7).load_state_dict(state)   # dim mismatch is loud
+
+    def test_padding_preserves_results(self):
+        """pad_to changes compile shapes, never predictions."""
+        X, y = self._data(n=20)
+        a = DeepEnsemble(3, EnsembleConfig(epochs=15, pad_to=None), seed=0)
+        b = DeepEnsemble(3, EnsembleConfig(epochs=15, pad_to=256), seed=0)
+        a.fit(X, y)
+        b.fit(X, y)
+        np.testing.assert_allclose(a.predict(X)[0], b.predict(X)[0], rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Acquisition policies (analytic sanity checks)
+# ---------------------------------------------------------------------------
+
+
+class TestAcquisition:
+    def test_ei_zero_at_incumbent_with_zero_std(self):
+        ei = ExpectedImprovement()
+        mean = np.array([1.0, 0.5])
+        std = np.array([0.0, 0.0])
+        scores = ei.scores(mean, std, best_f=1.0, rng=np.random.default_rng(0))
+        assert scores[0] == pytest.approx(0.0)          # at incumbent: no improvement
+        assert scores[1] == pytest.approx(0.0)          # below it: none either
+        # Positive deterministic improvement reduces to mean - best.
+        scores = ei.scores(np.array([1.5]), np.array([0.0]), best_f=1.0,
+                           rng=np.random.default_rng(0))
+        assert scores[0] == pytest.approx(0.5)
+
+    def test_ei_positive_under_uncertainty(self):
+        ei = ExpectedImprovement()
+        scores = ei.scores(np.array([1.0]), np.array([0.5]), best_f=1.0,
+                           rng=np.random.default_rng(0))
+        # At the incumbent mean with std>0, EI = std * pdf(0) > 0.
+        assert scores[0] == pytest.approx(0.5 / math.sqrt(2 * math.pi), rel=1e-6)
+
+    def test_ucb_monotone_in_beta(self):
+        rng = np.random.default_rng(0)
+        mean = rng.normal(size=32)
+        std = rng.uniform(0.1, 1.0, 32)
+        prev = None
+        for beta in (0.0, 0.5, 1.0, 2.0, 4.0):
+            s = UCB(beta).scores(mean, std, best_f=0.0, rng=rng)
+            if prev is not None:
+                assert np.all(s >= prev)                 # pointwise monotone
+            prev = s
+        # beta=0 degrades to greedy.
+        np.testing.assert_allclose(UCB(0.0).scores(mean, std, best_f=0.0, rng=rng), mean)
+
+    def test_thompson_hits_each_argmax_candidate_under_fixed_seeds(self):
+        # Two well-separated modes: every posterior draw's argmax is one
+        # of them; over many seeded draws both must be selected.
+        mean = np.array([1.0, 1.0, -5.0, -5.0])
+        std = np.array([1.0, 1.0, 0.01, 0.01])
+        t = Thompson()
+        picks = {t.select(1, mean, std, rng=np.random.default_rng(s))[0] for s in range(64)}
+        assert picks == {0, 1}
+        # With members given, draws come from member rows: a member whose
+        # argmax is candidate 2 must surface under some seed.
+        members = np.array([[1.0, 0.0, 0.0, 0.0],
+                            [0.0, 1.0, 0.0, 0.0],
+                            [0.0, 0.0, 1.0, 0.0]])
+        picks = {
+            t.select(1, mean, std, members=members,
+                     rng=np.random.default_rng(s))[0]
+            for s in range(64)
+        }
+        assert picks == {0, 1, 2}
+
+    def test_batch_topk_is_joint_and_distinct(self):
+        mean = np.array([0.0, 3.0, 2.0, 1.0, -1.0])
+        std = np.full(5, 0.1)
+        rng = np.random.default_rng(0)
+        # Score-based policies: top-k without replacement, in rank order.
+        assert Greedy().select(3, mean, std, rng=rng) == [1, 2, 3]
+        # A pure repeated-top-1 selector would return [1, 1, 1].
+        for policy in (Greedy(), UCB(), ExpectedImprovement(), Thompson(), EpsilonRandom()):
+            picks = policy.select(4, mean, std, best_f=0.0,
+                                  rng=np.random.default_rng(1))
+            assert len(picks) == len(set(picks)) == 4, policy.name
+        # exclude masks already-visited candidates for every policy.
+        for policy in (Greedy(), UCB(), ExpectedImprovement(), Thompson(), EpsilonRandom()):
+            picks = policy.select(2, mean, std, best_f=0.0,
+                                  rng=np.random.default_rng(2), exclude={1, 2})
+            assert not {1, 2} & set(picks), policy.name
+
+    def test_epsilon_random_mixes(self):
+        mean = np.linspace(0, 1, 100)
+        std = np.full(100, 0.1)
+        # eps=0 is pure greedy; eps=1 is uniform (first pick rarely argmax).
+        assert EpsilonRandom(0.0).select(1, mean, std, rng=np.random.default_rng(0)) == [99]
+        firsts = [EpsilonRandom(1.0).select(1, mean, std,
+                                            rng=np.random.default_rng(s))[0]
+                  for s in range(32)]
+        assert len(set(firsts)) > 10
+
+    def test_registry(self):
+        for name in ("greedy", "ucb", "ei", "thompson", "random"):
+            assert make_policy(name).select(
+                1, np.array([0.0, 1.0]), np.array([0.1, 0.1]),
+                rng=np.random.default_rng(0))
+        with pytest.raises(ValueError):
+            make_policy("nope")
+
+
+# ---------------------------------------------------------------------------
+# Scenarios
+# ---------------------------------------------------------------------------
+
+
+class TestScenarios:
+    def test_registry_and_protocol(self):
+        assert set(SCENARIOS) == {"quadratic", "multimodal", "needle", "heteroscedastic"}
+        for name in SCENARIOS:
+            sc = make_scenario(name, dim=3)
+            assert isinstance(sc, Scenario)              # runtime protocol
+            X = sc.sample(np.random.default_rng(0), 16)
+            assert X.shape == (16, 3)
+            assert np.all(X >= sc.lo) and np.all(X <= sc.hi)
+            v = sc.true_value(X[0])
+            assert np.isfinite(v)
+            assert sc.threshold < sc.optimum_value
+
+    def test_threshold_is_quantile_calibrated(self):
+        """Random search has ~the same expected hit rate everywhere."""
+        for name in SCENARIOS:
+            sc = make_scenario(name, dim=3)
+            X = sc.sample(np.random.default_rng(7), 4000)
+            rate = (sc.true_batch(X) > sc.threshold).mean()
+            assert 0.04 < rate < 0.12, (name, rate)
+
+    def test_heteroscedastic_noise_is_seeded_and_state_dependent(self):
+        sc = make_scenario("heteroscedastic", dim=3)
+        x_near = np.full(3, 0.1)
+        x_far = np.full(3, 0.9)
+        assert sc.evaluate(x_near, seed=1) == sc.evaluate(x_near, seed=1)
+        assert sc.evaluate(x_near, seed=1) != sc.evaluate(x_near, seed=2)
+        spread = lambda x: np.std([sc.evaluate(x, seed=s) for s in range(64)])
+        assert spread(x_far) > spread(x_near)            # noise grows off-optimum
+
+    def test_needle_is_deceptive(self):
+        """The broad hill's top must lie away from the global needle."""
+        sc = make_scenario("needle", dim=3)
+        hill_top = np.full(3, -0.5)
+        needle_top = np.full(3, 0.55)
+        assert sc.true_value(needle_top) > sc.true_value(hill_top)
+        # Local gradient at the hill top points away from the needle:
+        # stepping toward the needle from the hill decreases value.
+        step = hill_top + 0.3 * (needle_top - hill_top) / np.linalg.norm(needle_top - hill_top)
+        assert sc.true_value(step) < sc.true_value(hill_top)
