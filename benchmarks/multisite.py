@@ -5,28 +5,33 @@ Globus Compute + Globus Transfer (cloud-routed control, ~100 ms dispatch
 latency, >=1 s data transfer) and shows equivalent scientific output
 once ahead-of-time bulk transfer hides the latency.
 
-Here: LocalColmenaQueues (in-proc ~ Parsl) vs. PipeColmenaQueues across
-a process boundary with injected control-latency (~ Globus Compute),
-with and without manual ahead-of-time proxying of the shared model.
+Here every site is the *same* ``AppSpec`` with different backend
+fields — the portability claim the app layer exists for:
+  * ``local``            — in-process queues + threaded server (~ Parsl);
+  * ``federated``        — ``pipe`` queues, server in its own spawned
+                           process, model by value (~ Globus Compute,
+                           naive);
+  * ``federated+fabric`` — same, plus a file-connector fabric with the
+                           shared model proxied once ahead of time.
 """
 
 from __future__ import annotations
 
-import multiprocessing as mp
 import time
 from typing import Dict
 
 import numpy as np
 
-from repro.core import (
-    ConstantInflightThinker,
-    FileConnector,
-    LocalColmenaQueues,
-    PipeColmenaQueues,
-    Store,
-    TaskServer,
-    serve_forever,
+from repro.app import (
+    AppSpec,
+    ColmenaApp,
+    FabricSpec,
+    QueueSpec,
+    ServerSpec,
+    SteeringSpec,
+    TaskDef,
 )
+from repro.core import ConstantInflightThinker
 
 
 def _score(model, x) -> float:
@@ -35,31 +40,37 @@ def _score(model, x) -> float:
     return float(np.asarray(x) @ m[: len(np.asarray(x))])
 
 
-def _run(queues, work, workers=4, in_process=True, methods=None):
-    methods = methods or {"score": _score}
-    server = None
-    proc = None
-    if in_process:
-        server = TaskServer(queues, methods, n_workers=workers).start()
-    else:
-        proc = mp.get_context("spawn").Process(
-            target=serve_forever, args=(queues, methods),
-            kwargs={"n_workers": workers}, daemon=True,
-        )
-        proc.start()
-    thinker = ConstantInflightThinker(queues, work, method="score", n_parallel=workers)
-    t0 = time.monotonic()
-    thinker.run(timeout=120)
-    elapsed = time.monotonic() - t0
-    if server:
-        server.stop()
-    if proc:
-        queues.send_kill_signal()
-        proc.join(timeout=5)
-        if proc.is_alive():
-            proc.terminate()
-    ok = sum(1 for r in thinker.results if r.success)
-    lat = np.median([r.timing.total for r in thinker.results if r.timing.total])
+def _run_site(
+    backend: str,
+    in_process: bool,
+    model: np.ndarray,
+    x: np.ndarray,
+    n: int,
+    workers: int = 4,
+    fabric: FabricSpec = None,
+    proxy_model: bool = False,
+) -> Dict:
+    def steering(app):
+        payload = app.store.proxy(model) if proxy_model else model
+        work = [((payload, x), {}) for _ in range(n)]
+        return ConstantInflightThinker(app.queues, work, method="score", n_parallel=workers)
+
+    app = ColmenaApp(AppSpec(
+        tasks=[TaskDef(fn=_score, method="score")],
+        queues=QueueSpec(backend=backend),
+        pools={"default": workers},
+        server=ServerSpec(in_process=in_process),
+        fabric=fabric,
+        observe=None,
+        steering=SteeringSpec(steering),
+    ))
+    with app.run(timeout=120) as handle:
+        t0 = time.monotonic()
+        handle.wait()
+        elapsed = time.monotonic() - t0
+        results = handle.thinker.results
+    ok = sum(1 for r in results if r.success)
+    lat = np.median([r.timing.total for r in results if r.timing.total])
     return {"tasks_per_s": ok / elapsed, "median_latency_ms": lat * 1000, "ok": ok}
 
 
@@ -70,19 +81,17 @@ def main(quick: bool = True) -> Dict[str, Dict]:
     out = {}
 
     # Site A: local queues, model by value (Parsl-like single site)
-    q = LocalColmenaQueues()
-    out["local"] = _run(q, [((model, x), {}) for _ in range(n)])
+    out["local"] = _run_site("local", True, model, x, n)
 
-    # Site B: cross-process queues, model by value (federated, naive)
-    q = PipeColmenaQueues()
-    out["federated"] = _run(q, [((model, x), {}) for _ in range(n)], in_process=False)
+    # Site B: cross-process queues + server process, model by value
+    out["federated"] = _run_site("pipe", False, model, x, n)
 
     # Site C: cross-process + fabric, model proxied once ahead of time
-    store = Store("multisite", FileConnector())
-    q = PipeColmenaQueues(proxystore=store, proxy_threshold=4096)
-    model_ref = store.proxy(model)
-    out["federated+fabric"] = _run(q, [((model_ref, x), {}) for _ in range(n)],
-                                   in_process=False)
+    out["federated+fabric"] = _run_site(
+        "pipe", False, model, x, n,
+        fabric=FabricSpec(connector="file", threshold=4096),
+        proxy_model=True,
+    )
 
     for mode, r in out.items():
         print(f"multisite,{mode},{r['tasks_per_s']:.1f},{r['median_latency_ms']:.1f}")

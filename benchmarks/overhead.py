@@ -20,18 +20,11 @@ smoke job fails fast on dispatch-path regressions).
 from __future__ import annotations
 
 import pickle
-import uuid
 
 import numpy as np
 
-from repro.core import (
-    BatchPolicy,
-    FileConnector,
-    LocalColmenaQueues,
-    Store,
-    TaskServer,
-    WorkerPool,
-)
+from repro.app import AppSpec, ColmenaApp, FabricSpec, ServerSpec, TaskDef
+from repro.core import BatchPolicy
 from repro.observe import EventLog, MetricsAggregator
 
 
@@ -53,41 +46,36 @@ def run_config(
     batch: bool,
     n_workers: int = 4,
 ) -> dict:
-    warmup_log = EventLog()   # thrown away: absorbs spin-up transients
+    # Driver mode: no steering agents, the benchmark drives the queues.
     # cache_size=0: every fabric get pays the connector (disk) cost, the
     # honest stand-in for per-node fetches; only the warm-worker cache
     # (when enabled) may short-circuit it.
-    store = Store(f"ovh-{uuid.uuid4().hex[:8]}", FileConnector(), cache_size=0)
-    queues = LocalColmenaQueues(proxystore=store, event_log=warmup_log)
-    model_ref = store.proxy(payload)
-    pool = WorkerPool(
-        "default", n_workers,
-        warm_capacity=32 if warm else 0,
-        event_log=warmup_log,
-    )
-    server = TaskServer(
-        queues, {"score": _score}, pools={"default": pool},
-        batching=BatchPolicy(max_batch=8, linger_s=0.002) if batch else None,
-        event_log=warmup_log,
-    ).start()
+    app = ColmenaApp(AppSpec(
+        tasks=[TaskDef(fn=_score, method="score", batch=batch)],
+        pools={"default": n_workers},
+        fabric=FabricSpec(connector="file", cache_size=0,
+                          warm_capacity=32 if warm else 0),
+        server=ServerSpec(batching=BatchPolicy(max_batch=8, linger_s=0.002)
+                          if batch else None),
+    ))
+    with app.run(timeout=120) as handle:
+        model_ref = app.store.proxy(payload)
 
-    def run_tasks(n: int) -> list:
-        for i in range(n):
-            queues.send_inputs(_clone_proxy(model_ref), i, method="score")
-        return [queues.get_result(timeout=120) for _ in range(n)]
+        def run_tasks(n: int) -> list:
+            for i in range(n):
+                handle.queues.send_inputs(_clone_proxy(model_ref), i, method="score")
+            return [handle.queues.get_result(timeout=120) for _ in range(n)]
 
-    # Warmup: spin up worker threads, page-cache the payload file, and (in
-    # the warm config) populate the per-worker caches, so the measured
-    # phase reflects steady state for every configuration.
-    run_tasks(2 * n_workers)
-    # Rebind telemetry to a fresh log: components read ``event_log`` at
-    # emit time, so the measured phase records only measured tasks.
-    log = EventLog()
-    queues.event_log = log
-    server.event_log = log
-    pool.event_log = log
-    results = run_tasks(n_tasks)
-    server.stop()
+        # Warmup: spin up worker threads, page-cache the payload file, and
+        # (in the warm config) populate the per-worker caches, so the
+        # measured phase reflects steady state for every configuration.
+        run_tasks(2 * n_workers)
+        # Rebind telemetry to a fresh log: components read ``event_log``
+        # at emit time, so the measured phase records only measured tasks.
+        log = EventLog()
+        app.rebind_event_log(log)
+        results = run_tasks(n_tasks)
+        fabric_gets = app.store.metrics.gets
     assert all(r is not None and r.success for r in results), "benchmark tasks failed"
 
     agg = MetricsAggregator(log)
@@ -109,7 +97,7 @@ def run_config(
         "cache_hits": cache.hits,
         "cache_misses": cache.misses,
         "mean_batch_occupancy": batches.mean_occupancy,
-        "fabric_gets": store.metrics.gets,
+        "fabric_gets": fabric_gets,
     }
 
 

@@ -20,14 +20,9 @@ from typing import Dict, Tuple
 
 import numpy as np
 
-from repro.core import (
-    BatchRetrainThinker,
-    LocalColmenaQueues,
-    TaskServer,
-    WorkerPool,
-    stateful_task,
-)
-from repro.observe import EventLog, build_report, render_text, run_two_pool
+from repro.app import AppSpec, ColmenaApp, QueueSpec, SteeringSpec, TaskDef
+from repro.core import BatchRetrainThinker, stateful_task
+from repro.observe import render_text, run_two_pool
 
 
 def _sim(x, dt=0.02):
@@ -41,7 +36,7 @@ def _train(X, y, dt=0.1):
     return np.linalg.lstsq(X, y, rcond=None)[0]
 
 
-class Campaign(BatchRetrainThinker):
+class CampaignThinker(BatchRetrainThinker):
     def __init__(self, queues, dim=4, **kw):
         super().__init__(queues, **kw)
         self.dim = dim
@@ -66,22 +61,25 @@ class Campaign(BatchRetrainThinker):
 
 def run_campaign(n_workers: int = 6, max_results: int = 60):
     """Molecular-design campaign; utilization read off the event log."""
-    log = EventLog()
-    q = LocalColmenaQueues(topics=["simulate", "train"], event_log=log)
-    pool_sizes = {"simulate": n_workers - 1, "ml": 1, "default": 1}
-    pools = {name: WorkerPool(name, n) for name, n in pool_sizes.items()}
-    thinker = Campaign(q, n_slots=n_workers - 1, retrain_after=10,
-                       max_results=max_results, ml_slots=1)
-    server = TaskServer(q, {"simulate": _sim, "train": _train}, pools=pools).start()
-    thinker.run(timeout=120)
-    server.stop()
+    app = ColmenaApp(AppSpec(
+        tasks=[
+            TaskDef(fn=_sim, method="simulate", pool="simulate"),
+            TaskDef(fn=_train, method="train", pool="ml"),
+        ],
+        queues=QueueSpec(topics=("simulate", "train")),
+        pools={"simulate": n_workers - 1, "ml": 1, "default": 1},
+        steering=SteeringSpec(CampaignThinker, dict(
+            n_slots=n_workers - 1, retrain_after=10,
+            max_results=max_results, ml_slots=1)),
+    ))
+    app.execute(timeout=120)
 
-    report = build_report(log, slots_by_pool=pool_sizes)
+    report = app.observe_report()
     util = {
         "simulate": report["utilization"].get("simulate", 0.0),
         "ml": report["utilization"].get("ml", 0.0),
     }
-    return util, report, thinker.train_rounds
+    return util, report, app.thinker.train_rounds
 
 
 def reallocation_comparison(
@@ -116,18 +114,20 @@ def _fold_uncached(seq):
 
 
 def stateful_caching_ablation(n_tasks: int = 20):
-    """Fig. 5 lesson: keeping models in RAM raises task throughput."""
+    """Fig. 5 lesson: keeping models in RAM raises task throughput.
+
+    Driver mode: no steering agents — the caller drives the composed
+    queues directly."""
     rates = {}
     for mode, fn in (("cached", _fold_cached), ("uncached", _fold_uncached)):
-        q = LocalColmenaQueues()
-        server = TaskServer(q, {"fold": fn}, n_workers=2).start()
-        t0 = time.monotonic()
-        for i in range(n_tasks):
-            q.send_inputs(f"seq{i}", method="fold")
-        for _ in range(n_tasks):
-            assert q.get_result(timeout=30).success
-        rates[mode] = n_tasks / (time.monotonic() - t0)
-        server.stop()
+        app = ColmenaApp(AppSpec(tasks={"fold": fn}, pools={"default": 2}, observe=None))
+        with app.run() as handle:
+            t0 = time.monotonic()
+            for i in range(n_tasks):
+                handle.queues.send_inputs(f"seq{i}", method="fold")
+            for _ in range(n_tasks):
+                assert handle.queues.get_result(timeout=30).success
+            rates[mode] = n_tasks / (time.monotonic() - t0)
     return rates
 
 

@@ -20,14 +20,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (
-    ConstantInflightThinker,
-    InMemoryConnector,
-    LocalColmenaQueues,
-    Store,
-    TaskServer,
-    stateful_task,
-)
+from repro.app import AppSpec, ColmenaApp, FabricSpec, SteeringSpec, TaskDef
+from repro.core import ConstantInflightThinker, stateful_task
 
 _D = 64
 
@@ -53,26 +47,31 @@ def infer(model, batch, registry=None):
 
 
 def run_point(workers: int, use_fabric: bool, n_tasks: int = 32):
-    store = Store(f"ws-{workers}-{use_fabric}", InMemoryConnector())
-    queues = LocalColmenaQueues(
-        proxystore=store if use_fabric else None,
-        proxy_threshold=10_000,
-    )
     model = _make_model()
     batch = np.random.default_rng(1).standard_normal((256, _D)).astype(np.float32)
-    if use_fabric:
-        model_ref = store.proxy(model)      # manual bulk transfer, reused
-        work = [((model_ref, batch), {}) for _ in range(n_tasks)]
-    else:
-        work = [((model, batch), {}) for _ in range(n_tasks)]
 
-    server = TaskServer(queues, {"infer": infer}, n_workers=workers).start()
-    thinker = ConstantInflightThinker(queues, work, method="infer", n_parallel=workers)
-    t0 = time.monotonic()
-    thinker.run(timeout=120)
-    rate = len(thinker.results) / (time.monotonic() - t0)
-    server.stop()
-    cache_hits = store.metrics.cache_hits
+    def steering(app):
+        # Work references the composed store: the model is proxied once
+        # ahead of time (manual bulk transfer) and reused by every task.
+        if use_fabric:
+            model_ref = app.store.proxy(model)
+            work = [((model_ref, batch), {}) for _ in range(n_tasks)]
+        else:
+            work = [((model, batch), {}) for _ in range(n_tasks)]
+        return ConstantInflightThinker(app.queues, work, method="infer", n_parallel=workers)
+
+    app = ColmenaApp(AppSpec(
+        tasks=[TaskDef(fn=infer, method="infer")],
+        pools={"default": workers},
+        fabric=FabricSpec(connector="memory", threshold=10_000) if use_fabric else None,
+        observe=None,
+        steering=SteeringSpec(steering),
+    ))
+    with app.run(timeout=120) as handle:
+        t0 = time.monotonic()
+        handle.wait()
+        rate = len(handle.thinker.results) / (time.monotonic() - t0)
+        cache_hits = app.store.metrics.cache_hits if use_fabric else 0
     return rate, cache_hits
 
 

@@ -23,18 +23,16 @@ from typing import Dict, List
 
 import numpy as np
 
+from repro.app import AppSpec, ColmenaApp, SteeringSpec, TaskDef
 from repro.core import (
     BaseThinker,
-    LocalColmenaQueues,
     ResourceCounter,
     ResourceRequest,
-    TaskServer,
-    WorkerPool,
     agent,
     result_processor,
     stateful_task,
 )
-from repro.observe import EventLog, build_report, render_text, run_pool_workload
+from repro.observe import render_text, run_pool_workload
 from repro.surrogate import DeepEnsemble, EnsembleConfig, warmup_jit
 
 DIM = 2
@@ -180,23 +178,22 @@ class MDThinker(BaseThinker):
 
 
 def run(steer: bool, budget: int = 120) -> Dict:
-    log = EventLog()
-    queues = LocalColmenaQueues(event_log=log)
-    pool_sizes = {"md": 4, "ml": 1, "default": 1}
-    pools = {name: WorkerPool(name, n) for name, n in pool_sizes.items()}
-    thinker = MDThinker(queues, budget=budget, steer=steer)
-    server = TaskServer(queues, {"md_chunk": md_chunk, "train_scorer": train_scorer},
-                        pools=pools).start()
-    t0 = time.monotonic()
-    thinker.run(timeout=300)
-    wall = time.monotonic() - t0
-    server.stop()
+    app = ColmenaApp(AppSpec(
+        tasks=[
+            TaskDef(fn=md_chunk, method="md_chunk", pool="md"),
+            TaskDef(fn=train_scorer, method="train_scorer", pool="ml"),
+        ],
+        pools={"md": 4, "ml": 1, "default": 1},
+        steering=SteeringSpec(MDThinker, dict(budget=budget, steer=steer)),
+    ))
+    report = app.execute(timeout=300)
+    thinker = app.thinker
     allf = np.concatenate(thinker.frames)
     hist, _ = np.histogram(allf[:, 0], bins=48, range=(-1.8, 1.8))
     coverage = float((hist > 0).mean())
     return {"steered": steer, "transitions": thinker.transitions,
-            "coverage": coverage, "chunks": thinker.chunks_done, "wall_s": wall,
-            "report": build_report(log, slots_by_pool=pool_sizes)}
+            "coverage": coverage, "chunks": thinker.chunks_done,
+            "wall_s": report.wall_seconds, "report": app.observe_report()}
 
 
 def reallocation_demo(n_slots: int = 6, n_md: int = 60, n_ml: int = 6) -> None:

@@ -1,7 +1,9 @@
-"""Quickstart: a 60-line Colmena application.
+"""Quickstart: a 60-line Colmena application on the ``repro.app`` layer.
 
-A Thinker steers a pool of workers computing a toy property; a
-result-processor agent keeps the pipeline full and collects outputs.
+A Thinker steers a pool of workers computing a toy property; the
+platform side — queues, task server, worker pools, telemetry — is
+composed declaratively from one ``AppSpec``, so this file is agents +
+science only.
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 
@@ -9,16 +11,11 @@ import time
 
 import numpy as np
 
-from repro.core import (
-    BaseThinker,
-    LocalColmenaQueues,
-    ResourceCounter,
-    TaskServer,
-    agent,
-    result_processor,
-)
+from repro.app import AppSpec, ColmenaApp, SteeringSpec, task
+from repro.core import BaseThinker, ResourceCounter, agent, result_processor
 
 
+@task
 def simulate(x: np.ndarray) -> float:
     """An 'expensive' computation (the paper's quantum-chemistry stand-in)."""
     time.sleep(0.02)
@@ -55,14 +52,18 @@ class Quickstart(BaseThinker):
 
 
 def main():
-    queues = LocalColmenaQueues()
-    server = TaskServer(queues, {"simulate": simulate}, n_workers=4).start()
-    thinker = Quickstart(queues)
+    app = ColmenaApp(AppSpec(
+        tasks=[simulate],
+        pools={"default": 4},
+        steering=SteeringSpec(Quickstart),
+    ))
     t0 = time.monotonic()
-    thinker.run(timeout=60)
-    server.stop()
-    print(f"collected {len(thinker.samples)} results in {time.monotonic()-t0:.2f}s "
-          f"(best={max(thinker.samples):.3f})")
+    with app.run(timeout=60) as handle:
+        handle.wait()
+    samples = handle.thinker.samples
+    print(f"collected {len(samples)} results in {time.monotonic()-t0:.2f}s "
+          f"(best={max(samples):.3f})")
+    assert app.report.completed and len(samples) >= 32
 
 
 if __name__ == "__main__":

@@ -1,0 +1,36 @@
+"""repro.app — the public face of the declarative composition layer.
+
+``AppSpec`` declares a whole Colmena application (task registry, queue
+backend, data fabric, observe, steering, campaign persistence);
+``ColmenaApp`` composes and runs it. See ``repro.core.app`` for the
+implementation and the README quickstart for usage; the low-level
+constructors in ``repro.core`` remain supported underneath.
+"""
+
+from repro.core.app import (
+    AppSpec,
+    CampaignSpec,
+    ColmenaApp,
+    FabricSpec,
+    ObserveSpec,
+    ProcessTaskServer,
+    QueueSpec,
+    ServerSpec,
+    SteeringSpec,
+    TaskDef,
+    task,
+)
+
+__all__ = [
+    "AppSpec",
+    "CampaignSpec",
+    "ColmenaApp",
+    "FabricSpec",
+    "ObserveSpec",
+    "ProcessTaskServer",
+    "QueueSpec",
+    "ServerSpec",
+    "SteeringSpec",
+    "TaskDef",
+    "task",
+]

@@ -4,6 +4,11 @@ The paper's primary contribution, adapted to a TPU/JAX runtime (see
 DESIGN.md): Thinker agents steer campaigns of jitted computations through
 Task Queues and a Task Server, with a ProxyStore-style data fabric
 keeping bulk tensors off the control path.
+
+These are the low-level constructors; applications normally compose the
+stack declaratively through ``repro.app`` (``AppSpec``/``ColmenaApp`` in
+``repro.core.app``), which wires queues + server + fabric + observe +
+steering + campaign from one spec and owns the lifecycle.
 """
 
 from .executors import (

@@ -1,0 +1,718 @@
+"""repro.app — one declarative composition API for the whole stack.
+
+The paper's pitch is that scientists *only* write cooperative agents:
+the platform owns queues, dispatch, the data fabric, and telemetry.
+This module is that contract. An ``AppSpec`` declares the five
+concerns — tasks, queue backend, data fabric, observe, steering, and
+campaign persistence — and ``ColmenaApp`` composes the stack from it,
+owning the full lifecycle as a context manager::
+
+    from repro.app import AppSpec, ColmenaApp, SteeringSpec, task
+
+    @task                       # registry: method name, pool, batching
+    def simulate(x):
+        return expensive(x)
+
+    app = ColmenaApp(AppSpec(
+        tasks=[simulate],
+        pools={"default": 4},
+        steering=SteeringSpec(MyThinker, dict(n_total=32)),
+    ))
+    with app.run(timeout=60) as handle:
+        handle.wait()
+    print(handle.report.completed, handle.observe_report()["makespan_s"])
+
+Everything the app composes stays reachable (``handle.thinker``,
+``handle.queues``, ``handle.store``, ``handle.event_log``), and the
+low-level constructors (``LocalColmenaQueues`` + ``TaskServer`` +
+``Campaign`` by hand) keep working — the app layer is sugar over them,
+not a fork.
+
+Lifecycle guarantees:
+  * **ordered start** — resume campaign state, start the task server,
+    start the adaptive reallocator, then launch the steering agents;
+  * **ordered drain/stop** — stop steering, final campaign checkpoint,
+    kill the server's request loop, stop the reallocator and worker
+    pools, release fabric resources;
+  * **crash containment** — an agent exception is captured, the stack
+    is still torn down in order, and the exception re-raises when the
+    ``with`` block exits;
+  * **idempotency** — double start and double stop are no-ops; a
+    stopped app refuses to restart (build a new one from the same
+    spec);
+  * **resume** — a new ``ColmenaApp`` over the same ``CampaignSpec``
+    state dir resumes the steering state from the latest checkpoint.
+"""
+
+from __future__ import annotations
+
+import multiprocessing
+import threading
+import time
+import uuid
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple, Union
+
+from .campaign import Campaign, CampaignReport
+from .executors import FailureInjector, WorkerPool, stateful_task
+from .proxystore import Store, connector_from_spec
+from .queues import ColmenaQueues, LocalColmenaQueues, PipeColmenaQueues
+from .result import ResourceRequest
+from .task_server import BatchPolicy, RetryPolicy, ServerMetrics, StragglerPolicy, TaskServer, serve_forever
+from .thinker import BaseThinker
+
+__all__ = [
+    "AppSpec",
+    "CampaignSpec",
+    "ColmenaApp",
+    "FabricSpec",
+    "ObserveSpec",
+    "ProcessTaskServer",
+    "QueueSpec",
+    "ServerSpec",
+    "SteeringSpec",
+    "TaskDef",
+    "task",
+]
+
+
+# --------------------------------------------------------------------------
+# Task registry
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class TaskDef:
+    """One entry of the app's task registry.
+
+    ``pool``/``timeout_s`` become the method's default ``ResourceRequest``
+    (explicit per-submission requests still win); ``batch`` opts the
+    method into the server's batched-dispatch path.
+    """
+
+    fn: Callable
+    method: Optional[str] = None
+    pool: str = "default"
+    timeout_s: Optional[float] = None
+    batch: bool = False
+
+    def __post_init__(self) -> None:
+        if self.method is None:
+            self.method = getattr(self.fn, "__name__", None)
+        if not self.method:
+            raise ValueError("TaskDef needs a method name")
+
+    def resources(self) -> ResourceRequest:
+        return ResourceRequest(pool=self.pool, timeout_s=self.timeout_s)
+
+
+def task(
+    fn: Optional[Callable] = None,
+    *,
+    method: Optional[str] = None,
+    pool: str = "default",
+    timeout_s: Optional[float] = None,
+    batch: bool = False,
+    stateful: bool = False,
+):
+    """Decorator form of :class:`TaskDef`: registers the function for
+    ``AppSpec.tasks``. ``stateful=True`` additionally injects the
+    worker registry (``repro.core.stateful_task``)."""
+
+    def deco(f: Callable) -> Callable:
+        if stateful:
+            f = stateful_task(f)
+        f._colmena_taskdef = TaskDef(
+            fn=f, method=method, pool=pool, timeout_s=timeout_s, batch=batch
+        )
+        return f
+
+    return deco(fn) if fn is not None else deco
+
+
+def _as_taskdef(obj: Any) -> TaskDef:
+    if isinstance(obj, TaskDef):
+        return obj
+    td = getattr(obj, "_colmena_taskdef", None)
+    if td is not None:
+        return td
+    if callable(obj):
+        return TaskDef(fn=obj)
+    raise TypeError(f"cannot interpret {obj!r} as a task (use @task or TaskDef)")
+
+
+# --------------------------------------------------------------------------
+# Specs
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class QueueSpec:
+    """Control-channel backend: ``local`` (in-process ``queue.Queue``) or
+    ``pipe`` (multiprocessing queues with metered serialization — the
+    paper's Redis deployment shape). Porting an app between them is this
+    one field."""
+
+    backend: str = "local"
+    topics: Sequence[str] = ("default",)
+
+    def __post_init__(self) -> None:
+        if self.backend not in ("local", "pipe"):
+            raise ValueError(f"unknown queue backend {self.backend!r}")
+
+
+@dataclass
+class FabricSpec:
+    """ProxyStore data fabric: which connector carries bulk payloads,
+    the auto-proxy threshold, and the worker-side caching knobs."""
+
+    connector: Any = "memory"          # kind str | spec dict | Connector
+    threshold: int = 10_000_000        # auto-proxy bound (10 MB in the paper)
+    prefetch: bool = True              # overlap fabric I/O with compute
+    warm_capacity: int = 32            # per-worker warm cache (0 disables)
+    cache_size: int = 16               # store-level client cache
+    store_name: Optional[str] = None   # default: unique per app
+
+
+@dataclass
+class ObserveSpec:
+    """Telemetry + the adaptive-reallocation loop. ``log`` adopts an
+    existing ``EventLog`` (merged traces across apps); otherwise one is
+    created. ``reallocator`` is ``"greedy"``/``"ema"`` or a
+    ``ReallocationPolicy`` instance; it steers the *thinker's*
+    ``ResourceCounter`` and needs a steering spec."""
+
+    log: Optional[Any] = None           # repro.observe.EventLog
+    jsonl_path: Optional[str] = None
+    capacity: int = 1 << 16
+    reallocator: Optional[Any] = None   # "greedy" | "ema" | policy object
+    realloc_interval: float = 0.02
+    realloc_min_slots: Optional[Dict[str, int]] = None
+
+
+@dataclass
+class SteeringSpec:
+    """The steering agents. ``thinker`` is a ``BaseThinker`` subclass
+    (instantiated as ``cls(queues, **kwargs)``) or a factory
+    ``f(app, **kwargs) -> BaseThinker`` for thinkers whose inputs need
+    composed pieces (e.g. work lists proxied through ``app.store``).
+    ``steering=None`` on the spec is driver mode: no agents, the caller
+    drives ``handle.queues`` directly."""
+
+    thinker: Any
+    kwargs: Dict[str, Any] = field(default_factory=dict)
+
+    def build(self, app: "ColmenaApp") -> BaseThinker:
+        if isinstance(self.thinker, type) and issubclass(self.thinker, BaseThinker):
+            return self.thinker(app.queues, **self.kwargs)
+        if callable(self.thinker):
+            return self.thinker(app, **self.kwargs)
+        raise TypeError("SteeringSpec.thinker must be a BaseThinker subclass or factory")
+
+
+@dataclass
+class CampaignSpec:
+    """Campaign persistence: periodic checkpoints into ``state_dir`` and
+    resume-from-latest through the same entry point."""
+
+    state_dir: str
+    checkpoint_interval_s: float = 5.0
+    name: str = "campaign"
+    resume: bool = True
+
+
+@dataclass
+class ServerSpec:
+    """Task-server policies. ``in_process=False`` (pipe backend only)
+    runs the server in its own spawned process — the paper's federated
+    deployment shape; it requires picklable task functions and the
+    single default pool."""
+
+    in_process: bool = True
+    batching: Optional[BatchPolicy] = None   # explicit policy wins
+    max_batch: int = 8
+    linger_s: float = 0.002
+    retry: Optional[RetryPolicy] = None
+    straggler: Optional[StragglerPolicy] = None
+    heartbeat_timeout_s: float = 10.0
+    injector: Optional[FailureInjector] = None
+
+
+@dataclass
+class AppSpec:
+    """Everything a Colmena application is, declaratively."""
+
+    tasks: Sequence[Any]
+    steering: Optional[SteeringSpec] = None
+    queues: Union[str, QueueSpec] = "local"
+    pools: Optional[Mapping[str, int]] = None     # worker slots per pool
+    fabric: Optional[FabricSpec] = None
+    observe: Optional[ObserveSpec] = field(default_factory=ObserveSpec)
+    campaign: Optional[CampaignSpec] = None
+    server: ServerSpec = field(default_factory=ServerSpec)
+
+    def __post_init__(self) -> None:
+        if isinstance(self.tasks, Mapping):
+            self.tasks = [TaskDef(fn=fn, method=m) for m, fn in self.tasks.items()]
+        if isinstance(self.queues, str):
+            self.queues = QueueSpec(backend=self.queues)
+        if isinstance(self.steering, type) and issubclass(self.steering, BaseThinker):
+            self.steering = SteeringSpec(self.steering)
+        if self.campaign is not None and self.steering is None:
+            raise ValueError("a campaign spec needs a steering spec (checkpoint state lives on the thinker)")
+        if (
+            self.steering is None
+            and self.observe is not None
+            and self.observe.reallocator is not None
+        ):
+            raise ValueError(
+                "an adaptive reallocator needs a steering spec (it moves the thinker's slots)"
+            )
+        if not self.server.in_process and self.queues.backend != "pipe":
+            raise ValueError("a separate server process needs the 'pipe' queue backend")
+
+
+# --------------------------------------------------------------------------
+# Process-mode task server (federated shape)
+# --------------------------------------------------------------------------
+
+
+class ProcessTaskServer:
+    """Drop-in ``TaskServer`` stand-in running ``serve_forever`` in a
+    spawned process (the multi-site deployments of Fig. 4). Metrics are
+    process-local to the server and therefore empty on this side."""
+
+    def __init__(
+        self,
+        queues: ColmenaQueues,
+        methods: Dict[str, Callable],
+        n_workers: int = 4,
+        **server_kwargs: Any,
+    ) -> None:
+        self.queues = queues
+        self.methods = dict(methods)
+        self.n_workers = n_workers
+        self.server_kwargs = server_kwargs
+        self.metrics = ServerMetrics()
+        self._proc: Optional[multiprocessing.process.BaseProcess] = None
+
+    def start(self) -> "ProcessTaskServer":
+        if self._proc is not None:
+            return self
+        ctx = multiprocessing.get_context("spawn")
+        self._proc = ctx.Process(
+            target=serve_forever,
+            args=(self.queues, self.methods),
+            kwargs={"n_workers": self.n_workers, **self.server_kwargs},
+            daemon=True,
+            name="colmena-task-server",
+        )
+        self._proc.start()
+        return self
+
+    def stop(self) -> None:
+        proc, self._proc = self._proc, None
+        if proc is None:
+            return
+        try:
+            self.queues.send_kill_signal()
+        except Exception:  # noqa: BLE001 - the process is terminated below
+            pass
+        proc.join(timeout=5)
+        if proc.is_alive():
+            proc.terminate()
+            proc.join(timeout=2)
+
+
+# --------------------------------------------------------------------------
+# The app
+# --------------------------------------------------------------------------
+
+
+class AppHandle:
+    """What ``ColmenaApp.run()`` hands the ``with`` body: the composed
+    pieces plus ``wait``. Exiting the block drains and stops the stack
+    in order and re-raises any agent crash."""
+
+    def __init__(self, app: "ColmenaApp", timeout: Optional[float]) -> None:
+        self.app = app
+        self._timeout = timeout
+
+    def __enter__(self) -> "AppHandle":
+        self.app.start(timeout=self._timeout)
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        self.app.stop()
+        if exc_type is None and self.app.thinker_exception is not None:
+            raise self.app.thinker_exception
+        return False
+
+    # -- delegation ----------------------------------------------------------
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        return self.app.wait(timeout)
+
+    def observe_report(self) -> dict:
+        return self.app.observe_report()
+
+    @property
+    def thinker(self) -> Optional[BaseThinker]:
+        return self.app.thinker
+
+    @property
+    def queues(self) -> ColmenaQueues:
+        return self.app.queues
+
+    @property
+    def event_log(self) -> Optional[Any]:
+        return self.app.event_log
+
+    @property
+    def store(self) -> Optional[Store]:
+        return self.app.store
+
+    @property
+    def server(self) -> Any:
+        return self.app.server
+
+    @property
+    def report(self) -> Optional[CampaignReport]:
+        return self.app.report
+
+
+class ColmenaApp:
+    """Compose queues, fabric, server, observe, steering, and campaign
+    from one :class:`AppSpec`; own their ordered lifecycle."""
+
+    def __init__(self, spec: AppSpec) -> None:
+        self.spec = spec
+        self.taskdefs: List[TaskDef] = [_as_taskdef(t) for t in spec.tasks]
+        methods = [td.method for td in self.taskdefs]
+        dupes = {m for m in methods if methods.count(m) > 1}
+        if dupes:
+            raise ValueError(f"duplicate task methods: {sorted(dupes)}")
+
+        # Composed pieces (populated by build()).
+        self.event_log: Optional[Any] = None
+        self.store: Optional[Store] = None
+        self.queues: Optional[ColmenaQueues] = None
+        self.pools: Dict[str, WorkerPool] = {}
+        self.pool_sizes: Dict[str, int] = {}
+        self.server: Any = None
+        self.thinker: Optional[BaseThinker] = None
+        self.reallocator: Optional[Any] = None
+        self.campaign: Optional[Campaign] = None
+        self.report: Optional[CampaignReport] = None
+
+        self._built = False
+        self._started = False
+        self._stopped = False
+        self._owns_log = False
+        self._lifecycle_lock = threading.Lock()
+        self._thinker_thread: Optional[threading.Thread] = None
+        self._thinker_exc: Optional[BaseException] = None
+        self._ckpt_stop: Optional[threading.Event] = None
+        self._ckpt_thread: Optional[threading.Thread] = None
+        self._t0: Optional[float] = None
+
+    # ------------------------------------------------------------------ build
+    def build(self) -> "ColmenaApp":
+        """Compose the stack (idempotent; ``start`` calls it for you)."""
+        if self._built:
+            return self
+        spec = self.spec
+
+        # Observe first: every later component is born instrumented.
+        if spec.observe is not None:
+            if spec.observe.log is not None:
+                self.event_log = spec.observe.log
+            else:
+                from repro.observe import EventLog
+
+                self.event_log = EventLog(
+                    capacity=spec.observe.capacity, jsonl_path=spec.observe.jsonl_path
+                )
+                self._owns_log = True
+
+        # Data fabric.
+        if spec.fabric is not None:
+            name = spec.fabric.store_name or f"app-{uuid.uuid4().hex[:8]}"
+            self.store = Store(
+                name,
+                connector_from_spec(spec.fabric.connector),
+                cache_size=spec.fabric.cache_size,
+            )
+
+        # Queues.
+        qspec = spec.queues
+        qcls = LocalColmenaQueues if qspec.backend == "local" else PipeColmenaQueues
+        self.queues = qcls(
+            topics=qspec.topics,
+            proxystore=self.store,
+            proxy_threshold=spec.fabric.threshold if spec.fabric else 10_000_000,
+            event_log=self.event_log,
+        )
+
+        # Worker pools: declared sizes, plus every pool a task names.
+        self.pool_sizes = dict(spec.pools or {"default": 4})
+        self.pool_sizes.setdefault("default", 1)
+        for td in self.taskdefs:
+            self.pool_sizes.setdefault(td.pool, 1)
+
+        methods = {td.method: td.fn for td in self.taskdefs}
+        method_resources = {
+            td.method: td.resources()
+            for td in self.taskdefs
+            if td.pool != "default" or td.timeout_s is not None
+        }
+        batching = spec.server.batching
+        if batching is None:
+            batch_methods = tuple(td.method for td in self.taskdefs if td.batch)
+            if batch_methods:
+                batching = BatchPolicy(
+                    max_batch=spec.server.max_batch,
+                    linger_s=spec.server.linger_s,
+                    methods=batch_methods,
+                )
+
+        # Task server: in-process threads, or a spawned process (pipe).
+        if spec.server.in_process:
+            warm = spec.fabric.warm_capacity if spec.fabric else 32
+            prefetch = spec.fabric.prefetch if spec.fabric else True
+            self.pools = {
+                name: WorkerPool(
+                    name,
+                    n,
+                    injector=spec.server.injector,
+                    prefetch_proxies=prefetch,
+                    warm_capacity=warm,
+                    event_log=self.event_log,
+                )
+                for name, n in self.pool_sizes.items()
+            }
+            self.server = TaskServer(
+                self.queues,
+                methods,
+                pools=self.pools,
+                retry=spec.server.retry,
+                straggler=spec.server.straggler,
+                batching=batching,
+                heartbeat_timeout_s=spec.server.heartbeat_timeout_s,
+                event_log=self.event_log,
+                method_resources=method_resources,
+            )
+        else:
+            if set(self.pool_sizes) != {"default"}:
+                raise ValueError(
+                    "a separate server process supports only the 'default' pool "
+                    f"(got {sorted(self.pool_sizes)}); worker pools cannot cross processes"
+                )
+            if spec.fabric is not None and (
+                spec.fabric.warm_capacity != FabricSpec.warm_capacity
+                or spec.fabric.prefetch is not FabricSpec.prefetch
+            ):
+                # The spawned server builds its own default WorkerPool;
+                # refusing beats silently ignoring the declared knobs.
+                raise ValueError(
+                    "FabricSpec worker-cache knobs (warm_capacity/prefetch) cannot "
+                    "cross the process boundary; use the in-process server"
+                )
+            self.server = ProcessTaskServer(
+                self.queues,
+                methods,
+                n_workers=self.pool_sizes["default"],
+                batching=batching,
+                retry=spec.server.retry,
+                straggler=spec.server.straggler,
+                injector=spec.server.injector,
+                heartbeat_timeout_s=spec.server.heartbeat_timeout_s,
+                method_resources=method_resources,
+            )
+
+        # Steering agents + the loops that ride on them.
+        if spec.steering is not None:
+            self.thinker = spec.steering.build(self)
+            if self.event_log is not None:
+                self.thinker.rec.event_log = self.event_log
+            if spec.observe is not None and spec.observe.reallocator is not None:
+                self.reallocator = self._build_reallocator(spec.observe)
+        if spec.campaign is not None:
+            self.campaign = Campaign(
+                self.thinker,
+                self.server,
+                state_dir=spec.campaign.state_dir,
+                checkpoint_interval_s=spec.campaign.checkpoint_interval_s,
+                name=spec.campaign.name,
+            )
+
+        self._built = True
+        return self
+
+    def _build_reallocator(self, ospec: ObserveSpec) -> Any:
+        from repro.observe import (
+            AdaptiveReallocator,
+            EMABacklogPolicy,
+            GreedyBacklogPolicy,
+            MetricsAggregator,
+        )
+
+        policy = ospec.reallocator
+        if policy == "greedy":
+            policy = GreedyBacklogPolicy()
+        elif policy == "ema":
+            policy = EMABacklogPolicy()
+        if self.event_log is None:
+            raise ValueError("the adaptive reallocator needs an event log (observe spec)")
+        return AdaptiveReallocator(
+            self.thinker.rec,
+            policy=policy,
+            metrics=MetricsAggregator(self.event_log),
+            interval=ospec.realloc_interval,
+            min_slots=ospec.realloc_min_slots,
+            event_log=self.event_log,
+        )
+
+    # -------------------------------------------------------------- lifecycle
+    def run(self, timeout: Optional[float] = None) -> AppHandle:
+        """Context-managed run: ``with app.run() as handle: ...``."""
+        return AppHandle(self, timeout)
+
+    def execute(self, timeout: Optional[float] = None) -> CampaignReport:
+        """Blocking convenience: start, wait for steering, stop, report."""
+        with self.run(timeout=timeout) as handle:
+            handle.wait()
+        return self.report
+
+    def start(self, timeout: Optional[float] = None) -> "ColmenaApp":
+        """Ordered start (idempotent): resume -> server -> reallocator ->
+        checkpoints -> steering agents."""
+        with self._lifecycle_lock:
+            if self._stopped:
+                raise RuntimeError("this ColmenaApp already ran; build a new one from the spec")
+            if self._started:
+                return self
+            self._started = True
+        self.build()
+        self._t0 = time.monotonic()
+        if self.campaign is not None and self.spec.campaign.resume:
+            self.campaign.try_resume()
+        self.server.start()
+        if self.reallocator is not None:
+            self.reallocator.start()
+        if self.campaign is not None:
+            self._ckpt_stop = threading.Event()
+            self._ckpt_thread = threading.Thread(
+                target=self.campaign.checkpoint_loop,
+                args=(self._ckpt_stop,),
+                daemon=True,
+                name="app-campaign-ckpt",
+            )
+            self._ckpt_thread.start()
+        if self.thinker is not None:
+            self._thinker_thread = threading.Thread(
+                target=self._drive_thinker, args=(timeout,), daemon=True, name="app-thinker"
+            )
+            self._thinker_thread.start()
+        return self
+
+    def _drive_thinker(self, timeout: Optional[float]) -> None:
+        try:
+            self.thinker.run(timeout=timeout)
+        except BaseException as exc:  # noqa: BLE001 - re-raised at stop/exit
+            self._thinker_exc = exc
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        """Block until the steering agents finish (True) or ``timeout``
+        elapses (False). Driver mode returns immediately."""
+        t = self._thinker_thread
+        if t is None:
+            return True
+        t.join(timeout)
+        return not t.is_alive()
+
+    @property
+    def thinker_exception(self) -> Optional[BaseException]:
+        """The contained agent crash, if any (re-raised on context exit)."""
+        return self._thinker_exc
+
+    def stop(self) -> Optional[CampaignReport]:
+        """Ordered drain/stop (idempotent): steering -> final checkpoint
+        -> kill signal -> reallocator -> server -> fabric. Returns the
+        run report."""
+        with self._lifecycle_lock:
+            # Stop before start is a pure no-op (it must not poison a
+            # later start); stop after stop returns the cached report.
+            if self._stopped or not self._started:
+                return self.report
+            self._stopped = True
+        # Every step below is guarded: stop() must complete (and not mask
+        # the original error) even when start() failed mid-build and only
+        # part of the stack exists.
+        if self.thinker is not None:
+            self.thinker.done.set()
+        if self._thinker_thread is not None:
+            self._thinker_thread.join(timeout=10)
+        if self._ckpt_stop is not None:
+            self._ckpt_stop.set()
+            if self._ckpt_thread is not None:
+                self._ckpt_thread.join(timeout=2)
+        if self.campaign is not None:
+            self.campaign.final_checkpoint()
+        if self.queues is not None:
+            try:
+                self.queues.send_kill_signal()
+            except Exception:  # noqa: BLE001 - server.stop() below is the backstop
+                pass
+        if self.reallocator is not None:
+            self.reallocator.stop()
+        if self.server is not None:
+            self.server.stop()
+        if self.store is not None:
+            try:
+                self.store.close()
+            except Exception:  # noqa: BLE001 - teardown must complete
+                pass
+        if self._owns_log and self.event_log is not None:
+            self.event_log.close()
+        completed = (
+            self._thinker_exc is None
+            and self.server is not None
+            and (self._thinker_thread is None or not self._thinker_thread.is_alive())
+        )
+        self.report = CampaignReport(
+            completed=completed,
+            wall_seconds=(time.monotonic() - self._t0) if self._t0 else 0.0,
+            checkpoints_written=self.campaign.checkpoints_written if self.campaign else 0,
+            resumed_from=self.campaign._resumed_from if self.campaign else None,
+            server_metrics=dict(self.server.metrics.__dict__) if self.server else {},
+            queue_metrics=dict(self.queues.metrics.__dict__) if self.queues else {},
+        )
+        return self.report
+
+    # ---------------------------------------------------------------- observe
+    def rebind_event_log(self, log: Any) -> Any:
+        """Point every composed component at a fresh event log (components
+        read ``event_log`` at emit time). Returns the previous log. Used
+        by benchmarks that separate a warm-up phase from the measured
+        phase without tearing the stack down."""
+        prev, self.event_log = self.event_log, log
+        self._owns_log = False
+        if self.queues is not None:
+            self.queues.event_log = log
+        if hasattr(self.server, "event_log"):
+            self.server.event_log = log
+        for pool in self.pools.values():
+            pool.event_log = log
+        if self.thinker is not None:
+            self.thinker.rec.event_log = log
+        if self.reallocator is not None:
+            self.reallocator.rebind_event_log(log)
+        return prev
+
+    def observe_report(self) -> dict:
+        """The composed utilization/steering report over the event log."""
+        if self.event_log is None:
+            return {}
+        from repro.observe import build_report
+
+        return build_report(self.event_log, slots_by_pool=dict(self.pool_sizes))

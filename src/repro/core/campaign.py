@@ -86,10 +86,13 @@ class Campaign:
             pickle.dump(record, f, protocol=pickle.HIGHEST_PROTOCOL)
         os.replace(tmp, path)  # atomic publish
         self.checkpoints_written += 1
-        # retain last 3 checkpoints
-        for old in range(step - 3):
+        # Retain the last 4 checkpoints: exactly one step expires per
+        # write, so remove just it — not every step since the campaign
+        # began (which was O(n^2) unlink attempts over a long run).
+        expired = step - 4
+        if expired >= 0:
             try:
-                os.remove(self._ckpt_path(old))
+                os.remove(self._ckpt_path(expired))
             except FileNotFoundError:
                 pass
         return path
@@ -112,9 +115,39 @@ class Campaign:
         set_state = getattr(self.thinker, "set_state", None)
         if callable(set_state):
             set_state(record["thinker_state"])
+        # Continue the step numbering past the resumed checkpoint so new
+        # checkpoints never overwrite surviving history.
+        prefix = f"{self.name}-state-"
+        stem = os.path.basename(path)
+        try:
+            self.checkpoints_written = int(stem[len(prefix):-len(".pkl")]) + 1
+        except ValueError:
+            pass
         self._resumed_from = path
         logger.info("campaign resumed from %s", path)
         return True
+
+    def checkpoint_loop(self, stop: threading.Event) -> None:
+        """Write periodic checkpoints until ``stop`` is set. Failures are
+        logged, never raised — checkpointing must not kill the run. Used
+        by ``run`` and reused by ``repro.app.ColmenaApp``."""
+        while not stop.is_set():
+            stop.wait(self.checkpoint_interval_s)
+            if stop.is_set():
+                break
+            try:
+                self.checkpoint()
+            except Exception:  # noqa: BLE001
+                logger.exception("campaign checkpoint failed")
+
+    def final_checkpoint(self) -> None:
+        """Best-effort last checkpoint at shutdown."""
+        if not self.state_dir:
+            return
+        try:
+            self.checkpoint()
+        except Exception:  # noqa: BLE001
+            logger.exception("final campaign checkpoint failed")
 
     # ------------------------------------------------------------------ run
     def run(self, timeout: Optional[float] = None, resume: bool = True) -> CampaignReport:
@@ -124,20 +157,11 @@ class Campaign:
         self.server.start()
 
         stop_ckpt = threading.Event()
-
-        def _ckpt_loop() -> None:
-            while not stop_ckpt.is_set():
-                stop_ckpt.wait(self.checkpoint_interval_s)
-                if stop_ckpt.is_set():
-                    break
-                try:
-                    self.checkpoint()
-                except Exception:  # noqa: BLE001 - checkpointing must not kill the run
-                    logger.exception("campaign checkpoint failed")
-
         ckpt_thread = None
         if self.state_dir:
-            ckpt_thread = threading.Thread(target=_ckpt_loop, daemon=True, name="campaign-ckpt")
+            ckpt_thread = threading.Thread(
+                target=self.checkpoint_loop, args=(stop_ckpt,), daemon=True, name="campaign-ckpt"
+            )
             ckpt_thread.start()
 
         completed = False
@@ -148,11 +172,7 @@ class Campaign:
             stop_ckpt.set()
             if ckpt_thread:
                 ckpt_thread.join(timeout=2)
-            if self.state_dir:
-                try:
-                    self.checkpoint()  # final state
-                except Exception:  # noqa: BLE001
-                    logger.exception("final campaign checkpoint failed")
+            self.final_checkpoint()
             self.queues_kill()
             self.server.stop()
 

@@ -261,11 +261,18 @@ class SharedMemoryConnector(Connector):
         return {"kind": self.name, "prefix": self.prefix}
 
 
-def connector_from_spec(spec: dict) -> Connector:
+def connector_from_spec(spec) -> Connector:
+    """Build a connector from a spec dict, a bare kind string (declarative
+    shorthand used by ``repro.app``), or an already-built ``Connector``
+    (returned as-is)."""
+    if isinstance(spec, Connector):
+        return spec
+    if isinstance(spec, str):
+        spec = {"kind": spec}
     if spec["kind"] == "memory":
         return InMemoryConnector()
     if spec["kind"] == "file":
-        return FileConnector(spec["root"])
+        return FileConnector(spec.get("root"))
     if spec["kind"] == "shm":
         return SharedMemoryConnector(spec.get("prefix", "repro"))
     raise ValueError(f"unknown connector kind {spec['kind']!r}")
@@ -369,6 +376,16 @@ class Store:
     def clear_cache(self) -> None:
         with self._lock:
             self._cache.clear()
+
+    def close(self) -> None:
+        """Drop the client cache and release connector resources (e.g.
+        shared-memory segments). Connectors without a ``close`` are
+        left untouched; the store stays registered (keys resolve until
+        the connector is gone)."""
+        self.clear_cache()
+        close = getattr(self.connector, "close", None)
+        if callable(close):
+            close()
 
     # Stores ride into server processes inside queue configs; locks and
     # the worker-side cache are per-process.

@@ -42,6 +42,11 @@ class KillSignal(Exception):
 
 _KILL = "__COLMENA_KILL__"
 
+# Client-side shutdown sentinel: pushed onto result/notice queues when a
+# Thinker shuts down so result processors blocked in ``get_result`` /
+# ``get_completion`` wake instantly instead of lagging a pop timeout.
+_WAKE = "__COLMENA_WAKE__"
+
 
 @dataclass
 class CompletionNotice:
@@ -179,11 +184,31 @@ class ColmenaQueues:
             self.metrics.tasks_sent += 1
         return result.task_id
 
+    def _pop_typed(self, pop, topic: str, timeout: Optional[float], want: type) -> Any:
+        """Pop until a ``want`` instance arrives. A shutdown wake sentinel
+        returns None immediately on a *blocking* pop (that is its job:
+        unblock a result processor so it can re-check ``done``); on a
+        bounded pop a leftover sentinel is discarded and the pop retries
+        for the remaining timeout, so late drains never mistake a stale
+        sentinel for an empty queue."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while True:
+            payload = pop(topic, timeout)
+            if payload is None:
+                return None
+            item = self._decode(payload)
+            if isinstance(item, want):
+                return item
+            if deadline is None:  # blocking pop: the sentinel is the wakeup
+                return None
+            timeout = deadline - time.monotonic()
+            if timeout <= 0:
+                return None
+
     def get_result(self, topic: str = "default", timeout: Optional[float] = None) -> Optional[Result]:
-        payload = self._pop_result(topic, timeout)
-        if payload is None:
+        result = self._pop_typed(self._pop_result, topic, timeout, Result)
+        if result is None:
             return None
-        result: Result = self._decode(payload)
         result.mark("result_received")
         self._emit("result_received", result, success=bool(result.success))
         result.finalize_timings()
@@ -192,10 +217,24 @@ class ColmenaQueues:
         return result
 
     def get_completion(self, topic: str = "default", timeout: Optional[float] = None) -> Optional[CompletionNotice]:
-        payload = self._pop_notice(topic, timeout)
-        if payload is None:
-            return None
-        return self._decode(payload)
+        return self._pop_typed(self._pop_notice, topic, timeout, CompletionNotice)
+
+    def wake_result_waiters(self, counts: Dict[tuple, int]) -> None:
+        """Push shutdown sentinels for blocked result-processor pops.
+
+        ``counts`` maps ``(topic, on)`` — ``on`` in {"result",
+        "completion"} — to the number of consumers that may be blocked on
+        that queue. Each consumer re-checks its ``done`` flag after any
+        pop, so one sentinel per consumer makes shutdown instant without
+        a pop timeout; unconsumed sentinels are inert (``get_result`` /
+        ``get_completion`` filter them out).
+        """
+        for (topic, on), n in counts.items():
+            if topic not in self.topics:
+                continue
+            push = self._push_result if on == "result" else self._push_notice
+            for _ in range(max(0, n)):
+                push(topic, self._encode(_WAKE))
 
     def send_kill_signal(self) -> None:
         self._push_request(_KILL)

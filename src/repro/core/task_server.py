@@ -37,7 +37,7 @@ from typing import Callable, Dict, List, Optional
 
 from .executors import FailureInjector, WorkerPool
 from .queues import ColmenaQueues, KillSignal
-from .result import FailureKind, Result
+from .result import FailureKind, ResourceRequest, Result
 
 logger = logging.getLogger("repro.task_server")
 
@@ -109,9 +109,13 @@ class TaskServer:
         heartbeat_timeout_s: float = 10.0,
         replace_dead_workers: bool = True,
         event_log: Optional[object] = None,  # repro.observe.EventLog (duck-typed)
+        method_resources: Optional[Dict[str, "ResourceRequest"]] = None,
     ) -> None:
         self.queues = queues
         self.methods = dict(methods)
+        # Per-method resource defaults (the repro.app task registry):
+        # requests that left pool/timeout unset inherit the method's.
+        self.method_resources = dict(method_resources or {})
         self.pools = pools or {"default": WorkerPool("default", n_workers, injector=injector)}
         # Telemetry: default to the queues' log so one wiring point covers
         # the whole lifecycle; pools without their own log inherit it.
@@ -174,6 +178,8 @@ class TaskServer:
             if not tasks:
                 continue
             self.metrics.tasks_received += len(tasks)
+            for task in tasks:
+                self._apply_method_resources(task)
             if bp is None:
                 self._dispatch(tasks[0])
                 continue
@@ -188,6 +194,22 @@ class TaskServer:
                     self._dispatch(task)
             for group in groups.values():
                 self._dispatch_batch(group)
+
+    def _apply_method_resources(self, task: Result) -> None:
+        """Fill unset resource fields from the method's registered default
+        (``repro.app``'s ``@task(pool=..., timeout_s=...)``). A request
+        naming any non-default pool (or any timeout) wins; ``pool=
+        "default"`` is indistinguishable from unset and inherits the
+        registry's pool — register a method under ``pool="default"`` if
+        its tasks must be routable there."""
+        default = self.method_resources.get(task.method)
+        if default is None:
+            return
+        r = task.resources
+        if r.pool == "default" and default.pool != "default":
+            r.pool = default.pool
+        if r.timeout_s is None and default.timeout_s is not None:
+            r.timeout_s = default.timeout_s
 
     def _dispatch_batch(self, batch: List[Result]) -> None:
         """One worker round-trip for several same-method tasks."""

@@ -36,14 +36,12 @@ from .result import Result
 logger = logging.getLogger("repro.thinker")
 
 # Fallback poll granularity, used only when a waiter is given a plain
-# ``threading.Event`` it cannot subscribe to. Thinker-internal waits use
-# ``WakeEvent`` condition wakeups and burn no CPU while idle.
+# ``threading.Event`` it cannot subscribe to, or when the queues lack the
+# wake-sentinel API. Thinker-internal waits use ``WakeEvent`` condition
+# wakeups and burn no CPU while idle; result processors block inside
+# ``queue.get`` and are woken by per-topic sentinels on ``done.set()``.
 _POLL_S = 0.02
-
-# Result-processor pops block inside ``queue.get`` (an OS-level wait, not
-# a busy-poll); this timeout only bounds how long shutdown can lag a
-# ``done.set()`` that cannot interrupt the blocking pop.
-_GETTER_TIMEOUT_S = 0.2
+_FALLBACK_GETTER_TIMEOUT_S = 0.2
 
 
 # --------------------------------------------------------------------------
@@ -65,6 +63,7 @@ class WakeEvent(threading.Event):
         super().__init__()
         self._watch_lock = threading.Lock()
         self._watched: List[threading.Condition] = []
+        self._on_set: List[Callable[[], None]] = []
 
     def watch(self, cond: threading.Condition) -> None:
         """Have ``set()`` notify ``cond``. Call before checking
@@ -79,13 +78,29 @@ class WakeEvent(threading.Event):
             except ValueError:
                 pass
 
-    def set(self) -> None:  # noqa: A003 - mirrors threading.Event API
-        super().set()
+    def on_set(self, fn: Callable[[], None]) -> None:
+        """Run ``fn`` once, on the first ``set()`` (immediately if the
+        event is already set). Used to push queue wake sentinels the
+        moment a Thinker begins shutdown."""
         with self._watch_lock:
+            if not self.is_set():
+                self._on_set.append(fn)
+                return
+        fn()
+
+    def set(self) -> None:  # noqa: A003 - mirrors threading.Event API
+        with self._watch_lock:
+            first = not self.is_set()
+            super().set()
             watched = list(self._watched)
+            callbacks = self._on_set if first else []
+            if first:
+                self._on_set = []
         for cond in watched:
             with cond:
                 cond.notify_all()
+        for fn in callbacks:
+            fn()
 
 
 def wait_event(ev: threading.Event, done: threading.Event) -> bool:
@@ -384,10 +399,18 @@ class BaseThinker:
 
     def _run_result_processor(self, fn: Callable) -> None:
         opts = fn._colmena_opts
+        # Queues with the wake-sentinel API let processors block in the
+        # pop with no timeout: ``done.set()`` pushes one sentinel per
+        # processor (see run()), so shutdown is instant. Foreign queue
+        # implementations fall back to a bounded pop.
+        timeout = (
+            None if hasattr(self.queues, "wake_result_waiters")
+            else _FALLBACK_GETTER_TIMEOUT_S
+        )
         getter = (
-            (lambda: self.queues.get_result(topic=opts["topic"], timeout=_GETTER_TIMEOUT_S))
+            (lambda: self.queues.get_result(topic=opts["topic"], timeout=timeout))
             if opts["on"] == "result"
-            else (lambda: self.queues.get_completion(topic=opts["topic"], timeout=_GETTER_TIMEOUT_S))
+            else (lambda: self.queues.get_completion(topic=opts["topic"], timeout=timeout))
         )
         try:
             while not self.done.is_set():
@@ -446,12 +469,37 @@ class BaseThinker:
             self._agent_exc.append(exc)
             self.done.set()
 
+    def _arm_shutdown_wakeup(self, agents: List[Callable]) -> None:
+        """On ``done.set()``, push one queue sentinel per result processor
+        so pops blocked in ``get_result``/``get_completion`` return
+        immediately — shutdown is not bounded by any pop timeout."""
+        wake = getattr(self.queues, "wake_result_waiters", None)
+        if wake is None:
+            return
+        counts: Dict[tuple, int] = {}
+        for fn in agents:
+            if fn._colmena_kind == "result_processor":
+                key = (fn._colmena_opts["topic"], fn._colmena_opts["on"])
+                counts[key] = counts.get(key, 0) + 1
+        if not counts:
+            return
+
+        def _wake() -> None:
+            try:
+                wake(counts)
+            except Exception:  # noqa: BLE001 - shutdown must not fail here
+                self.logger.exception("failed to wake result processors")
+
+        self.done.on_set(_wake)
+
     # ------------------------------------------------------------------ run
     def run(self, timeout: Optional[float] = None) -> None:
         """Start every agent thread; block until the Thinker is done."""
         agents = self._collect_agents()
         if not agents:
             raise RuntimeError("Thinker has no agents; decorate methods first")
+        # Arm before any agent can set ``done`` (startup agents included).
+        self._arm_shutdown_wakeup(agents)
 
         runners = {
             "agent": self._run_agent,

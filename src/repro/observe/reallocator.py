@@ -142,6 +142,16 @@ class AdaptiveReallocator:
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
 
+    def rebind_event_log(self, log: EventLog) -> None:
+        """Re-point telemetry at ``log`` (``repro.app``'s two-phase
+        benchmarks): moves are emitted there, and a metrics-driven
+        backlog probe is re-derived from a fresh aggregator subscribed
+        to it. A user-supplied ``backlog`` callable is left alone."""
+        self.event_log = log
+        if self.metrics is not None:
+            self.metrics = MetricsAggregator(log)
+            self._backlog = self.metrics.backlog
+
     # ------------------------------------------------------------------ state
     def views(self) -> List[PoolView]:
         return [

@@ -288,6 +288,7 @@ def run_active_campaign(
     event_log: Optional[Any] = None,
     sim_sleep_s: float = 0.0,
     timeout: float = 300.0,
+    state_dir: Optional[str] = None,
 ) -> Dict[str, Any]:
     """Run one surrogate-steered campaign over a ``Scenario``.
 
@@ -297,11 +298,15 @@ def run_active_campaign(
     Returns hits (candidates whose *noiseless* value clears the
     scenario threshold), the best observation, retrain count, and the
     observe report (with its surrogate section).
-    """
-    from repro.core import LocalColmenaQueues, TaskServer, WorkerPool
-    from repro.observe import EventLog, build_report
 
-    log = event_log if event_log is not None else EventLog()
+    A thin wrapper over ``repro.app``: the whole stack (queues, worker
+    pools, task server, telemetry, steering) is composed from one
+    ``AppSpec``; ``state_dir`` adds campaign checkpoints + resume.
+    """
+    from repro.core.app import (
+        AppSpec, CampaignSpec, ColmenaApp, ObserveSpec, QueueSpec, SteeringSpec, TaskDef,
+    )
+
     rng = np.random.default_rng(seed)
     candidates = scenario.sample(rng, n_candidates)
     ens = ensemble or DeepEnsemble(
@@ -312,36 +317,33 @@ def run_active_campaign(
             time.sleep(sim_sleep_s)
         return scenario.evaluate(x, seed)
 
-    queues = LocalColmenaQueues(topics=["simulate", "train"], event_log=log)
-    pool_sizes = {"simulate": max(n_slots - 1, 1), "ml": 1, "default": 1}
-    pools = {name: WorkerPool(name, n) for name, n in pool_sizes.items()}
-    thinker = ActiveLearningThinker(
-        queues,
-        ensemble=ens,
-        policy=policy,
-        candidates=candidates,
-        n_slots=n_slots,
-        retrain_after=retrain_after or max(8, budget // 5),
-        max_results=budget,
-        ml_slots=1,
-        optimum_value=scenario.optimum_value,
-        seed=seed,
-    )
-    thinker.rec.event_log = log
-    server = TaskServer(
-        queues, {"simulate": simulate}, pools=pools, event_log=log,
-    ).start()
-    try:
-        thinker.run(timeout=timeout)
-    finally:
-        server.stop()
+    app = ColmenaApp(AppSpec(
+        tasks=[TaskDef(fn=simulate, method="simulate", pool="simulate")],
+        queues=QueueSpec(topics=("simulate", "train")),
+        pools={"simulate": max(n_slots - 1, 1), "ml": 1, "default": 1},
+        observe=ObserveSpec(log=event_log),
+        steering=SteeringSpec(ActiveLearningThinker, dict(
+            ensemble=ens,
+            policy=policy,
+            candidates=candidates,
+            n_slots=n_slots,
+            retrain_after=retrain_after or max(8, budget // 5),
+            max_results=budget,
+            ml_slots=1,
+            optimum_value=scenario.optimum_value,
+            seed=seed,
+        )),
+        campaign=CampaignSpec(state_dir=state_dir) if state_dir else None,
+    ))
+    app.execute(timeout=timeout)
+    thinker = app.thinker
 
     X, y = thinker.observed
     # In-flight overshoot can deliver a result or two past max_results;
     # score exactly ``budget`` observations so policy comparisons are fair.
     X, y = X[:budget], y[:budget]
     hits = int(sum(scenario.true_value(x) > scenario.threshold for x in X))
-    report = build_report(log, slots_by_pool=pool_sizes)
+    report = app.observe_report()
     return {
         "scenario": scenario.name,
         "policy": policy.name,

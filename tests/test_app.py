@@ -1,0 +1,385 @@
+"""repro.app: declarative composition + lifecycle edges.
+
+Covers the app-layer acceptance surface: context-manager teardown on
+agent exceptions, double-start/stop idempotency, pipe-backend parity
+with local, resume-from-checkpoint through ``ColmenaApp`` (not just raw
+``Campaign``), the task registry's pool/batch routing, driver mode, and
+the kill-sentinel shutdown path + checkpoint retention satellites.
+"""
+
+import os
+import time
+
+import numpy as np
+import pytest
+
+from repro.app import (
+    AppSpec,
+    CampaignSpec,
+    ColmenaApp,
+    FabricSpec,
+    ObserveSpec,
+    QueueSpec,
+    SteeringSpec,
+    TaskDef,
+    task,
+)
+from repro.core import (
+    BaseThinker,
+    Campaign,
+    ConstantInflightThinker,
+    LocalColmenaQueues,
+    PipeColmenaQueues,
+    ResourceCounter,
+    ServerMetrics,
+    agent,
+    result_processor,
+)
+
+
+def _echo(x):
+    return x
+
+
+def _double(x):
+    return 2 * x
+
+
+class CountingThinker(BaseThinker):
+    """Submit-on-completion thinker with checkpointable progress."""
+
+    def __init__(self, queues, target=8, n_parallel=2):
+        super().__init__(queues, ResourceCounter(n_parallel))
+        self.target = target
+        self.count = 0
+
+    @agent(startup=True)
+    def boot(self):
+        for _ in range(self.rec.total_slots):
+            self.queues.send_inputs(1, method="echo")
+
+    @result_processor()
+    def recv(self, result):
+        self.count += 1
+        if self.count >= self.target:
+            self.done.set()
+        else:
+            self.queues.send_inputs(1, method="echo")
+
+    def get_state(self):
+        return {"count": self.count}
+
+    def set_state(self, state):
+        self.count = state.get("count", 0)
+
+
+class CrashyThinker(BaseThinker):
+    @agent
+    def main(self):
+        raise ValueError("boom")
+
+
+class TestComposition:
+    def test_basic_run_and_report(self):
+        app = ColmenaApp(AppSpec(
+            tasks={"echo": _echo},
+            pools={"default": 2},
+            steering=SteeringSpec(CountingThinker, dict(target=6)),
+        ))
+        with app.run(timeout=30) as handle:
+            assert handle.wait(30)
+        assert handle.thinker.count == 6
+        assert app.report.completed
+        assert app.report.server_metrics["tasks_completed"] >= 6
+        rep = app.observe_report()
+        assert rep["stage_counts"]["completed"] >= 6
+
+    def test_task_registry_pool_and_timeout_defaults(self):
+        @task(pool="special", timeout_s=7.5)
+        def special(x):
+            return x + 1
+
+        app = ColmenaApp(AppSpec(
+            tasks=[special],
+            pools={"special": 1, "default": 1},
+        ))
+        with app.run() as handle:
+            handle.queues.send_inputs(1, method="special")
+            r = handle.queues.get_result(timeout=10)
+        assert r.success and r.value == 2
+        # the registry's defaults were applied server-side
+        assert r.resources.pool == "special"
+        assert r.resources.timeout_s == 7.5
+
+    def test_task_registry_batch_flag(self):
+        app = ColmenaApp(AppSpec(
+            tasks=[TaskDef(fn=_echo, method="echo", batch=True),
+                   TaskDef(fn=_double, method="double")],
+        ))
+        app.build()
+        assert app.server.batching is not None
+        assert app.server.batching.methods == ("echo",)
+
+    def test_duplicate_methods_rejected(self):
+        with pytest.raises(ValueError, match="duplicate"):
+            ColmenaApp(AppSpec(tasks=[TaskDef(fn=_echo, method="m"),
+                                      TaskDef(fn=_double, method="m")]))
+
+    def test_driver_mode(self):
+        """steering=None: the caller drives the composed queues."""
+        app = ColmenaApp(AppSpec(tasks={"double": _double}, pools={"default": 2}))
+        with app.run() as handle:
+            for i in range(5):
+                handle.queues.send_inputs(i, method="double")
+            vals = sorted(handle.queues.get_result(timeout=10).value for _ in range(5))
+        assert vals == [0, 2, 4, 6, 8]
+        assert app.report.completed
+
+    def test_fabric_composition_auto_proxies(self):
+        app = ColmenaApp(AppSpec(
+            tasks={"echo": _echo},
+            fabric=FabricSpec(connector="memory", threshold=100),
+        ))
+        with app.run() as handle:
+            handle.queues.send_inputs(np.zeros(1000), method="echo")
+            r = handle.queues.get_result(timeout=10)
+        assert r.success
+        assert handle.queues.metrics.proxied_bytes >= 8000
+        assert app.store is not None
+
+    def test_rebind_event_log(self):
+        from repro.observe import EventLog
+
+        app = ColmenaApp(AppSpec(tasks={"echo": _echo}))
+        with app.run() as handle:
+            handle.queues.send_inputs(1, method="echo")
+            assert handle.queues.get_result(timeout=10).success
+            first = app.event_log
+            n_before = len(first.events())
+            fresh = EventLog()
+            app.rebind_event_log(fresh)
+            handle.queues.send_inputs(2, method="echo")
+            assert handle.queues.get_result(timeout=10).success
+        assert len(fresh.events()) > 0
+        assert len(first.events()) == n_before  # old log stopped growing
+
+
+class TestLifecycleEdges:
+    def test_teardown_on_agent_exception(self):
+        app = ColmenaApp(AppSpec(
+            tasks={"echo": _echo},
+            steering=SteeringSpec(CrashyThinker),
+        ))
+        with pytest.raises(RuntimeError, match="agent"):
+            with app.run(timeout=10) as handle:
+                handle.wait(10)
+        # the crash was contained: the stack still tore down in order
+        assert app.report is not None and not app.report.completed
+        assert app.server._stop.is_set()
+        assert app.thinker_exception is not None
+
+    def test_stop_safe_after_failed_build(self):
+        """A build error mid-start must not be masked by stop()."""
+        app = ColmenaApp(AppSpec(
+            tasks={"echo": _echo},
+            fabric=FabricSpec(connector="no-such-connector"),
+        ))
+        with pytest.raises(ValueError, match="connector"):
+            with app.run():
+                pass  # never reached: __enter__ raises from build()
+        app.stop()  # partially-built stack: must not raise
+        assert not app.report.completed
+
+    def test_body_exception_still_stops_stack(self):
+        app = ColmenaApp(AppSpec(tasks={"echo": _echo}))
+        with pytest.raises(KeyError):
+            with app.run():
+                raise KeyError("user code failed")
+        assert app.report is not None
+        assert app.server._stop.is_set()
+
+    def test_double_start_and_stop_idempotent(self):
+        app = ColmenaApp(AppSpec(
+            tasks={"echo": _echo},
+            steering=SteeringSpec(CountingThinker, dict(target=4)),
+        ))
+        app.start(timeout=30)
+        app.start(timeout=30)          # no-op
+        assert app.wait(30)
+        report = app.stop()
+        assert app.stop() is report    # second stop returns the same report
+        assert report.completed
+
+    def test_stop_before_start_is_noop(self):
+        app = ColmenaApp(AppSpec(
+            tasks={"echo": _echo},
+            steering=SteeringSpec(CountingThinker, dict(target=3)),
+        ))
+        assert app.stop() is None       # nothing ran; must not poison start
+        report = app.execute(timeout=30)
+        assert report.completed and app.thinker.count == 3
+
+    def test_driver_mode_rejects_reallocator(self):
+        with pytest.raises(ValueError, match="reallocator"):
+            AppSpec(tasks={"echo": _echo},
+                    observe=ObserveSpec(reallocator="greedy"))
+
+    def test_rebind_event_log_repoints_reallocator(self):
+        from repro.observe import EventLog
+
+        app = ColmenaApp(AppSpec(
+            tasks={"echo": _echo},
+            steering=SteeringSpec(CountingThinker, dict(target=2)),
+            observe=ObserveSpec(reallocator="greedy"),
+        ))
+        app.build()
+        stale_agg = app.reallocator.metrics
+        fresh = EventLog()
+        app.rebind_event_log(fresh)
+        assert app.reallocator.event_log is fresh
+        assert app.reallocator.metrics is not stale_agg     # fresh aggregator
+        assert app.reallocator._backlog == app.reallocator.metrics.backlog
+        app.stop()
+
+    def test_restart_refused(self):
+        app = ColmenaApp(AppSpec(tasks={"echo": _echo}))
+        with app.run():
+            pass
+        with pytest.raises(RuntimeError, match="already ran"):
+            app.start()
+
+    def test_pipe_backend_parity_with_local(self):
+        """Porting local -> pipe is one spec field; results must match."""
+        outputs = {}
+        for backend in ("local", "pipe"):
+            work = [((i,), {}) for i in range(8)]
+            app = ColmenaApp(AppSpec(
+                tasks={"double": _double},
+                queues=QueueSpec(backend=backend),
+                pools={"default": 2},
+                steering=SteeringSpec(ConstantInflightThinker, dict(
+                    work=work, method="double", n_parallel=2)),
+            ))
+            with app.run(timeout=60) as handle:
+                assert handle.wait(60)
+                outputs[backend] = sorted(r.value for r in handle.thinker.results)
+            assert app.report.completed
+        assert outputs["local"] == outputs["pipe"] == [2 * i for i in range(8)]
+
+    def test_resume_from_checkpoint_through_app(self, tmp_path):
+        state_dir = str(tmp_path)
+
+        def make_app(target):
+            return ColmenaApp(AppSpec(
+                tasks={"echo": _echo},
+                pools={"default": 2},
+                steering=SteeringSpec(CountingThinker, dict(target=target)),
+                campaign=CampaignSpec(state_dir=state_dir,
+                                      checkpoint_interval_s=0.5),
+            ))
+
+        first = make_app(target=4)
+        first.execute(timeout=30)
+        assert first.thinker.count == 4
+        assert first.report.checkpoints_written >= 1
+
+        # Same entry point, same spec shape: resumes at count=4, so only
+        # 4 more results are consumed to reach 8.
+        second = make_app(target=8)
+        second.execute(timeout=30)
+        assert second.report.resumed_from is not None
+        assert second.thinker.count == 8
+        assert second.report.server_metrics["tasks_completed"] <= 6  # 4 resumed + ~2 in flight
+
+
+class TestKillSentinelShutdown:
+    def test_wake_sentinels_unblock_pops(self):
+        for qcls in (LocalColmenaQueues, PipeColmenaQueues):
+            q = qcls(topics=["a"])
+            q.wake_result_waiters({("a", "result"): 1, ("a", "completion"): 1})
+            t0 = time.monotonic()
+            # Bounded pops treat a stale sentinel as noise and keep
+            # waiting out the timeout; blocking pops (the result-processor
+            # path) return immediately — the sentinel IS the wakeup.
+            assert q.get_result(topic="a", timeout=0.2) is None
+            assert q.get_completion(topic="a", timeout=0.2) is None
+            assert time.monotonic() - t0 < 2.0
+
+    def test_stale_sentinel_does_not_hide_real_results(self):
+        """A leftover sentinel must not make a bounded drain miss results
+        queued behind it (late in-flight overshoot after shutdown)."""
+        q = LocalColmenaQueues(topics=["a"])
+        q.wake_result_waiters({("a", "result"): 1})
+        q.send_inputs(5, method="echo", topic="a")
+        t = q.get_task(timeout=2)
+        t.mark("compute_started")
+        t.set_success(10)
+        t.mark("compute_ended")
+        q.send_result(t)
+        r = q.get_result(topic="a", timeout=5)
+        assert r is not None and r.value == 10
+
+    def test_blocking_pop_wakes_on_sentinel(self):
+        q = LocalColmenaQueues(topics=["a"])
+        got = []
+
+        def blocked_pop():
+            got.append(q.get_result(topic="a", timeout=None))
+
+        import threading
+        th = threading.Thread(target=blocked_pop, daemon=True)
+        th.start()
+        time.sleep(0.05)
+        assert th.is_alive()  # parked in the blocking pop
+        q.wake_result_waiters({("a", "result"): 1})
+        th.join(timeout=2)
+        assert not th.is_alive() and got == [None]
+
+    def test_thinker_shutdown_not_bounded_by_pop_timeout(self):
+        q = LocalColmenaQueues()
+
+        class T(BaseThinker):
+            @agent
+            def main(self):
+                time.sleep(0.05)
+
+            @result_processor()
+            def recv(self, result):
+                pass
+
+        t = T(q)
+        t0 = time.monotonic()
+        t.run(timeout=10)
+        elapsed = time.monotonic() - t0
+        # The critical agent exits at ~0.05 s; the processor must wake on
+        # the shutdown sentinel, not a pop timeout (formerly 0.2 s).
+        assert elapsed < 1.0
+        for th in t._threads:
+            assert not th.is_alive()
+
+
+class _StubServer:
+    def __init__(self):
+        self.metrics = ServerMetrics()
+
+
+class TestCheckpointRetention:
+    def test_only_newest_checkpoints_retained(self, tmp_path):
+        camp = Campaign(thinker=object(), server=_StubServer(),
+                        state_dir=str(tmp_path), name="c")
+        for _ in range(10):
+            camp.checkpoint()
+        files = sorted(p for p in os.listdir(tmp_path) if p.endswith(".pkl"))
+        assert files == [f"c-state-{i:06d}.pkl" for i in range(6, 10)]
+
+    def test_resume_continues_step_numbering(self, tmp_path):
+        camp = Campaign(thinker=object(), server=_StubServer(),
+                        state_dir=str(tmp_path), name="c")
+        for _ in range(5):
+            camp.checkpoint()
+        resumed = Campaign(thinker=object(), server=_StubServer(),
+                           state_dir=str(tmp_path), name="c")
+        assert resumed.try_resume()
+        assert resumed.checkpoints_written == 5  # next write is step 5
+        resumed.checkpoint()
+        assert os.path.exists(os.path.join(str(tmp_path), "c-state-000005.pkl"))
