@@ -7,12 +7,17 @@ once ahead-of-time bulk transfer hides the latency.
 
 Here every site is the *same* ``AppSpec`` with different backend
 fields — the portability claim the app layer exists for:
-  * ``local``            — in-process queues + threaded server (~ Parsl);
-  * ``federated``        — ``pipe`` queues, server in its own spawned
-                           process, model by value (~ Globus Compute,
-                           naive);
-  * ``federated+fabric`` — same, plus a file-connector fabric with the
-                           shared model proxied once ahead of time.
+  * ``local``              — in-process queues + threaded server (~ Parsl);
+  * ``federated``          — ``pipe`` queues, server in its own spawned
+                             process, model by value (~ Globus Compute,
+                             naive);
+  * ``federated+fabric``   — same, plus a file-connector fabric with the
+                             shared model proxied once ahead of time;
+  * ``federated+multipool`` — a multi-resource remote site: two named
+                             ``PoolSpec``s (a wide "cpu" pool and a
+                             narrow "accel" pool) rebuilt inside the
+                             spawned server process, tasks routed by the
+                             registry's pool field.
 """
 
 from __future__ import annotations
@@ -26,6 +31,7 @@ from repro.app import (
     AppSpec,
     ColmenaApp,
     FabricSpec,
+    PoolSpec,
     QueueSpec,
     ServerSpec,
     SteeringSpec,
@@ -74,6 +80,34 @@ def _run_site(
     return {"tasks_per_s": ok / elapsed, "median_latency_ms": lat * 1000, "ok": ok}
 
 
+def _run_multipool_site(model: np.ndarray, x: np.ndarray, n: int) -> Dict:
+    """Federated multi-resource site: one spawned server process hosting
+    two named pools (rebuilt from PoolSpecs inside the child), tasks
+    routed by the registry's pool field — the deployment shape the old
+    single-default-pool restriction ruled out."""
+    app = ColmenaApp(AppSpec(
+        tasks=[
+            TaskDef(fn=_score, method="score_cpu", pool="cpu"),
+            TaskDef(fn=_score, method="score_accel", pool="accel"),
+        ],
+        queues=QueueSpec(backend="pipe"),
+        pools={"cpu": PoolSpec("cpu", 3), "accel": PoolSpec("accel", 1, warm_capacity=8)},
+        server=ServerSpec(in_process=False),
+        observe=None,
+    ))
+    half = n // 2
+    with app.run(timeout=120) as handle:
+        t0 = time.monotonic()
+        for i in range(n):
+            method = "score_cpu" if i < half else "score_accel"
+            handle.queues.send_inputs(model, x, method=method)
+        results = [handle.queues.get_result(timeout=60) for _ in range(n)]
+        elapsed = time.monotonic() - t0
+    ok = sum(1 for r in results if r is not None and r.success)
+    lat = np.median([r.timing.total for r in results if r is not None and r.timing.total])
+    return {"tasks_per_s": ok / elapsed, "median_latency_ms": lat * 1000, "ok": ok}
+
+
 def main(quick: bool = True) -> Dict[str, Dict]:
     n = 16 if quick else 64
     model = np.random.default_rng(0).standard_normal(4096)
@@ -92,6 +126,10 @@ def main(quick: bool = True) -> Dict[str, Dict]:
         fabric=FabricSpec(connector="file", threshold=4096),
         proxy_model=True,
     )
+
+    # Site D: cross-process with two named pools inside the server child
+    out["federated+multipool"] = _run_multipool_site(model, x, n)
+    assert out["federated+multipool"]["ok"] == n, "multipool site dropped tasks"
 
     for mode, r in out.items():
         print(f"multisite,{mode},{r['tasks_per_s']:.1f},{r['median_latency_ms']:.1f}")

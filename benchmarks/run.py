@@ -9,7 +9,8 @@ the warm-batched >= 2x acceptance bound and raises on regression).
 Figure map:
   proxy_app      -> Fig. 7 (reaction/decision/dispatch latencies)
   weak_scaling   -> Fig. 3 (inference rate vs workers, fabric vs control)
-  utilization    -> Figs. 2/5 (busy fractions, stateful-cache ablation)
+  utilization    -> Figs. 2/5 (busy fractions, stateful-cache ablation,
+                    static-vs-adaptive slots + elastic-vs-static fleet gate)
   multisite      -> Fig. 4 (local vs federated backends)
   steering_gain  -> '+20% high-performers' claim: scenario x acquisition
                     policy sweep over repro.surrogate (random vs greedy/

@@ -22,7 +22,7 @@ import numpy as np
 
 from repro.app import AppSpec, ColmenaApp, QueueSpec, SteeringSpec, TaskDef
 from repro.core import BatchRetrainThinker, stateful_task
-from repro.observe import render_text, run_two_pool
+from repro.observe import render_text, run_bursty, run_two_pool
 
 
 def _sim(x, dt=0.02):
@@ -97,6 +97,37 @@ def reallocation_comparison(
     return static, adaptive
 
 
+def elastic_comparison(
+    n_bursts: int = 3, burst_size: int = 18, gap_s: float = 0.35, task_s: float = 0.03,
+) -> Tuple[dict, dict]:
+    """Static max-size fleet vs ElasticScaler on the same bursty load.
+
+    Both runs execute identical work; the static fleet idles through
+    every inter-burst gap while the elastic one shrinks to the PoolSpec
+    floor, so utilization (busy seconds / worker-seconds of capacity)
+    must come out >= static — the elastic acceptance gate."""
+    static = run_bursty(elastic=False, n_bursts=n_bursts, burst_size=burst_size,
+                        gap_s=gap_s, task_s=task_s)
+    elastic = run_bursty(elastic=True, n_bursts=n_bursts, burst_size=burst_size,
+                         gap_s=gap_s, task_s=task_s)
+    return static, elastic
+
+
+def main_elastic_gate(quick: bool = True) -> None:
+    """CI gate: elastic fleet utilization >= static under bursty load,
+    with all work completed on both sides."""
+    static, elastic = elastic_comparison(burst_size=12 if quick else 24)
+    s_u, e_u = static["utilization"], elastic["utilization"]
+    print(f"elastic,static_util,{s_u:.3f}")
+    print(f"elastic,elastic_util,{e_u:.3f}")
+    print(f"elastic,gain_pct,{(e_u - s_u) / max(s_u, 1e-9) * 100:.0f}")
+    print(f"elastic,resizes,{elastic['resizes']}")
+    assert static["completed"] == elastic["completed"], (
+        f"work mismatch: static {static['completed']} vs elastic {elastic['completed']}"
+    )
+    assert e_u >= s_u, f"elastic utilization {e_u:.3f} < static {s_u:.3f}"
+
+
 @stateful_task
 def _fold_cached(seq, registry=None):
     """Protein-folding stand-in: 'model load' is cached in worker RAM."""
@@ -145,6 +176,8 @@ def main(quick: bool = True):
     print(f"reallocation,adaptive_util,{a_u:.3f}")
     print(f"reallocation,gain_pct,{(a_u - s_u) / max(s_u, 1e-9) * 100:.0f}")
     print(f"reallocation,lifecycle_complete,{int(adaptive['lifecycle']['complete'])}")
+
+    main_elastic_gate(quick=quick)
 
     rates = stateful_caching_ablation(12 if quick else 40)
     speedup = rates["cached"] / rates["uncached"]

@@ -50,6 +50,17 @@ class Quickstart(BaseThinker):
         elif len(self.samples) >= self.n_total:
             self.done.set()
 
+    # Checkpointable: a campaign launched from examples/quickstart.toml
+    # with a [campaign] section resumes mid-collection after a kill.
+    # Only samples are persisted; submitted is recomputed on resume so
+    # tasks lost in flight at the kill are simply submitted again.
+    def get_state(self):
+        return {"samples": list(self.samples)}
+
+    def set_state(self, state):
+        self.samples = list(state.get("samples", []))
+        self.submitted = len(self.samples)
+
 
 def main():
     app = ColmenaApp(AppSpec(

@@ -1,10 +1,17 @@
 """repro.app — the public face of the declarative composition layer.
 
 ``AppSpec`` declares a whole Colmena application (task registry, queue
-backend, data fabric, observe, steering, campaign persistence);
-``ColmenaApp`` composes and runs it. See ``repro.core.app`` for the
-implementation and the README quickstart for usage; the low-level
-constructors in ``repro.core`` remain supported underneath.
+backend, worker-pool specs, data fabric, observe, steering, campaign
+persistence); ``ColmenaApp`` composes and runs it. Specs serialize to
+TOML/JSON campaign files (``AppSpec.save``/``AppSpec.load``,
+``repro.core.specfile``) and this module doubles as the launch CLI::
+
+    python -m repro.app run campaign.toml [--smoke] [--fresh]
+    python -m repro.app show campaign.toml
+
+See ``repro.core.app`` for the implementation and the README quickstart
+for usage; the low-level constructors in ``repro.core`` remain supported
+underneath.
 """
 
 from repro.core.app import (
@@ -13,6 +20,7 @@ from repro.core.app import (
     ColmenaApp,
     FabricSpec,
     ObserveSpec,
+    PoolSpec,
     ProcessTaskServer,
     QueueSpec,
     ServerSpec,
@@ -20,6 +28,7 @@ from repro.core.app import (
     TaskDef,
     task,
 )
+from repro.core.specfile import load_spec, save_spec, spec_from_dict, spec_to_dict
 
 __all__ = [
     "AppSpec",
@@ -27,10 +36,23 @@ __all__ = [
     "ColmenaApp",
     "FabricSpec",
     "ObserveSpec",
+    "PoolSpec",
     "ProcessTaskServer",
     "QueueSpec",
     "ServerSpec",
     "SteeringSpec",
     "TaskDef",
+    "load_spec",
+    "save_spec",
+    "spec_from_dict",
+    "spec_to_dict",
     "task",
 ]
+
+
+if __name__ == "__main__":
+    import sys
+
+    from repro.core.specfile import main
+
+    sys.exit(main())

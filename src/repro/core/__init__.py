@@ -13,10 +13,12 @@ steering + campaign from one spec and owns the lifecycle.
 
 from .executors import (
     FailureInjector,
+    PoolSpec,
     WarmCache,
     WarmCacheStats,
     WorkerDied,
     WorkerPool,
+    normalize_pools,
     resolve_warm,
     stateful_task,
 )
@@ -83,7 +85,9 @@ __all__ = [
     "iter_proxies",
     "KillSignal",
     "LocalColmenaQueues",
+    "normalize_pools",
     "PipeColmenaQueues",
+    "PoolSpec",
     "prefetch_all",
     "PriorityQueueThinker",
     "Proxy",

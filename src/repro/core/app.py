@@ -15,12 +15,21 @@ owning the full lifecycle as a context manager::
 
     app = ColmenaApp(AppSpec(
         tasks=[simulate],
-        pools={"default": 4},
+        pools={"default": 4},       # shorthand; normalizes to PoolSpec
         steering=SteeringSpec(MyThinker, dict(n_total=32)),
     ))
     with app.run(timeout=60) as handle:
         handle.wait()
     print(handle.report.completed, handle.observe_report()["makespan_s"])
+
+Resources are declared as first-class ``PoolSpec``s (size, min/max
+elasticity band, warm/prefetch knobs, per-pool fault injector); the
+``{name: slots}`` shorthand stays accepted and is normalized in
+``AppSpec.__post_init__``. Because specs are picklable, the same layout
+crosses process boundaries (``ServerSpec(in_process=False)`` rebuilds
+every named pool inside the spawned child) and serializes to TOML/JSON
+campaign files (``AppSpec.save``/``load``, ``repro.core.specfile``)
+launched with ``python -m repro.app run``.
 
 Everything the app composes stays reachable (``handle.thinker``,
 ``handle.queues``, ``handle.store``, ``handle.event_log``), and the
@@ -46,6 +55,7 @@ Lifecycle guarantees:
 
 from __future__ import annotations
 
+import dataclasses
 import multiprocessing
 import threading
 import time
@@ -54,7 +64,7 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple, Union
 
 from .campaign import Campaign, CampaignReport
-from .executors import FailureInjector, WorkerPool, stateful_task
+from .executors import FailureInjector, PoolSpec, WorkerPool, normalize_pools, stateful_task
 from .proxystore import Store, connector_from_spec
 from .queues import ColmenaQueues, LocalColmenaQueues, PipeColmenaQueues
 from .result import ResourceRequest
@@ -67,6 +77,7 @@ __all__ = [
     "ColmenaApp",
     "FabricSpec",
     "ObserveSpec",
+    "PoolSpec",
     "ProcessTaskServer",
     "QueueSpec",
     "ServerSpec",
@@ -180,7 +191,11 @@ class ObserveSpec:
     existing ``EventLog`` (merged traces across apps); otherwise one is
     created. ``reallocator`` is ``"greedy"``/``"ema"`` or a
     ``ReallocationPolicy`` instance; it steers the *thinker's*
-    ``ResourceCounter`` and needs a steering spec."""
+    ``ResourceCounter`` and needs a steering spec. ``elastic`` extends
+    the same closed loop to the worker fleet itself: an
+    ``repro.observe.ElasticPolicy`` (or a dict of its knobs, or ``True``
+    for defaults) drives ``WorkerPool.resize`` within each pool's
+    ``PoolSpec`` min/max band (in-process servers only)."""
 
     log: Optional[Any] = None           # repro.observe.EventLog
     jsonl_path: Optional[str] = None
@@ -188,6 +203,7 @@ class ObserveSpec:
     reallocator: Optional[Any] = None   # "greedy" | "ema" | policy object
     realloc_interval: float = 0.02
     realloc_min_slots: Optional[Dict[str, int]] = None
+    elastic: Optional[Any] = None       # True | dict | ElasticPolicy
 
 
 @dataclass
@@ -225,8 +241,10 @@ class CampaignSpec:
 class ServerSpec:
     """Task-server policies. ``in_process=False`` (pipe backend only)
     runs the server in its own spawned process — the paper's federated
-    deployment shape; it requires picklable task functions and the
-    single default pool."""
+    deployment shape; it requires picklable task functions. The full
+    named-pool layout crosses the boundary as ``PoolSpec``s and is
+    rebuilt inside the child, so multi-pool (federated multi-resource)
+    sites work the same as in-process ones."""
 
     in_process: bool = True
     batching: Optional[BatchPolicy] = None   # explicit policy wins
@@ -240,12 +258,18 @@ class ServerSpec:
 
 @dataclass
 class AppSpec:
-    """Everything a Colmena application is, declaratively."""
+    """Everything a Colmena application is, declaratively.
+
+    ``pools`` accepts the historical ``{name: slots}`` shorthand, a
+    ``{name: PoolSpec}`` mapping (mixed with ints is fine), or a sequence
+    of ``PoolSpec``s; ``__post_init__`` normalizes every form to
+    ``{name: PoolSpec}``, so the rest of the stack sees exactly one
+    resource vocabulary."""
 
     tasks: Sequence[Any]
     steering: Optional[SteeringSpec] = None
     queues: Union[str, QueueSpec] = "local"
-    pools: Optional[Mapping[str, int]] = None     # worker slots per pool
+    pools: Optional[Any] = None        # {name: slots | PoolSpec} | [PoolSpec]
     fabric: Optional[FabricSpec] = None
     observe: Optional[ObserveSpec] = field(default_factory=ObserveSpec)
     campaign: Optional[CampaignSpec] = None
@@ -256,6 +280,10 @@ class AppSpec:
             self.tasks = [TaskDef(fn=fn, method=m) for m, fn in self.tasks.items()]
         if isinstance(self.queues, str):
             self.queues = QueueSpec(backend=self.queues)
+        if self.observe is not None and self.observe.elastic is False:
+            self.observe.elastic = None  # False means off, same as unset
+        self.pools = normalize_pools(self.pools)
+        self.pools.setdefault("default", PoolSpec("default", 1))
         if isinstance(self.steering, type) and issubclass(self.steering, BaseThinker):
             self.steering = SteeringSpec(self.steering)
         if self.campaign is not None and self.steering is None:
@@ -270,6 +298,43 @@ class AppSpec:
             )
         if not self.server.in_process and self.queues.backend != "pipe":
             raise ValueError("a separate server process needs the 'pipe' queue backend")
+        if (
+            self.observe is not None
+            and self.observe.elastic is not None
+            and not self.server.in_process
+        ):
+            raise ValueError(
+                "elastic pools need the in-process server (the fleet lives in the "
+                "server process; resize it from a policy running there)"
+            )
+
+    # -- serialization (repro.core.specfile) --------------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        """Plain-dict form with tasks/thinkers by dotted import path (see
+        ``repro.core.specfile``); round-trips through ``from_dict``."""
+        from .specfile import spec_to_dict
+
+        return spec_to_dict(self)
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "AppSpec":
+        from .specfile import spec_from_dict
+
+        return spec_from_dict(d)
+
+    def save(self, path: str) -> str:
+        """Write the spec as TOML or JSON (chosen by extension)."""
+        from .specfile import save_spec
+
+        return save_spec(self, path)
+
+    @classmethod
+    def load(cls, path: str, smoke: bool = False) -> "AppSpec":
+        """Load a TOML/JSON campaign file (``smoke=True`` applies the
+        file's ``[smoke]`` override table)."""
+        from .specfile import load_spec
+
+        return load_spec(path, smoke=smoke)
 
 
 # --------------------------------------------------------------------------
@@ -279,8 +344,12 @@ class AppSpec:
 
 class ProcessTaskServer:
     """Drop-in ``TaskServer`` stand-in running ``serve_forever`` in a
-    spawned process (the multi-site deployments of Fig. 4). Metrics are
-    process-local to the server and therefore empty on this side."""
+    spawned process (the multi-site deployments of Fig. 4). The pool
+    layout ships as picklable ``PoolSpec``s (``pool_specs=`` in
+    ``server_kwargs``) and the child rebuilds the full named-pool dict
+    on its side, so multi-pool federated sites need no special casing.
+    Metrics are process-local to the server and therefore empty on this
+    side."""
 
     def __init__(
         self,
@@ -397,10 +466,12 @@ class ColmenaApp:
         self.store: Optional[Store] = None
         self.queues: Optional[ColmenaQueues] = None
         self.pools: Dict[str, WorkerPool] = {}
+        self.pool_specs: Dict[str, PoolSpec] = {}
         self.pool_sizes: Dict[str, int] = {}
         self.server: Any = None
         self.thinker: Optional[BaseThinker] = None
         self.reallocator: Optional[Any] = None
+        self.elastic: Optional[Any] = None
         self.campaign: Optional[Campaign] = None
         self.report: Optional[CampaignReport] = None
 
@@ -453,11 +524,25 @@ class ColmenaApp:
             event_log=self.event_log,
         )
 
-        # Worker pools: declared sizes, plus every pool a task names.
-        self.pool_sizes = dict(spec.pools or {"default": 4})
-        self.pool_sizes.setdefault("default", 1)
+        # Worker pools: declared specs, plus every pool a task names.
+        self.pool_specs = dict(spec.pools)
         for td in self.taskdefs:
-            self.pool_sizes.setdefault(td.pool, 1)
+            self.pool_specs.setdefault(td.pool, PoolSpec(td.pool, 1))
+        # Fabric knobs are the app-level defaults for per-pool caching;
+        # a PoolSpec's own fields win. Resolved ONCE here — both server
+        # branches consume the same resolved specs, so in-process and
+        # spawned servers always build identical pools.
+        fabric = spec.fabric or FabricSpec()
+        resolved_specs = {
+            name: dataclasses.replace(
+                ps,
+                warm_capacity=ps.warm_capacity if ps.warm_capacity is not None else fabric.warm_capacity,
+                prefetch=ps.prefetch if ps.prefetch is not None else fabric.prefetch,
+                injector=ps.injector if ps.injector is not None else spec.server.injector,
+            )
+            for name, ps in self.pool_specs.items()
+        }
+        self.pool_sizes = {name: ps.size for name, ps in self.pool_specs.items()}
 
         methods = {td.method: td.fn for td in self.taskdefs}
         method_resources = {
@@ -477,18 +562,9 @@ class ColmenaApp:
 
         # Task server: in-process threads, or a spawned process (pipe).
         if spec.server.in_process:
-            warm = spec.fabric.warm_capacity if spec.fabric else 32
-            prefetch = spec.fabric.prefetch if spec.fabric else True
             self.pools = {
-                name: WorkerPool(
-                    name,
-                    n,
-                    injector=spec.server.injector,
-                    prefetch_proxies=prefetch,
-                    warm_capacity=warm,
-                    event_log=self.event_log,
-                )
-                for name, n in self.pool_sizes.items()
+                name: ps.build(event_log=self.event_log)
+                for name, ps in resolved_specs.items()
             }
             self.server = TaskServer(
                 self.queues,
@@ -502,29 +578,13 @@ class ColmenaApp:
                 method_resources=method_resources,
             )
         else:
-            if set(self.pool_sizes) != {"default"}:
-                raise ValueError(
-                    "a separate server process supports only the 'default' pool "
-                    f"(got {sorted(self.pool_sizes)}); worker pools cannot cross processes"
-                )
-            if spec.fabric is not None and (
-                spec.fabric.warm_capacity != FabricSpec.warm_capacity
-                or spec.fabric.prefetch is not FabricSpec.prefetch
-            ):
-                # The spawned server builds its own default WorkerPool;
-                # refusing beats silently ignoring the declared knobs.
-                raise ValueError(
-                    "FabricSpec worker-cache knobs (warm_capacity/prefetch) cannot "
-                    "cross the process boundary; use the in-process server"
-                )
             self.server = ProcessTaskServer(
                 self.queues,
                 methods,
-                n_workers=self.pool_sizes["default"],
+                pool_specs=resolved_specs,
                 batching=batching,
                 retry=spec.server.retry,
                 straggler=spec.server.straggler,
-                injector=spec.server.injector,
                 heartbeat_timeout_s=spec.server.heartbeat_timeout_s,
                 method_resources=method_resources,
             )
@@ -536,6 +596,8 @@ class ColmenaApp:
                 self.thinker.rec.event_log = self.event_log
             if spec.observe is not None and spec.observe.reallocator is not None:
                 self.reallocator = self._build_reallocator(spec.observe)
+        if spec.observe is not None and spec.observe.elastic is not None:
+            self.elastic = self._build_elastic(spec.observe)
         if spec.campaign is not None:
             self.campaign = Campaign(
                 self.thinker,
@@ -547,6 +609,28 @@ class ColmenaApp:
 
         self._built = True
         return self
+
+    def _build_elastic(self, ospec: ObserveSpec) -> Any:
+        from repro.observe import ElasticPolicy, ElasticScaler
+
+        policy = ospec.elastic
+        if policy is True:
+            policy = ElasticPolicy()
+        elif isinstance(policy, Mapping):
+            policy = ElasticPolicy(**policy)
+        elastic_specs = {n: ps for n, ps in self.pool_specs.items() if ps.elastic}
+        if not elastic_specs:
+            raise ValueError(
+                "ObserveSpec.elastic is set but no PoolSpec widens its "
+                "[min_size, max_size] band; declare at least one elastic pool"
+            )
+        return ElasticScaler(
+            pools={n: self.pools[n] for n in elastic_specs},
+            specs=elastic_specs,
+            policy=policy,
+            event_log=self.event_log,
+            rec=self.thinker.rec if self.thinker is not None else None,
+        )
 
     def _build_reallocator(self, ospec: ObserveSpec) -> Any:
         from repro.observe import (
@@ -599,6 +683,8 @@ class ColmenaApp:
         self.server.start()
         if self.reallocator is not None:
             self.reallocator.start()
+        if self.elastic is not None:
+            self.elastic.start()
         if self.campaign is not None:
             self._ckpt_stop = threading.Event()
             self._ckpt_thread = threading.Thread(
@@ -665,6 +751,8 @@ class ColmenaApp:
                 pass
         if self.reallocator is not None:
             self.reallocator.stop()
+        if self.elastic is not None:
+            self.elastic.stop()
         if self.server is not None:
             self.server.stop()
         if self.store is not None:
@@ -707,6 +795,12 @@ class ColmenaApp:
             self.thinker.rec.event_log = log
         if self.reallocator is not None:
             self.reallocator.rebind_event_log(log)
+        if self.elastic is not None:
+            self.elastic.event_log = log
+            # Fresh log, fresh left edge: without a baseline gauge the
+            # fleet-capacity integral is undefined until the next resize
+            # and utilization would fall back to the static pool size.
+            self.elastic.emit_baseline()
         return prev
 
     def observe_report(self) -> dict:

@@ -37,7 +37,7 @@ import threading
 import time
 from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple
 
 from .proxystore import Proxy, iter_proxies, prefetch_all, resolve_all
 from .result import FailureKind, Result
@@ -152,6 +152,19 @@ class FailureInjector:
         self._rng = random.Random(self.seed)
         self._lock = threading.Lock()
 
+    # Injectors ride inside PoolSpecs across process boundaries (spawned
+    # task servers); the lock is per-process, the rng restarts from seed.
+    def __getstate__(self) -> dict:
+        state = dict(self.__dict__)
+        state.pop("_rng", None)
+        state.pop("_lock", None)
+        return state
+
+    def __setstate__(self, state: dict) -> None:
+        self.__dict__.update(state)
+        self._rng = random.Random(self.seed)
+        self._lock = threading.Lock()
+
     def before_task(self, worker_id: int, result: Result) -> None:
         with self._lock:
             if worker_id in self.doomed_workers:
@@ -179,6 +192,140 @@ class WorkerState:
     tasks_done: int = 0
     registry: Dict[str, Any] = field(default_factory=dict)
     warm: Optional[WarmCache] = None
+
+
+@dataclass
+class PoolSpec:
+    """Declarative, picklable description of one worker pool.
+
+    This is the unit of resource composition everywhere: ``AppSpec.pools``
+    normalizes to it, process-mode task servers rebuild pools from it
+    inside the spawned child (specs cross process boundaries; live
+    ``WorkerPool`` objects cannot), and the elastic fleet machinery
+    resizes within its ``[min_size, max_size]`` band.
+
+    ``warm_capacity``/``prefetch`` left as ``None`` inherit the app's
+    ``FabricSpec`` knobs (or the WorkerPool defaults when composed
+    directly). ``min_size``/``max_size`` left as ``None`` pin the pool at
+    ``size`` — elasticity is opt-in by widening the band.
+    """
+
+    name: str
+    size: int = 4
+    min_size: Optional[int] = None
+    max_size: Optional[int] = None
+    warm_capacity: Optional[int] = None
+    prefetch: Optional[bool] = None
+    injector: Optional[FailureInjector] = None
+
+    def __post_init__(self) -> None:
+        if self.size < 0:
+            raise ValueError(f"pool {self.name!r}: size must be >= 0 (got {self.size})")
+        lo, hi = self.bounds()
+        if not (lo <= self.size <= hi):
+            raise ValueError(
+                f"pool {self.name!r}: size {self.size} outside [min_size, max_size] = [{lo}, {hi}]"
+            )
+
+    def bounds(self) -> Tuple[int, int]:
+        lo = self.size if self.min_size is None else self.min_size
+        hi = self.size if self.max_size is None else self.max_size
+        if lo > hi:
+            raise ValueError(f"pool {self.name!r}: min_size {lo} > max_size {hi}")
+        return lo, hi
+
+    @property
+    def elastic(self) -> bool:
+        lo, hi = self.bounds()
+        return lo != hi
+
+    def clamp(self, target: int) -> int:
+        lo, hi = self.bounds()
+        return max(lo, min(hi, target))
+
+    def build(
+        self,
+        event_log: Optional[Any] = None,
+        injector: Optional[FailureInjector] = None,
+        warm_capacity: int = 32,
+        prefetch: bool = True,
+    ) -> "WorkerPool":
+        """Construct the live pool. ``injector``/``warm_capacity``/
+        ``prefetch`` arguments are the app-level defaults; the spec's own
+        fields win when set."""
+        return WorkerPool(
+            self.name,
+            self.size,
+            injector=self.injector if self.injector is not None else injector,
+            prefetch_proxies=self.prefetch if self.prefetch is not None else prefetch,
+            warm_capacity=self.warm_capacity if self.warm_capacity is not None else warm_capacity,
+            event_log=event_log,
+        )
+
+    # -- serialization (repro.core.specfile) --------------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        if self.injector is not None:
+            raise ValueError(
+                f"pool {self.name!r}: a FailureInjector is not serializable; "
+                "drop it from the spec before saving"
+            )
+        out: Dict[str, Any] = {"size": self.size}
+        for key in ("min_size", "max_size", "warm_capacity", "prefetch"):
+            val = getattr(self, key)
+            if val is not None:
+                out[key] = val
+        return out
+
+    @classmethod
+    def from_dict(cls, name: str, d: Any) -> "PoolSpec":
+        if isinstance(d, int):
+            return cls(name=name, size=d)
+        if not isinstance(d, Mapping):
+            raise TypeError(f"pool {name!r}: expected an int or a table, got {type(d).__name__}")
+        allowed = {"size", "min_size", "max_size", "warm_capacity", "prefetch"}
+        unknown = set(d) - allowed
+        if unknown:
+            raise ValueError(f"pool {name!r}: unknown keys {sorted(unknown)}")
+        return cls(name=name, **dict(d))
+
+
+def normalize_pools(
+    pools: Any,
+    default_size: int = 4,
+) -> Dict[str, PoolSpec]:
+    """Normalize every accepted ``pools`` shorthand to ``{name: PoolSpec}``.
+
+    Accepted: ``None`` (one default pool), ``{name: int}`` (the historical
+    shorthand), ``{name: PoolSpec}`` (names must agree), a mix of the two,
+    or a sequence of ``PoolSpec``s.
+    """
+    if pools is None:
+        return {"default": PoolSpec("default", default_size)}
+    out: Dict[str, PoolSpec] = {}
+    if isinstance(pools, Mapping):
+        items = pools.items()
+    else:
+        items = [(getattr(p, "name", None), p) for p in pools]
+    for name, val in items:
+        if isinstance(val, PoolSpec):
+            if name is not None and name != val.name:
+                raise ValueError(f"pool key {name!r} disagrees with PoolSpec.name {val.name!r}")
+            spec = val
+        elif isinstance(val, int):
+            if name is None:  # sequence form carries no names: PoolSpecs only
+                raise TypeError(
+                    f"a pools sequence must contain PoolSpecs, got {val!r}; "
+                    "use a {name: size} mapping for the int shorthand"
+                )
+            spec = PoolSpec(str(name), val)
+        else:
+            raise TypeError(
+                f"pool {name!r}: expected an int or PoolSpec, got {type(val).__name__}"
+            )
+        if spec.name in out:
+            raise ValueError(f"duplicate pool {spec.name!r}")
+        out[spec.name] = spec
+    return out
 
 
 class WorkerPool:
@@ -218,19 +365,32 @@ class WorkerPool:
         self._next_id = 0
         self._lock = threading.Lock()
         self._shutdown = threading.Event()
+        # Outstanding scale-down requests. Workers claim one at the top of
+        # their loop — *before* popping a task — so a shrink lands as soon
+        # as any worker goes between tasks, not after the whole backlog
+        # drains (the old poison-pill-in-the-task-queue behaviour).
+        self._pending_removals = 0
         self.add_workers(n_workers)
 
     # --------------------------------------------------------------- sizing
     @property
     def n_workers(self) -> int:
+        """Effective capacity: live workers minus shrinks already
+        requested but not yet claimed (a pending removal is capacity the
+        pool has committed to give back)."""
         with self._lock:
-            return sum(1 for w in self._workers.values() if w.alive)
+            alive = sum(1 for w in self._workers.values() if w.alive)
+            return max(0, alive - self._pending_removals)
 
     def add_workers(self, n: int) -> List[int]:
-        """Elastic scale-up."""
+        """Elastic scale-up. Pending shrinks are cancelled first — a grow
+        immediately after a shrink nets out instead of churning threads."""
         ids = []
         for _ in range(n):
             with self._lock:
+                if self._pending_removals > 0:
+                    self._pending_removals -= 1
+                    continue
                 wid = self._next_id
                 self._next_id += 1
                 state = WorkerState(
@@ -248,10 +408,50 @@ class WorkerPool:
         return ids
 
     def remove_workers(self, n: int) -> None:
-        """Elastic scale-down: poison-pill ``n`` workers (they exit after
-        finishing their current task)."""
-        for _ in range(n):
-            self._queue.put(None)
+        """Elastic scale-down: ``n`` workers exit after at most one more
+        task. Removals are tracked as a counter claimed by idle workers
+        ahead of queued work, so a shrink queued behind a deep backlog
+        still lands promptly and ``n_workers`` reflects the committed
+        capacity immediately. Requests beyond the live worker count are
+        clamped — unclaimable phantom removals would otherwise absorb
+        every later ``add_workers`` grow."""
+        if n <= 0:
+            return
+        with self._lock:
+            alive = sum(1 for w in self._workers.values() if w.alive)
+            self._pending_removals = min(self._pending_removals + n, alive)
+
+    def resize(self, target: int) -> Tuple[int, int]:
+        """Elastic resize to ``target`` workers; returns ``(old, new)``
+        effective counts. Built on ``add_workers``/``remove_workers`` so
+        shrinks never interrupt a running task."""
+        if target < 0:
+            target = 0
+        with self._lock:
+            alive = sum(1 for w in self._workers.values() if w.alive)
+            current = max(0, alive - self._pending_removals)
+        if target > current:
+            self.add_workers(target - current)
+        elif target < current:
+            self.remove_workers(current - target)
+        return current, target
+
+    def _claim_removal(self, state: WorkerState) -> bool:
+        """Consume one pending removal for this worker (it will exit).
+
+        The worker deregisters itself entirely: a clean scale-down is not
+        a death, so the heartbeat monitor must neither fail over its
+        (empty) task slate nor replace it. Dead workers never claim — a
+        killed 'node' consuming the removal would leave the live fleet
+        unshrunk and rob the heartbeat monitor of its failover record."""
+        with self._lock:
+            if self._pending_removals <= 0 or not state.alive:
+                return False
+            self._pending_removals -= 1
+            state.alive = False
+            self._workers.pop(state.worker_id, None)
+            self._threads.pop(state.worker_id, None)
+        return True
 
     def kill_worker(self, worker_id: int) -> None:
         """Simulate immediate node loss: mark dead; the heartbeat monitor /
@@ -373,16 +573,16 @@ class WorkerPool:
 
     def _worker_loop(self, state: WorkerState) -> None:
         while not self._shutdown.is_set():
+            # Scale-down claims happen between tasks, ahead of the next
+            # pop: the worker's warm cache dies with it.
+            if self._claim_removal(state):
+                self._forget_prefetched()
+                return
             try:
                 item = self._queue.get(timeout=0.05)
             except queue.Empty:
                 state.last_heartbeat = time.monotonic()
                 continue
-            if item is None:  # poison pill (scale-down)
-                with self._lock:
-                    state.alive = False
-                self._forget_prefetched()
-                return
             batch, fn, on_done = item
             if not state.alive:  # killed while idle: drop back and exit
                 self._queue.put(item)

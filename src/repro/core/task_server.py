@@ -35,7 +35,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
-from .executors import FailureInjector, WorkerPool
+from .executors import FailureInjector, PoolSpec, WorkerPool
 from .queues import ColmenaQueues, KillSignal
 from .result import FailureKind, ResourceRequest, Result
 
@@ -101,6 +101,7 @@ class TaskServer:
         queues: ColmenaQueues,
         methods: Dict[str, Callable],
         pools: Optional[Dict[str, WorkerPool]] = None,
+        pool_specs: Optional[Dict[str, PoolSpec]] = None,
         n_workers: int = 4,
         retry: Optional[RetryPolicy] = None,
         straggler: Optional[StragglerPolicy] = None,
@@ -116,6 +117,12 @@ class TaskServer:
         # Per-method resource defaults (the repro.app task registry):
         # requests that left pool/timeout unset inherit the method's.
         self.method_resources = dict(method_resources or {})
+        # ``pool_specs`` is the declarative form: picklable, so a server
+        # spawned in its own process rebuilds the full named-pool dict on
+        # its side of the boundary (live WorkerPool objects cannot cross).
+        # Live ``pools`` win when both are given.
+        if pools is None and pool_specs:
+            pools = {name: spec.build(injector=injector) for name, spec in pool_specs.items()}
         self.pools = pools or {"default": WorkerPool("default", n_workers, injector=injector)}
         # Telemetry: default to the queues' log so one wiring point covers
         # the whole lifecycle; pools without their own log inherit it.

@@ -26,13 +26,16 @@ sink path is given. Fields:
 ``t``        ``time.monotonic()`` seconds at emission (``t_rel`` in the
              JSONL sink is relative to log creation)
 ``kind``     ``task`` (lifecycle stage), ``gauge`` (named scalar sample,
-             e.g. ``slots`` or ``batch_occupancy``), ``cache``
-             (warm-worker cache ``hit``/``miss``), ``realloc``
-             (slot move), or ``surrogate`` (model lifecycle:
-             ``retrain`` with value=rmse, ``rerank`` with
-             value=acquisition regret). The kind set is OPEN:
-             consumers must tolerate (count, not crash on) kinds they
-             do not model — see ``MetricsAggregator.unknown_kinds``
+             e.g. ``slots``, ``workers`` — the elastic fleet size — or
+             ``batch_occupancy``), ``cache`` (warm-worker cache
+             ``hit``/``miss``), ``realloc`` (steering-slot move),
+             ``pool_resize`` (elastic worker-fleet ``grow``/``shrink``;
+             value = new size, info carries old/new/reason), or
+             ``surrogate`` (model lifecycle: ``retrain`` with
+             value=rmse, ``rerank`` with value=acquisition regret).
+             The kind set is OPEN: consumers must tolerate (count, not
+             crash on) kinds they do not model — see
+             ``MetricsAggregator.unknown_kinds``
 ``stage``    lifecycle stage for tasks — in causal order: ``submitted``,
              ``queued``, ``picked_up``, ``dispatched``, ``running``,
              ``completed``/``failed``, ``result_received``,
@@ -80,6 +83,8 @@ from .metrics import (
 )
 from .reallocator import (
     AdaptiveReallocator,
+    ElasticPolicy,
+    ElasticScaler,
     EMABacklogPolicy,
     GreedyBacklogPolicy,
     Move,
@@ -88,7 +93,7 @@ from .reallocator import (
     ReallocatorMixin,
 )
 from .report import build_report, dump_json, render_text
-from .synthetic import PoolWorkloadThinker, run_pool_workload, run_two_pool
+from .synthetic import PoolWorkloadThinker, run_bursty, run_pool_workload, run_two_pool
 
 __all__ = [
     "AdaptiveReallocator",
@@ -97,6 +102,8 @@ __all__ = [
     "build_report",
     "CacheStats",
     "dump_json",
+    "ElasticPolicy",
+    "ElasticScaler",
     "EMABacklogPolicy",
     "Event",
     "EventLog",
@@ -112,6 +119,7 @@ __all__ = [
     "ReallocationPolicy",
     "ReallocatorMixin",
     "render_text",
+    "run_bursty",
     "run_pool_workload",
     "run_two_pool",
     "STAGE_ORDER",

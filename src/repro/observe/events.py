@@ -148,6 +148,17 @@ class EventLog:
                   value=float(n), info={"src": src, "dst": dst, "n": n, **info})
         )
 
+    def pool_resize(self, pool: str, old: int, new: int, **info: Any) -> Event:
+        """Record an elastic worker-fleet change (``kind="pool_resize"``,
+        stage ``grow``/``shrink``, value = the new worker count). Reports
+        integrate the paired ``workers`` gauges to get capacity over
+        time; the resize events carry the why (``info["reason"]``)."""
+        return self.emit(
+            Event(t=self._clock(), kind="pool_resize",
+                  stage="grow" if new >= old else "shrink", pool=pool,
+                  value=float(new), info={"old": old, "new": new, **info})
+        )
+
     def surrogate_event(self, stage: str, value: Optional[float] = None, **info: Any) -> Event:
         """Record a surrogate-model lifecycle observation (``kind=
         "surrogate"``): ``retrain`` (value = training rmse; ``info``

@@ -192,6 +192,11 @@ class MetricsAggregator:
         self.t_last: Optional[float] = None
         self.reallocations: List[Event] = []
         self.surrogate_events: List[Event] = []
+        # Elastic worker fleets: ``workers`` gauges integrate to capacity
+        # over time (the denominator of fleet utilization); the resize
+        # events carry old/new/reason for the report.
+        self._fleet: Dict[str, _Capacity] = {}
+        self.pool_resizes: List[Event] = []
         # Forward-compat: kinds this aggregator does not understand are
         # counted, never dropped silently or crashed on — newer emitters
         # may share a log with older consumers.
@@ -214,6 +219,8 @@ class MetricsAggregator:
             if ev.kind == "gauge":
                 if ev.stage == "slots" and ev.pool is not None:
                     self._capacity.setdefault(ev.pool, _Capacity()).set(ev.t, ev.value or 0.0)
+                elif ev.stage == "workers" and ev.pool is not None:
+                    self._fleet.setdefault(ev.pool, _Capacity()).set(ev.t, ev.value or 0.0)
                 elif ev.stage == "batch_occupancy":
                     st = self._batches.setdefault(ev.info.get("method") or "?", BatchStats())
                     n = int(ev.value or 0)
@@ -231,6 +238,9 @@ class MetricsAggregator:
                 return
             if ev.kind == "realloc":
                 self.reallocations.append(ev)
+                return
+            if ev.kind == "pool_resize":
+                self.pool_resizes.append(ev)
                 return
             if ev.kind == "surrogate":
                 self.surrogate_events.append(ev)
@@ -407,6 +417,36 @@ class MetricsAggregator:
                 return None
             return cap.integral_until(until if until is not None else (self.t_last or 0.0))
 
+    def fleet_worker_seconds(self, pool: str, until: Optional[float] = None) -> Optional[float]:
+        """Integral of the pool's ``workers`` gauge — elastic worker-fleet
+        capacity over time (None when the fleet was never gauged)."""
+        with self._lock:
+            cap = self._fleet.get(pool)
+            if cap is None:
+                return None
+            return cap.integral_until(until if until is not None else (self.t_last or 0.0))
+
+    def fleet_utilization(self) -> Dict[str, float]:
+        """Busy-fraction per pool against the *worker fleet* capacity
+        integral (resize-aware), plus a ``total`` roll-up. Only pools
+        with ``workers`` gauges appear — the elastic acceptance metric:
+        same busy seconds over a smaller capacity integral is the win."""
+        with self._lock:
+            pools = list(self._pools.items())
+        busy_total = 0.0
+        cap_total = 0.0
+        out: Dict[str, float] = {}
+        for name, st in pools:
+            cap = self.fleet_worker_seconds(name)
+            if cap is None or cap <= 0:
+                continue
+            out[name] = st.busy_seconds / cap
+            busy_total += st.busy_seconds
+            cap_total += cap
+        if cap_total > 0:
+            out["total"] = busy_total / cap_total
+        return out
+
     def utilization(
         self,
         total_slots: Optional[int] = None,
@@ -415,27 +455,44 @@ class MetricsAggregator:
         """Busy-fraction per pool (and ``total``) over the observed window.
 
         Pool capacity comes from, in order of preference: recorded
-        ``slots`` gauges (reallocation-aware), the ``slots_by_pool``
-        mapping, or — for ``total`` only — ``total_slots``.
+        ``slots`` gauges (reallocation-aware), recorded ``workers``
+        gauges (elastic-fleet resize-aware), the static
+        ``slots_by_pool`` mapping, or — for ``total`` only —
+        ``total_slots``. The gauge integrals matter for elastic pools:
+        a static denominator would report >100% utilization the moment
+        the fleet grows past its initial size.
         """
         span = self.makespan()
         out: Dict[str, float] = {}
         if span <= 0:
             return out
         busy_total = 0.0
+        busy_covered = 0.0
+        cap_total = 0.0
         with self._lock:
-            pools = list(self._pools.items())
-        for name, st in pools:
-            busy_total += st.busy_seconds
+            pools = dict(self._pools)
+            gauged = set(self._capacity) | set(self._fleet)
+        # Every pool with known capacity counts toward the total — a
+        # declared pool that sat idle is exactly the waste a utilization
+        # report exists to expose, so zero-busy pools stay in the
+        # denominator. Only busy time with *unknown* capacity is excluded
+        # (it would otherwise inflate the total past 100%).
+        names = set(pools) | gauged | set(slots_by_pool or {})
+        for name in sorted(names):
+            st = pools.get(name)
+            busy = st.busy_seconds if st is not None else 0.0
+            busy_total += busy
             cap_ss = self.capacity_slot_seconds(name)
+            if cap_ss is None:
+                cap_ss = self.fleet_worker_seconds(name)
             if cap_ss is None and slots_by_pool and name in slots_by_pool:
                 cap_ss = slots_by_pool[name] * span
             if cap_ss and cap_ss > 0:
-                out[name] = st.busy_seconds / cap_ss
+                out[name] = busy / cap_ss
+                cap_total += cap_ss
+                busy_covered += busy
         if total_slots:
             out["total"] = busy_total / (total_slots * span)
-        elif slots_by_pool:
-            denom = sum(slots_by_pool.values()) * span
-            if denom > 0:
-                out["total"] = busy_total / denom
+        elif cap_total > 0:
+            out["total"] = busy_covered / cap_total
         return out

@@ -26,7 +26,7 @@ from __future__ import annotations
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from ..core.thinker import ResourceCounter, agent
 from .events import EventLog
@@ -222,3 +222,173 @@ class ReallocatorMixin:
         while not self.done.is_set():
             r.step()
             self.done.wait(r.interval)
+
+
+# --------------------------------------------------------------------------
+# Elastic worker fleets
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class ElasticPolicy:
+    """Knobs for the worker-fleet autoscaler: the ``AdaptiveReallocator``
+    idea applied to the fleet itself. Grow whenever dispatched work waits
+    for a worker; shrink after ``idle_grace_ticks`` consecutive ticks
+    with idle workers and nothing queued — hysteresis so a gap between
+    bursts does not thrash the fleet."""
+
+    interval: float = 0.05        # seconds between ticks
+    step: int = 1                 # max workers added/removed per tick
+    idle_grace_ticks: int = 3     # consecutive idle ticks before a shrink
+
+    def to_dict(self) -> Dict[str, float]:
+        return {"interval": self.interval, "step": self.step,
+                "idle_grace_ticks": self.idle_grace_ticks}
+
+
+class ElasticScaler:
+    """Resize elastic ``WorkerPool``s toward demand, within each pool's
+    ``PoolSpec`` [min, max] band.
+
+    Demand is read straight off the pools (``queued()`` = dispatched
+    work waiting for a worker; busy/idle from worker states) — the
+    binding signal for fleet sizing, where the reallocator's event-log
+    backlog measures *steering-slot* pressure. Every change goes through
+    ``WorkerPool.resize`` and is recorded as a ``pool_resize`` event
+    plus a ``workers`` gauge, so reports integrate true capacity over
+    time. When a ``ResourceCounter`` is supplied, steering-slot capacity
+    for same-named pools is grown/shrunk in lockstep so task submitters
+    see the extra workers.
+    """
+
+    def __init__(
+        self,
+        pools: Dict[str, Any],               # name -> repro.core.WorkerPool
+        specs: Dict[str, Any],               # name -> repro.core.PoolSpec
+        policy: Optional[ElasticPolicy] = None,
+        event_log: Optional[EventLog] = None,
+        rec: Optional[ResourceCounter] = None,
+    ) -> None:
+        unknown = set(pools) - set(specs)
+        if unknown:
+            raise ValueError(f"pools without specs: {sorted(unknown)}")
+        self.pools = dict(pools)
+        self.specs = dict(specs)
+        self.policy = policy or ElasticPolicy()
+        self.event_log = event_log
+        self.rec = rec
+        self.resizes: List[Tuple[float, str, int, int]] = []
+        self._idle_ticks: Dict[str, int] = {p: 0 for p in pools}
+        # Steering slots the counter still owes back after a fleet shrink
+        # (rec.shrink is all-or-nothing and only takes idle slots; a
+        # failed shrink is retried every tick, never dropped — otherwise
+        # one timed-out shrink would desync slots from workers forever).
+        self._rec_debt: Dict[str, int] = {}
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------ gauges
+    def emit_baseline(self) -> None:
+        """Gauge every fleet's starting size so capacity integration has
+        a left edge (mirrors ``ResourceCounter.event_log``'s baseline)."""
+        if self.event_log is None:
+            return
+        for name, pool in self.pools.items():
+            self.event_log.gauge("workers", pool.n_workers, pool=name)
+
+    # ------------------------------------------------------------------- tick
+    def _decide(self, name: str, pool: Any) -> Optional[int]:
+        """Target size for one pool this tick, or None to hold."""
+        spec = self.specs[name]
+        current = pool.n_workers
+        queued = pool.queued()
+        busy = sum(1 for w in pool.worker_states() if w.busy and w.alive)
+        idle = max(0, current - busy)
+        if queued > 0:
+            self._idle_ticks[name] = 0
+            target = spec.clamp(current + min(self.policy.step, queued))
+            return target if target != current else None
+        if idle > 0:
+            self._idle_ticks[name] += 1
+            if self._idle_ticks[name] >= self.policy.idle_grace_ticks:
+                self._idle_ticks[name] = 0
+                target = spec.clamp(current - min(self.policy.step, idle))
+                return target if target != current else None
+        else:
+            self._idle_ticks[name] = 0
+        return None
+
+    def step(self) -> bool:
+        """One autoscaler tick over every pool; True when any resize
+        happened."""
+        changed = False
+        self._settle_rec_debt()
+        for name, pool in self.pools.items():
+            target = self._decide(name, pool)
+            if target is None:
+                continue
+            old, new = pool.resize(target)
+            if new == old:
+                continue
+            self._sync_rec(name, old, new)
+            changed = True
+            self.resizes.append((time.monotonic(), name, old, new))
+            if self.event_log is not None:
+                self.event_log.pool_resize(
+                    name, old, new,
+                    reason="backlog" if new > old else "idle",
+                )
+                self.event_log.gauge("workers", new, pool=name)
+        return changed
+
+    def _sync_rec(self, name: str, old: int, new: int) -> None:
+        """Keep steering-slot capacity in step with the fleet. A shrink
+        only removes *idle* slots (never yanks capacity out from under a
+        submitted task), so slots that cannot be reclaimed right now are
+        booked as debt and settled on later ticks; a grow pays down debt
+        before adding fresh capacity."""
+        rec = self.rec
+        if rec is None or name not in rec.pools():
+            return
+        if new > old:
+            n = new - old
+            settled = min(self._rec_debt.get(name, 0), n)
+            if settled:
+                self._rec_debt[name] -= settled
+                n -= settled
+            if n:
+                rec.grow(name, n)
+        else:
+            self._rec_debt[name] = self._rec_debt.get(name, 0) + (old - new)
+            self._settle_rec_debt(only=name)
+
+    def _settle_rec_debt(self, only: Optional[str] = None) -> None:
+        """Reclaim owed steering slots as they fall idle, one at a time,
+        without blocking the scaler loop."""
+        rec = self.rec
+        if rec is None:
+            return
+        for name, owed in list(self._rec_debt.items()):
+            if only is not None and name != only:
+                continue
+            while owed > 0 and rec.shrink(name, 1, timeout=0):
+                owed -= 1
+            self._rec_debt[name] = owed
+
+    # -------------------------------------------------------------- lifecycle
+    def run(self, stop: Optional[threading.Event] = None) -> None:
+        stop = stop or self._stop
+        self.emit_baseline()
+        while not stop.is_set() and not self._stop.is_set():
+            self.step()
+            stop.wait(self.policy.interval)
+
+    def start(self) -> "ElasticScaler":
+        self._thread = threading.Thread(target=self.run, daemon=True, name="elastic-scaler")
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=2.0)

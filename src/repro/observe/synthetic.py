@@ -1,4 +1,4 @@
-"""Synthetic imbalanced-pool workloads for benchmarking the reallocator.
+"""Synthetic workloads for benchmarking the reallocator and elastic fleets.
 
 ``PoolWorkloadThinker`` drains fixed per-pool work lists through
 slot-gated task submitters (one per pool, installed dynamically), so the
@@ -10,7 +10,16 @@ static split strands slots on a pool whose work has drained, while an
 ``run_pool_workload`` wires the full stack (event log -> queues -> task
 server -> thinker [-> reallocator]) and returns the event-log report;
 ``run_two_pool`` is the canonical sim/ml instance used by
-``benchmarks/utilization.py`` and the acceptance test.
+``benchmarks/utilization.py`` and the acceptance test. Pools are built
+from ``PoolSpec``s (pass ``pool_specs=`` to shape warm/prefetch knobs),
+so synthetic replays compose their fleets exactly like app-composed
+campaigns.
+
+``run_bursty`` is the elastic-fleet counterpart: the *worker fleet* —
+not the slot split — is the binding resource under a bursty arrival
+pattern, and an ``ElasticScaler`` grows/shrinks the fleet within the
+``PoolSpec`` band while a static fleet idles through the gaps (the
+elastic-vs-static acceptance comparison).
 """
 
 from __future__ import annotations
@@ -20,12 +29,19 @@ import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from ..core.queues import LocalColmenaQueues
-from ..core.executors import WorkerPool
+from ..core.executors import PoolSpec, WorkerPool
 from ..core.result import ResourceRequest, Result
 from ..core.task_server import TaskServer
 from ..core.thinker import BaseThinker, ResourceCounter, result_processor
 from .events import EventLog
-from .reallocator import AdaptiveReallocator, GreedyBacklogPolicy, ReallocationPolicy, ReallocatorMixin
+from .reallocator import (
+    AdaptiveReallocator,
+    ElasticPolicy,
+    ElasticScaler,
+    GreedyBacklogPolicy,
+    ReallocationPolicy,
+    ReallocatorMixin,
+)
 from .report import build_report
 
 WorkItem = Tuple[tuple, dict]
@@ -121,20 +137,27 @@ def run_pool_workload(
     interval: float = 0.01,
     jsonl_path: Optional[str] = None,
     workers_per_pool: Optional[int] = None,
+    pool_specs: Optional[Dict[str, PoolSpec]] = None,
     timeout: float = 120.0,
 ) -> Tuple[dict, EventLog, PoolWorkloadThinker]:
     """Run one campaign; returns (report, event_log, thinker).
 
-    Worker pools are oversized (``workers_per_pool`` defaults to the
-    total slot count) so the ResourceCounter split is the only binding
-    resource, matching the paper's node-allocation model.
+    Pools are composed from ``PoolSpec``s — the same resource vocabulary
+    as ``repro.app`` — so warm/prefetch knobs shape synthetic replays
+    exactly like app-composed pools. By default each pool is oversized
+    (``workers_per_pool`` defaults to the total slot count) so the
+    ResourceCounter split is the only binding resource, matching the
+    paper's node-allocation model; pass ``pool_specs`` to override any
+    pool's spec wholesale.
     """
     total = sum(allocations.values())
     n_workers = workers_per_pool or total
     log = EventLog(jsonl_path=jsonl_path)
     queues = LocalColmenaQueues(event_log=log)
-    pools = {p: WorkerPool(p, n_workers) for p in allocations}
-    pools.setdefault("default", WorkerPool("default", 1))
+    specs = {p: PoolSpec(p, n_workers) for p in allocations}
+    specs.setdefault("default", PoolSpec("default", 1))
+    specs.update(pool_specs or {})
+    pools = {name: ps.build(event_log=log) for name, ps in specs.items()}
     server = TaskServer(queues, dict(task_fns), pools=pools)
 
     thinker = PoolWorkloadThinker(queues, allocations, work, methods)
@@ -189,3 +212,111 @@ def run_two_pool(
         allocations, work, methods, fns,
         adaptive=adaptive, policy=policy, jsonl_path=jsonl_path,
     )
+
+
+# --------------------------------------------------------------------------
+# Bursty elastic-fleet workload
+# --------------------------------------------------------------------------
+
+
+def run_bursty(
+    elastic: bool,
+    n_bursts: int = 3,
+    burst_size: int = 18,
+    gap_s: float = 0.35,
+    task_s: float = 0.03,
+    min_size: int = 1,
+    max_size: int = 6,
+    policy: Optional[ElasticPolicy] = None,
+    jsonl_path: Optional[str] = None,
+) -> dict:
+    """Drive a bursty arrival pattern through one pool; the worker fleet
+    is the binding resource.
+
+    ``elastic=False`` pins the fleet at ``max_size`` for the whole run —
+    it absorbs each burst fast but idles through every gap.
+    ``elastic=True`` starts at ``min_size`` and lets an ``ElasticScaler``
+    grow into each burst and shrink through each gap within the
+    ``PoolSpec`` band. Both runs execute identical work, so the
+    acceptance comparison is utilization = busy seconds over the
+    integral of the ``workers`` gauge: elastic pays for capacity only
+    while there is work to run.
+
+    Returns ``{"utilization": float, "busy_s": ..., "capacity_ws": ...,
+    "makespan_s": ..., "resizes": int, "completed": int, "report": dict}``.
+    """
+    log = EventLog(jsonl_path=jsonl_path)
+    queues = LocalColmenaQueues(event_log=log)
+    if elastic:
+        spec = PoolSpec("burst", size=min_size, min_size=min_size, max_size=max_size)
+    else:
+        spec = PoolSpec("burst", size=max_size)
+    pool = spec.build(event_log=log)
+    server = TaskServer(queues, {"burst_task": _sleep_task}, pools={"burst": pool})
+    scaler: Optional[ElasticScaler] = None
+    if elastic:
+        scaler = ElasticScaler(
+            {"burst": pool}, {"burst": spec},
+            policy=policy or ElasticPolicy(interval=0.01, step=2, idle_grace_ticks=3),
+            event_log=log,
+        )
+    else:
+        log.gauge("workers", pool.n_workers, pool="burst")
+
+    total = n_bursts * burst_size
+    done = threading.Event()
+    n_done = [0]
+    lock = threading.Lock()
+
+    def drain() -> None:
+        while not done.is_set():
+            r = queues.get_result(timeout=1.0)
+            if r is None:
+                continue
+            with lock:
+                n_done[0] += 1
+                if n_done[0] >= total:
+                    done.set()
+
+    drainer = threading.Thread(target=drain, daemon=True, name="bursty-drain")
+    server.start()
+    if scaler is not None:
+        scaler.start()
+    drainer.start()
+    try:
+        for burst in range(n_bursts):
+            if burst:
+                time.sleep(gap_s)
+            for _ in range(burst_size):
+                queues.send_inputs(task_s, method="burst_task",
+                                   resources=ResourceRequest(pool="burst"))
+        done.wait(timeout=120.0)
+    finally:
+        done.set()
+        if scaler is not None:
+            scaler.stop()
+        # Close the capacity integral at the fleet's final size.
+        log.gauge("workers", pool.n_workers, pool="burst")
+        server.stop()
+        log.close()
+        drainer.join(timeout=2.0)
+
+    report = build_report(log)
+    from .metrics import MetricsAggregator
+
+    agg = MetricsAggregator()
+    for ev in log.events():
+        agg.observe(ev)
+    busy = agg.pool_stats().get("burst")
+    busy_s = busy.busy_seconds if busy else 0.0
+    capacity_ws = agg.fleet_worker_seconds("burst") or 0.0
+    util = agg.fleet_utilization().get("burst", 0.0)
+    return {
+        "utilization": util,
+        "busy_s": busy_s,
+        "capacity_ws": capacity_ws,
+        "makespan_s": agg.makespan(),
+        "resizes": len(scaler.resizes) if scaler is not None else 0,
+        "completed": n_done[0],
+        "report": report,
+    }

@@ -45,6 +45,10 @@ def _double(x):
     return 2 * x
 
 
+def _triple(x):
+    return 3 * x
+
+
 class CountingThinker(BaseThinker):
     """Submit-on-completion thinker with checkpointable progress."""
 
@@ -265,6 +269,49 @@ class TestLifecycleEdges:
                 outputs[backend] = sorted(r.value for r in handle.thinker.results)
             assert app.report.completed
         assert outputs["local"] == outputs["pipe"] == [2 * i for i in range(8)]
+
+    def test_two_pool_process_server_parity(self):
+        """A two-pool campaign must produce identical results whether the
+        named pools live in this process or are rebuilt from PoolSpecs
+        inside a spawned server (the federated multi-resource shape)."""
+        from repro.app import PoolSpec, ServerSpec
+
+        outputs = {}
+        for backend, in_process in (("local", True), ("pipe", False)):
+            app = ColmenaApp(AppSpec(
+                tasks=[TaskDef(fn=_double, method="double", pool="cpu"),
+                       TaskDef(fn=_triple, method="triple", pool="accel")],
+                queues=QueueSpec(backend=backend),
+                pools={"cpu": 2, "accel": PoolSpec("accel", 1, warm_capacity=8)},
+                server=ServerSpec(in_process=in_process),
+            ))
+            with app.run(timeout=60) as handle:
+                for i in range(4):
+                    handle.queues.send_inputs(i, method="double")
+                    handle.queues.send_inputs(i, method="triple")
+                got = sorted(
+                    handle.queues.get_result(timeout=60).value for _ in range(8)
+                )
+            outputs[backend] = got
+            assert app.report.completed
+        expect = sorted([2 * i for i in range(4)] + [3 * i for i in range(4)])
+        assert outputs["local"] == outputs["pipe"] == expect
+
+    def test_fabric_knobs_cross_process_boundary(self):
+        """Warm/prefetch knobs ride inside PoolSpecs now; the old
+        refusal for in_process=False is gone."""
+        from repro.app import ServerSpec
+
+        app = ColmenaApp(AppSpec(
+            tasks={"echo": _echo},
+            queues=QueueSpec(backend="pipe"),
+            fabric=FabricSpec(connector="file", warm_capacity=4, prefetch=False),
+            server=ServerSpec(in_process=False),
+        ))
+        with app.run(timeout=60) as handle:
+            handle.queues.send_inputs(7, method="echo")
+            r = handle.queues.get_result(timeout=30)
+        assert r is not None and r.success and r.value == 7
 
     def test_resume_from_checkpoint_through_app(self, tmp_path):
         state_dir = str(tmp_path)

@@ -1,0 +1,412 @@
+"""PoolSpec + elastic worker fleets.
+
+Covers the resource-vocabulary redesign: PoolSpec normalization/bounds/
+pickling, the remove_workers scale-down latency regression (pending
+removals claimed ahead of queued tasks), WorkerPool.resize, the
+heartbeat monitor's scaled-down-vs-died distinction, the ElasticScaler
+grow/shrink loop with pool_resize telemetry, and the app-level
+ObserveSpec.elastic wiring.
+"""
+
+import pickle
+import threading
+import time
+
+import pytest
+
+from repro.core import (
+    FailureInjector,
+    PoolSpec,
+    ResourceCounter,
+    TaskServer,
+    WorkerPool,
+    LocalColmenaQueues,
+    normalize_pools,
+)
+from repro.core.result import ResourceRequest, Result
+from repro.observe import ElasticPolicy, ElasticScaler, EventLog, MetricsAggregator
+
+
+def _mk_result(i=0, pool="default"):
+    return Result(method="m", args=(i,), resources=ResourceRequest(pool=pool))
+
+
+class TestPoolSpec:
+    def test_bounds_default_to_size(self):
+        ps = PoolSpec("p", 3)
+        assert ps.bounds() == (3, 3)
+        assert not ps.elastic
+        assert ps.clamp(100) == 3 and ps.clamp(0) == 3
+
+    def test_elastic_band(self):
+        ps = PoolSpec("p", 2, min_size=1, max_size=5)
+        assert ps.elastic
+        assert ps.clamp(100) == 5 and ps.clamp(0) == 1 and ps.clamp(3) == 3
+
+    def test_size_outside_band_rejected(self):
+        with pytest.raises(ValueError, match="outside"):
+            PoolSpec("p", 9, min_size=1, max_size=4)
+
+    def test_min_above_max_rejected(self):
+        with pytest.raises(ValueError, match="min_size"):
+            PoolSpec("p", 3, min_size=5, max_size=4).bounds()
+
+    def test_normalize_accepts_every_shorthand(self):
+        out = normalize_pools({"a": 3, "b": PoolSpec("b", 2, max_size=6)})
+        assert out["a"].size == 3 and out["b"].max_size == 6
+        seq = normalize_pools([PoolSpec("x", 1), PoolSpec("y", 2)])
+        assert set(seq) == {"x", "y"}
+        assert normalize_pools(None)["default"].size == 4
+
+    def test_normalize_rejects_bad_shapes(self):
+        with pytest.raises(ValueError, match="disagrees"):
+            normalize_pools({"a": PoolSpec("b", 1)})
+        with pytest.raises(TypeError, match="expected an int or PoolSpec"):
+            normalize_pools({"a": "three"})
+        with pytest.raises(TypeError, match="sequence must contain PoolSpecs"):
+            normalize_pools([4])  # would otherwise become a pool named "None"
+
+    def test_picklable_with_injector(self):
+        ps = PoolSpec("p", 2, injector=FailureInjector(task_failure_rate=0.5, seed=7))
+        clone = pickle.loads(pickle.dumps(ps))
+        assert clone.injector.task_failure_rate == 0.5
+        assert clone.injector.seed == 7
+        # the rebuilt injector is functional (lock + rng restored)
+        clone.injector.after_task(0)
+
+    def test_build_spec_fields_win_over_defaults(self):
+        ps = PoolSpec("p", 1, warm_capacity=0, prefetch=False)
+        pool = ps.build(warm_capacity=32, prefetch=True)
+        try:
+            assert pool.warm_capacity == 0 and pool.prefetch_proxies is False
+        finally:
+            pool.shutdown()
+
+    def test_serialization_rejects_injector(self):
+        ps = PoolSpec("p", 1, injector=FailureInjector())
+        with pytest.raises(ValueError, match="not serializable"):
+            ps.to_dict()
+
+
+class TestScaleDownLatency:
+    def test_shrink_lands_ahead_of_backlog(self):
+        """Regression: a shrink queued behind a deep backlog must land
+        after the worker's *current* task, not after the whole backlog
+        drains — and n_workers must reflect it immediately."""
+        pool = WorkerPool("p", 1, warm_capacity=0)
+        done = []
+
+        def slow(x):
+            time.sleep(0.15)
+            return x
+
+        try:
+            for i in range(10):
+                pool.submit(_mk_result(i), slow, done.append)
+            time.sleep(0.05)  # worker has picked up task 0
+            pool.remove_workers(1)
+            # committed capacity is reported immediately, not after drain
+            assert pool.n_workers == 0
+            time.sleep(0.4)
+            # the worker exited after its current task; backlog remains
+            assert pool.queued() > 0
+            assert len(done) <= 2
+            assert all(not w.alive for w in pool.worker_states())
+        finally:
+            pool.shutdown()
+
+    def test_scale_down_is_not_a_death(self):
+        """The heartbeat monitor must not 'replace' a cleanly removed
+        worker (that would silently undo every elastic shrink)."""
+        queues = LocalColmenaQueues()
+        pool = WorkerPool("default", 2, warm_capacity=0)
+        server = TaskServer(queues, {"m": lambda x: x}, pools={"default": pool})
+        try:
+            pool.remove_workers(1)
+            deadline = time.monotonic() + 2.0
+            while pool.n_workers != 1 and time.monotonic() < deadline:
+                time.sleep(0.01)
+            assert pool.n_workers == 1
+            server._check_heartbeats()
+            assert pool.n_workers == 1
+            assert server.metrics.workers_replaced == 0
+        finally:
+            server.stop()
+
+    def test_add_workers_cancels_pending_removals(self):
+        pool = WorkerPool("p", 2, warm_capacity=0)
+        try:
+            # nothing queued: workers are idle, removals claim fast
+            pool.remove_workers(2)
+            assert pool.n_workers == 0
+            pool.add_workers(1)
+            assert pool.n_workers == 1
+        finally:
+            pool.shutdown()
+
+    def test_dead_worker_never_claims_a_removal(self):
+        """A killed 'node' must not consume a pending removal: the shrink
+        has to land on a live worker, and the dead one must stay
+        registered for the heartbeat monitor's failover."""
+        pool = WorkerPool("p", 2, warm_capacity=0)
+        try:
+            victim = pool.worker_states()[0].worker_id
+            pool.kill_worker(victim)
+            pool.remove_workers(1)
+            deadline = time.monotonic() + 2.0
+            while pool._pending_removals > 0 and time.monotonic() < deadline:
+                time.sleep(0.01)
+            assert pool._pending_removals == 0          # claimed by the live worker
+            remaining = {w.worker_id for w in pool.worker_states()}
+            assert remaining == {victim}                # dead one kept for failover
+        finally:
+            pool.shutdown()
+
+    def test_over_shrink_clamped_to_live_workers(self):
+        """remove_workers beyond the fleet must not leave phantom
+        pending removals that eat every later grow."""
+        pool = WorkerPool("p", 2, warm_capacity=0)
+        done = []
+        try:
+            pool.remove_workers(5)                 # only 2 can ever claim
+            deadline = time.monotonic() + 2.0
+            while pool.n_workers != 0 and time.monotonic() < deadline:
+                time.sleep(0.01)
+            assert pool.n_workers == 0
+            old, new = pool.resize(2)
+            assert (old, new) == (0, 2)
+            assert pool.n_workers == 2             # real workers, not cancelled phantoms
+            pool.submit(_mk_result(1), lambda x: x, done.append)
+            deadline = time.monotonic() + 2.0
+            while not done and time.monotonic() < deadline:
+                time.sleep(0.01)
+            assert done and done[0].value == 1     # the regrown fleet executes
+        finally:
+            pool.shutdown()
+
+    def test_resize_round_trip(self):
+        pool = WorkerPool("p", 2, warm_capacity=0)
+        try:
+            old, new = pool.resize(5)
+            assert (old, new) == (2, 5)
+            assert pool.n_workers == 5
+            old, new = pool.resize(1)
+            assert (old, new) == (5, 1)
+            assert pool.n_workers == 1
+            assert pool.resize(1) == (1, 1)  # no-op hold
+        finally:
+            pool.shutdown()
+
+    def test_removed_worker_still_completes_current_task(self):
+        pool = WorkerPool("p", 1, warm_capacity=0)
+        done = []
+        try:
+            pool.submit(_mk_result(1), lambda x: x * 2, done.append)
+            time.sleep(0.05)
+            pool.remove_workers(1)
+            deadline = time.monotonic() + 2.0
+            while not done and time.monotonic() < deadline:
+                time.sleep(0.01)
+            assert done and done[0].value == 2
+        finally:
+            pool.shutdown()
+
+
+class TestElasticScaler:
+    def _run_burst(self, rec=None):
+        log = EventLog()
+        spec = PoolSpec("burst", size=1, min_size=1, max_size=4)
+        pool = spec.build(event_log=log)
+        scaler = ElasticScaler(
+            {"burst": pool}, {"burst": spec},
+            policy=ElasticPolicy(interval=0.01, step=2, idle_grace_ticks=2),
+            event_log=log, rec=rec,
+        )
+        done = []
+        scaler.start()
+        try:
+            for i in range(12):
+                pool.submit(_mk_result(i, pool="burst"), lambda x: time.sleep(0.04) or x, done.append)
+            deadline = time.monotonic() + 10.0
+            while len(done) < 12 and time.monotonic() < deadline:
+                time.sleep(0.01)
+            time.sleep(0.3)  # idle: shrink back to the floor
+        finally:
+            scaler.stop()
+            pool.shutdown()
+        return log, scaler, pool, done
+
+    def test_grow_shrink_within_bounds(self):
+        log, scaler, pool, done = self._run_burst()
+        assert len(done) == 12
+        sizes = [new for _, _, _, new in scaler.resizes]
+        assert sizes, "scaler never resized"
+        assert max(sizes) <= 4 and min(sizes) >= 1
+        assert any(new > old for _, _, old, new in scaler.resizes)   # grew
+        assert pool.n_workers == 1                                   # shrank back
+
+    def test_pool_resize_events_and_gauges(self):
+        log, scaler, pool, done = self._run_burst()
+        resizes = [e for e in log.events() if e.kind == "pool_resize"]
+        gauges = [e for e in log.events() if e.kind == "gauge" and e.stage == "workers"]
+        assert len(resizes) == len(scaler.resizes)
+        assert {e.stage for e in resizes} == {"grow", "shrink"}
+        assert all(e.info["old"] != e.info["new"] for e in resizes)
+        # baseline gauge + one per resize
+        assert len(gauges) == len(resizes) + 1
+        agg = MetricsAggregator()
+        for ev in log.events():
+            agg.observe(ev)
+        assert len(agg.pool_resizes) == len(resizes)
+        assert (agg.fleet_worker_seconds("burst") or 0.0) > 0.0
+        assert "pool_resize" not in agg.unknown_kinds
+
+    def test_resource_counter_synced(self):
+        rec = ResourceCounter(1, pools=["burst"])
+        log, scaler, pool, done = self._run_burst(rec=rec)
+        # fleet returned to the floor; so did the steering slots
+        assert rec.allocation("burst") == pool.n_workers == 1
+
+    def test_utilization_total_skips_uncovered_busy_pools(self):
+        """Busy time from a pool with no known capacity must not inflate
+        the total past 100% (numerator and denominator cover the same
+        pools)."""
+        from repro.observe import Event
+
+        agg = MetricsAggregator()
+        t0 = 100.0
+        agg.observe(Event(t=t0, kind="gauge", stage="slots", pool="a", value=2.0))
+        for pool, tid in (("a", "t1"), ("b", "t2")):
+            agg.observe(Event(t=t0, kind="task", stage="submitted", task_id=tid,
+                              method="m", pool=pool))
+            agg.observe(Event(t=t0 + 0.5, kind="task", stage="running", task_id=tid,
+                              method="m", pool=pool))
+            agg.observe(Event(t=t0 + 1.5, kind="task", stage="completed", task_id=tid,
+                              method="m", pool=pool))
+        agg.observe(Event(t=t0 + 2.0, kind="gauge", stage="slots", pool="a", value=2.0))
+        util = agg.utilization()
+        assert util["a"] == pytest.approx(0.25)    # 1s busy / (2 slots * 2s)
+        assert "b" not in util                     # no capacity known
+        assert util["total"] == pytest.approx(0.25)  # pool b's busy time excluded
+        # a declared-but-idle pool stays in the denominator: idle
+        # capacity is exactly the waste the report exists to expose
+        util2 = agg.utilization(slots_by_pool={"idle": 2})
+        assert util2["idle"] == 0.0
+        assert util2["total"] == pytest.approx(1.0 / (4.0 + 2.0 * 2.0))
+
+    def test_pools_without_specs_rejected(self):
+        pool = WorkerPool("p", 1, warm_capacity=0)
+        try:
+            with pytest.raises(ValueError, match="without specs"):
+                ElasticScaler({"p": pool}, {})
+        finally:
+            pool.shutdown()
+
+    def test_failed_rec_shrink_is_debt_not_desync(self):
+        """A fleet shrink while steering slots are busy must not leave
+        the ResourceCounter permanently above the fleet: the owed slots
+        are reclaimed as they fall idle."""
+        rec = ResourceCounter(4, pools=["p"])
+        pool = WorkerPool("p", 4, warm_capacity=0)
+        spec = PoolSpec("p", 4, min_size=1, max_size=4)
+        scaler = ElasticScaler({"p": pool}, {"p": spec}, rec=rec)
+        try:
+            assert rec.acquire("p", 4, timeout=1)       # every slot busy
+            scaler._sync_rec("p", 4, 2)                 # fleet shrank by 2
+            assert rec.allocation("p") == 4             # nothing idle yet
+            assert scaler._rec_debt["p"] == 2
+            rec.release("p", 1)
+            scaler._settle_rec_debt()                   # one slot reclaimable
+            assert rec.allocation("p") == 3 and scaler._rec_debt["p"] == 1
+            rec.release("p", 3)
+            scaler._settle_rec_debt()
+            assert rec.allocation("p") == 2 and scaler._rec_debt["p"] == 0
+            # a later grow pays down debt before adding fresh capacity
+            assert rec.acquire("p", 2, timeout=1)
+            scaler._sync_rec("p", 2, 1)                 # shrink: all busy -> debt
+            assert scaler._rec_debt["p"] == 1
+            scaler._sync_rec("p", 1, 2)                 # grow: cancels the debt
+            assert scaler._rec_debt["p"] == 0
+            assert rec.allocation("p") == 2
+        finally:
+            pool.shutdown()
+
+
+class TestAppElastic:
+    def test_app_level_elastic_pool(self):
+        from repro.app import AppSpec, ColmenaApp, ObserveSpec, PoolSpec as PS
+
+        app = ColmenaApp(AppSpec(
+            tasks={"work": lambda x: time.sleep(0.03) or x},
+            pools={"default": PS("default", 1, min_size=1, max_size=4)},
+            observe=ObserveSpec(elastic={"interval": 0.01, "step": 2, "idle_grace_ticks": 2}),
+        ))
+        with app.run() as handle:
+            for i in range(12):
+                handle.queues.send_inputs(i, method="work")
+            vals = sorted(handle.queues.get_result(timeout=30).value for _ in range(12))
+        assert vals == list(range(12))
+        assert app.elastic is not None and app.elastic.resizes
+        resizes = [e for e in app.event_log.events() if e.kind == "pool_resize"]
+        assert resizes
+        # utilization must use the resize-aware workers integral, never
+        # the initial static size (which would report >100% once grown)
+        util = app.observe_report()["utilization"]
+        assert 0.0 < util["default"] <= 1.0
+
+    def test_rebind_event_log_rebaselines_fleet_gauge(self):
+        """A rebound log must get a fresh workers baseline so the fleet
+        capacity integral has a left edge before the next resize."""
+        from repro.app import AppSpec, ColmenaApp, ObserveSpec, PoolSpec as PS
+        from repro.observe import EventLog
+
+        app = ColmenaApp(AppSpec(
+            tasks={"work": lambda x: x},
+            pools={"default": PS("default", 2, min_size=1, max_size=4)},
+            observe=ObserveSpec(elastic=True),
+        ))
+        app.build()
+        try:
+            fresh = EventLog()
+            app.rebind_event_log(fresh)
+            gauges = [e for e in fresh.events()
+                      if e.kind == "gauge" and e.stage == "workers"]
+            assert gauges and gauges[-1].value == 2.0
+        finally:
+            app._started = True  # allow stop() to tear down the built stack
+            app.stop()
+
+    def test_elastic_needs_a_band(self):
+        from repro.app import AppSpec, ColmenaApp, ObserveSpec
+
+        app = ColmenaApp(AppSpec(
+            tasks={"work": lambda x: x},
+            observe=ObserveSpec(elastic=True),
+        ))
+        with pytest.raises(ValueError, match="band"):
+            app.build()
+
+    def test_elastic_false_means_off(self):
+        from repro.app import AppSpec, ColmenaApp, ObserveSpec
+
+        app = ColmenaApp(AppSpec(
+            tasks={"work": lambda x: x},
+            observe=ObserveSpec(elastic=False),
+        ))
+        app.build()   # no "widen the band" error, no scaler composed
+        try:
+            assert app.elastic is None
+        finally:
+            app._started = True
+            app.stop()
+
+    def test_elastic_rejected_across_processes(self):
+        from repro.app import AppSpec, ObserveSpec, QueueSpec, ServerSpec
+
+        with pytest.raises(ValueError, match="in-process"):
+            AppSpec(
+                tasks={"work": lambda x: x},
+                queues=QueueSpec(backend="pipe"),
+                server=ServerSpec(in_process=False),
+                observe=ObserveSpec(elastic=True),
+            )
