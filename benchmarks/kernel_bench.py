@@ -16,21 +16,27 @@ import numpy as np
 from repro.kernels import decode_attention, flash_attention, rglru_scan, rmsnorm, wkv6
 
 
-def _time(fn, *args, n: int = 5) -> float:
+def _time(fn, *args, n: int = 5, event_log=None, name: str = "kernel") -> float:
     out = fn(*args)
     jax.block_until_ready(out)
     t0 = time.monotonic()
     for _ in range(n):
         out = fn(*args)
+    t1 = time.monotonic()
     jax.block_until_ready(out)
-    return (time.monotonic() - t0) / n * 1e6
+    t2 = time.monotonic()
+    if event_log is not None:
+        event_log.profile(
+            f"kernel.{name}", t_start=t0, wall_s=t2 - t0, device_s=t2 - t1, n=n
+        )
+    return (t2 - t0) / n * 1e6
 
 
 def _roofline_us(flops: float, bytes_: float) -> float:
     return max(flops / 197e12, bytes_ / 819e9) * 1e6
 
 
-def main(quick: bool = True):
+def main(quick: bool = True, recorder=None, event_log=None):
     rows = []
     key = jax.random.PRNGKey(0)
 
@@ -40,7 +46,7 @@ def main(quick: bool = True):
     k = jax.random.normal(key, (B, H, S, D), jnp.bfloat16)
     v = jax.random.normal(key, (B, H, S, D), jnp.bfloat16)
     fn = jax.jit(lambda q, k, v: flash_attention(q, k, v, impl="xla"))
-    us = _time(fn, q, k, v)
+    us = _time(fn, q, k, v, event_log=event_log, name="flash_attention_xla")
     flops = 4 * B * H * S * S * D          # qk + pv
     bytes_ = 3 * q.nbytes + q.nbytes
     rows.append(("flash_attention_xla", us, _roofline_us(flops, bytes_)))
@@ -52,7 +58,7 @@ def main(quick: bool = True):
     v1 = jax.random.normal(key, (8, 8, S2, 128), jnp.bfloat16)
     lens = jnp.full((8,), S2, jnp.int32)
     fn = jax.jit(lambda a, b, c, l: decode_attention(a, b, c, l, impl="ref"))
-    us = _time(fn, q1, k1, v1, lens)
+    us = _time(fn, q1, k1, v1, lens, event_log=event_log, name="decode_attention")
     rows.append(("decode_attention", us, _roofline_us(4 * 8 * 8 * S2 * 128, k1.nbytes * 2)))
 
     # rglru scan: B=4 S=2048 Dm=1024
@@ -61,7 +67,7 @@ def main(quick: bool = True):
     bx = jax.random.normal(key, (4, S3, Dm))
     h0 = jnp.zeros((4, Dm))
     fn = jax.jit(lambda a, b, h: rglru_scan(a, b, h, impl="xla"))
-    us = _time(fn, la, bx, h0)
+    us = _time(fn, la, bx, h0, event_log=event_log, name="rglru_scan_xla")
     rows.append(("rglru_scan_xla", us, _roofline_us(6 * la.size, la.nbytes * 3)))
 
     # wkv6: B=1 H=8 S=1024 K=64
@@ -73,7 +79,7 @@ def main(quick: bool = True):
     u = jnp.zeros((8, K))
     s0 = jnp.zeros((1, 8, K, K))
     fn = jax.jit(lambda *a: wkv6(*a, impl="xla"))
-    us = _time(fn, r, kk, vv, lw, u, s0)
+    us = _time(fn, r, kk, vv, lw, u, s0, event_log=event_log, name="wkv6_xla")
     chunk = 64
     flops = (2 * S4 * K * K * 2 + S4 * chunk * K * 3) * 8   # per head approx
     rows.append(("wkv6_xla", us, _roofline_us(flops, r.nbytes * 4)))
@@ -82,11 +88,14 @@ def main(quick: bool = True):
     x = jax.random.normal(key, (4096 if quick else 8192, 4096), jnp.bfloat16)
     w = jnp.ones((4096,), jnp.bfloat16)
     fn = jax.jit(lambda x, w: rmsnorm(x, w, impl="ref"))
-    us = _time(fn, x, w)
+    us = _time(fn, x, w, event_log=event_log, name="rmsnorm")
     rows.append(("rmsnorm", us, _roofline_us(3 * x.size, 2 * x.nbytes)))
 
     for name, us, tpu_us in rows:
         print(f"kernel,{name},{us:.0f},{tpu_us:.1f}")
+        if recorder is not None:
+            recorder.metric(f"{name}_us", us, unit="us")
+            recorder.metric(f"{name}_roofline_us", tpu_us, unit="us")
     return rows
 
 

@@ -22,8 +22,10 @@ fields — the portability claim the app layer exists for:
 
 from __future__ import annotations
 
+import os
+import tempfile
 import time
-from typing import Dict
+from typing import Dict, Optional
 
 import numpy as np
 
@@ -31,6 +33,7 @@ from repro.app import (
     AppSpec,
     ColmenaApp,
     FabricSpec,
+    ObserveSpec,
     PoolSpec,
     QueueSpec,
     ServerSpec,
@@ -108,7 +111,53 @@ def _run_multipool_site(model: np.ndarray, x: np.ndarray, n: int) -> Dict:
     return {"tasks_per_s": ok / elapsed, "median_latency_ms": lat * 1000, "ok": ok}
 
 
-def main(quick: bool = True) -> Dict[str, Dict]:
+def traced_federated_run(n: int = 8, out_dir: Optional[str] = None) -> Dict:
+    """Cross-process tracing demo: the parent and the spawned server each
+    write their own JSONL event log (one per side of the pipe); merging
+    them yields one causal trace per task — zero lifecycle gaps — that
+    exports straight to Perfetto."""
+    from repro.observe import (
+        EventLog,
+        export_perfetto,
+        lifecycle_gaps,
+        lifecycle_order_violations,
+        merge_jsonl,
+    )
+
+    tmp = out_dir or tempfile.mkdtemp(prefix="multisite_trace_")
+    jsonl = os.path.join(tmp, "events.jsonl")
+    model = np.random.default_rng(0).standard_normal(256)
+    x = np.arange(8, dtype=np.float64)
+    app = ColmenaApp(AppSpec(
+        tasks=[TaskDef(fn=_score, method="score")],
+        queues=QueueSpec(backend="pipe"),
+        pools={"default": 2},
+        server=ServerSpec(in_process=False),
+        observe=ObserveSpec(jsonl_path=jsonl),
+    ))
+    server_jsonl = app.spec.observe.resolved_server_jsonl()
+    with app.run(timeout=120) as handle:
+        for _ in range(n):
+            handle.queues.send_inputs(model, x, method="score")
+        results = [handle.queues.get_result(timeout=60) for _ in range(n)]
+    ok = sum(1 for r in results if r is not None and r.success)
+
+    merged = EventLog(capacity=1 << 18)
+    for ev in merge_jsonl([jsonl, server_jsonl]):
+        merged.emit(ev)
+    gaps = lifecycle_gaps(merged)
+    violations = lifecycle_order_violations(merged)
+    trace_path = os.path.join(tmp, "trace.json")
+    export_perfetto([jsonl, server_jsonl], trace_path)
+    return {
+        "ok": ok,
+        "lifecycle_gaps": len(gaps),
+        "order_violations": len(violations),
+        "trace_path": trace_path,
+    }
+
+
+def main(quick: bool = True, recorder=None) -> Dict[str, Dict]:
     n = 16 if quick else 64
     model = np.random.default_rng(0).standard_normal(4096)
     x = np.arange(8, dtype=np.float64)
@@ -133,6 +182,20 @@ def main(quick: bool = True) -> Dict[str, Dict]:
 
     for mode, r in out.items():
         print(f"multisite,{mode},{r['tasks_per_s']:.1f},{r['median_latency_ms']:.1f}")
+        if recorder is not None:
+            recorder.metric(f"{mode}_tasks_per_s", r["tasks_per_s"], unit="tasks/s")
+            recorder.metric(f"{mode}_median_latency_ms", r["median_latency_ms"], unit="ms")
+
+    # Cross-process tracing: parent + server logs must merge into one
+    # complete causal trace (the federated observability acceptance).
+    traced = traced_federated_run(n=min(n, 12))
+    print(f"multisite,traced,{traced['ok']},gaps={traced['lifecycle_gaps']},"
+          f"violations={traced['order_violations']},trace={traced['trace_path']}")
+    assert traced["lifecycle_gaps"] == 0, "merged federated trace has lifecycle gaps"
+    if recorder is not None:
+        recorder.metric("traced_lifecycle_gaps", traced["lifecycle_gaps"],
+                        gate=("<=", 0))
+        recorder.metric("traced_order_violations", traced["order_violations"])
     return out
 
 

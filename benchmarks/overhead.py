@@ -101,7 +101,7 @@ def run_config(
     }
 
 
-def main(quick: bool = True):
+def main(quick: bool = True, recorder=None):
     n_tasks = 128 if quick else 512
     payload = np.random.default_rng(0).random(250_000 if quick else 500_000)  # 2 / 4 MB
     configs = [
@@ -125,6 +125,12 @@ def main(quick: bool = True):
     ratio = out["cold_unbatched"]["per_task_us"] / max(out["warm_batched"]["per_task_us"], 1e-9)
     ok = ratio >= 2.0
     print(f"acceptance,warm_batched_speedup,{ratio:.1f}x,{'PASS' if ok else 'FAIL'}")
+    if recorder is not None:
+        for name, r in out.items():
+            recorder.metric(f"{name}_per_task_us", r["per_task_us"], unit="us")
+        recorder.metric("warm_batched_cache_hit_rate",
+                        out["warm_batched"]["cache_hit_rate"])
+        recorder.metric("warm_batched_speedup_x", ratio, unit="x", gate=(">=", 2.0))
     if not ok:
         raise RuntimeError(
             f"warm-batched dispatch only {ratio:.2f}x faster than cold unbatched (need >= 2x)"

@@ -88,12 +88,16 @@ def run(quick: bool = True):
     return rows
 
 
-def main(quick: bool = True):
+def main(quick: bool = True, recorder=None):
     rows = run(quick)
     print("proxy_app: workers,payload_kb,proxied,reaction_ms,decision_ms,dispatch_ms,rate_per_s")
     for p in rows:
         print(f"proxy_app,{p.workers},{p.payload_kb},{int(p.proxied)},"
               f"{p.reaction_ms:.3f},{p.decision_ms:.3f},{p.dispatch_ms:.3f},{p.rate_per_s:.1f}")
+        if recorder is not None:
+            tag = f"w{p.workers}_kb{p.payload_kb}_{'proxy' if p.proxied else 'ctl'}"
+            recorder.metric(f"reaction_ms_{tag}", p.reaction_ms, unit="ms")
+            recorder.metric(f"rate_per_s_{tag}", p.rate_per_s, unit="tasks/s")
     return rows
 
 

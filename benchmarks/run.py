@@ -33,6 +33,11 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="fast dispatch-path subset (CI regression gate)")
     ap.add_argument("--only", default=None, help="run a single benchmark")
+    ap.add_argument("--record", nargs="?", const="bench_out", default=None,
+                    metavar="DIR",
+                    help="write a BENCH_<suite>.json recording per suite to "
+                         "DIR (default bench_out/); diff two runs with "
+                         "`python -m repro.observe bench diff OLD NEW`")
     args = ap.parse_args()
     quick = not args.full
 
@@ -51,7 +56,8 @@ def main() -> None:
         # steering_gain's smoke form is the CI quadratic gate: steered
         # must find >= the random baseline's high-performers (seeded).
         suites = {name: suites[name] for name in ("overhead", "utilization")}
-        suites["steering_gain"] = lambda quick: steering_gain.main_ci_gate()
+        suites["steering_gain"] = (
+            lambda quick, recorder=None: steering_gain.main_ci_gate(recorder=recorder))
     if args.only:
         suites = {args.only: suites[args.only]}
 
@@ -59,12 +65,20 @@ def main() -> None:
     failures = 0
     for name, fn in suites.items():
         t0 = time.monotonic()
+        recorder = None
+        if args.record is not None:
+            from repro.observe import BenchRecorder
+            recorder = BenchRecorder(name, out_dir=args.record)
         try:
-            fn(quick=quick)
+            fn(quick=quick, recorder=recorder)
             print(f"suite,{name},ok,{time.monotonic() - t0:.1f}s")
+            if recorder is not None:
+                print(f"suite,{name},recorded,{recorder.finish(ok=True)}")
         except Exception as exc:  # noqa: BLE001
             failures += 1
             print(f"suite,{name},FAILED,{type(exc).__name__}: {exc}")
+            if recorder is not None:
+                recorder.finish(ok=False, error=f"{type(exc).__name__}: {exc}")
     sys.exit(1 if failures else 0)
 
 

@@ -77,7 +77,7 @@ def check_gates(name: str, results: Dict[str, dict], gain_x: float = GAIN_X) -> 
     return ratio
 
 
-def main(quick: bool = True) -> Dict[str, Dict[str, dict]]:
+def main(quick: bool = True, recorder=None) -> Dict[str, Dict[str, dict]]:
     budget = 48 if quick else 160
     scenarios = ("quadratic", "multimodal", "needle") if quick else (
         "quadratic", "multimodal", "needle", "heteroscedastic")
@@ -87,8 +87,12 @@ def main(quick: bool = True) -> Dict[str, Dict[str, dict]]:
     for name in scenarios:
         t0 = time.monotonic()
         all_results[name] = run_scenario(name, budget)
-        check_gates(name, all_results[name])
+        ratio = check_gates(name, all_results[name])
         print(f"steering_gain,{name},wall_s,{time.monotonic() - t0:.1f}")
+        if recorder is not None:
+            recorder.metric(f"{name}_gain_x", ratio, unit="x", gate=(">=", GAIN_X))
+            recorder.metric(f"{name}_random_hits",
+                            all_results[name]["random"]["hits"])
 
     # One full telemetry report: retrain cadence / rmse / regret for the
     # UCB campaign on the first scenario.
@@ -97,15 +101,18 @@ def main(quick: bool = True) -> Dict[str, Dict[str, dict]]:
     return all_results
 
 
-def main_ci_gate(budget: int = 48, seed: int = 0) -> None:
+def main_ci_gate(budget: int = 48, seed: int = 0, recorder=None) -> None:
     """CI smoke: quadratic scenario only, steered must match or beat
     random (gain_x=1.0 — tighter 1.2x is enforced by the full run), and
     the thinker must have retrained online at least twice."""
     _warmup(budget)
     results = run_scenario("quadratic", budget, seed=seed)
-    check_gates("quadratic", results, gain_x=1.0)
+    ratio = check_gates("quadratic", results, gain_x=1.0)
     best = max((results[p] for p in STEERED), key=lambda r: r["hits"])
     retrains = best["report"].get("surrogate", {}).get("retrains", 0)
+    if recorder is not None:
+        recorder.metric("quadratic_gain_x", ratio, unit="x", gate=(">=", 1.0))
+        recorder.metric("online_retrains", retrains, gate=(">=", 2))
     assert retrains >= 2, f"expected >=2 online retrains, saw {retrains}"
     reallocs = best["report"].get("reallocations", [])
     assert any(m.get("dst") == "ml" for m in reallocs), (

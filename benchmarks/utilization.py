@@ -113,7 +113,7 @@ def elastic_comparison(
     return static, elastic
 
 
-def main_elastic_gate(quick: bool = True) -> None:
+def main_elastic_gate(quick: bool = True, recorder=None) -> None:
     """CI gate: elastic fleet utilization >= static under bursty load,
     with all work completed on both sides."""
     static, elastic = elastic_comparison(burst_size=12 if quick else 24)
@@ -122,6 +122,10 @@ def main_elastic_gate(quick: bool = True) -> None:
     print(f"elastic,elastic_util,{e_u:.3f}")
     print(f"elastic,gain_pct,{(e_u - s_u) / max(s_u, 1e-9) * 100:.0f}")
     print(f"elastic,resizes,{elastic['resizes']}")
+    if recorder is not None:
+        recorder.metric("elastic_static_util", s_u)
+        recorder.metric("elastic_util", e_u, gate=(">=", s_u))
+        recorder.metric("elastic_resizes", elastic["resizes"])
     assert static["completed"] == elastic["completed"], (
         f"work mismatch: static {static['completed']} vs elastic {elastic['completed']}"
     )
@@ -162,7 +166,7 @@ def stateful_caching_ablation(n_tasks: int = 20):
     return rates
 
 
-def main(quick: bool = True):
+def main(quick: bool = True, recorder=None):
     util, report, rounds = run_campaign(max_results=30 if quick else 80)
     print(f"utilization,simulate_busy_frac,{util['simulate']:.3f}")
     print(f"utilization,ml_busy_frac,{util['ml']:.3f}")
@@ -177,13 +181,19 @@ def main(quick: bool = True):
     print(f"reallocation,gain_pct,{(a_u - s_u) / max(s_u, 1e-9) * 100:.0f}")
     print(f"reallocation,lifecycle_complete,{int(adaptive['lifecycle']['complete'])}")
 
-    main_elastic_gate(quick=quick)
+    main_elastic_gate(quick=quick, recorder=recorder)
 
     rates = stateful_caching_ablation(12 if quick else 40)
     speedup = rates["cached"] / rates["uncached"]
     print(f"stateful_cache,cached_rate,{rates['cached']:.1f}")
     print(f"stateful_cache,uncached_rate,{rates['uncached']:.1f}")
     print(f"stateful_cache,speedup,{speedup:.2f}")
+    if recorder is not None:
+        recorder.metric("simulate_busy_frac", util["simulate"])
+        recorder.metric("ml_busy_frac", util["ml"])
+        recorder.metric("realloc_static_util", s_u)
+        recorder.metric("realloc_adaptive_util", a_u)
+        recorder.metric("stateful_cache_speedup_x", speedup, unit="x")
     return util, rates
 
 

@@ -75,7 +75,7 @@ def run_point(workers: int, use_fabric: bool, n_tasks: int = 32):
     return rate, cache_hits
 
 
-def main(quick: bool = True):
+def main(quick: bool = True, recorder=None):
     workers_list = [2, 8] if quick else [2, 4, 8, 16, 32]
     print("weak_scaling: workers,mode,tasks_per_s,cache_hits")
     rows = []
@@ -85,6 +85,9 @@ def main(quick: bool = True):
             mode = "fabric" if fabric else "control-channel"
             rows.append((w, mode, rate, hits))
             print(f"weak_scaling,{w},{mode},{rate:.1f},{hits}")
+            if recorder is not None:
+                tag = "fabric" if fabric else "ctl"
+                recorder.metric(f"rate_{tag}_{w}w", rate, unit="tasks/s")
     return rows
 
 

@@ -42,7 +42,7 @@ from .queues import (
     LocalColmenaQueues,
     PipeColmenaQueues,
 )
-from .result import FailureKind, ResourceRequest, Result, TimingInfo, Timestamps
+from .result import FailureKind, ResourceRequest, Result, TimingInfo, Timestamps, TraceContext
 from .task_server import (
     BatchPolicy,
     RetryPolicy,
@@ -112,6 +112,7 @@ __all__ = [
     "wait_event",
     "TimingInfo",
     "Timestamps",
+    "TraceContext",
     "WorkerDied",
     "WorkerPool",
 ]

@@ -204,6 +204,26 @@ class ObserveSpec:
     realloc_interval: float = 0.02
     realloc_min_slots: Optional[Dict[str, int]] = None
     elastic: Optional[Any] = None       # True | dict | ElasticPolicy
+    # Spawned-server trace sink: where a ``ServerSpec(in_process=False)``
+    # child writes its own JSONL event log (queues drop the parent's log
+    # when pickled). Defaults to ``<jsonl_path minus extension>.server.jsonl``
+    # when ``jsonl_path`` is set; merge both files with
+    # ``repro.observe.trace.merge_jsonl`` for one complete trace.
+    server_jsonl_path: Optional[str] = None
+    # JSONL sink rotation (bytes; None = unbounded) — bounds disk on soaks.
+    rotate_bytes: Optional[int] = None
+    rotate_keep: int = 3
+    # Metrics export: a directory path, an ``repro.observe.ExportSpec``,
+    # or a dict of its knobs — periodic Prometheus text + JSON snapshots.
+    export: Optional[Any] = None
+
+    def resolved_server_jsonl(self) -> Optional[str]:
+        if self.server_jsonl_path is not None:
+            return self.server_jsonl_path
+        if self.jsonl_path is None:
+            return None
+        base = self.jsonl_path
+        return (base[:-6] if base.endswith(".jsonl") else base) + ".server.jsonl"
 
 
 @dataclass
@@ -472,6 +492,7 @@ class ColmenaApp:
         self.thinker: Optional[BaseThinker] = None
         self.reallocator: Optional[Any] = None
         self.elastic: Optional[Any] = None
+        self.exporter: Optional[Any] = None
         self.campaign: Optional[Campaign] = None
         self.report: Optional[CampaignReport] = None
 
@@ -501,7 +522,10 @@ class ColmenaApp:
                 from repro.observe import EventLog
 
                 self.event_log = EventLog(
-                    capacity=spec.observe.capacity, jsonl_path=spec.observe.jsonl_path
+                    capacity=spec.observe.capacity,
+                    jsonl_path=spec.observe.jsonl_path,
+                    rotate_bytes=spec.observe.rotate_bytes,
+                    rotate_keep=spec.observe.rotate_keep,
                 )
                 self._owns_log = True
 
@@ -578,6 +602,7 @@ class ColmenaApp:
                 method_resources=method_resources,
             )
         else:
+            server_jsonl = spec.observe.resolved_server_jsonl() if spec.observe else None
             self.server = ProcessTaskServer(
                 self.queues,
                 methods,
@@ -587,6 +612,7 @@ class ColmenaApp:
                 straggler=spec.server.straggler,
                 heartbeat_timeout_s=spec.server.heartbeat_timeout_s,
                 method_resources=method_resources,
+                jsonl_path=server_jsonl,
             )
 
         # Steering agents + the loops that ride on them.
@@ -598,6 +624,18 @@ class ColmenaApp:
                 self.reallocator = self._build_reallocator(spec.observe)
         if spec.observe is not None and spec.observe.elastic is not None:
             self.elastic = self._build_elastic(spec.observe)
+        if spec.observe is not None and spec.observe.export is not None:
+            from repro.observe import ExportSpec, MetricsExporter
+
+            exp = spec.observe.export
+            if isinstance(exp, str):
+                exp = ExportSpec(dir=exp)
+            elif isinstance(exp, Mapping):
+                exp = ExportSpec(**exp)
+            self.exporter = MetricsExporter(
+                self.event_log, spec=exp,
+                slots_by_pool={name: ps.size for name, ps in self.pool_specs.items()},
+            )
         if spec.campaign is not None:
             self.campaign = Campaign(
                 self.thinker,
@@ -685,6 +723,8 @@ class ColmenaApp:
             self.reallocator.start()
         if self.elastic is not None:
             self.elastic.start()
+        if self.exporter is not None:
+            self.exporter.start()
         if self.campaign is not None:
             self._ckpt_stop = threading.Event()
             self._ckpt_thread = threading.Thread(
@@ -753,6 +793,8 @@ class ColmenaApp:
             self.reallocator.stop()
         if self.elastic is not None:
             self.elastic.stop()
+        if self.exporter is not None:
+            self.exporter.stop()
         if self.server is not None:
             self.server.stop()
         if self.store is not None:
@@ -795,8 +837,10 @@ class ColmenaApp:
             self.thinker.rec.event_log = log
         if self.reallocator is not None:
             self.reallocator.rebind_event_log(log)
+        if self.exporter is not None:
+            self.exporter.rebind(log)
         if self.elastic is not None:
-            self.elastic.event_log = log
+            self.elastic.rebind_event_log(log)
             # Fresh log, fresh left edge: without a baseline gauge the
             # fleet-capacity integral is undefined until the next resize
             # and utilization would fall back to the static pool size.

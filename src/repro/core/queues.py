@@ -32,7 +32,7 @@ from dataclasses import dataclass, field
 from typing import Any, Dict, Iterable, Optional
 
 from .proxystore import Store, apply_threshold
-from .result import FailureKind, ResourceRequest, Result
+from .result import FailureKind, ResourceRequest, Result, TraceContext
 from .serialization import SERIALIZER
 
 
@@ -154,6 +154,7 @@ class ColmenaQueues:
             resources=resources or ResourceRequest(),
             topic=topic,
         )
+        result.trace = TraceContext.new()
         result.mark("created")
         self._emit("submitted", result)
         if self.proxystore is not None:
@@ -175,6 +176,8 @@ class ColmenaQueues:
 
     def send_task(self, result: Result) -> str:
         """Submit a pre-built Result (used for retries / speculation)."""
+        if result.trace is None:
+            result.trace = TraceContext.new()
         result.mark("created")
         self._emit("submitted", result)
         result.mark("queued")

@@ -20,6 +20,41 @@ from typing import Any, Optional
 _TASK_COUNTER = itertools.count()
 
 
+@dataclass
+class TraceContext:
+    """Distributed-trace identity carried on a ``Result`` across every hop.
+
+    Minted once at ``send_inputs`` and pickled with the Result, so the
+    same ids appear in the client's, the pipe queues', and a spawned
+    ``ProcessTaskServer``'s event logs — merging those JSONL sinks yields
+    one causal trace per submission. Server-side re-executions (retry
+    clones, speculative twins) get a *child* context: fresh ``span_id``,
+    ``parent_span_id`` pointing at the attempt they descend from, same
+    ``trace_id`` — so a task's whole retry tree folds into one timeline.
+    """
+
+    trace_id: str
+    span_id: str
+    parent_span_id: Optional[str] = None
+
+    @classmethod
+    def new(cls) -> "TraceContext":
+        return cls(trace_id=uuid.uuid4().hex[:16], span_id=uuid.uuid4().hex[:8])
+
+    def child(self) -> "TraceContext":
+        return TraceContext(
+            trace_id=self.trace_id,
+            span_id=uuid.uuid4().hex[:8],
+            parent_span_id=self.span_id,
+        )
+
+    def as_dict(self) -> dict:
+        out = {"trace_id": self.trace_id, "span_id": self.span_id}
+        if self.parent_span_id is not None:
+            out["parent_span_id"] = self.parent_span_id
+        return out
+
+
 class FailureKind(str, Enum):
     """Why a task failed (used by the TaskServer retry policy)."""
 
@@ -100,6 +135,9 @@ class Result:
     topic: str = "default"
 
     task_id: str = field(default_factory=lambda: f"task-{next(_TASK_COUNTER):08d}-{uuid.uuid4().hex[:8]}")
+    # Minted by the queues at submission; pickled with the Result so every
+    # process that touches the task logs events under the same trace_id.
+    trace: Optional[TraceContext] = None
     value: Any = None
     success: Optional[bool] = None
     failure: FailureKind = FailureKind.NONE
@@ -155,6 +193,7 @@ class Result:
             topic=self.topic,
         )
         new.retries = self.retries + 1
+        new.trace = self.trace.child() if self.trace is not None else None
         return new
 
     def clone_for_speculation(self) -> "Result":
@@ -171,6 +210,7 @@ class Result:
         new.task_id = self.task_id
         new.speculative = True
         new.retries = self.retries
+        new.trace = self.trace.child() if self.trace is not None else None
         return new
 
     def __repr__(self) -> str:  # keep logs short; args may be huge

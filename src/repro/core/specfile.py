@@ -240,6 +240,22 @@ def spec_to_dict(spec: Any) -> Dict[str, Any]:
         obs: Dict[str, Any] = {"capacity": o.capacity}
         if o.jsonl_path is not None:
             obs["jsonl_path"] = o.jsonl_path
+        if o.server_jsonl_path is not None:
+            obs["server_jsonl_path"] = o.server_jsonl_path
+        if o.rotate_bytes is not None:
+            obs["rotate_bytes"] = o.rotate_bytes
+            obs["rotate_keep"] = o.rotate_keep
+        if o.export is not None:
+            if isinstance(o.export, str):
+                obs["export"] = o.export
+            elif isinstance(o.export, Mapping):
+                obs["export"] = dict(o.export)
+            elif hasattr(o.export, "to_dict"):
+                obs["export"] = o.export.to_dict()
+            else:
+                raise ValueError(
+                    f"ObserveSpec.export {type(o.export).__name__} does not serialize"
+                )
         if o.reallocator is not None:
             obs["reallocator"] = o.reallocator
             obs["realloc_interval"] = o.realloc_interval

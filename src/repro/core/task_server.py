@@ -416,6 +416,32 @@ class TaskServer:
                 pool.submit(copy, fn, self._on_done)
 
 
-def serve_forever(queues: ColmenaQueues, methods: Dict[str, Callable], **kwargs) -> None:
-    """Entry point for running a TaskServer in a separate process."""
-    TaskServer(queues, methods, **kwargs).run()
+def serve_forever(
+    queues: ColmenaQueues,
+    methods: Dict[str, Callable],
+    jsonl_path: Optional[str] = None,
+    log_capacity: int = 1 << 16,
+    **kwargs,
+) -> None:
+    """Entry point for running a TaskServer in a separate process.
+
+    ``ColmenaQueues`` drop their event log when pickled (it is
+    per-process), so without ``jsonl_path`` a spawned server is blind:
+    ``picked_up``/``dispatched``/``running``/``completed`` never get
+    recorded anywhere. With it, the child opens its own JSONL
+    ``EventLog`` and attaches it to the queues/server/pools; since
+    ``time.monotonic`` is CLOCK_MONOTONIC (system-wide on Linux), the
+    child log merges with the parent's by timestamp into one causal
+    trace (``repro.observe.trace.merge_jsonl``).
+    """
+    event_log = None
+    if jsonl_path is not None:
+        from repro.observe import EventLog  # deferred: core never imports observe at module scope
+
+        event_log = EventLog(capacity=log_capacity, jsonl_path=jsonl_path)
+        queues.event_log = event_log
+    try:
+        TaskServer(queues, methods, event_log=event_log, **kwargs).run()
+    finally:
+        if event_log is not None:
+            event_log.close()

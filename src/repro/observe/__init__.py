@@ -32,7 +32,11 @@ sink path is given. Fields:
              ``pool_resize`` (elastic worker-fleet ``grow``/``shrink``;
              value = new size, info carries old/new/reason), or
              ``surrogate`` (model lifecycle: ``retrain`` with
-             value=rmse, ``rerank`` with value=acquisition regret).
+             value=rmse, ``rerank`` with value=acquisition regret), or
+             ``profile`` (a timed span: ``t`` = start, ``value`` = wall
+             seconds, ``stage`` = span name, ``info["device_s"]`` =
+             post-``block_until_ready`` device time — emitted by
+             ``EventLog.profile`` around kernel / ensemble calls).
              The kind set is OPEN: consumers must tolerate (count, not
              crash on) kinds they do not model — see
              ``MetricsAggregator.unknown_kinds``
@@ -62,10 +66,21 @@ Emission points: ``ColmenaQueues.send_inputs`` (submitted, queued),
 ``ResourceCounter`` (``slots`` gauges on allocation changes).
 
 Cross-process note: ``event_log`` is process-local (it is dropped on
-pickling). With ``PipeColmenaQueues`` each side records its own stages;
-merge the JSONL sinks offline for a full trace.
+pickling). With ``PipeColmenaQueues`` each side records its own stages —
+a spawned ``ProcessTaskServer`` child opens its own JSONL sink
+(``ObserveSpec.resolved_server_jsonl``) — and a ``TraceContext`` minted
+at ``send_inputs`` rides on the ``Result`` across the boundary, so
+``trace.merge_jsonl`` reassembles the sinks into one causal trace
+(``python -m repro.observe trace a.jsonl b.jsonl -o trace.json``).
 """
 
+from .bench import (
+    BenchRecorder,
+    bench_diff,
+    env_fingerprint,
+    load_bench,
+    render_diff,
+)
 from .events import (
     AUX_STAGES,
     Event,
@@ -74,6 +89,7 @@ from .events import (
     lifecycle_gaps,
     lifecycle_order_violations,
 )
+from .export import ExportSpec, MetricsExporter
 from .metrics import (
     BatchStats,
     CacheStats,
@@ -94,14 +110,40 @@ from .reallocator import (
 )
 from .report import build_report, dump_json, render_text
 from .synthetic import PoolWorkloadThinker, run_bursty, run_pool_workload, run_two_pool
+from .trace import (
+    Span,
+    TaskTrace,
+    build_task_traces,
+    export_perfetto,
+    load_jsonl,
+    merge_jsonl,
+    profiled_call,
+    span_summary,
+    to_perfetto,
+)
 
 __all__ = [
     "AdaptiveReallocator",
     "AUX_STAGES",
     "BatchStats",
+    "bench_diff",
+    "BenchRecorder",
     "build_report",
+    "build_task_traces",
     "CacheStats",
     "dump_json",
+    "env_fingerprint",
+    "export_perfetto",
+    "ExportSpec",
+    "load_bench",
+    "merge_jsonl",
+    "MetricsExporter",
+    "profiled_call",
+    "render_diff",
+    "Span",
+    "span_summary",
+    "TaskTrace",
+    "to_perfetto",
     "ElasticPolicy",
     "ElasticScaler",
     "EMABacklogPolicy",
@@ -111,6 +153,7 @@ __all__ = [
     "LatencyHistogram",
     "lifecycle_gaps",
     "lifecycle_order_violations",
+    "load_jsonl",
     "MetricsAggregator",
     "Move",
     "PoolStats",

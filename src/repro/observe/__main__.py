@@ -1,0 +1,108 @@
+"""CLI for the observability layer.
+
+    # Merge one or more JSONL event logs into a Perfetto-loadable trace
+    python -m repro.observe trace events.jsonl events.server.jsonl -o trace.json
+
+    # Text report (incl. span breakdown) over the same logs
+    python -m repro.observe report events.jsonl events.server.jsonl
+
+    # Compare two benchmark recordings (or two directories of them)
+    python -m repro.observe bench diff BENCH_old.json BENCH_new.json
+    python -m repro.observe bench diff benchmarks/baselines bench_out --fail-on-regress
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import List
+
+
+def _cmd_trace(args: argparse.Namespace) -> int:
+    from .trace import export_perfetto, merge_jsonl, span_summary, build_task_traces
+
+    doc = export_perfetto(args.inputs, args.out)
+    events = merge_jsonl(args.inputs)
+    summary = span_summary(build_task_traces(events))
+    n_spans = sum(1 for e in doc["traceEvents"] if e.get("ph") == "X")
+    print(
+        f"wrote {args.out}: {n_spans} spans from {summary['tasks']} task(s) "
+        f"across {len(args.inputs)} log(s) — load it at https://ui.perfetto.dev"
+    )
+    if summary["critical_path"]:
+        top = next(iter(summary["critical_path"]))
+        print(f"critical path: {top} dominates {summary['critical_path'][top]}/{summary['tasks']} tasks")
+    return 0
+
+
+def _cmd_report(args: argparse.Namespace) -> int:
+    from .events import EventLog
+    from .report import build_report, render_text
+    from .trace import merge_jsonl
+
+    log = EventLog(capacity=1 << 22)
+    for ev in merge_jsonl(args.inputs):
+        log.emit(ev)
+    report = build_report(log)
+    if args.json:
+        print(json.dumps(report, indent=2))
+    else:
+        print(render_text(report))
+    return 0
+
+
+def _cmd_bench_diff(args: argparse.Namespace) -> int:
+    from .bench import diff_paths, match_baselines, render_diff
+
+    pairs: List = []
+    if os.path.isdir(args.old) and os.path.isdir(args.new):
+        pairs = match_baselines(args.old, args.new)
+        if not pairs:
+            print(f"no matching BENCH_*.json files between {args.old} and {args.new}")
+            return 2
+    else:
+        pairs = [(args.old, args.new)]
+    regressed = False
+    for old_path, new_path in pairs:
+        diff = diff_paths(old_path, new_path, rel_tol=args.rel_tol)
+        print(render_diff(diff))
+        print()
+        regressed = regressed or not diff["ok"]
+    if regressed and args.fail_on_regress:
+        return 1
+    return 0
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(prog="python -m repro.observe", description=__doc__)
+    sub = parser.add_subparsers(dest="cmd", required=True)
+
+    p_trace = sub.add_parser("trace", help="export JSONL event log(s) as Perfetto JSON")
+    p_trace.add_argument("inputs", nargs="+", help="one or more EventLog JSONL files")
+    p_trace.add_argument("-o", "--out", default="trace.json", help="output trace file")
+    p_trace.set_defaults(fn=_cmd_trace)
+
+    p_rep = sub.add_parser("report", help="text report over JSONL event log(s)")
+    p_rep.add_argument("inputs", nargs="+", help="one or more EventLog JSONL files")
+    p_rep.add_argument("--json", action="store_true", help="print the JSON report")
+    p_rep.set_defaults(fn=_cmd_report)
+
+    p_bench = sub.add_parser("bench", help="benchmark-trajectory tools")
+    bench_sub = p_bench.add_subparsers(dest="bench_cmd", required=True)
+    p_diff = bench_sub.add_parser("diff", help="compare two BENCH_*.json recordings")
+    p_diff.add_argument("old", help="baseline file or directory of BENCH_*.json")
+    p_diff.add_argument("new", help="new file or directory of BENCH_*.json")
+    p_diff.add_argument("--rel-tol", type=float, default=0.05,
+                        help="relative movement tolerated before flagging (default 5%%)")
+    p_diff.add_argument("--fail-on-regress", action="store_true",
+                        help="exit 1 when any gated metric regressed")
+    p_diff.set_defaults(fn=_cmd_bench_diff)
+
+    args = parser.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

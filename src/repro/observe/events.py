@@ -26,7 +26,9 @@ attribute check when disabled.
 
 from __future__ import annotations
 
+import atexit
 import json
+import os
 import threading
 import time
 from collections import defaultdict, deque
@@ -78,12 +80,25 @@ class EventLog:
         capacity: int = 1 << 16,
         jsonl_path: Optional[str] = None,
         clock: Callable[[], float] = time.monotonic,
+        rotate_bytes: Optional[int] = None,
+        rotate_keep: int = 3,
     ) -> None:
         self._clock = clock
         self._buf: "deque[Event]" = deque(maxlen=capacity)
         self._lock = threading.Lock()
         self._subs: List[Callable[[Event], None]] = []
-        self._jsonl = open(jsonl_path, "w") if jsonl_path else None
+        self._jsonl_path = jsonl_path
+        self._rotate_bytes = rotate_bytes
+        self._rotate_keep = max(1, rotate_keep)
+        self._jsonl_written = 0
+        # Line-buffered so every event reaches the OS as it is emitted; a
+        # SIGKILL'd federated child loses at most the line being written,
+        # not its whole log — merged traces survive hard crashes.
+        self._jsonl = open(jsonl_path, "w", buffering=1) if jsonl_path else None
+        self._atexit_cb: Optional[Callable[[], None]] = None
+        if self._jsonl is not None:
+            self._atexit_cb = self.close
+            atexit.register(self._atexit_cb)
         self.t0 = clock()
 
     # ------------------------------------------------------------------ emit
@@ -93,7 +108,11 @@ class EventLog:
             if self._jsonl is not None:
                 row = asdict(event)
                 row["t_rel"] = event.t - self.t0
-                self._jsonl.write(json.dumps(row) + "\n")
+                line = json.dumps(row) + "\n"
+                self._jsonl.write(line)
+                self._jsonl_written += len(line)
+                if self._rotate_bytes and self._jsonl_written >= self._rotate_bytes:
+                    self._rotate_locked()
             # Snapshot under the lock: a subscriber registering right now
             # replays the buffer (including this event) and lands in the
             # *next* emit's snapshot — never both, so no double delivery.
@@ -105,7 +124,12 @@ class EventLog:
     def task_event(self, stage: str, result: Any, pool: Optional[str] = None, **info: Any) -> Event:
         """Record a lifecycle stage for a ``repro.core.result.Result``.
         ``pool`` overrides the requested pool (worker pools pass their own
-        name so execution-side stages carry the executing pool)."""
+        name so execution-side stages carry the executing pool). The
+        Result's ``TraceContext`` (when present) lands in ``info`` so
+        JSONL logs from different processes correlate into one trace."""
+        trace = getattr(result, "trace", None)
+        if trace is not None:
+            info = {**trace.as_dict(), **info}
         return self.emit(
             Event(
                 t=self._clock(),
@@ -171,6 +195,19 @@ class EventLog:
                   value=None if value is None else float(value), info=info)
         )
 
+    def profile(self, name: str, t_start: float, wall_s: float,
+                device_s: Optional[float] = None, **info: Any) -> Event:
+        """Record a profiled code span (``kind="profile"``): ``t`` is the
+        span start, ``value`` the wall duration in seconds, and ``info``
+        carries the post-``block_until_ready`` device time for JAX calls
+        (dispatch wall vs. device compute). These become spans in the
+        Perfetto export alongside the task lifecycle."""
+        if device_s is not None:
+            info = {"device_s": float(device_s), **info}
+        return self.emit(
+            Event(t=t_start, kind="profile", stage=name, value=float(wall_s), info=info)
+        )
+
     # ------------------------------------------------------------- consumers
     def subscribe(self, fn: Callable[[Event], None], replay: bool = True) -> None:
         """Register a streaming consumer; with ``replay`` it first receives
@@ -180,6 +217,10 @@ class EventLog:
                 for ev in list(self._buf):
                     fn(ev)
             self._subs = self._subs + [fn]
+
+    def unsubscribe(self, fn: Callable[[Event], None]) -> None:
+        with self._lock:
+            self._subs = [s for s in self._subs if s is not fn]
 
     def events(self) -> List[Event]:
         with self._lock:
@@ -195,12 +236,39 @@ class EventLog:
     def __len__(self) -> int:
         return len(self._buf)
 
+    def _rotate_locked(self) -> None:
+        """Size-based rotation (caller holds the lock): the active file
+        moves to ``path.1``, older generations shift up, the oldest past
+        ``rotate_keep`` is dropped, and a fresh active file opens."""
+        self._jsonl.flush()
+        self._jsonl.close()
+        base = self._jsonl_path
+        for i in range(self._rotate_keep, 0, -1):
+            src = base if i == 1 else f"{base}.{i - 1}"
+            dst = f"{base}.{i}"
+            if os.path.exists(src):
+                os.replace(src, dst)
+        self._jsonl = open(base, "w", buffering=1)
+        self._jsonl_written = 0
+
     def close(self) -> None:
         if self._jsonl is not None:
             with self._lock:
+                if self._jsonl is None:  # lost the race with another closer
+                    return
                 self._jsonl.flush()
+                try:
+                    os.fsync(self._jsonl.fileno())
+                except OSError:
+                    pass  # not a real file (e.g. a StringIO in tests)
                 self._jsonl.close()
                 self._jsonl = None
+        if self._atexit_cb is not None:
+            try:
+                atexit.unregister(self._atexit_cb)
+            except Exception:
+                pass
+            self._atexit_cb = None
 
     def __enter__(self) -> "EventLog":
         return self

@@ -1,0 +1,134 @@
+"""Metrics export: periodic Prometheus text + JSON snapshots on disk.
+
+``MetricsExporter`` subscribes a ``MetricsAggregator`` to the event log
+and, on a background cadence, writes two files into ``ExportSpec.dir``:
+
+  * ``metrics.prom`` — Prometheus text exposition format (point a
+    node-exporter textfile collector, or any file scraper, at it);
+  * ``snapshot.json`` — the full ``MetricsAggregator.snapshot()`` dict
+    plus a wall-clock timestamp (the machine-readable sibling of the
+    text report).
+
+Writes are atomic (tmp file + ``os.replace``) so a scraper never reads
+a half-written exposition, and a final write happens at ``stop()`` so
+short runs always leave a complete last snapshot. Wired through
+``ObserveSpec(export=...)`` — a directory string, a dict of knobs, or
+an ``ExportSpec``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from dataclasses import dataclass
+from typing import Any, Dict, Optional
+
+from .events import EventLog
+from .metrics import MetricsAggregator
+
+
+@dataclass
+class ExportSpec:
+    """Knobs for the periodic metrics exporter."""
+
+    dir: str
+    interval_s: float = 1.0
+    prometheus: bool = True      # write metrics.prom
+    snapshots: bool = True       # write snapshot.json
+    # Keep a history of timestamped snapshots (snapshot_<n>.json) in
+    # addition to the rolling latest; 0 keeps only the latest.
+    history: int = 0
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "dir": self.dir,
+            "interval_s": self.interval_s,
+            "prometheus": self.prometheus,
+            "snapshots": self.snapshots,
+            "history": self.history,
+        }
+
+
+def _atomic_write(path: str, text: str) -> None:
+    tmp = f"{path}.tmp"
+    with open(tmp, "w") as fh:
+        fh.write(text)
+    os.replace(tmp, path)
+
+
+class MetricsExporter:
+    """Periodically renders a live ``MetricsAggregator`` to disk."""
+
+    def __init__(
+        self,
+        log: EventLog,
+        spec: ExportSpec,
+        slots_by_pool: Optional[Dict[str, int]] = None,
+        aggregator: Optional[MetricsAggregator] = None,
+    ) -> None:
+        self.spec = spec
+        self.slots_by_pool = dict(slots_by_pool or {})
+        self.agg = aggregator if aggregator is not None else MetricsAggregator(log)
+        self.writes = 0
+        self._seq = 0
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(spec.dir, exist_ok=True)
+
+    # ------------------------------------------------------------------ write
+    def write_once(self) -> None:
+        spec = self.spec
+        if spec.prometheus:
+            _atomic_write(
+                os.path.join(spec.dir, "metrics.prom"),
+                self.agg.prometheus_text(slots_by_pool=self.slots_by_pool),
+            )
+        if spec.snapshots:
+            snap = self.agg.snapshot(slots_by_pool=self.slots_by_pool)
+            snap["ts"] = time.time()
+            text = json.dumps(snap)
+            _atomic_write(os.path.join(spec.dir, "snapshot.json"), text)
+            if spec.history:
+                self._seq += 1
+                _atomic_write(
+                    os.path.join(spec.dir, f"snapshot_{self._seq % spec.history:04d}.json"),
+                    text,
+                )
+        self.writes += 1
+
+    # -------------------------------------------------------------- lifecycle
+    def start(self) -> "MetricsExporter":
+        if self._thread is not None:
+            return self
+        self._stop.clear()
+        self._thread = threading.Thread(target=self._loop, daemon=True, name="metrics-exporter")
+        self._thread.start()
+        return self
+
+    def _loop(self) -> None:
+        while not self._stop.wait(self.spec.interval_s):
+            try:
+                self.write_once()
+            except OSError:
+                pass  # disk hiccup: retry on the next tick
+
+    def stop(self) -> None:
+        self._stop.set()
+        thread, self._thread = self._thread, None
+        if thread is not None:
+            thread.join(timeout=2)
+        # Final write so short-lived runs still leave a complete snapshot.
+        try:
+            self.write_once()
+        except OSError:
+            pass
+
+    def rebind(self, log: EventLog) -> None:
+        """Point the exporter at a fresh event log (benchmarks that swap
+        logs between a warm-up and a measured phase)."""
+        self.agg = MetricsAggregator(log)
+
+
+__all__ = ["ExportSpec", "MetricsExporter"]

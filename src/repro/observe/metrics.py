@@ -197,6 +197,12 @@ class MetricsAggregator:
         # events carry old/new/reason for the report.
         self._fleet: Dict[str, _Capacity] = {}
         self.pool_resizes: List[Event] = []
+        # Last-seen value of every gauge, keyed (name, pool) — generic
+        # gauges (e.g. the elastic scaler's ``arrival_rate``) surface in
+        # snapshots/Prometheus without bespoke handling per gauge.
+        self._gauges: Dict[Tuple[str, Optional[str]], float] = {}
+        # Profiled code spans (kernel/surrogate timings): total wall per name.
+        self._profiles: Dict[str, SpanStats] = {}
         # Forward-compat: kinds this aggregator does not understand are
         # counted, never dropped silently or crashed on — newer emitters
         # may share a log with older consumers.
@@ -217,6 +223,8 @@ class MetricsAggregator:
             self.t_first = ev.t if self.t_first is None else min(self.t_first, ev.t)
             self.t_last = ev.t if self.t_last is None else max(self.t_last, ev.t)
             if ev.kind == "gauge":
+                if ev.value is not None:
+                    self._gauges[(ev.stage, ev.pool)] = float(ev.value)
                 if ev.stage == "slots" and ev.pool is not None:
                     self._capacity.setdefault(ev.pool, _Capacity()).set(ev.t, ev.value or 0.0)
                 elif ev.stage == "workers" and ev.pool is not None:
@@ -244,6 +252,9 @@ class MetricsAggregator:
                 return
             if ev.kind == "surrogate":
                 self.surrogate_events.append(ev)
+                return
+            if ev.kind == "profile":
+                self._profiles.setdefault(ev.stage, SpanStats()).add(float(ev.value or 0.0))
                 return
             if ev.kind != "task":
                 self.unknown_kinds[ev.kind] = self.unknown_kinds.get(ev.kind, 0) + 1
@@ -397,6 +408,25 @@ class MetricsAggregator:
             ),
         }
 
+    def gauges(self) -> Dict[str, Dict[str, float]]:
+        """Last-seen value of every gauge: ``{name: {pool: value}}``
+        (pool ``""`` for gauges without one)."""
+        with self._lock:
+            items = list(self._gauges.items())
+        out: Dict[str, Dict[str, float]] = {}
+        for (name, pool), value in items:
+            out.setdefault(name, {})[pool or ""] = value
+        return out
+
+    def profile_stats(self) -> Dict[str, Dict[str, float]]:
+        """Profiled code spans (``kind="profile"``): count/mean/total wall
+        seconds per profiled name."""
+        with self._lock:
+            return {
+                name: {"count": s.count, "mean_s": s.mean, "total_s": s.total}
+                for name, s in self._profiles.items()
+            }
+
     def backlog(self, pool: str) -> int:
         with self._lock:
             st = self._pools.get(pool)
@@ -496,3 +526,113 @@ class MetricsAggregator:
         elif cap_total > 0:
             out["total"] = busy_covered / cap_total
         return out
+
+    # --------------------------------------------------------------- export
+    def snapshot(self, slots_by_pool: Optional[Dict[str, int]] = None) -> Dict[str, object]:
+        """One JSON-safe dict of every live metric (the periodic snapshot
+        the ``MetricsExporter`` writes)."""
+        cache = {
+            m: {"hits": c.hits, "misses": c.misses,
+                "hit_rate": c.hit_rate, "bytes_saved": c.bytes_saved}
+            for m, c in self.cache_stats().items()
+        }
+        batches = {
+            m: {"batches": b.batches, "tasks": b.tasks,
+                "mean_occupancy": b.mean_occupancy, "max_occupancy": b.max_occupancy}
+            for m, b in self.batch_stats().items()
+        }
+        return {
+            "makespan_s": self.makespan(),
+            "pools": {name: dict(vars(st)) for name, st in self.pool_stats().items()},
+            "methods": self.method_stats(),
+            "overhead": self.overhead(),
+            "utilization": self.utilization(slots_by_pool=slots_by_pool),
+            "fleet_utilization": self.fleet_utilization(),
+            "cache": cache,
+            "batches": batches,
+            "gauges": self.gauges(),
+            "profiles": self.profile_stats(),
+            "unknown_kinds": dict(self.unknown_kinds),
+        }
+
+    def prometheus_text(self, slots_by_pool: Optional[Dict[str, int]] = None) -> str:
+        """Render the live metrics in Prometheus text exposition format
+        (scrape it from a file, or serve the string over HTTP)."""
+
+        def esc(v: str) -> str:
+            return v.replace("\\", "\\\\").replace('"', '\\"').replace("\n", "\\n")
+
+        lines: List[str] = []
+
+        def series(name: str, kind: str, help_: str, rows: List[Tuple[Dict[str, str], float]]) -> None:
+            if not rows:
+                return
+            lines.append(f"# HELP {name} {help_}")
+            lines.append(f"# TYPE {name} {kind}")
+            for labels, value in rows:
+                lab = ",".join(f'{k}="{esc(str(v))}"' for k, v in labels.items())
+                lab = "{" + lab + "}" if lab else ""
+                lines.append(f"{name}{lab} {value:.9g}")
+
+        pools = self.pool_stats()
+        for fld, kind, help_ in (
+            ("submitted", "counter", "Tasks submitted per pool"),
+            ("completed", "counter", "Tasks completed per pool"),
+            ("failed", "counter", "Tasks failed per pool"),
+            ("backlog", "gauge", "Tasks submitted but not yet running"),
+            ("running", "gauge", "Tasks currently running"),
+            ("busy_seconds", "counter", "Busy worker-slot seconds per pool"),
+        ):
+            series(
+                f"repro_pool_{fld}", kind, help_,
+                [({"pool": name}, float(getattr(st, fld))) for name, st in sorted(pools.items())],
+            )
+        series(
+            "repro_pool_utilization", "gauge", "Busy fraction of pool capacity",
+            [({"pool": name}, v) for name, v in sorted(self.utilization(slots_by_pool=slots_by_pool).items())],
+        )
+        methods = self.method_stats()
+        series(
+            "repro_method_latency_seconds_count", "counter", "Completed tasks per method",
+            [({"method": m}, float(s["count"])) for m, s in sorted(methods.items())],
+        )
+        series(
+            "repro_method_latency_seconds_sum", "counter", "Total compute seconds per method",
+            [({"method": m}, s["mean_s"] * s["count"]) for m, s in sorted(methods.items())],
+        )
+        series(
+            "repro_method_latency_seconds", "summary", "Compute-latency quantiles per method",
+            [
+                ({"method": m, "quantile": q}, s[f"p{int(float(q) * 100)}_s"])
+                for m, s in sorted(methods.items())
+                for q in ("0.5", "0.95")
+            ],
+        )
+        series(
+            "repro_overhead_span_seconds_total", "counter",
+            "Total seconds per lifecycle span (queue/dispatch/compute/result)",
+            [({"span": name}, s["total_s"]) for name, s in sorted(self.overhead().items())],
+        )
+        cache = self.cache_stats()
+        series(
+            "repro_cache_hits_total", "counter", "Warm-worker cache hits per method",
+            [({"method": m}, float(c.hits)) for m, c in sorted(cache.items())],
+        )
+        series(
+            "repro_cache_misses_total", "counter", "Warm-worker cache misses per method",
+            [({"method": m}, float(c.misses)) for m, c in sorted(cache.items())],
+        )
+        series(
+            "repro_profile_seconds_total", "counter", "Profiled span wall seconds",
+            [({"name": n}, p["total_s"]) for n, p in sorted(self.profile_stats().items())],
+        )
+        series(
+            "repro_gauge", "gauge", "Last-seen value of each workflow gauge",
+            [
+                ({"name": name, "pool": pool}, value)
+                for name, by_pool in sorted(self.gauges().items())
+                for pool, value in sorted(by_pool.items())
+            ],
+        )
+        series("repro_makespan_seconds", "gauge", "Observed event-log window", [({}, self.makespan())])
+        return "\n".join(lines) + "\n"

@@ -240,10 +240,19 @@ class ElasticPolicy:
     interval: float = 0.05        # seconds between ticks
     step: int = 1                 # max workers added/removed per tick
     idle_grace_ticks: int = 3     # consecutive idle ticks before a shrink
+    # Arrival-rate anticipation (the EMABacklogPolicy trick applied to
+    # the fleet): smooth the per-pool dispatch rate off the event log and
+    # pre-grow when the work expected within ``lookahead_s`` exceeds the
+    # pool's idle headroom — the fleet is already larger when the burst's
+    # tail lands instead of reacting one queue-depth late. ``rate_alpha=0``
+    # disables anticipation (pure reactive scaling, the old behavior).
+    rate_alpha: float = 0.3       # EMA smoothing of the arrival rate
+    lookahead_s: float = 0.2      # horizon over which expected arrivals count
 
     def to_dict(self) -> Dict[str, float]:
         return {"interval": self.interval, "step": self.step,
-                "idle_grace_ticks": self.idle_grace_ticks}
+                "idle_grace_ticks": self.idle_grace_ticks,
+                "rate_alpha": self.rate_alpha, "lookahead_s": self.lookahead_s}
 
 
 class ElasticScaler:
@@ -279,6 +288,16 @@ class ElasticScaler:
         self.rec = rec
         self.resizes: List[Tuple[float, str, int, int]] = []
         self._idle_ticks: Dict[str, int] = {p: 0 for p in pools}
+        # Arrival-rate EMA: count ``dispatched`` events per pool off the
+        # event log (the executing-pool signal), smooth per tick.
+        self._arrival_lock = threading.Lock()
+        self._arrival_counts: Dict[str, int] = {p: 0 for p in pools}
+        self._rate_ema: Dict[str, float] = {p: 0.0 for p in pools}
+        self._rate_t: Optional[float] = None
+        self._arrival_sub: Optional[Callable] = None
+        if event_log is not None and self.policy.rate_alpha > 0:
+            self._arrival_sub = self._on_event
+            event_log.subscribe(self._arrival_sub, replay=False)
         # Steering slots the counter still owes back after a fleet shrink
         # (rec.shrink is all-or-nothing and only takes idle slots; a
         # failed shrink is retried every tick, never dropped — otherwise
@@ -296,6 +315,52 @@ class ElasticScaler:
         for name, pool in self.pools.items():
             self.event_log.gauge("workers", pool.n_workers, pool=name)
 
+    def _on_event(self, ev: Any) -> None:
+        """Event-log subscriber (inline at emit: stay tiny): count
+        per-pool task arrivals for the rate EMA."""
+        if ev.kind == "task" and ev.stage == "dispatched" and ev.pool in self._arrival_counts:
+            with self._arrival_lock:
+                self._arrival_counts[ev.pool] += 1
+
+    def _update_rates(self) -> None:
+        """Fold this tick's arrival counts into the per-pool rate EMA and
+        gauge it (``arrival_rate``, tasks/s) into metrics snapshots."""
+        now = time.monotonic()
+        if self._rate_t is None:
+            self._rate_t = now
+            return
+        dt = now - self._rate_t
+        if dt <= 0:
+            return
+        self._rate_t = now
+        alpha = self.policy.rate_alpha
+        with self._arrival_lock:
+            counts = dict(self._arrival_counts)
+            for p in self._arrival_counts:
+                self._arrival_counts[p] = 0
+        for name, n in counts.items():
+            inst = n / dt
+            self._rate_ema[name] = alpha * inst + (1 - alpha) * self._rate_ema[name]
+            if self.event_log is not None and (inst or self._rate_ema[name] > 1e-3):
+                self.event_log.gauge("arrival_rate", self._rate_ema[name], pool=name)
+
+    def expected_arrivals(self, name: str) -> float:
+        """Tasks expected within the policy's lookahead window."""
+        return self._rate_ema.get(name, 0.0) * self.policy.lookahead_s
+
+    def rebind_event_log(self, log: EventLog) -> None:
+        """Move telemetry (and the arrival-rate subscription) to ``log``
+        (``repro.app``'s two-phase benchmarks)."""
+        if self._arrival_sub is not None and self.event_log is not None:
+            unsub = getattr(self.event_log, "unsubscribe", None)
+            if unsub is not None:
+                unsub(self._arrival_sub)
+            self._arrival_sub = None
+        self.event_log = log
+        if log is not None and self.policy.rate_alpha > 0:
+            self._arrival_sub = self._on_event
+            log.subscribe(self._arrival_sub, replay=False)
+
     # ------------------------------------------------------------------- tick
     def _decide(self, name: str, pool: Any) -> Optional[int]:
         """Target size for one pool this tick, or None to hold."""
@@ -304,11 +369,25 @@ class ElasticScaler:
         queued = pool.queued()
         busy = sum(1 for w in pool.worker_states() if w.busy and w.alive)
         idle = max(0, current - busy)
+        expected = self.expected_arrivals(name)
         if queued > 0:
             self._idle_ticks[name] = 0
-            target = spec.clamp(current + min(self.policy.step, queued))
+            # Grow toward queued + anticipated work, not just the queue:
+            # mid-burst the fleet pre-grows ahead of arrivals instead of
+            # chasing the queue one step at a time.
+            demand = queued + int(expected)
+            target = spec.clamp(current + min(self.policy.step, demand))
+            return target if target != current else None
+        if expected > idle:
+            # Nothing queued *yet*, but the smoothed arrival rate says the
+            # idle headroom will not absorb the next lookahead window.
+            self._idle_ticks[name] = 0
+            target = spec.clamp(current + min(self.policy.step, int(expected - idle) + 1))
             return target if target != current else None
         if idle > 0:
+            if expected >= 0.5:
+                self._idle_ticks[name] = 0  # arrivals imminent: hold capacity
+                return None
             self._idle_ticks[name] += 1
             if self._idle_ticks[name] >= self.policy.idle_grace_ticks:
                 self._idle_ticks[name] = 0
@@ -322,6 +401,7 @@ class ElasticScaler:
         """One autoscaler tick over every pool; True when any resize
         happened."""
         changed = False
+        self._update_rates()
         self._settle_rec_debt()
         for name, pool in self.pools.items():
             target = self._decide(name, pool)
@@ -392,3 +472,8 @@ class ElasticScaler:
         self._stop.set()
         if self._thread is not None:
             self._thread.join(timeout=2.0)
+        if self._arrival_sub is not None and self.event_log is not None:
+            unsub = getattr(self.event_log, "unsubscribe", None)
+            if unsub is not None:
+                unsub(self._arrival_sub)
+            self._arrival_sub = None

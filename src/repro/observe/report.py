@@ -15,6 +15,7 @@ from typing import Dict, Optional
 
 from .events import EventLog, lifecycle_gaps, lifecycle_order_violations
 from .metrics import MetricsAggregator
+from .trace import build_task_traces, span_summary
 
 
 def build_report(
@@ -79,6 +80,25 @@ def build_report(
             "order_violations": ooo,
         },
     }
+    # Fig.-7-style fine-grained span breakdown with critical-path
+    # attribution (which interval dominated each task's wall time).
+    trace = span_summary(build_task_traces(events))
+    if trace["tasks"]:
+        report["trace"] = {
+            "tasks": trace["tasks"],
+            "flagged": trace["flagged"],
+            "spans": {
+                name: {k: round(v, 6) for k, v in s.items()}
+                for name, s in trace["spans"].items()
+            },
+            "critical_path": trace["critical_path"],
+        }
+    profiles = agg.profile_stats()
+    if profiles:
+        report["profiles"] = {
+            name: {k: round(v, 6) for k, v in s.items()}
+            for name, s in sorted(profiles.items())
+        }
     if agg.surrogate_events:
         report["surrogate"] = agg.surrogate_stats()
     if agg.unknown_kinds:
@@ -125,6 +145,29 @@ def render_text(report: dict) -> str:
             if s:
                 lines.append(f"  {name:<10} {s.get('mean_s', 0.0)*1e3:8.2f} ms  "
                              f"(total {s.get('total_s', 0.0):.2f} s)")
+    trace = report.get("trace")
+    if trace and trace.get("spans"):
+        n = trace.get("tasks", 0)
+        crit = trace.get("critical_path", {})
+        lines.append(f"task spans ({n} task(s), critical path in [ ]):")
+        for name, s in trace["spans"].items():
+            share = crit.get(name, 0)
+            frac = f"  [{share / n:.0%} of tasks]" if n and share else ""
+            lines.append(
+                f"  {name:<12} {s.get('mean_s', 0.0)*1e3:8.2f} ms mean  "
+                f"{s.get('frac', 0.0):5.1%} of traced time{frac}"
+            )
+        if trace.get("flagged"):
+            lines.append(f"  ({trace['flagged']} task(s) had out-of-order events)")
+    profiles = report.get("profiles")
+    if profiles:
+        lines.append("profiled spans:")
+        for name, s in profiles.items():
+            lines.append(
+                f"  {name:<22} n={s.get('count', 0):<4} "
+                f"mean {s.get('mean_s', 0.0)*1e3:8.2f} ms  "
+                f"(total {s.get('total_s', 0.0):.2f} s)"
+            )
     if report.get("reallocations"):
         moves = ", ".join(f"{m['src']}->{m['dst']} x{m['n']}" for m in report["reallocations"])
         lines.append(f"reallocations:   {moves}")

@@ -31,6 +31,7 @@ Implementation notes:
 
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from functools import partial
 from typing import Any, Dict, List, Optional, Tuple
@@ -155,6 +156,10 @@ class DeepEnsemble:
         self._y_sd = 1.0
         self._norm_frozen = False
         self.fit_count = 0
+        # Optional repro.observe.EventLog: when attached, fit/predict emit
+        # ``profile`` spans (wall + post-block_until_ready device time) so
+        # surrogate costs appear in traces next to task lifecycle spans.
+        self.event_log: Optional[Any] = None
 
     # ------------------------------------------------------------------- fit
     def fit(self, X: np.ndarray, y: np.ndarray, warm_start: bool = True,
@@ -194,11 +199,21 @@ class DeepEnsemble:
         wp = np.zeros((cfg.n_members, n_pad), np.float32)
         wp[:, :n] = w
 
+        log = self.event_log
+        t0 = time.monotonic()
         self.params, self.opt_state, mse = _fit_epochs(
             self.params, self.opt_state, jnp.asarray(xp), jnp.asarray(yp),
             jnp.asarray(wp), self._n_layers, cfg.opt,
             int(epochs if epochs is not None else cfg.epochs),
         )
+        if log is not None:
+            t1 = time.monotonic()          # dispatch returned (async)
+            jax.block_until_ready(mse)     # device actually finished
+            t2 = time.monotonic()
+            log.profile(
+                "ensemble.fit", t_start=t0, wall_s=t2 - t0, device_s=t2 - t1,
+                n=n, n_pad=n_pad, fit_count=self.fit_count + 1,
+            )
         self.fit_count += 1
         pred, _ = self.predict(X)
         rmse = float(np.sqrt(np.mean((pred - y) ** 2)))
@@ -215,7 +230,15 @@ class DeepEnsemble:
         n = len(X)
         xn = np.zeros((self._padded(n), self.in_dim), np.float32)
         xn[:n] = (X - self._x_mu) / self._x_sd
+        log = self.event_log
+        t0 = time.monotonic()
         preds = _predict_members(self.params, jnp.asarray(xn), self._n_layers)
+        if log is not None:
+            t1 = time.monotonic()
+            jax.block_until_ready(preds)
+            t2 = time.monotonic()
+            log.profile("ensemble.predict", t_start=t0, wall_s=t2 - t0,
+                        device_s=t2 - t1, n=n)
         return np.asarray(preds)[:, :n] * self._y_sd + self._y_mu
 
     def predict(self, X: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:

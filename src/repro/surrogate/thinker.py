@@ -174,6 +174,9 @@ class ActiveLearningThinker(BatchRetrainThinker):
         if self.done.is_set():
             return
         log = self._event_log()
+        # Attach the log to the ensemble so fit/predict emit ``profile``
+        # spans (wall + device time) alongside the surrogate events.
+        self.ensemble.event_log = log
         moved = False
         if self.train_slots:
             moved = self.rec.reallocate(

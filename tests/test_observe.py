@@ -315,3 +315,413 @@ class TestReportRendering:
         text = render_text(report)
         assert "lifecycle:       complete & ordered" in text
         assert "overhead breakdown" in text
+        assert "task spans" in text  # Fig.-7-style span breakdown folded in
+
+
+def _lifecycle(tid, t0=0.0, pool="sim", method="work", fail=False, **info):
+    """A complete synthetic lifecycle for one task, 0.1 s per hop."""
+    stages = ["submitted", "queued", "picked_up", "dispatched", "running",
+              "failed" if fail else "completed", "result_received",
+              "decision_made"]
+    return [_task(tid, s, t0 + 0.1 * i, pool=pool, method=method, **info)
+            for i, s in enumerate(stages)]
+
+
+class TestSpanBuilder:
+    def test_full_lifecycle_yields_all_six_spans(self):
+        from repro.observe import build_task_traces, span_summary
+
+        traces = build_task_traces(_lifecycle("a"))
+        assert len(traces) == 1
+        tr = traces[0]
+        assert [s.name for s in tr.spans] == [
+            "queue-wait", "pickup", "dispatch", "run",
+            "result-wait", "decision"]
+        # submitted -> picked_up is two hops; every other span is one.
+        assert tr.critical == "queue-wait"
+        assert tr.ok and not tr.flags
+        summary = span_summary(traces)
+        assert summary["tasks"] == 1 and summary["flagged"] == 0
+        assert summary["critical_path"] == {"queue-wait": 1}
+        assert summary["spans"]["run"]["mean_s"] == pytest.approx(0.1)
+
+    def test_missing_stages_degrade_gracefully(self):
+        from repro.observe import build_task_traces
+
+        evs = [_task("a", "submitted", 0.0), _task("a", "picked_up", 0.2)]
+        (tr,) = build_task_traces(evs)
+        assert [s.name for s in tr.spans] == ["queue-wait"]
+        assert not tr.flags
+
+    def test_out_of_order_pair_flagged_not_negative(self):
+        from repro.observe import build_task_traces
+
+        evs = _lifecycle("a")
+        # Clock skew: running recorded before its dispatched.
+        evs[4] = _task("a", "running", 0.25)   # dispatched is at 0.3
+        evs[3] = _task("a", "dispatched", 0.3)
+        (tr,) = build_task_traces(evs)
+        assert "out-of-order:dispatch" in tr.flags
+        assert all(s.duration >= 0 for s in tr.spans)
+
+    def test_failed_task_run_span_ends_at_failed(self):
+        from repro.observe import build_task_traces
+
+        (tr,) = build_task_traces(_lifecycle("a", fail=True))
+        assert not tr.ok
+        names = [s.name for s in tr.spans]
+        assert "run" in names and "result-wait" in names
+
+    def test_trace_context_rides_events_and_retry_links(self):
+        from repro.core import TraceContext
+        from repro.observe import build_task_traces
+
+        ctx = TraceContext.new()
+        child = ctx.child()
+        assert child.trace_id == ctx.trace_id
+        assert child.parent_span_id == ctx.span_id
+        assert child.span_id != ctx.span_id
+        (tr,) = build_task_traces(_lifecycle("a", **ctx.as_dict()))
+        assert tr.trace_id == ctx.trace_id and tr.span_id == ctx.span_id
+
+    def test_results_carry_trace_context_end_to_end(self):
+        log = EventLog()
+        _, results = _run_tasks(log, n_tasks=4)
+        assert all(r.trace is not None for r in results)
+        assert len({r.trace.trace_id for r in results}) == 4
+        for ev in log.events():
+            if ev.kind == "task":
+                assert "trace_id" in ev.info
+
+    def test_perfetto_export_shape(self, tmp_path):
+        from repro.observe import export_perfetto
+
+        log = EventLog(jsonl_path=str(tmp_path / "ev.jsonl"))
+        _run_tasks(log, n_tasks=3)
+        log.profile("kernel.x", t_start=0.5, wall_s=0.01, device_s=0.004)
+        log.close()
+        doc = export_perfetto(str(tmp_path / "ev.jsonl"),
+                              str(tmp_path / "trace.json"))
+        xs = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+        assert len([e for e in xs if e["cat"] == "task"]) >= 3 * 5
+        assert len([e for e in xs if e["cat"] == "profile"]) == 1
+        assert all(e["dur"] >= 0 and e["ts"] >= 0 for e in xs)
+        metas = [e for e in doc["traceEvents"] if e["ph"] == "M"]
+        assert any(e["name"] == "process_name" for e in metas)
+        assert json.loads((tmp_path / "trace.json").read_text())
+
+
+def _fed_double(x):
+    return x * 2
+
+
+class TestFederatedTrace:
+    """The federated observability acceptance: a spawned-server run
+    (ServerSpec(in_process=False)) writes parent + child JSONL logs that
+    merge into one causal trace with zero lifecycle gaps."""
+
+    def test_merged_cross_process_trace_is_complete(self, tmp_path):
+        from repro.app import (
+            AppSpec, ColmenaApp, ObserveSpec, QueueSpec, ServerSpec,
+        )
+        from repro.observe import build_task_traces, merge_jsonl
+
+        jsonl = str(tmp_path / "events.jsonl")
+        spec = AppSpec(
+            tasks={"double": _fed_double},
+            queues=QueueSpec(backend="pipe"),
+            pools={"default": 2},
+            server=ServerSpec(in_process=False),
+            observe=ObserveSpec(jsonl_path=jsonl),
+        )
+        server_jsonl = spec.observe.resolved_server_jsonl()
+        app = ColmenaApp(spec)
+        with app.run(timeout=120) as handle:
+            for i in range(6):
+                handle.queues.send_inputs(i, method="double")
+            results = [handle.queues.get_result(timeout=60) for _ in range(6)]
+        assert all(r is not None and r.success for r in results)
+
+        merged = EventLog(capacity=1 << 18)
+        for ev in merge_jsonl([jsonl, server_jsonl]):
+            merged.emit(ev)
+        assert lifecycle_gaps(merged) == {}
+        assert lifecycle_order_violations(merged) == []
+        traces = build_task_traces(merged)
+        assert len(traces) == 6
+        for tr in traces:
+            assert tr.trace_id is not None
+            sites = {s.site for s in tr.spans}
+            assert len(sites) == 2  # spans land on both sides of the pipe
+
+
+class TestEventLogDurability:
+    def test_jsonl_lines_visible_before_close(self, tmp_path):
+        """Line-buffered sink: a kill -9'd child's log is still readable."""
+        path = tmp_path / "ev.jsonl"
+        log = EventLog(jsonl_path=str(path))
+        log.gauge("slots", 1, pool="p")
+        log.gauge("slots", 2, pool="p")
+        rows = [json.loads(l) for l in path.read_text().splitlines()]
+        assert len(rows) == 2  # visible without close()
+        log.close()
+
+    def test_close_is_idempotent(self, tmp_path):
+        log = EventLog(jsonl_path=str(tmp_path / "ev.jsonl"))
+        log.gauge("slots", 1, pool="p")
+        log.close()
+        log.close()
+
+    def test_torn_tail_line_skipped_on_load(self, tmp_path):
+        from repro.observe import load_jsonl
+
+        path = tmp_path / "ev.jsonl"
+        log = EventLog(jsonl_path=str(path))
+        log.gauge("slots", 1, pool="p")
+        log.close()
+        with open(path, "a") as fh:
+            fh.write('{"t": 1.0, "kind": "gau')  # SIGKILL mid-write
+        events = load_jsonl(str(path))
+        assert len(events) == 1 and events[0].value == 1.0
+        assert events[0].info["site"] == "ev"
+
+    def test_size_based_rotation(self, tmp_path):
+        path = tmp_path / "ev.jsonl"
+        log = EventLog(jsonl_path=str(path), rotate_bytes=2048, rotate_keep=2)
+        for i in range(200):
+            log.gauge("slots", i, pool="p")
+        log.close()
+        assert path.exists()
+        assert (tmp_path / "ev.jsonl.1").exists()
+        # Every generation holds valid JSONL; total rows capped by keep.
+        for p in (path, tmp_path / "ev.jsonl.1"):
+            for line in p.read_text().splitlines():
+                json.loads(line)
+
+
+class TestArrivalRateScaling:
+    """Satellite: the ElasticScaler folds the event-log arrival rate into
+    its sizing decisions so fleets pre-grow ahead of bursts."""
+
+    def _scaler(self, log, n=1, lo=1, hi=8, **policy_kw):
+        from repro.app import PoolSpec
+        from repro.observe import ElasticPolicy, ElasticScaler
+
+        spec = PoolSpec("p", size=n, min_size=lo, max_size=hi, warm_capacity=0)
+        pool = spec.build(event_log=log)
+        policy = ElasticPolicy(idle_grace_ticks=1, **policy_kw)
+        scaler = ElasticScaler({"p": pool}, {"p": spec},
+                               policy=policy, event_log=log)
+        return pool, scaler
+
+    def test_dispatched_events_feed_rate_ema(self):
+        log = EventLog()
+        pool, scaler = self._scaler(log)
+        scaler._update_rates()          # arm the clock
+        for i in range(10):
+            log.emit(_task(f"t{i}", "dispatched", float(i), pool="p"))
+        time.sleep(0.05)
+        scaler._update_rates()
+        assert scaler._rate_ema["p"] > 0
+        assert scaler.expected_arrivals("p") > 0
+        gauges = [e for e in log.events()
+                  if e.kind == "gauge" and e.stage == "arrival_rate"]
+        assert gauges and gauges[-1].pool == "p"
+        scaler.stop()
+        pool.shutdown()
+
+    def test_pre_grow_ahead_of_queue(self):
+        """High arrival rate + empty queue still grows the fleet."""
+        log = EventLog()
+        pool, scaler = self._scaler(log, n=1)
+        scaler._rate_ema["p"] = 100.0   # 100 tasks/s smoothed
+        scaler._rate_t = time.monotonic()
+        target = scaler._decide("p", pool)
+        assert target is not None and target > pool.n_workers
+        pool.shutdown()
+        scaler.stop()
+
+    def test_expected_arrivals_hold_capacity(self):
+        """Imminent arrivals reset the idle clock instead of shrinking."""
+        log = EventLog()
+        pool, scaler = self._scaler(log, n=2)
+        scaler._rate_ema["p"] = 3.0     # ~0.6 expected in the window
+        scaler._idle_ticks["p"] = 5
+        assert scaler._decide("p", pool) is None
+        assert scaler._idle_ticks["p"] == 0
+        # Rate decays to zero: the idle-grace shrink path resumes.
+        scaler._rate_ema["p"] = 0.0
+        target = None
+        for _ in range(3):
+            target = scaler._decide("p", pool)
+            if target is not None:
+                break
+        assert target is not None and target < 2
+        pool.shutdown()
+        scaler.stop()
+
+    def test_rebind_moves_subscription(self):
+        log1, log2 = EventLog(), EventLog()
+        _, scaler = self._scaler(log1)
+        scaler.rebind_event_log(log2)
+        log1.emit(_task("a", "dispatched", 0.0, pool="p"))
+        log2.emit(_task("b", "dispatched", 0.0, pool="p"))
+        assert scaler._arrival_counts["p"] == 1  # only log2 counted
+        scaler.stop()
+
+
+class TestMetricsExport:
+    def test_prometheus_text_format(self):
+        log = EventLog()
+        _run_tasks(log, n_tasks=5)
+        agg = MetricsAggregator(log)
+        text = agg.prometheus_text(slots_by_pool={"alpha": 2, "beta": 2})
+        assert "# TYPE repro_pool_completed counter" in text
+        assert 'repro_pool_completed{pool="alpha"} 3' in text
+        assert "repro_makespan_seconds" in text
+        assert 'repro_pool_utilization{pool="total"}' in text
+        assert 'repro_method_latency_seconds{method="work",quantile="0.5"}' in text
+        assert text.endswith("\n")
+        for line in text.splitlines():
+            assert line.startswith("#") or " " in line
+
+    def test_snapshot_is_json_safe(self):
+        log = EventLog()
+        _run_tasks(log, n_tasks=4)
+        log.profile("kernel.x", t_start=0.0, wall_s=0.01)
+        agg = MetricsAggregator(log)
+        snap = agg.snapshot(slots_by_pool={"alpha": 2})
+        doc = json.loads(json.dumps(snap))
+        assert doc["methods"]["work"]["count"] == 4
+        assert doc["profiles"]["kernel.x"]["count"] == 1
+
+    def test_exporter_writes_prom_and_snapshot(self, tmp_path):
+        from repro.observe import ExportSpec, MetricsExporter
+
+        log = EventLog()
+        _run_tasks(log, n_tasks=3)
+        exporter = MetricsExporter(
+            log, spec=ExportSpec(dir=str(tmp_path), interval_s=60),
+            slots_by_pool={"alpha": 2, "beta": 2})
+        exporter.write_once()
+        prom = (tmp_path / "metrics.prom").read_text()
+        assert "repro_pool_completed" in prom
+        snap = json.loads((tmp_path / "snapshot.json").read_text())
+        assert snap["methods"]["work"]["count"] == 3
+        assert "ts" in snap
+
+    def test_exporter_background_thread(self, tmp_path):
+        from repro.observe import ExportSpec, MetricsExporter
+
+        log = EventLog()
+        exporter = MetricsExporter(
+            log, spec=ExportSpec(dir=str(tmp_path), interval_s=0.05))
+        exporter.start()
+        _run_tasks(log, n_tasks=2)
+        time.sleep(0.15)
+        exporter.stop()
+        snap = json.loads((tmp_path / "snapshot.json").read_text())
+        assert snap["methods"]["work"]["count"] == 2
+
+    def test_observe_spec_export_knob(self, tmp_path):
+        from repro.app import AppSpec, ColmenaApp, ObserveSpec
+
+        app = ColmenaApp(AppSpec(
+            tasks={"double": _fed_double},
+            pools={"default": 2},
+            observe=ObserveSpec(export=str(tmp_path)),
+        ))
+        with app.run(timeout=60) as handle:
+            handle.queues.send_inputs(3, method="double")
+            assert handle.queues.get_result(timeout=30).success
+        assert (tmp_path / "metrics.prom").exists()
+        assert json.loads((tmp_path / "snapshot.json").read_text())
+
+
+class TestBenchTrajectory:
+    def test_recorder_writes_schema(self, tmp_path):
+        from repro.observe import BenchRecorder, load_bench
+
+        rec = BenchRecorder("demo", out_dir=str(tmp_path))
+        rec.metric("speedup_x", 3.2, unit="x", gate=(">=", 2.0))
+        rec.metric("latency_us", 120.0, unit="us")
+        path = rec.finish(ok=True)
+        doc = load_bench(path)
+        assert doc["name"] == "demo" and doc["schema"] == 1
+        assert doc["metrics"]["speedup_x"]["passed"] is True
+        assert doc["gates_passed"] and doc["passed"]
+        assert "python" in doc["env"]
+        assert doc["commit"] is None or len(doc["commit"]) == 40
+
+    def test_failed_gate_fails_suite(self, tmp_path):
+        from repro.observe import BenchRecorder, load_bench
+
+        rec = BenchRecorder("demo", out_dir=str(tmp_path))
+        rec.metric("speedup_x", 1.1, unit="x", gate=(">=", 2.0))
+        doc = load_bench(rec.finish(ok=True))
+        assert doc["metrics"]["speedup_x"]["passed"] is False
+        assert not doc["gates_passed"] and not doc["passed"]
+
+    def test_diff_regression_direction(self):
+        from repro.observe import bench_diff
+
+        old = {"name": "demo", "commit": "a" * 40, "metrics": {
+            "speedup_x": {"value": 3.0, "gate": {"op": ">=", "threshold": 2.0}},
+            "latency_us": {"value": 100.0, "gate": {"op": "<=", "threshold": 500.0}},
+            "free": {"value": 1.0},
+        }}
+        new = {"name": "demo", "commit": "b" * 40, "metrics": {
+            "speedup_x": {"value": 2.0, "gate": {"op": ">=", "threshold": 2.0}},
+            "latency_us": {"value": 90.0, "gate": {"op": "<=", "threshold": 500.0}},
+            "free": {"value": 5.0},
+        }}
+        diff = bench_diff(old, new)
+        assert diff["metrics"]["speedup_x"]["status"] == "regressed"
+        assert diff["metrics"]["latency_us"]["status"] == "improved"
+        assert diff["metrics"]["free"]["status"] == "changed"  # ungated
+        assert diff["regressions"] == ["speedup_x"] and not diff["ok"]
+
+    def test_diff_within_tolerance_unchanged(self):
+        from repro.observe import bench_diff
+
+        old = {"name": "d", "metrics": {"x": {"value": 100.0, "gate": {"op": ">=", "threshold": 1}}}}
+        new = {"name": "d", "metrics": {"x": {"value": 97.0, "gate": {"op": ">=", "threshold": 1}}}}
+        diff = bench_diff(old, new, rel_tol=0.05)
+        assert diff["metrics"]["x"]["status"] == "unchanged" and diff["ok"]
+
+    def test_render_and_cli_diff(self, tmp_path, capsys):
+        from repro.observe import BenchRecorder, render_diff
+        from repro.observe.__main__ import main as cli_main
+        from repro.observe.bench import diff_paths
+
+        for d, val in (("old", 4.0), ("new", 1.5)):
+            rec = BenchRecorder("demo", out_dir=str(tmp_path / d))
+            rec.metric("speedup_x", val, unit="x", gate=(">=", 2.0))
+            rec.finish(ok=True)
+        old = str(tmp_path / "old" / "BENCH_demo.json")
+        new = str(tmp_path / "new" / "BENCH_demo.json")
+        text = render_diff(diff_paths(old, new))
+        assert "REGRESSED: speedup_x" in text
+        assert cli_main(["bench", "diff", old, new]) == 0  # soft by default
+        assert cli_main(["bench", "diff", old, new, "--fail-on-regress"]) == 1
+        assert cli_main(["bench", "diff",
+                         str(tmp_path / "old"), str(tmp_path / "new"),
+                         "--fail-on-regress"]) == 1
+        capsys.readouterr()
+
+    def test_specfile_roundtrip_observe_knobs(self, tmp_path):
+        from repro.app import AppSpec, ObserveSpec
+        from repro.core.specfile import spec_from_dict, spec_to_dict
+
+        spec = AppSpec(
+            tasks={"double": _fed_double},
+            observe=ObserveSpec(
+                jsonl_path="ev.jsonl", rotate_bytes=1 << 20, rotate_keep=2,
+                export={"dir": "obs", "interval_s": 2.0}),
+        )
+        d = spec_to_dict(spec)
+        assert d["observe"]["rotate_bytes"] == 1 << 20
+        assert d["observe"]["export"]["dir"] == "obs"
+        back = spec_from_dict(d)
+        assert back.observe.rotate_bytes == 1 << 20
+        assert back.observe.resolved_server_jsonl() == "ev.server.jsonl"
