@@ -18,6 +18,10 @@ Figure map:
   overhead       -> warm-worker cache x batched dispatch (event-log
                     per-task overhead, cache hit-rate, batch occupancy)
   kernel_bench   -> kernels/ (XLA timings + TPU roofline estimates)
+  soak           -> chaos tier (fault injection under 10^4-10^5-task
+                    soak; exactly-once + bounded-recovery gate). Not in
+                    --smoke: CI runs it as its own soak-chaos job via
+                    ``python -m benchmarks.soak --smoke --record``.
 """
 
 from __future__ import annotations
@@ -41,7 +45,7 @@ def main() -> None:
     args = ap.parse_args()
     quick = not args.full
 
-    from . import kernel_bench, multisite, overhead, proxy_app, steering_gain, utilization, weak_scaling
+    from . import kernel_bench, multisite, overhead, proxy_app, soak, steering_gain, utilization, weak_scaling
 
     suites = {
         "overhead": overhead.main,
@@ -51,6 +55,7 @@ def main() -> None:
         "multisite": multisite.main,
         "steering_gain": steering_gain.main,
         "kernel_bench": kernel_bench.main,
+        "soak": soak.main,
     }
     if args.smoke:
         # steering_gain's smoke form is the CI quadratic gate: steered

@@ -1,0 +1,141 @@
+"""Chaos-tier soak benchmark: prove the fault paths under fire.
+
+Pushes 10^4 (``--smoke``) to 10^5–10^6 (``--full`` / ``--tasks N``)
+lightweight tasks through the federated two-site harness in
+``repro.chaos.soak`` while the default ``ChaosSchedule`` fires seven
+faults at it (zombie-cohort storm, two SIGKILLs of the spawned site,
+request drops, result delays, checkpoint corruption + resume drill, a
+burst flood against the elastic pool). The ``InvariantChecker`` verdict
+is a **hard gate**: zero lost results, zero duplicated deliveries, zero
+lifecycle-order violations, intact payloads, and bounded recovery after
+every fault — a violation raises, so CI fails loudly.
+
+With ``--record DIR`` metrics land in ``BENCH_soak.json`` via
+``BenchRecorder`` (the PR 6 trajectory machinery); compare runs with
+``python -m repro.observe bench diff OLD NEW``. A custom schedule can
+be supplied as JSON via ``--chaos FILE``
+(``{"actions": [{"kind": "kill_site", "at_frac": 0.3, ...}]}``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Optional
+
+SMOKE_TASKS = 10_000
+QUICK_TASKS = 20_000
+FULL_TASKS = 200_000
+
+
+def main(
+    quick: bool = True,
+    recorder=None,
+    n_tasks: Optional[int] = None,
+    schedule=None,
+    recovery_bound_s: float = 10.0,
+) -> dict:
+    from repro.chaos import SoakConfig, SoakHarness, default_chaos_schedule
+
+    n = n_tasks if n_tasks is not None else (QUICK_TASKS if quick else FULL_TASKS)
+    cfg = SoakConfig(n_tasks=n, recovery_bound_s=recovery_bound_s)
+    sched = schedule if schedule is not None else default_chaos_schedule()
+    result = SoakHarness(cfg, sched).run()
+    rep = result.report
+
+    rows = {
+        "tasks": rep.n_tasks,
+        "wall_s": round(result.wall_s, 3),
+        "throughput_tps": round(result.throughput_tps, 1),
+        "faults_fired": rep.faults_fired,
+        "lost": rep.lost,
+        "duplicates_suppressed": rep.duplicates_suppressed,
+        "exactly_once_violations": rep.exactly_once_violations,
+        "value_errors": rep.value_errors,
+        "order_violations": rep.order_violations,
+        "failed_deliveries": rep.failed_deliveries,
+        "resubmits": rep.resubmits,
+        "max_recovery_s": round(rep.max_recovery_s, 3),
+        "site_kills": result.metrics.get("site_kills", 0),
+        "resume_drills": result.metrics.get("resume_drills", 0),
+        "pool_resizes": result.metrics.get("pool_resizes", 0),
+        "requests_dropped": result.metrics.get("requests_dropped", 0),
+        "local_retries": result.metrics.get("local_retries", 0),
+        "verdict": "PASS" if rep.ok else "FAIL",
+    }
+    for k, v in rows.items():
+        print(f"soak,{k},{v}")
+    for r in rep.recoveries:
+        rec = "never" if r["recovery_s"] is None else f"{r['recovery_s']:.3f}"
+        print(f"soak,recovery,{r['label']},{rec}")
+
+    if recorder is not None:
+        recorder.metric("tasks", rep.n_tasks, unit="tasks", gate=(">=", SMOKE_TASKS))
+        recorder.metric("throughput_tps", result.throughput_tps, unit="tasks/s")
+        recorder.metric("wall_s", result.wall_s, unit="s")
+        recorder.metric("faults_fired", rep.faults_fired, unit="faults", gate=(">=", 4))
+        recorder.metric("lost", rep.lost, unit="tasks", gate=("<=", 0))
+        recorder.metric("exactly_once_violations", rep.exactly_once_violations,
+                        unit="deliveries", gate=("<=", 0))
+        recorder.metric("value_errors", rep.value_errors, unit="results", gate=("<=", 0))
+        recorder.metric("order_violations", rep.order_violations, unit="tasks", gate=("<=", 0))
+        recorder.metric("max_recovery_s", rep.max_recovery_s, unit="s",
+                        gate=("<=", recovery_bound_s))
+        recorder.metric("duplicates_suppressed", rep.duplicates_suppressed, unit="deliveries")
+        recorder.metric("resubmits", rep.resubmits, unit="tasks")
+        recorder.metric("failed_deliveries", rep.failed_deliveries, unit="deliveries")
+        recorder.metric("site_kills", result.metrics.get("site_kills", 0), unit="kills")
+        recorder.metric("pool_resizes", result.metrics.get("pool_resizes", 0), unit="resizes")
+
+    if not rep.ok:
+        raise AssertionError(
+            "soak invariant gate FAILED: " + "; ".join(rep.violations[:10])
+        )
+    return rows
+
+
+def _cli() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    scale = ap.add_mutually_exclusive_group()
+    scale.add_argument("--smoke", action="store_true",
+                       help=f"{SMOKE_TASKS} tasks (the CI soak-chaos gate)")
+    scale.add_argument("--full", action="store_true", help=f"{FULL_TASKS} tasks")
+    scale.add_argument("--tasks", type=int, default=None, help="explicit task count")
+    ap.add_argument("--record", nargs="?", const="bench_out", default=None, metavar="DIR",
+                    help="write BENCH_soak.json to DIR (default bench_out/)")
+    ap.add_argument("--chaos", default=None, metavar="FILE",
+                    help="JSON ChaosSchedule overriding the default")
+    ap.add_argument("--recovery-bound-s", type=float, default=10.0)
+    args = ap.parse_args()
+
+    schedule = None
+    if args.chaos:
+        from repro.chaos import ChaosSchedule
+
+        with open(args.chaos) as fh:
+            schedule = ChaosSchedule.from_dict(json.load(fh))
+
+    n_tasks = args.tasks if args.tasks is not None else (
+        SMOKE_TASKS if args.smoke else (FULL_TASKS if args.full else QUICK_TASKS)
+    )
+    recorder = None
+    if args.record is not None:
+        from repro.observe import BenchRecorder
+
+        recorder = BenchRecorder("soak", out_dir=args.record)
+    try:
+        main(quick=not args.full, recorder=recorder, n_tasks=n_tasks,
+             schedule=schedule, recovery_bound_s=args.recovery_bound_s)
+    except Exception as exc:
+        if recorder is not None:
+            print(f"suite,soak,recorded,{recorder.finish(ok=False, error=str(exc))}")
+        print(f"suite,soak,FAILED,{type(exc).__name__}: {exc}")
+        sys.exit(1)
+    if recorder is not None:
+        print(f"suite,soak,recorded,{recorder.finish(ok=True)}")
+    print("suite,soak,ok")
+
+
+if __name__ == "__main__":
+    _cli()

@@ -1,0 +1,66 @@
+"""repro.chaos — declarative chaos injection + soak harness.
+
+The chaos tier proves the stack's fault-tolerance claims under fire
+instead of asserting them in unit tests: a ``ChaosSchedule`` (pure
+data, JSON-round-trippable) fires timed faults — SIGKILL a federated
+site, drop/delay queue messages, doom worker cohorts, corrupt a
+checkpoint, flood an elastic pool — against a live soak of 10^4–10^6
+tasks, and an ``InvariantChecker`` gates the run on exactly-once
+delivery, payload integrity, lifecycle-order cleanliness, and bounded
+recovery after every fault.
+
+Quick start::
+
+    from repro.chaos import SoakConfig, default_chaos_schedule, run_soak
+
+    result = run_soak(SoakConfig(n_tasks=10_000))
+    assert result.report.ok, result.report.violations
+
+See ``benchmarks/soak.py`` for the recorded (``BENCH_soak.json``)
+entry point the CI ``soak-chaos`` job runs.
+"""
+
+from .faults import (
+    ChaosLink,
+    ChaosLocalQueues,
+    ChaosPipeQueues,
+    corrupt_file,
+    kill_server_process,
+    truncate_file,
+)
+from .invariants import InvariantChecker, InvariantReport, RecoveryProbe
+from .schedule import ChaosAction, ChaosRunner, ChaosSchedule, FiredAction
+from .soak import (
+    SoakConfig,
+    SoakHarness,
+    SoakResult,
+    WorkLedger,
+    default_chaos_schedule,
+    expected_value,
+    run_soak,
+    soak_task,
+)
+
+__all__ = [
+    "ChaosAction",
+    "ChaosLink",
+    "ChaosLocalQueues",
+    "ChaosPipeQueues",
+    "ChaosRunner",
+    "ChaosSchedule",
+    "FiredAction",
+    "InvariantChecker",
+    "InvariantReport",
+    "RecoveryProbe",
+    "SoakConfig",
+    "SoakHarness",
+    "SoakResult",
+    "WorkLedger",
+    "corrupt_file",
+    "default_chaos_schedule",
+    "expected_value",
+    "kill_server_process",
+    "run_soak",
+    "soak_task",
+    "truncate_file",
+]

@@ -1,0 +1,266 @@
+"""Fault primitives the chaos tier injects through.
+
+Three families:
+
+* **message chaos** — ``ChaosLink`` + queue subclasses that drop task
+  requests on the floor or delay result delivery on the *driver* side
+  of a queue pair (the side the ``ChaosRunner`` can toggle at runtime;
+  the server side of a ``PipeColmenaQueues`` lives in another process
+  and its link copy stays inert);
+* **storage chaos** — truncate or bit-flip a file (campaign
+  checkpoints) so resume must detect the damage and fall back;
+* **process chaos** — SIGKILL a spawned ``ProcessTaskServer`` child,
+  the no-goodbye node loss of the paper's exascale deployments, plus
+  the transport surgery needed to survive it (a process killed while
+  holding a ``multiprocessing.Queue`` lock poisons that lock for every
+  later user, so the request channel is rebuilt on restart).
+"""
+
+from __future__ import annotations
+
+import logging
+import multiprocessing
+import os
+import random
+import signal
+import threading
+import time
+from dataclasses import dataclass
+from typing import Any, List, Optional
+
+from repro.core.queues import _KILL, LocalColmenaQueues, PipeColmenaQueues
+
+logger = logging.getLogger("repro.chaos.faults")
+
+
+# --------------------------------------------------------------------------
+# Message chaos
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class ChaosLink:
+    """Runtime-toggleable message chaos on one side of a queue pair.
+
+    Dropping and delaying have independent activation windows so one
+    schedule can run them back to back: ``enable_drop(rate, duration)``
+    makes ``_push_request`` discard that fraction of task requests;
+    ``enable_delay(delay, duration)`` makes every popped result sleep
+    before delivery (a slow interconnect, not a lost one). Counters
+    (``dropped``/``delayed``) feed the soak report.
+    """
+
+    seed: int = 0
+
+    def __post_init__(self) -> None:
+        self._rng = random.Random(self.seed)
+        self._lock = threading.Lock()
+        self.drop_rate = 0.0
+        self.delay_s = 0.0
+        self._drop_until = 0.0
+        self._delay_until = 0.0
+        self.dropped = 0
+        self.delayed = 0
+
+    # Links ride inside queues across process boundaries; the child's
+    # copy starts inert (windows closed) and cannot be toggled remotely.
+    def __getstate__(self) -> dict:
+        state = dict(self.__dict__)
+        state.pop("_rng", None)
+        state.pop("_lock", None)
+        state["_drop_until"] = 0.0
+        state["_delay_until"] = 0.0
+        return state
+
+    def __setstate__(self, state: dict) -> None:
+        self.__dict__.update(state)
+        self._rng = random.Random(self.seed)
+        self._lock = threading.Lock()
+
+    def enable_drop(self, rate: float, duration_s: float) -> None:
+        with self._lock:
+            self.drop_rate = max(0.0, min(1.0, rate))
+            self._drop_until = time.monotonic() + duration_s
+
+    def enable_delay(self, delay_s: float, duration_s: float) -> None:
+        with self._lock:
+            self.delay_s = max(0.0, delay_s)
+            self._delay_until = time.monotonic() + duration_s
+
+    def disable(self) -> None:
+        with self._lock:
+            self._drop_until = 0.0
+            self._delay_until = 0.0
+
+    def should_drop_request(self) -> bool:
+        with self._lock:
+            if time.monotonic() < self._drop_until and self._rng.random() < self.drop_rate:
+                self.dropped += 1
+                return True
+            return False
+
+    def result_delay(self) -> float:
+        with self._lock:
+            if time.monotonic() < self._delay_until and self.delay_s > 0:
+                self.delayed += 1
+                return self.delay_s
+            return 0.0
+
+
+class _ChaosQueuesMixin:
+    """Mixin over a ``ColmenaQueues`` implementation applying a
+    ``ChaosLink`` to the driver-side transport primitives."""
+
+    def _init_chaos(self, chaos: Optional[ChaosLink]) -> None:
+        self.chaos = chaos if chaos is not None else ChaosLink()
+
+    def _push_request(self, payload: Any) -> None:
+        # Never drop the kill sentinel: losing it turns every shutdown
+        # into a timeout. (Pipe queues bypass this path for kills.)
+        is_kill = isinstance(payload, str) and payload == _KILL
+        if not is_kill and self.chaos.should_drop_request():
+            logger.warning("chaos: dropped a task request on the floor")
+            return
+        super()._push_request(payload)
+
+    def _pop_result(self, topic: str, timeout: Optional[float]) -> Any:
+        payload = super()._pop_result(topic, timeout)
+        if payload is not None:
+            delay = self.chaos.result_delay()
+            if delay > 0:
+                time.sleep(delay)
+        return payload
+
+
+class ChaosLocalQueues(_ChaosQueuesMixin, LocalColmenaQueues):
+    """In-process queues with drop/delay chaos (unit-test scale)."""
+
+    def __init__(self, chaos: Optional[ChaosLink] = None, **kwargs: Any) -> None:
+        super().__init__(**kwargs)
+        self._init_chaos(chaos)
+
+
+class ChaosPipeQueues(_ChaosQueuesMixin, PipeColmenaQueues):
+    """Cross-process queues with drop/delay chaos plus post-SIGKILL
+    transport surgery (``renew_transport``)."""
+
+    def __init__(self, chaos: Optional[ChaosLink] = None, **kwargs: Any) -> None:
+        super().__init__(**kwargs)
+        self._init_chaos(chaos)
+        self._ctx = multiprocessing.get_context("spawn")
+
+    def __getstate__(self) -> dict:
+        state = super().__getstate__()
+        state.pop("_ctx", None)
+        return state
+
+    def __setstate__(self, state: dict) -> None:
+        super().__setstate__(state)
+        self._ctx = multiprocessing.get_context("spawn")
+
+    def renew_transport(self) -> int:
+        """Replace every ``multiprocessing`` channel with a fresh one.
+
+        Call after SIGKILLing the consumer process and before spawning
+        its replacement: a child killed inside ``Queue.get``/``put``
+        dies holding the queue's shared-memory lock, leaving it acquired
+        forever — the next incarnation would block on its first pop.
+        Requests still buffered in the old channel are *lost* (the
+        driver's resubmission ledger covers them, exactly as it covers
+        requests the dead child had popped but not finished); results
+        should be drained by the caller *before* renewal (the parent is
+        the only result-queue reader, so draining stays safe after the
+        child dies). Returns the number of channels replaced.
+        """
+        old = [self._requests, *self._results.values(), *self._notices.values()]
+        self._requests = self._ctx.Queue()
+        self._results = {t: self._ctx.Queue() for t in self.topics}
+        self._notices = {t: self._ctx.Queue() for t in self.topics}
+        self._discard(old)
+        return len(old)
+
+    def close_transport(self) -> None:
+        """Final teardown: close every channel and cancel feeder joins.
+
+        A queue whose consumer was SIGKILLed keeps a parent-side feeder
+        thread blocked in ``send`` forever (the pipe is full, the reader
+        is gone); ``multiprocessing`` joins feeders at interpreter exit,
+        so without this the *harness process* hangs on shutdown."""
+        self._discard([self._requests, *self._results.values(), *self._notices.values()])
+
+    @staticmethod
+    def _discard(queues: List[Any]) -> None:
+        for q in queues:
+            try:
+                q.close()
+                q.cancel_join_thread()  # never hang interpreter exit on a dead feeder
+            except Exception:  # noqa: BLE001 - best-effort teardown of poisoned queues
+                pass
+
+
+# --------------------------------------------------------------------------
+# Storage chaos
+# --------------------------------------------------------------------------
+
+
+def truncate_file(path: str, keep_fraction: float = 0.5) -> int:
+    """Tear a file as a writer killed mid-publish would; returns the
+    surviving byte count."""
+    size = os.path.getsize(path)
+    keep = int(size * max(0.0, min(1.0, keep_fraction)))
+    with open(path, "rb+") as f:
+        f.truncate(keep)
+    return keep
+
+def corrupt_file(path: str, n_bytes: int = 16, seed: int = 0, offset_frac: float = 0.5) -> int:
+    """Flip a run of bytes mid-file (silent media corruption: the file
+    stays loadable-looking but its content digest no longer matches).
+    Returns how many bytes were overwritten."""
+    rng = random.Random(seed)
+    size = os.path.getsize(path)
+    if size == 0:
+        return 0
+    start = min(int(size * max(0.0, min(1.0, offset_frac))), size - 1)
+    count = max(1, min(n_bytes, size - start))
+    with open(path, "rb+") as f:
+        f.seek(start)
+        original = f.read(count)
+        f.seek(start)
+        # XOR with a non-zero mask: guaranteed different from the original.
+        f.write(bytes(b ^ (rng.randrange(1, 256)) for b in original))
+    return count
+
+
+# --------------------------------------------------------------------------
+# Process chaos
+# --------------------------------------------------------------------------
+
+
+def kill_server_process(server: Any, sig: int = signal.SIGKILL) -> Optional[int]:
+    """SIGKILL a ``ProcessTaskServer``'s child — no drain, no goodbye.
+
+    Returns the pid killed, or None if no child was running. The
+    server's process handle is cleared so a later ``stop()`` does not
+    signal the corpse (or a recycled pid)."""
+    proc = getattr(server, "_proc", None)
+    if proc is None or proc.pid is None:
+        return None
+    pid = proc.pid
+    try:
+        os.kill(pid, sig)
+    except ProcessLookupError:
+        pass  # already gone: the goal state
+    proc.join(timeout=10)
+    server._proc = None
+    logger.warning("chaos: SIGKILLed task-server process pid=%d", pid)
+    return pid
+
+
+__all__: List[str] = [
+    "ChaosLink",
+    "ChaosLocalQueues",
+    "ChaosPipeQueues",
+    "corrupt_file",
+    "kill_server_process",
+    "truncate_file",
+]

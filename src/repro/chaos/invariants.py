@@ -1,0 +1,181 @@
+"""Event-log invariant gate for chaos runs.
+
+The soak harness defines *exactly-once delivery* at the boundary that
+matters to an application: every submitted work item is **accepted
+exactly once** by the driver. Underneath, the stack is at-least-once
+(the ledger resubmits work presumed lost to a killed site or a dropped
+message) with deduplication at acceptance — so a late second execution
+of a resubmitted item is *suppressed and counted*, not a violation,
+while a second delivery of the **same task attempt** (same task id), or
+any second delivery of a never-resubmitted item, is a hard violation:
+the server broke its own delivery contract.
+
+``InvariantChecker.check`` gates a run on:
+
+* **zero lost** — every index accepted (``completed == n_tasks``);
+* **zero duplicated deliveries** — no exactly-once violations as above;
+* **payload integrity** — every accepted value equals ``f(index)``;
+* **zero lifecycle-order violations** — over the merged cross-process
+  event trace (parent ring + each server incarnation's JSONL sink,
+  reassembled on the shared monotonic clock as in ``observe.trace``);
+* **bounded recovery** — every fired fault's ``RecoveryProbe`` resolved
+  (a matching-scope delivery landed after the fault) within
+  ``recovery_bound_s``; and every firing's own handler reported ok
+  (e.g. the corrupt-checkpoint resume drill actually fell back);
+* **enough fire** — at least ``require_faults`` faults actually fired,
+  so a run that finished before its schedule triggered cannot pass
+  vacuously.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence
+
+
+@dataclass
+class RecoveryProbe:
+    """Fault-to-next-delivery stopwatch.
+
+    Registered when a fault fires; resolved by the driver at the first
+    accepted delivery whose site matches ``scope`` (``"any"`` matches
+    every site). ``recovery_s`` is the gap the bound applies to."""
+
+    label: str
+    scope: str = "any"
+    t0: float = 0.0
+    resolved_t: Optional[float] = None
+
+    def matches(self, site: str) -> bool:
+        return self.scope in ("any", site)
+
+    def resolve(self, t: float) -> None:
+        if self.resolved_t is None and t >= self.t0:
+            self.resolved_t = t
+
+    @property
+    def recovery_s(self) -> Optional[float]:
+        return None if self.resolved_t is None else self.resolved_t - self.t0
+
+
+@dataclass
+class InvariantReport:
+    ok: bool
+    n_tasks: int
+    completed: int
+    lost: int
+    duplicates_suppressed: int
+    exactly_once_violations: int
+    value_errors: int
+    order_violations: int
+    failed_deliveries: int
+    resubmits: int
+    faults_fired: int
+    faults_failed: int
+    max_recovery_s: float
+    recoveries: List[Dict[str, Any]] = field(default_factory=list)
+    violations: List[str] = field(default_factory=list)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "ok": self.ok,
+            "n_tasks": self.n_tasks,
+            "completed": self.completed,
+            "lost": self.lost,
+            "duplicates_suppressed": self.duplicates_suppressed,
+            "exactly_once_violations": self.exactly_once_violations,
+            "value_errors": self.value_errors,
+            "order_violations": self.order_violations,
+            "failed_deliveries": self.failed_deliveries,
+            "resubmits": self.resubmits,
+            "faults_fired": self.faults_fired,
+            "faults_failed": self.faults_failed,
+            "max_recovery_s": self.max_recovery_s,
+            "recoveries": list(self.recoveries),
+            "violations": list(self.violations),
+        }
+
+
+class InvariantChecker:
+    def __init__(self, recovery_bound_s: float = 10.0, require_faults: int = 0) -> None:
+        self.recovery_bound_s = recovery_bound_s
+        self.require_faults = require_faults
+
+    def check(
+        self,
+        ledger: Any,                       # repro.chaos.soak.WorkLedger (duck-typed)
+        fired: Sequence[Any] = (),         # ChaosRunner.fired
+        probes: Sequence[RecoveryProbe] = (),
+        events: Optional[Any] = None,      # EventLog or by_task mapping
+        max_sample: int = 8,
+    ) -> InvariantReport:
+        violations: List[str] = []
+
+        # -- delivery: zero lost, exactly once, intact payloads ------------
+        lost = ledger.n_tasks - ledger.completed
+        if lost:
+            missing = ledger.missing_indices(limit=max_sample)
+            violations.append(f"{lost} task(s) never delivered (e.g. indices {missing})")
+        dups = list(getattr(ledger, "exactly_once_violations", []))
+        if dups:
+            violations.append(
+                f"{len(dups)} duplicated deliveries accepted (e.g. indices {dups[:max_sample]})"
+            )
+        value_errors = list(getattr(ledger, "value_errors", []))
+        if value_errors:
+            violations.append(
+                f"{len(value_errors)} corrupted result payloads (e.g. indices {value_errors[:max_sample]})"
+            )
+
+        # -- event trace: causal ordering ----------------------------------
+        order: List[str] = []
+        if events is not None:
+            from repro.observe import lifecycle_order_violations
+
+            order = lifecycle_order_violations(events)
+            if order:
+                violations.append(
+                    f"{len(order)} lifecycle-order violations (e.g. {order[:max_sample]})"
+                )
+
+        # -- faults: all fired cleanly, all recovered in bound -------------
+        failed_firings = [f for f in fired if not f.ok]
+        for f in failed_firings:
+            violations.append(f"fault {f.action.label} failed to inject/recover: {f.detail}")
+        if len(fired) < self.require_faults:
+            violations.append(
+                f"only {len(fired)} fault(s) fired; the gate requires >= {self.require_faults} "
+                "(the run must actually have been under fire)"
+            )
+
+        recoveries: List[Dict[str, Any]] = []
+        max_recovery = 0.0
+        for p in probes:
+            rec = p.recovery_s
+            recoveries.append({"label": p.label, "scope": p.scope, "recovery_s": rec})
+            if rec is None:
+                violations.append(f"no {p.scope}-scope delivery ever landed after fault {p.label}")
+            else:
+                max_recovery = max(max_recovery, rec)
+                if rec > self.recovery_bound_s:
+                    violations.append(
+                        f"recovery after {p.label} took {rec:.2f}s > bound {self.recovery_bound_s:.2f}s"
+                    )
+
+        return InvariantReport(
+            ok=not violations,
+            n_tasks=ledger.n_tasks,
+            completed=ledger.completed,
+            lost=lost,
+            duplicates_suppressed=getattr(ledger, "duplicates_suppressed", 0),
+            exactly_once_violations=len(dups),
+            value_errors=len(value_errors),
+            order_violations=len(order),
+            failed_deliveries=getattr(ledger, "failed_deliveries", 0),
+            resubmits=getattr(ledger, "resubmits", 0),
+            faults_fired=len(fired),
+            faults_failed=len(failed_firings),
+            max_recovery_s=max_recovery,
+            recoveries=recoveries,
+            violations=violations,
+        )

@@ -1,0 +1,216 @@
+"""Declarative chaos schedules.
+
+A ``ChaosSchedule`` is a list of timed fault injections — "kill the
+remote site at 25% progress", "drop 30% of requests for 0.8 s starting
+at t=4 s" — that a ``ChaosRunner`` fires against a live workflow from a
+side thread. The schedule is data (``to_dict``/``from_dict`` round-trip
+to JSON/TOML), the faults are handlers the harness supplies, and every
+firing is recorded (and emitted as a ``chaos`` event when an
+``EventLog`` is attached) so the invariant checker can demand a bounded
+recovery after each one.
+
+Triggers come in two flavors:
+
+* ``at_s``   — wall-clock seconds since ``ChaosRunner.start()``;
+* ``at_frac`` — workflow progress fraction in [0, 1] as reported by the
+  runner's ``progress`` callable (e.g. tasks completed / tasks total),
+  which keeps one schedule meaningful across soak sizes.
+"""
+
+from __future__ import annotations
+
+import logging
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+logger = logging.getLogger("repro.chaos")
+
+
+@dataclass
+class ChaosAction:
+    """One scheduled fault.
+
+    ``kind`` selects the handler (``kill_site``, ``drop_requests``,
+    ``delay_results``, ``doom_workers``, ``corrupt_checkpoint``,
+    ``burst``, ...); ``params`` is passed to it verbatim. ``scope``
+    names which deliveries prove recovery from this fault (a site name,
+    or ``"any"``); ``"none"`` opts out of a delivery-based recovery
+    probe (e.g. checkpoint corruption, whose recovery is a resume
+    drill, not a delivery).
+    """
+
+    kind: str
+    at_s: Optional[float] = None
+    at_frac: Optional[float] = None
+    params: Dict[str, Any] = field(default_factory=dict)
+    scope: str = "any"
+    label: Optional[str] = None
+
+    def __post_init__(self) -> None:
+        if (self.at_s is None) == (self.at_frac is None):
+            raise ValueError(f"chaos action {self.kind!r}: set exactly one of at_s / at_frac")
+        if self.at_frac is not None and not (0.0 <= self.at_frac <= 1.0):
+            raise ValueError(f"chaos action {self.kind!r}: at_frac must be in [0, 1]")
+        if self.label is None:
+            trig = f"t={self.at_s}s" if self.at_s is not None else f"p={self.at_frac:.0%}"
+            self.label = f"{self.kind}@{trig}"
+
+    def due(self, elapsed_s: float, progress: float) -> bool:
+        if self.at_s is not None:
+            return elapsed_s >= self.at_s
+        return progress >= self.at_frac
+
+    def to_dict(self) -> Dict[str, Any]:
+        d: Dict[str, Any] = {"kind": self.kind, "scope": self.scope, "label": self.label}
+        if self.at_s is not None:
+            d["at_s"] = self.at_s
+        if self.at_frac is not None:
+            d["at_frac"] = self.at_frac
+        if self.params:
+            d["params"] = dict(self.params)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "ChaosAction":
+        return cls(
+            kind=d["kind"],
+            at_s=d.get("at_s"),
+            at_frac=d.get("at_frac"),
+            params=dict(d.get("params", {})),
+            scope=d.get("scope", "any"),
+            label=d.get("label"),
+        )
+
+
+@dataclass
+class ChaosSchedule:
+    """An ordered bag of ``ChaosAction``s. Order is authorship order;
+    the runner checks *all* unfired actions each tick, so mixing ``at_s``
+    and ``at_frac`` triggers is fine."""
+
+    actions: List[ChaosAction] = field(default_factory=list)
+
+    def __len__(self) -> int:
+        return len(self.actions)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"actions": [a.to_dict() for a in self.actions]}
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "ChaosSchedule":
+        return cls(actions=[ChaosAction.from_dict(a) for a in d.get("actions", [])])
+
+
+@dataclass
+class FiredAction:
+    """Record of one fault actually injected."""
+
+    t: float                 # time.monotonic() at firing
+    elapsed_s: float
+    progress: float
+    action: ChaosAction
+    ok: bool                 # handler ran and (if it returned a dict) reported ok
+    detail: Any = None
+
+
+class ChaosRunner:
+    """Fires a ``ChaosSchedule`` against handler callables from a side
+    thread.
+
+    ``handlers`` maps action kind -> ``fn(params) -> detail``; a handler
+    raising, or returning a dict with ``{"ok": False}``, marks the
+    firing failed (the invariant checker treats a failed firing as a
+    violation — a fault that could not even be injected, or whose
+    built-in recovery drill failed, must fail the run loudly).
+    """
+
+    def __init__(
+        self,
+        schedule: ChaosSchedule,
+        handlers: Dict[str, Callable[[Dict[str, Any]], Any]],
+        progress: Callable[[], float] = lambda: 0.0,
+        event_log: Optional[Any] = None,
+        poll_s: float = 0.05,
+    ) -> None:
+        self.schedule = schedule
+        self.handlers = dict(handlers)
+        self.progress = progress
+        self.event_log = event_log
+        self.poll_s = poll_s
+        self.fired: List[FiredAction] = []
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self._t0: Optional[float] = None
+
+    # ------------------------------------------------------------------ fire
+    def _fire(self, action: ChaosAction, elapsed: float, prog: float) -> None:
+        handler = self.handlers.get(action.kind)
+        ok, detail = True, None
+        if handler is None:
+            ok, detail = False, f"no handler for chaos kind {action.kind!r}"
+        else:
+            try:
+                detail = handler(dict(action.params))
+                if isinstance(detail, dict) and detail.get("ok") is False:
+                    ok = False
+            except Exception as exc:  # noqa: BLE001 - a broken injector must not kill the run
+                ok, detail = False, f"{type(exc).__name__}: {exc}"
+                logger.exception("chaos handler %s raised", action.label)
+        now = time.monotonic()
+        self.fired.append(FiredAction(t=now, elapsed_s=elapsed, progress=prog, action=action, ok=ok, detail=detail))
+        logger.warning("chaos: fired %s (ok=%s, detail=%s)", action.label, ok, detail)
+        if self.event_log is not None:
+            try:
+                from repro.observe import Event  # deferred: chaos stays importable without observe
+
+                self.event_log.emit(Event(
+                    t=now, kind="chaos", stage=action.kind,
+                    info={"label": action.label, "ok": ok, "scope": action.scope,
+                          "elapsed_s": elapsed, "progress": prog},
+                ))
+            except Exception:  # noqa: BLE001 - telemetry must never break injection
+                logger.exception("chaos event emission failed")
+
+    def _loop(self) -> None:
+        pending = list(self.schedule.actions)
+        while pending and not self._stop.is_set():
+            elapsed = time.monotonic() - self._t0
+            try:
+                prog = float(self.progress())
+            except Exception:  # noqa: BLE001
+                prog = 0.0
+            still: List[ChaosAction] = []
+            for action in pending:
+                if action.due(elapsed, prog):
+                    self._fire(action, elapsed, prog)
+                else:
+                    still.append(action)
+            pending = still
+            if pending:
+                self._stop.wait(self.poll_s)
+        self._unfired = pending
+
+    # ------------------------------------------------------------- lifecycle
+    def start(self) -> "ChaosRunner":
+        if self._thread is not None:
+            return self
+        self._t0 = time.monotonic()
+        self._unfired: List[ChaosAction] = list(self.schedule.actions)
+        self._thread = threading.Thread(target=self._loop, daemon=True, name="chaos-runner")
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=30)
+            self._thread = None
+
+    @property
+    def unfired(self) -> List[ChaosAction]:
+        """Actions whose trigger never came (run ended first)."""
+        if self._thread is not None and self._thread.is_alive():
+            raise RuntimeError("runner still active")
+        return list(getattr(self, "_unfired", self.schedule.actions))

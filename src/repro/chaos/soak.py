@@ -1,0 +1,713 @@
+"""Soak harness: 10^4–10^6 lightweight tasks through a federated
+two-site deployment while a ``ChaosSchedule`` fires faults at it.
+
+Topology (one ``WorkLedger`` drives two sites, mirroring the paper's
+multi-site deployments):
+
+* ``local``  — in-process ``TaskServer`` over an **elastic** worker
+  fleet (``ElasticScaler`` resizes inside the PoolSpec band; the
+  ``burst`` fault floods it to force resize thrash) plus a runtime
+  ``FailureInjector`` for zombie-cohort storms;
+* ``proc``   — a spawned ``ProcessTaskServer`` over **multi-pool**
+  ``PoolSpec``s (cpu + accel) behind ``ChaosPipeQueues``; its injector
+  carries spec-time storms across the process boundary; the
+  ``kill_site`` fault SIGKILLs it mid-campaign and the driver restarts
+  it on fresh transport after a down window.
+
+Delivery contract: the driver is **at-least-once with dedup at
+acceptance** = exactly-once to the application. The ledger registers a
+deadline per submitted index; work presumed lost (killed site, dropped
+request) is resubmitted when overdue; the first delivery per index is
+accepted, a later delivery of a *different* attempt is suppressed and
+counted, and a second delivery of the *same* attempt is an
+exactly-once violation. Campaign checkpointing is real (a
+``Campaign`` snapshots the ledger through a thinker shim), which is
+what the ``corrupt_checkpoint`` fault attacks: it damages the newest
+checkpoint on disk, then runs a resume drill proving ``try_resume``
+falls back to the previous retained checkpoint with a consistent
+(subset) ledger state.
+"""
+
+from __future__ import annotations
+
+import collections
+import logging
+import os
+import tempfile
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Deque, Dict, List, Optional, Set, Tuple
+
+from repro.core import (
+    BaseThinker,
+    BatchPolicy,
+    Campaign,
+    FailureInjector,
+    LocalColmenaQueues,
+    PoolSpec,
+    ResourceRequest,
+    Result,
+    RetryPolicy,
+    StragglerPolicy,
+    TaskServer,
+)
+from repro.core.app import ProcessTaskServer
+
+from .faults import ChaosLink, ChaosPipeQueues, corrupt_file, kill_server_process, truncate_file
+from .invariants import InvariantChecker, InvariantReport, RecoveryProbe
+from .schedule import ChaosAction, ChaosRunner, ChaosSchedule
+
+logger = logging.getLogger("repro.chaos.soak")
+
+
+def soak_task(x: int) -> int:
+    """The soak payload: trivially cheap, but its output is a checkable
+    function of its input so the invariant gate can verify payload
+    integrity end to end (module-level: must pickle into spawned
+    sites)."""
+    return x * 3 + 1
+
+
+def expected_value(index: int) -> int:
+    return index * 3 + 1
+
+
+# --------------------------------------------------------------------------
+# Work ledger
+# --------------------------------------------------------------------------
+
+
+class WorkLedger:
+    """Exactly-once acceptance over an at-least-once driver.
+
+    Tracks ``n_tasks`` integer work items. ``take`` hands out indices
+    (resubmissions first), ``on_submitted`` arms a per-index deadline,
+    ``overdue`` recycles indices presumed lost, and ``accept``
+    deduplicates deliveries. Memory stays O(n_tasks) bytes + O(resubmitted)
+    dicts, so million-task soaks fit comfortably.
+    """
+
+    def __init__(self, n_tasks: int, resubmit_after_s: float = 3.0) -> None:
+        self.n_tasks = n_tasks
+        self.resubmit_after_s = resubmit_after_s
+        self.done = bytearray(n_tasks)           # accepted-delivery flag per index
+        self.completed = 0
+        self.next_fresh = 0
+        self.retry_q: Deque[int] = collections.deque()
+        self.inflight: Dict[int, Tuple[str, float]] = {}   # index -> (site, deadline)
+        self.inflight_by_site: collections.Counter = collections.Counter()
+        # Only resubmitted indices can produce benign duplicates, so only
+        # they pay for per-attempt task-id bookkeeping.
+        self.resubmitted: Set[int] = set()
+        self.delivered_tids: Dict[int, Set[str]] = {}
+        self.resubmits = 0
+        self.duplicates_suppressed = 0
+        self.failed_deliveries = 0
+        self.exactly_once_violations: List[int] = []
+        self.value_errors: List[int] = []
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------- dispatch
+    def take(self, k: int, fresh_floor: int = 0) -> List[int]:
+        """Up to ``k`` indices to submit now: recycled work first, then
+        fresh indices in order. ``fresh_floor`` leaves at least that many
+        fresh indices unclaimed — the driver reserves a tail of work for
+        a recovering site so its recovery probe has deliveries to resolve
+        against (otherwise a fast surviving site drains the whole run
+        before the restarted one gets a single task)."""
+        out: List[int] = []
+        with self._lock:
+            while self.retry_q and len(out) < k:
+                out.append(self.retry_q.popleft())
+            while (
+                self.next_fresh < self.n_tasks - fresh_floor and len(out) < k
+            ):
+                out.append(self.next_fresh)
+                self.next_fresh += 1
+        return out
+
+    def on_submitted(self, index: int, site: str, task_id: str, now: float) -> None:
+        with self._lock:
+            prev = self.inflight.get(index)
+            if prev is not None:
+                self.inflight_by_site[prev[0]] -= 1
+            self.inflight[index] = (site, now + self.resubmit_after_s)
+            self.inflight_by_site[site] += 1
+            if index in self.resubmitted:
+                self.delivered_tids.setdefault(index, set())
+
+    def inflight_at(self, site: str) -> int:
+        with self._lock:
+            return self.inflight_by_site[site]
+
+    def overdue(self, now: float) -> int:
+        """Recycle indices whose deadline passed (their site died, their
+        request was dropped, or they are just slow — a late duplicate
+        will be suppressed at accept)."""
+        with self._lock:
+            late = [i for i, (_, deadline) in self.inflight.items() if deadline <= now]
+            for i in late:
+                site, _ = self.inflight.pop(i)
+                self.inflight_by_site[site] -= 1
+                self.resubmitted.add(i)
+                self.delivered_tids.setdefault(i, set())
+                self.retry_q.append(i)
+                self.resubmits += 1
+        return len(late)
+
+    def requeue_site(self, site: str) -> int:
+        """Immediately recycle everything in flight at a site (it was
+        just killed; no point waiting out the deadline)."""
+        with self._lock:
+            mine = [i for i, (s, _) in self.inflight.items() if s == site]
+            for i in mine:
+                self.inflight.pop(i)
+                self.inflight_by_site[site] -= 1
+                self.resubmitted.add(i)
+                self.delivered_tids.setdefault(i, set())
+                self.retry_q.append(i)
+                self.resubmits += 1
+        return len(mine)
+
+    # -------------------------------------------------------------- deliver
+    def accept(self, result: Result) -> str:
+        """Classify one delivery: ``accepted`` | ``duplicate`` |
+        ``violation`` | ``failed`` | ``foreign``."""
+        index = result.task_info.get("index")
+        if not isinstance(index, int) or not (0 <= index < self.n_tasks):
+            return "foreign"
+        tid = result.task_id
+        with self._lock:
+            entry = self.inflight.pop(index, None)
+            if entry is not None:
+                self.inflight_by_site[entry[0]] -= 1
+            if not result.success:
+                # Server-side retries exhausted (e.g. a storm killed every
+                # attempt): recycle, it still owes us a success.
+                if not self.done[index]:
+                    self.resubmitted.add(index)
+                    self.delivered_tids.setdefault(index, set())
+                    self.retry_q.append(index)
+                self.failed_deliveries += 1
+                return "failed"
+            if self.done[index]:
+                if index in self.resubmitted and tid not in self.delivered_tids[index]:
+                    # A different attempt of deliberately resubmitted work:
+                    # the at-least-once tax, suppressed by design.
+                    self.delivered_tids[index].add(tid)
+                    self.duplicates_suppressed += 1
+                    return "duplicate"
+                # Same attempt delivered twice, or a dup of work we only
+                # ever submitted once: the server broke exactly-once.
+                self.exactly_once_violations.append(index)
+                return "violation"
+            self.done[index] = 1
+            self.completed += 1
+            if index in self.resubmitted:
+                self.delivered_tids[index].add(tid)
+            if result.value != expected_value(index):
+                self.value_errors.append(index)
+        return "accepted"
+
+    def missing_indices(self, limit: int = 8) -> List[int]:
+        with self._lock:
+            out = []
+            for i, flag in enumerate(self.done):
+                if not flag:
+                    out.append(i)
+                    if len(out) >= limit:
+                        break
+            return out
+
+    # ------------------------------------------------------------ checkpoint
+    def get_state(self) -> Dict[str, Any]:
+        with self._lock:
+            return {
+                "n_tasks": self.n_tasks,
+                "done": bytes(self.done),
+                "completed": self.completed,
+                "next_fresh": self.next_fresh,
+            }
+
+    def set_state(self, state: Dict[str, Any]) -> None:
+        if state.get("n_tasks") != self.n_tasks:
+            raise ValueError(
+                f"checkpoint is for a {state.get('n_tasks')}-task soak, this one has {self.n_tasks}"
+            )
+        with self._lock:
+            self.done = bytearray(state["done"])
+            self.completed = self.n_tasks - self.done.count(0)
+            self.next_fresh = state["next_fresh"]
+            self.inflight.clear()
+            self.inflight_by_site.clear()
+            self.retry_q = collections.deque(
+                i for i in range(self.next_fresh) if not self.done[i]
+            )
+
+
+class _LedgerThinker(BaseThinker):
+    """Thinker shim so the real ``Campaign`` machinery checkpoints the
+    ledger (the soak drives queues directly; no agents ever run)."""
+
+    def __init__(self, queues: Any, ledger: WorkLedger) -> None:
+        super().__init__(queues)
+        self.ledger = ledger
+
+    def get_state(self) -> Dict[str, Any]:
+        return self.ledger.get_state()
+
+    def set_state(self, state: Dict[str, Any]) -> None:
+        self.ledger.set_state(state)
+
+
+# --------------------------------------------------------------------------
+# Configuration
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class SoakConfig:
+    n_tasks: int = 100_000
+    # Per-site inflight caps double as the routing split: the proc site
+    # (pipe serialization + process hop) takes the smaller share.
+    max_inflight_local: int = 384
+    max_inflight_proc: int = 160
+    resubmit_after_s: float = 3.0
+    recovery_bound_s: float = 10.0
+    checkpoint_every_s: float = 0.5
+    site_down_s: float = 0.75         # how long a killed site stays dark before restart
+    # Fresh work held back for a site with an unresolved recovery probe
+    # (see WorkLedger.take): recovery must be *observable*, not raced away.
+    probe_reserve: int = 96
+    deadline_s: float = 600.0
+    seed: int = 0
+    state_dir: Optional[str] = None   # default: fresh tempdir
+    out_dir: Optional[str] = None     # JSONL sinks; default: fresh tempdir
+    record_events: bool = True        # parent JSONL sink (full order-check coverage)
+    log_capacity: int = 1 << 17
+    local_pool: PoolSpec = field(default_factory=lambda: PoolSpec("sim", size=4, min_size=2, max_size=10))
+    proc_pools: Dict[str, PoolSpec] = field(default_factory=lambda: {
+        "cpu": PoolSpec("cpu", size=4),
+        "accel": PoolSpec("accel", size=2),
+    })
+    # Spec-time zombie storms carried into the spawned site's injector:
+    # (seconds after its first task, workers to kill).
+    proc_storms: List[Tuple[float, int]] = field(default_factory=lambda: [(0.5, 2)])
+    retry: RetryPolicy = field(default_factory=lambda: RetryPolicy(max_retries=4, backoff_s=0.02))
+    batching: BatchPolicy = field(default_factory=lambda: BatchPolicy(max_batch=32, linger_s=0.001))
+    # Straggler speculation stays on but conservative: sub-millisecond
+    # medians would otherwise speculate half the backlog.
+    straggler: StragglerPolicy = field(default_factory=lambda: StragglerPolicy(factor=50.0, min_history=20))
+    heartbeat_timeout_s: float = 2.0
+
+
+def default_chaos_schedule() -> ChaosSchedule:
+    """The stock soak schedule: seven faults spread over the run —
+    a zombie storm, two site kills, a drop window, a delay window, a
+    checkpoint corruption + resume drill, and a burst."""
+    return ChaosSchedule([
+        ChaosAction(kind="doom_workers", at_frac=0.10, params={"n": 3}, scope="local"),
+        ChaosAction(kind="kill_site", at_frac=0.22, params={"site": "proc"}, scope="proc"),
+        ChaosAction(kind="drop_requests", at_frac=0.40, params={"rate": 0.3, "duration_s": 0.6}, scope="proc"),
+        ChaosAction(kind="delay_results", at_frac=0.50, params={"delay_s": 0.01, "duration_s": 0.6}, scope="proc"),
+        ChaosAction(kind="corrupt_checkpoint", at_frac=0.60, params={"mode": "bitflip"}, scope="none"),
+        ChaosAction(kind="burst", at_frac=0.70, params={"n": 256}, scope="local"),
+        ChaosAction(kind="kill_site", at_frac=0.82, params={"site": "proc"}, scope="proc"),
+    ])
+
+
+@dataclass
+class SoakResult:
+    report: InvariantReport
+    wall_s: float
+    throughput_tps: float
+    fired: List[Any]
+    metrics: Dict[str, Any] = field(default_factory=dict)
+
+
+# --------------------------------------------------------------------------
+# Harness
+# --------------------------------------------------------------------------
+
+
+class _Site:
+    def __init__(self, name: str, queues: Any) -> None:
+        self.name = name
+        self.queues = queues
+        self.server: Any = None
+        self.down = False
+        self.down_until = 0.0
+        self.kills = 0
+        self.generation = 0
+        self.jsonl_paths: List[str] = []
+
+
+class SoakHarness:
+    def __init__(self, config: Optional[SoakConfig] = None, schedule: Optional[ChaosSchedule] = None) -> None:
+        self.cfg = config or SoakConfig()
+        self.schedule = schedule if schedule is not None else default_chaos_schedule()
+        self.ledger = WorkLedger(self.cfg.n_tasks, resubmit_after_s=self.cfg.resubmit_after_s)
+        self.probes: List[RecoveryProbe] = []
+        self._probe_lock = threading.Lock()
+        self._ckpt_lock = threading.Lock()   # serializes checkpoints vs. the corruption drill
+        self.drill_results: List[Dict[str, Any]] = []
+
+    # ------------------------------------------------------------------ build
+    def _build(self) -> None:
+        cfg = self.cfg
+        from repro.observe import ElasticPolicy, ElasticScaler, EventLog
+
+        self._tmp = None
+        if cfg.state_dir is None or cfg.out_dir is None:
+            self._tmp = tempfile.TemporaryDirectory(prefix="repro-soak-")
+            cfg.state_dir = cfg.state_dir or os.path.join(self._tmp.name, "state")
+            cfg.out_dir = cfg.out_dir or os.path.join(self._tmp.name, "logs")
+        os.makedirs(cfg.state_dir, exist_ok=True)
+        os.makedirs(cfg.out_dir, exist_ok=True)
+
+        jsonl = os.path.join(cfg.out_dir, "soak-driver.jsonl") if cfg.record_events else None
+        self.log = EventLog(capacity=cfg.log_capacity, jsonl_path=jsonl)
+        self._driver_jsonl = jsonl
+
+        # -- local site: elastic in-process server --------------------------
+        self.local_injector = FailureInjector(seed=cfg.seed)
+        pool = cfg.local_pool.build(event_log=self.log, injector=self.local_injector)
+        local_q = LocalColmenaQueues(event_log=self.log)
+        self.local = _Site("local", local_q)
+        self.local.server = TaskServer(
+            local_q, {"soak": soak_task}, pools={cfg.local_pool.name: pool},
+            retry=cfg.retry, straggler=cfg.straggler, batching=cfg.batching,
+            heartbeat_timeout_s=cfg.heartbeat_timeout_s, event_log=self.log,
+        )
+        self.scaler = ElasticScaler(
+            pools={cfg.local_pool.name: pool}, specs={cfg.local_pool.name: cfg.local_pool},
+            policy=ElasticPolicy(interval=0.05), event_log=self.log,
+        )
+
+        # -- proc site: spawned multi-pool server over chaos pipes ----------
+        self.link = ChaosLink(seed=cfg.seed + 1)
+        proc_q = ChaosPipeQueues(chaos=self.link, event_log=self.log)
+        self.proc = _Site("proc", proc_q)
+        self._proc_injector = FailureInjector(seed=cfg.seed + 2, storms=list(cfg.proc_storms))
+        self._spawn_proc_server()
+
+        # -- campaign checkpointing over the ledger -------------------------
+        self.thinker = _LedgerThinker(local_q, self.ledger)
+        self.campaign = Campaign(
+            self.thinker, self.local.server, state_dir=cfg.state_dir,
+            checkpoint_interval_s=cfg.checkpoint_every_s, name="soak",
+        )
+
+    def _proc_server_kwargs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        path = os.path.join(cfg.out_dir, f"soak-proc-{self.proc.generation}.jsonl")
+        self.proc.jsonl_paths.append(path)
+        specs = {
+            name: PoolSpec(
+                name=s.name, size=s.size, min_size=s.min_size, max_size=s.max_size,
+                warm_capacity=s.warm_capacity, prefetch=s.prefetch,
+                injector=self._proc_injector,
+            )
+            for name, s in cfg.proc_pools.items()
+        }
+        return dict(
+            pool_specs=specs, retry=cfg.retry, straggler=cfg.straggler,
+            batching=cfg.batching, heartbeat_timeout_s=cfg.heartbeat_timeout_s,
+            jsonl_path=path,
+        )
+
+    def _spawn_proc_server(self) -> None:
+        self.proc.server = ProcessTaskServer(
+            self.proc.queues, {"soak": soak_task}, **self._proc_server_kwargs()
+        ).start()
+
+    # ----------------------------------------------------------------- probes
+    def _add_probe(self, label: str, scope: str) -> None:
+        if scope == "none":
+            return
+        with self._probe_lock:
+            self.probes.append(RecoveryProbe(label=label, scope=scope, t0=time.monotonic()))
+
+    def _resolve_probes(self, site: str, t: float) -> None:
+        with self._probe_lock:
+            for p in self.probes:
+                if p.resolved_t is None and p.matches(site):
+                    p.resolve(t)
+
+    def _unresolved_scopes(self) -> Set[str]:
+        with self._probe_lock:
+            return {p.scope for p in self.probes if p.resolved_t is None}
+
+    # --------------------------------------------------------------- handlers
+    def _handle_kill_site(self, params: Dict[str, Any]) -> Dict[str, Any]:
+        site = self.proc  # only the spawned site can be SIGKILLed
+        pid = kill_server_process(site.server)
+        site.down = True
+        site.down_until = time.monotonic() + self.cfg.site_down_s
+        site.kills += 1
+        self._add_probe(f"kill_site#{site.kills}", scope=site.name)
+        requeued = self.ledger.requeue_site(site.name)
+        return {"ok": pid is not None, "pid": pid, "requeued": requeued}
+
+    def _handle_doom_workers(self, params: Dict[str, Any]) -> Dict[str, Any]:
+        n = int(params.get("n", 2))
+        self.local_injector.doom_cohort(n)
+        self._add_probe(f"doom_workers({n})", scope="local")
+        return {"ok": True, "doomed": n}
+
+    def _handle_drop_requests(self, params: Dict[str, Any]) -> Dict[str, Any]:
+        rate = float(params.get("rate", 0.3))
+        dur = float(params.get("duration_s", 0.5))
+        self.link.enable_drop(rate, dur)
+        self._add_probe(f"drop_requests({rate:.0%})", scope="proc")
+        return {"ok": True, "rate": rate, "duration_s": dur}
+
+    def _handle_delay_results(self, params: Dict[str, Any]) -> Dict[str, Any]:
+        delay = float(params.get("delay_s", 0.01))
+        dur = float(params.get("duration_s", 0.5))
+        self.link.enable_delay(delay, dur)
+        self._add_probe(f"delay_results({delay * 1e3:.0f}ms)", scope="proc")
+        return {"ok": True, "delay_s": delay, "duration_s": dur}
+
+    def _handle_burst(self, params: Dict[str, Any]) -> Dict[str, Any]:
+        """Flood the elastic site past its steady-state inflight cap so the
+        scaler must grow, then (when the flood drains) shrink back."""
+        n = int(params.get("n", 256))
+        indices = self.ledger.take(n)
+        now = time.monotonic()
+        for i in indices:
+            self._submit(self.local, i, now)
+        self._add_probe(f"burst({len(indices)})", scope="local")
+        return {"ok": True, "submitted": len(indices)}
+
+    def _handle_corrupt_checkpoint(self, params: Dict[str, Any]) -> Dict[str, Any]:
+        """Damage the newest checkpoint on disk, then prove resume falls
+        back: a *fresh* campaign over a fresh ledger must resume from the
+        previous retained checkpoint with a consistent (subset) state."""
+        mode = params.get("mode", "bitflip")
+        with self._ckpt_lock:
+            # Guarantee a fallback target exists: two good checkpoints.
+            self.campaign.checkpoint()
+            self.campaign.checkpoint()
+            newest = self.campaign.latest_checkpoint()
+            if newest is None:
+                return {"ok": False, "error": "no checkpoint to corrupt"}
+            if mode == "truncate":
+                truncate_file(newest, keep_fraction=0.4)
+            else:
+                corrupt_file(newest, n_bytes=32, seed=self.cfg.seed)
+            drill_ledger = WorkLedger(self.cfg.n_tasks)
+            drill = Campaign(
+                _LedgerThinker(self.local.queues, drill_ledger), self.local.server,
+                state_dir=self.cfg.state_dir, name="soak",
+            )
+            resumed = drill.try_resume()
+            live = self.ledger.get_state()
+        fell_back = drill.resume_fallbacks >= 1
+        # The restored frontier must be a subset of live progress: nothing
+        # in the older checkpoint may claim work the live ledger has not done.
+        subset = resumed and drill_ledger.completed <= self.ledger.completed and not any(
+            r and not l for r, l in zip(drill_ledger.done, live["done"])
+        )
+        detail = {
+            "ok": bool(resumed and fell_back and subset),
+            "mode": mode, "corrupted": os.path.basename(newest),
+            "resumed": resumed, "fell_back": fell_back, "subset": subset,
+            "restored_completed": drill_ledger.completed,
+            "resumed_from": os.path.basename(drill._resumed_from or "") or None,
+        }
+        self.drill_results.append(detail)
+        return detail
+
+    # ----------------------------------------------------------------- driver
+    def _submit(self, site: _Site, index: int, now: float) -> None:
+        if site is self.proc:
+            # Federated multi-pool routing: spread across the site's pools.
+            pools = list(self.cfg.proc_pools)
+            pool = pools[index % len(pools)]
+        else:
+            pool = self.cfg.local_pool.name
+        tid = site.queues.send_inputs(
+            index, method="soak", task_info={"index": index},
+            resources=ResourceRequest(pool=pool),
+        )
+        self.ledger.on_submitted(index, site.name, tid, now)
+
+    def _top_up(self, now: float) -> None:
+        cfg = self.cfg
+        sites: List[Tuple[_Site, int]] = []
+        if not self.proc.down:
+            sites.append((self.proc, cfg.max_inflight_proc))
+        sites.append((self.local, cfg.max_inflight_local))
+        # A proc-scope recovery probe still open means the proc site owes
+        # us a post-fault delivery; hold fresh work back from local so the
+        # recovering site has something left to prove itself with.
+        proc_pending = "proc" in self._unresolved_scopes()
+        for site, cap in sites:
+            room = cap - self.ledger.inflight_at(site.name)
+            if room <= 0:
+                continue
+            floor = cfg.probe_reserve if (site is self.local and proc_pending) else 0
+            for i in self.ledger.take(room, fresh_floor=floor):
+                self._submit(site, i, now)
+
+    def _drain(self, now: float, budget: int = 4096) -> int:
+        got = 0
+        for site in (self.local, self.proc):
+            while got < budget:
+                r = site.queues.get_result(timeout=0)
+                if r is None:
+                    break
+                status = self.ledger.accept(r)
+                if status == "accepted":
+                    self._resolve_probes(site.name, time.monotonic())
+                got += 1
+        return got
+
+    def _restart_down_sites(self, now: float) -> None:
+        site = self.proc
+        if site.down and now >= site.down_until:
+            # The killed child may have died holding a queue lock; rebuild
+            # the transport before spawning its replacement (leftover
+            # results were drained every loop while it was dark).
+            self._drain(now)
+            site.queues.renew_transport()
+            site.generation += 1
+            self._spawn_proc_server()
+            site.down = False
+            logger.warning("chaos: proc site restarted (generation %d)", site.generation)
+
+    def _progress(self) -> float:
+        return self.ledger.completed / max(1, self.cfg.n_tasks)
+
+    # -------------------------------------------------------------------- run
+    def run(self) -> SoakResult:
+        cfg = self.cfg
+        self._build()
+        handlers: Dict[str, Callable[[Dict[str, Any]], Any]] = {
+            "kill_site": self._handle_kill_site,
+            "doom_workers": self._handle_doom_workers,
+            "drop_requests": self._handle_drop_requests,
+            "delay_results": self._handle_delay_results,
+            "corrupt_checkpoint": self._handle_corrupt_checkpoint,
+            "burst": self._handle_burst,
+        }
+        runner = ChaosRunner(self.schedule, handlers, progress=self._progress, event_log=self.log)
+
+        t0 = time.monotonic()
+        self.local.server.start()
+        self.scaler.emit_baseline()
+        self.scaler.start()
+        runner.start()
+        last_ckpt = t0
+        deadline = t0 + cfg.deadline_s
+        try:
+            while self.ledger.completed < cfg.n_tasks:
+                now = time.monotonic()
+                if now >= deadline:
+                    logger.error("soak deadline reached at %d/%d", self.ledger.completed, cfg.n_tasks)
+                    break
+                self._restart_down_sites(now)
+                self._top_up(now)
+                got = self._drain(now)
+                self.ledger.overdue(now)
+                if now - last_ckpt >= cfg.checkpoint_every_s:
+                    with self._ckpt_lock:
+                        self.campaign.checkpoint()
+                    last_ckpt = now
+                if got == 0:
+                    # Nothing landed: block briefly on the local site
+                    # instead of spinning the driver core.
+                    r = self.local.queues.get_result(timeout=0.01)
+                    if r is not None and self.ledger.accept(r) == "accepted":
+                        self._resolve_probes("local", time.monotonic())
+        finally:
+            runner.stop()
+            self.scaler.stop()
+            with self._ckpt_lock:
+                self.campaign.final_checkpoint()
+            try:
+                self.local.server.stop()
+            except Exception:  # noqa: BLE001
+                logger.exception("local server stop failed")
+            try:
+                if self.proc.server is not None:
+                    self.proc.server.stop()
+            except Exception:  # noqa: BLE001
+                logger.exception("proc server stop failed")
+            # Dead-feeder teardown: without it a SIGKILLed child's queues
+            # hang the harness process at interpreter exit.
+            self.proc.queues.close_transport()
+        wall = time.monotonic() - t0
+
+        # -- end-of-run resume audit: the final checkpoint must round-trip --
+        audit_ledger = WorkLedger(cfg.n_tasks)
+        audit = Campaign(_LedgerThinker(self.local.queues, audit_ledger), self.local.server,
+                         state_dir=cfg.state_dir, name="soak")
+        audit_ok = audit.try_resume() and audit_ledger.completed == self.ledger.completed
+
+        report = self._check(runner, extra_violations=(
+            [] if audit_ok else ["final checkpoint failed its resume round-trip"]
+        ))
+        metrics = self._metrics(runner, wall)
+        if self.log is not None:
+            self.log.close()
+        if self._tmp is not None:
+            self._tmp.cleanup()
+            self._tmp = None
+        return SoakResult(
+            report=report, wall_s=wall,
+            throughput_tps=self.ledger.completed / wall if wall > 0 else 0.0,
+            fired=list(runner.fired), metrics=metrics,
+        )
+
+    # ------------------------------------------------------------------ check
+    def _merged_events(self) -> Any:
+        """Reassemble the cross-process trace: driver ring/JSONL + every
+        proc-site incarnation's sink, ordered on the shared monotonic
+        clock (the ``observe.trace`` merge idiom)."""
+        from repro.observe import EventLog
+        from repro.observe.trace import load_jsonl
+
+        merged = EventLog(capacity=max(self.cfg.log_capacity, 1 << 18))
+        events: List[Any] = list(self.log.events())
+        for path in self.proc.jsonl_paths:
+            if os.path.exists(path):
+                events.extend(load_jsonl(path))
+        events.sort(key=lambda ev: ev.t)
+        for ev in events:
+            merged.emit(ev)
+        return merged
+
+    def _check(self, runner: ChaosRunner, extra_violations: List[str] = ()) -> InvariantReport:
+        checker = InvariantChecker(recovery_bound_s=self.cfg.recovery_bound_s)
+        report = checker.check(
+            self.ledger, fired=runner.fired, probes=list(self.probes),
+            events=self._merged_events(),
+        )
+        for v in extra_violations:
+            report.violations.append(v)
+            report.ok = False
+        return report
+
+    def _metrics(self, runner: ChaosRunner, wall: float) -> Dict[str, Any]:
+        sm = self.local.server.metrics
+        return {
+            "wall_s": wall,
+            "site_kills": self.proc.kills,
+            "proc_generations": self.proc.generation,
+            "requests_dropped": self.link.dropped,
+            "results_delayed": self.link.delayed,
+            "local_retries": sm.tasks_retried,
+            "local_workers_replaced": sm.workers_replaced,
+            "local_speculated": sm.speculative_launched,
+            "pool_resizes": len(self.scaler.resizes),
+            "checkpoints_written": self.campaign.checkpoints_written,
+            "resume_drills": len(self.drill_results),
+            "faults_unfired": len(runner.unfired),
+        }
+
+
+def run_soak(config: Optional[SoakConfig] = None, schedule: Optional[ChaosSchedule] = None) -> SoakResult:
+    return SoakHarness(config, schedule).run()

@@ -21,6 +21,7 @@ at this layer:
 
 from __future__ import annotations
 
+import hashlib
 import json
 import logging
 import os
@@ -28,7 +29,7 @@ import pickle
 import threading
 import time
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 from .task_server import TaskServer
 from .thinker import BaseThinker
@@ -54,14 +55,19 @@ class Campaign:
         state_dir: Optional[str] = None,
         checkpoint_interval_s: float = 5.0,
         name: str = "campaign",
+        retain: int = 4,
     ) -> None:
         self.thinker = thinker
         self.server = server
         self.state_dir = state_dir
         self.checkpoint_interval_s = checkpoint_interval_s
         self.name = name
+        # At least 2 retained checkpoints: the corrupt-checkpoint fallback
+        # (try_resume walking newest -> oldest) needs a survivor to land on.
+        self.retain = max(2, retain)
         self.checkpoints_written = 0
         self._resumed_from: Optional[str] = None
+        self.resume_fallbacks = 0  # corrupt checkpoints skipped on resume
         if state_dir:
             os.makedirs(state_dir, exist_ok=True)
 
@@ -79,17 +85,23 @@ class Campaign:
             "thinker_state": state,
             "server_metrics": self.server.metrics.__dict__,
         }
+        # Envelope with a content digest: a torn write usually fails to
+        # unpickle, but a bit-flipped file can unpickle into garbage —
+        # the digest turns both into a detectable load failure that
+        # try_resume can fall back from.
+        payload = pickle.dumps(record, protocol=pickle.HIGHEST_PROTOCOL)
+        envelope = {"ckpt": 2, "sha256": hashlib.sha256(payload).hexdigest(), "payload": payload}
         step = self.checkpoints_written
         path = self._ckpt_path(step)
         tmp = path + ".tmp"
         with open(tmp, "wb") as f:
-            pickle.dump(record, f, protocol=pickle.HIGHEST_PROTOCOL)
+            pickle.dump(envelope, f, protocol=pickle.HIGHEST_PROTOCOL)
         os.replace(tmp, path)  # atomic publish
         self.checkpoints_written += 1
-        # Retain the last 4 checkpoints: exactly one step expires per
-        # write, so remove just it — not every step since the campaign
+        # Retain the last ``retain`` checkpoints: exactly one step expires
+        # per write, so remove just it — not every step since the campaign
         # began (which was O(n^2) unlink attempts over a long run).
-        expired = step - 4
+        expired = step - self.retain
         if expired >= 0:
             try:
                 os.remove(self._ckpt_path(expired))
@@ -97,35 +109,79 @@ class Campaign:
                 pass
         return path
 
-    def latest_checkpoint(self) -> Optional[str]:
+    def _checkpoint_candidates(self) -> List[str]:
+        """Retained checkpoint paths, newest first."""
         if not self.state_dir or not os.path.isdir(self.state_dir):
-            return None
+            return []
         cands = sorted(
-            p for p in os.listdir(self.state_dir)
-            if p.startswith(f"{self.name}-state-") and p.endswith(".pkl")
+            (p for p in os.listdir(self.state_dir)
+             if p.startswith(f"{self.name}-state-") and p.endswith(".pkl")),
+            reverse=True,
         )
-        return os.path.join(self.state_dir, cands[-1]) if cands else None
+        return [os.path.join(self.state_dir, p) for p in cands]
+
+    def latest_checkpoint(self) -> Optional[str]:
+        cands = self._checkpoint_candidates()
+        return cands[0] if cands else None
+
+    @staticmethod
+    def load_checkpoint(path: str) -> Dict[str, Any]:
+        """Load and validate one checkpoint file; raises ``ValueError`` on
+        a torn/corrupt file (unpicklable, digest mismatch, or not a
+        checkpoint record). Pre-digest (v1) records load as-is."""
+        try:
+            with open(path, "rb") as f:
+                doc = pickle.load(f)
+        except Exception as exc:  # noqa: BLE001 - torn/corrupt pickles vary
+            raise ValueError(f"unreadable checkpoint {path}: {type(exc).__name__}: {exc}") from exc
+        if isinstance(doc, dict) and "payload" in doc and "sha256" in doc:
+            payload = doc["payload"]
+            if not isinstance(payload, bytes) or hashlib.sha256(payload).hexdigest() != doc["sha256"]:
+                raise ValueError(f"checkpoint {path} failed its content digest (corrupt)")
+            try:
+                record = pickle.loads(payload)
+            except Exception as exc:  # noqa: BLE001
+                raise ValueError(f"corrupt checkpoint payload in {path}: {exc}") from exc
+        else:
+            record = doc  # legacy v1 record (no envelope)
+        if not isinstance(record, dict) or "thinker_state" not in record:
+            raise ValueError(f"{path} is not a campaign checkpoint record")
+        return record
 
     def try_resume(self) -> bool:
-        path = self.latest_checkpoint()
-        if path is None:
-            return False
-        with open(path, "rb") as f:
-            record = pickle.load(f)
-        set_state = getattr(self.thinker, "set_state", None)
-        if callable(set_state):
-            set_state(record["thinker_state"])
-        # Continue the step numbering past the resumed checkpoint so new
-        # checkpoints never overwrite surviving history.
-        prefix = f"{self.name}-state-"
-        stem = os.path.basename(path)
-        try:
-            self.checkpoints_written = int(stem[len(prefix):-len(".pkl")]) + 1
-        except ValueError:
-            pass
-        self._resumed_from = path
-        logger.info("campaign resumed from %s", path)
-        return True
+        """Resume from the newest *loadable* checkpoint.
+
+        A torn or corrupt checkpoint (a writer killed mid-publish, a
+        flipped bit on disk) logs a warning and falls back to the next
+        retained checkpoint instead of silently resuming from nothing —
+        or crashing the resume. Returns False only when no checkpoint
+        survives at all.
+        """
+        for path in self._checkpoint_candidates():
+            try:
+                record = self.load_checkpoint(path)
+            except ValueError as exc:
+                self.resume_fallbacks += 1
+                logger.warning(
+                    "skipping corrupt campaign checkpoint %s (%s); "
+                    "falling back to the previous retained checkpoint", path, exc,
+                )
+                continue
+            set_state = getattr(self.thinker, "set_state", None)
+            if callable(set_state):
+                set_state(record["thinker_state"])
+            # Continue the step numbering past the resumed checkpoint so new
+            # checkpoints never overwrite surviving history.
+            prefix = f"{self.name}-state-"
+            stem = os.path.basename(path)
+            try:
+                self.checkpoints_written = int(stem[len(prefix):-len(".pkl")]) + 1
+            except ValueError:
+                pass
+            self._resumed_from = path
+            logger.info("campaign resumed from %s", path)
+            return True
+        return False
 
     def checkpoint_loop(self, stop: threading.Event) -> None:
         """Write periodic checkpoints until ``stop`` is set. Failures are

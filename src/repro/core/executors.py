@@ -139,7 +139,18 @@ class WorkerDied(RuntimeError):
 
 @dataclass
 class FailureInjector:
-    """Deterministic failure/straggler injection for tests and benchmarks."""
+    """Deterministic failure/straggler injection for tests and benchmarks.
+
+    Beyond per-task probabilistic failures and per-worker dooming, the
+    injector supports *zombie storms*: timed cohort kills. ``storms`` is
+    a list of ``(at_s, n_workers)`` pairs relative to the injector's
+    activation (its first ``before_task`` call); when a storm's deadline
+    passes, the next ``n_workers`` distinct workers to pick up a task die
+    with ``WorkerDied``. Because injectors ride inside pickled
+    ``PoolSpec``s, a storm schedule configured at spec time fires inside
+    a *spawned* federated server with no control channel needed — the
+    chaos tier's way of dooming remote worker cohorts.
+    """
 
     task_failure_rate: float = 0.0      # P(task raises WorkerDied)
     seed: int = 0
@@ -147,10 +158,16 @@ class FailureInjector:
     slow_workers: Dict[int, float] = field(default_factory=dict)
     # worker ids that die permanently the next time they pick up a task
     doomed_workers: set = field(default_factory=set)
+    # timed zombie storms: (seconds_after_activation, workers_to_kill)
+    storms: List[Tuple[float, int]] = field(default_factory=list)
 
     def __post_init__(self) -> None:
         self._rng = random.Random(self.seed)
         self._lock = threading.Lock()
+        self._t0: Optional[float] = None       # activation time (first task)
+        self._doom_any = 0                     # wildcard dooms (storm fallout)
+        self._storms_left = sorted(self.storms)
+        self.storms_fired = 0
 
     # Injectors ride inside PoolSpecs across process boundaries (spawned
     # task servers); the lock is per-process, the rng restarts from seed.
@@ -158,15 +175,36 @@ class FailureInjector:
         state = dict(self.__dict__)
         state.pop("_rng", None)
         state.pop("_lock", None)
+        state.pop("_t0", None)
         return state
 
     def __setstate__(self, state: dict) -> None:
         self.__dict__.update(state)
         self._rng = random.Random(self.seed)
         self._lock = threading.Lock()
+        self._t0 = None  # storms re-anchor to the receiving process's clock
+
+    def doom_cohort(self, n: int) -> None:
+        """Doom the next ``n`` distinct workers to pick up a task —
+        whoever they are (a runtime zombie storm for in-process pools)."""
+        with self._lock:
+            self._doom_any += max(0, n)
+
+    def _check_storms_locked(self, now: float) -> None:
+        if self._t0 is None:
+            self._t0 = now
+        while self._storms_left and now - self._t0 >= self._storms_left[0][0]:
+            _, n = self._storms_left.pop(0)
+            self._doom_any += n
+            self.storms_fired += 1
+            logger.warning("failure injector: zombie storm fired, dooming %d workers", n)
 
     def before_task(self, worker_id: int, result: Result) -> None:
         with self._lock:
+            self._check_storms_locked(time.monotonic())
+            if self._doom_any > 0:
+                self._doom_any -= 1
+                raise WorkerDied(f"worker {worker_id} lost (injected storm)")
             if worker_id in self.doomed_workers:
                 self.doomed_workers.discard(worker_id)
                 raise WorkerDied(f"worker {worker_id} lost (injected node failure)")

@@ -28,12 +28,14 @@ the same class runs under ``multiprocessing`` with ``PipeColmenaQueues``
 
 from __future__ import annotations
 
+import heapq
+import itertools
 import logging
 import statistics
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 from .executors import FailureInjector, PoolSpec, WorkerPool
 from .queues import ColmenaQueues, KillSignal
@@ -142,6 +144,14 @@ class TaskServer:
         self._history: Dict[str, List[float]] = {}
         self._stop = threading.Event()
         self._threads: List[threading.Thread] = []
+        # Deferred retries: a deadline heap drained by a dedicated timer
+        # thread. The completion path (_complete runs on worker and
+        # monitor threads) must never sleep out a backoff — one retrying
+        # task would stall every other completion and the heartbeat
+        # failover sweep for the backoff duration.
+        self._retry_heap: List[Tuple[float, int, Result]] = []
+        self._retry_cond = threading.Condition()
+        self._retry_seq = itertools.count()
 
     # ------------------------------------------------------------ lifecycle
     def start(self) -> "TaskServer":
@@ -151,6 +161,9 @@ class TaskServer:
         mon = threading.Thread(target=self._monitor_loop, daemon=True, name="task-server-monitor")
         mon.start()
         self._threads.append(mon)
+        retry = threading.Thread(target=self._retry_loop, daemon=True, name="task-server-retry")
+        retry.start()
+        self._threads.append(retry)
         return self
 
     def run(self) -> None:
@@ -163,6 +176,8 @@ class TaskServer:
 
     def stop(self) -> None:
         self._stop.set()
+        with self._retry_cond:
+            self._retry_cond.notify_all()
         for p in self.pools.values():
             p.shutdown()
 
@@ -289,8 +304,6 @@ class TaskServer:
         ):
             self.metrics.tasks_retried += 1
             backoff = self.retry.backoff_s * (2 ** result.retries)
-            if backoff:
-                time.sleep(backoff)
             retry = result.clone_for_retry()
             retry.mark("created")
             if self.event_log is not None:
@@ -299,16 +312,52 @@ class TaskServer:
                     after=result.failure.value,
                 )
             logger.info("retrying %s (attempt %d) after %s", result.task_id, retry.retries, result.failure)
-            self._dispatch(retry)
+            if backoff:
+                self._schedule_retry(retry, time.monotonic() + backoff)
+            else:
+                self._dispatch(retry)
             return
 
         self.metrics.tasks_failed += 1
         self.queues.send_result(result)
 
+    # --------------------------------------------------------------- retries
+    def _schedule_retry(self, retry: Result, due: float) -> None:
+        with self._retry_cond:
+            heapq.heappush(self._retry_heap, (due, next(self._retry_seq), retry))
+            self._retry_cond.notify()
+
+    def pending_retries(self) -> int:
+        with self._retry_cond:
+            return len(self._retry_heap)
+
+    def _retry_loop(self) -> None:
+        """Dispatch deferred retries as their backoff deadlines pass. N
+        concurrently-failing tasks back off in parallel: the heap holds
+        them all and each dispatches at its own deadline."""
+        while not self._stop.is_set():
+            with self._retry_cond:
+                # Re-check under the lock: stop() sets _stop before taking
+                # the condition, so seeing it unset here guarantees the
+                # coming notify_all cannot be missed by this wait.
+                if self._stop.is_set():
+                    return
+                if not self._retry_heap:
+                    self._retry_cond.wait()
+                    continue
+                due = self._retry_heap[0][0]
+                now = time.monotonic()
+                if due > now:
+                    self._retry_cond.wait(due - now)
+                    continue
+                _, _, retry = heapq.heappop(self._retry_heap)
+            self._dispatch(retry)
+
     # -------------------------------------------------------------- monitors
     def _monitor_loop(self) -> None:
-        while not self._stop.is_set():
-            time.sleep(self.straggler.check_interval_s)
+        # _stop.wait, not time.sleep: stop() must return promptly, not
+        # lag a full check interval behind the shutdown request.
+        while not self._stop.wait(self.straggler.check_interval_s):
             self._check_heartbeats()
             self._check_timeouts()
             if self.straggler.enabled:

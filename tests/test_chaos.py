@@ -1,0 +1,306 @@
+"""Chaos tier: schedules, fault primitives, the work ledger's
+exactly-once semantics, the invariant gate, and a mini end-to-end soak
+(spawned site SIGKILL + checkpoint corruption included)."""
+
+import os
+import threading
+import time
+
+import pytest
+
+from repro.chaos import (
+    ChaosAction,
+    ChaosLink,
+    ChaosLocalQueues,
+    ChaosRunner,
+    ChaosSchedule,
+    InvariantChecker,
+    RecoveryProbe,
+    SoakConfig,
+    SoakHarness,
+    WorkLedger,
+    corrupt_file,
+    expected_value,
+    truncate_file,
+)
+from repro.core import FailureInjector, LocalColmenaQueues, Result, TaskServer
+from repro.core.executors import WorkerDied
+
+
+class TestSchedule:
+    def test_action_trigger_validation(self):
+        with pytest.raises(ValueError):
+            ChaosAction(kind="kill_site")                    # no trigger
+        with pytest.raises(ValueError):
+            ChaosAction(kind="kill_site", at_s=1.0, at_frac=0.5)  # both
+        with pytest.raises(ValueError):
+            ChaosAction(kind="kill_site", at_frac=1.5)
+
+    def test_due(self):
+        a = ChaosAction(kind="x", at_s=2.0)
+        assert not a.due(1.9, 1.0) and a.due(2.0, 0.0)
+        b = ChaosAction(kind="x", at_frac=0.5)
+        assert not b.due(100.0, 0.49) and b.due(0.0, 0.5)
+
+    def test_schedule_round_trips_through_dict(self):
+        sched = ChaosSchedule([
+            ChaosAction(kind="kill_site", at_frac=0.25, params={"site": "proc"}, scope="proc"),
+            ChaosAction(kind="drop_requests", at_s=3.0, params={"rate": 0.3}),
+        ])
+        clone = ChaosSchedule.from_dict(sched.to_dict())
+        assert clone.to_dict() == sched.to_dict()
+        assert clone.actions[0].scope == "proc"
+        assert clone.actions[1].at_s == 3.0
+
+    def test_runner_fires_on_progress_and_time(self):
+        fired = []
+        sched = ChaosSchedule([
+            ChaosAction(kind="a", at_s=0.0),
+            ChaosAction(kind="b", at_frac=0.5),
+            ChaosAction(kind="c", at_frac=1.1) if False else ChaosAction(kind="c", at_s=999.0),
+        ])
+        progress = {"p": 0.0}
+        runner = ChaosRunner(
+            sched,
+            handlers={"a": lambda p: fired.append("a"), "b": lambda p: fired.append("b")},
+            progress=lambda: progress["p"], poll_s=0.01,
+        ).start()
+        time.sleep(0.1)
+        progress["p"] = 0.6
+        time.sleep(0.1)
+        runner.stop()
+        assert fired == ["a", "b"]
+        assert [f.action.kind for f in runner.fired] == ["a", "b"]
+        assert all(f.ok for f in runner.fired)
+        assert [a.kind for a in runner.unfired] == ["c"]
+
+    def test_runner_marks_failed_handlers(self):
+        sched = ChaosSchedule([
+            ChaosAction(kind="boom", at_s=0.0),
+            ChaosAction(kind="nope", at_s=0.0),
+            ChaosAction(kind="soft", at_s=0.0),
+        ])
+
+        def boom(params):
+            raise RuntimeError("injector broke")
+
+        runner = ChaosRunner(
+            sched, handlers={"boom": boom, "soft": lambda p: {"ok": False, "why": "drill failed"}},
+            poll_s=0.01,
+        ).start()
+        time.sleep(0.1)
+        runner.stop()
+        by_kind = {f.action.kind: f for f in runner.fired}
+        assert not by_kind["boom"].ok and "injector broke" in str(by_kind["boom"].detail)
+        assert not by_kind["nope"].ok          # no handler registered
+        assert not by_kind["soft"].ok          # handler reported ok=False
+
+
+class TestFaultPrimitives:
+    def test_link_drops_requests_only_in_window(self):
+        q = ChaosLocalQueues(chaos=ChaosLink(seed=7))
+        server = TaskServer(q, {"f": lambda x: x}, n_workers=1).start()
+        q.chaos.enable_drop(rate=1.0, duration_s=5.0)
+        q.send_inputs(1, method="f")
+        assert q.get_result(timeout=0.4) is None     # dropped on the floor
+        assert q.chaos.dropped == 1
+        q.chaos.disable()
+        q.send_inputs(2, method="f")
+        r = q.get_result(timeout=5)
+        assert r is not None and r.value == 2
+        server.stop()                                # kill sentinel never dropped
+
+    def test_link_delays_results(self):
+        q = ChaosLocalQueues(chaos=ChaosLink())
+        server = TaskServer(q, {"f": lambda x: x}, n_workers=1).start()
+        q.send_inputs(3, method="f")
+        time.sleep(0.3)                              # let the result land
+        q.chaos.enable_delay(delay_s=0.15, duration_s=5.0)
+        t0 = time.monotonic()
+        r = q.get_result(timeout=5)
+        assert r is not None and time.monotonic() - t0 >= 0.15
+        assert q.chaos.delayed >= 1
+        server.stop()
+
+    def test_truncate_and_corrupt_file(self, tmp_path):
+        p = str(tmp_path / "blob.bin")
+        with open(p, "wb") as f:
+            f.write(bytes(range(256)) * 4)
+        before = open(p, "rb").read()
+        assert truncate_file(p, keep_fraction=0.5) == 512
+        assert os.path.getsize(p) == 512
+        n = corrupt_file(p, n_bytes=8, seed=3)
+        assert n == 8
+        assert open(p, "rb").read() != before[:512]  # bytes really flipped
+
+    def test_injector_storm_dooms_cohort(self):
+        inj = FailureInjector(storms=[(0.05, 2)])
+        r = Result(method="f", args=(), kwargs={})
+        inj.before_task(0, r)                        # activates the clock
+        time.sleep(0.08)
+        died = 0
+        for wid in (1, 2, 3):
+            try:
+                inj.before_task(wid, r)
+            except WorkerDied:
+                died += 1
+        assert died == 2 and inj.storms_fired == 1
+
+    def test_doom_cohort_runtime(self):
+        inj = FailureInjector()
+        inj.doom_cohort(1)
+        r = Result(method="f", args=(), kwargs={})
+        with pytest.raises(WorkerDied):
+            inj.before_task(5, r)
+        inj.before_task(6, r)                        # only one was doomed
+
+    def test_storm_schedule_survives_pickle(self):
+        import pickle
+
+        inj = FailureInjector(storms=[(0.01, 1)], seed=3)
+        clone = pickle.loads(pickle.dumps(inj))
+        r = Result(method="f", args=(), kwargs={})
+        clone.before_task(0, r)                      # re-anchors in this process
+        time.sleep(0.03)
+        with pytest.raises(WorkerDied):
+            clone.before_task(1, r)
+
+
+def _delivery(index, task_id="tid-0", value=None, success=True):
+    r = Result(method="soak", args=(index,), kwargs={}, task_info={"index": index})
+    r.task_id = task_id
+    if success:
+        r.set_success(expected_value(index) if value is None else value)
+    else:
+        from repro.core import FailureKind
+
+        r.set_failure(FailureKind.WORKER_DIED, "storm")
+    return r
+
+
+class TestWorkLedger:
+    def test_exactly_once_accept_then_violation(self):
+        led = WorkLedger(4)
+        assert led.take(2) == [0, 1]
+        led.on_submitted(0, "local", "t0", now=0.0)
+        assert led.accept(_delivery(0, "t0")) == "accepted"
+        assert led.completed == 1
+        # second delivery of a never-resubmitted index = hard violation
+        assert led.accept(_delivery(0, "t0")) == "violation"
+        assert led.exactly_once_violations == [0]
+
+    def test_resubmitted_duplicate_is_suppressed_not_violated(self):
+        led = WorkLedger(4, resubmit_after_s=0.0)
+        led.take(1)
+        led.on_submitted(0, "proc", "tA", now=0.0)
+        assert led.overdue(now=1.0) == 1             # deadline passed -> recycled
+        assert led.take(1) == [0] and led.resubmits == 1
+        led.on_submitted(0, "local", "tB", now=1.0)
+        assert led.accept(_delivery(0, "tB")) == "accepted"
+        assert led.accept(_delivery(0, "tA")) == "duplicate"   # other attempt: benign
+        assert led.duplicates_suppressed == 1
+        assert led.accept(_delivery(0, "tB")) == "violation"   # same attempt twice
+        assert led.exactly_once_violations == [0]
+
+    def test_failed_delivery_recycles(self):
+        led = WorkLedger(2)
+        led.take(1)
+        led.on_submitted(0, "proc", "tA", now=0.0)
+        assert led.accept(_delivery(0, "tA", success=False)) == "failed"
+        assert led.failed_deliveries == 1 and led.completed == 0
+        assert led.take(1) == [0]                    # still owed a success
+
+    def test_value_integrity_checked(self):
+        led = WorkLedger(2)
+        led.take(1)
+        led.on_submitted(0, "local", "t0", now=0.0)
+        led.accept(_delivery(0, "t0", value=-999))
+        assert led.value_errors == [0]
+
+    def test_requeue_site_and_fresh_floor(self):
+        led = WorkLedger(10)
+        for i in led.take(4):
+            led.on_submitted(i, "proc", f"t{i}", now=0.0)
+        assert led.requeue_site("proc") == 4
+        assert led.inflight_at("proc") == 0
+        # reserve: leave 4 fresh indices for the recovering site
+        grabbed = led.take(100, fresh_floor=4)
+        assert set(grabbed) >= {0, 1, 2, 3}          # recycled work comes first
+        assert led.next_fresh == 6                   # 10 - 4 reserved
+
+    def test_state_round_trip(self):
+        led = WorkLedger(6)
+        for i in led.take(4):
+            led.on_submitted(i, "local", f"t{i}", now=0.0)
+        led.accept(_delivery(1, "t1"))
+        led.accept(_delivery(3, "t3"))
+        clone = WorkLedger(6)
+        clone.set_state(led.get_state())
+        assert clone.completed == 2 and clone.next_fresh == 4
+        assert sorted(clone.retry_q) == [0, 2]       # unfinished frontier requeued
+        with pytest.raises(ValueError):
+            WorkLedger(7).set_state(led.get_state())
+
+
+class TestInvariantChecker:
+    def _clean_ledger(self, n=3):
+        led = WorkLedger(n)
+        for i in led.take(n):
+            led.on_submitted(i, "local", f"t{i}", now=0.0)
+            led.accept(_delivery(i, f"t{i}"))
+        return led
+
+    def test_clean_run_passes(self):
+        rep = InvariantChecker().check(self._clean_ledger())
+        assert rep.ok and rep.lost == 0 and not rep.violations
+
+    def test_lost_and_dup_fail(self):
+        led = WorkLedger(3)
+        led.take(3)
+        led.on_submitted(0, "local", "t0", now=0.0)
+        led.accept(_delivery(0, "t0"))
+        led.accept(_delivery(0, "t0"))               # violation
+        rep = InvariantChecker().check(led)
+        assert not rep.ok
+        assert rep.lost == 2 and rep.exactly_once_violations == 1
+        assert any("never delivered" in v for v in rep.violations)
+        assert any("duplicated" in v for v in rep.violations)
+
+    def test_recovery_bound_and_unresolved_probes(self):
+        led = self._clean_ledger()
+        slow = RecoveryProbe(label="kill#1", scope="proc", t0=0.0)
+        slow.resolve(5.0)
+        never = RecoveryProbe(label="kill#2", scope="proc", t0=1.0)
+        rep = InvariantChecker(recovery_bound_s=2.0).check(led, probes=[slow, never])
+        assert not rep.ok
+        assert any("took 5.00s > bound" in v for v in rep.violations)
+        assert any("no proc-scope delivery" in v for v in rep.violations)
+        assert rep.max_recovery_s == 5.0
+
+    def test_require_faults(self):
+        rep = InvariantChecker(require_faults=4).check(self._clean_ledger(), fired=[])
+        assert not rep.ok and any("under fire" in v for v in rep.violations)
+
+
+class TestSoakEndToEnd:
+    def test_mini_soak_passes_invariant_gate(self):
+        """End-to-end: a small soak through both sites with a site kill,
+        a checkpoint corruption + resume drill, and a burst — the full
+        acceptance path at test scale."""
+        sched = ChaosSchedule([
+            ChaosAction(kind="doom_workers", at_frac=0.05, params={"n": 2}, scope="local"),
+            ChaosAction(kind="kill_site", at_frac=0.15, params={"site": "proc"}, scope="proc"),
+            ChaosAction(kind="corrupt_checkpoint", at_frac=0.45, params={"mode": "bitflip"}, scope="none"),
+            ChaosAction(kind="burst", at_frac=0.6, params={"n": 48}, scope="local"),
+        ])
+        cfg = SoakConfig(n_tasks=1500, deadline_s=120, recovery_bound_s=30.0,
+                         checkpoint_every_s=0.25)
+        res = SoakHarness(cfg, sched).run()
+        assert res.report.ok, res.report.violations
+        assert res.report.completed == 1500 and res.report.lost == 0
+        assert res.report.exactly_once_violations == 0
+        assert res.report.order_violations == 0
+        assert res.metrics["site_kills"] == 1
+        assert res.metrics["resume_drills"] == 1
+        drill = next(f for f in res.fired if f.action.kind == "corrupt_checkpoint")
+        assert drill.ok and drill.detail["fell_back"] and drill.detail["subset"]

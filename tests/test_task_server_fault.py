@@ -5,6 +5,7 @@ replacement, straggler speculation, multi-pool routing, task timeouts via
 wall-clock monitoring, elastic pool resize, and campaign checkpoint/resume.
 """
 
+import logging
 import os
 import threading
 import time
@@ -194,6 +195,121 @@ class TestTaskServer:
         assert q.get_result(timeout=1.2) is None
         server.stop()
 
+    def test_retry_storm_not_serialized_by_backoff(self):
+        """N concurrent failing tasks must not serialize on retry backoff:
+        retries go through the deadline heap, the completion path never
+        sleeps. With the old ``time.sleep(backoff)`` in ``_complete`` six
+        0.5 s backoffs serialized across two worker threads (>= 1.5 s);
+        the heap schedules them all concurrently (~one backoff total)."""
+        q = LocalColmenaQueues()
+        failed_once = set()
+        lock = threading.Lock()
+
+        def flaky(x):
+            with lock:
+                if x not in failed_once:
+                    failed_once.add(x)
+                    raise RuntimeError(f"first attempt of {x} fails")
+            return x
+
+        server = TaskServer(
+            q, {"flaky": flaky}, n_workers=2,
+            retry=RetryPolicy(max_retries=2, backoff_s=0.5,
+                              retry_on=(FailureKind.EXCEPTION,)),
+            straggler=StragglerPolicy(enabled=False, check_interval_s=0.05),
+        ).start()
+        n = 6
+        t0 = time.monotonic()
+        for i in range(n):
+            q.send_inputs(i, method="flaky")
+        got = [q.get_result(timeout=10) for _ in range(n)]
+        wall = time.monotonic() - t0
+        assert all(r is not None and r.success for r in got)
+        assert sorted(r.value for r in got) == list(range(n))
+        assert server.metrics.tasks_retried == n
+        # one shared backoff window, not one per task
+        assert wall < 1.4, f"retries serialized: {wall:.2f}s for {n} x 0.5s backoffs"
+        assert server.pending_retries() == 0
+        server.stop()
+
+    def test_backoff_window_does_not_stall_other_completions(self):
+        """While failed tasks sit in their backoff window, unrelated
+        instant tasks must keep completing (the completion path used to
+        sleep out the backoff on the worker thread)."""
+        q = LocalColmenaQueues()
+
+        def boom():
+            raise RuntimeError("always fails")
+
+        server = TaskServer(
+            q, {"boom": boom, "instant": lambda x: x}, n_workers=2,
+            retry=RetryPolicy(max_retries=3, backoff_s=1.0,
+                              retry_on=(FailureKind.EXCEPTION,)),
+            straggler=StragglerPolicy(enabled=False, check_interval_s=0.05),
+        ).start()
+        for _ in range(4):
+            q.send_inputs(method="boom")
+        time.sleep(0.1)  # let the failures land in the retry heap
+        t0 = time.monotonic()
+        for i in range(4):
+            q.send_inputs(i, method="instant")
+        got = [q.get_result(timeout=5) for _ in range(4)]
+        wall = time.monotonic() - t0
+        assert all(r is not None and r.success for r in got)
+        assert wall < 0.8, f"instant tasks stalled {wall:.2f}s behind retry backoffs"
+        assert server.pending_retries() >= 1   # the boom retries are still queued
+        server.stop()
+
+    def test_timeout_vs_late_result_race(self):
+        """A timed-out task whose original attempt finishes *after* the
+        failover retry must be delivered exactly once: the late original
+        is dropped (its inflight entry is gone), the retry's result is
+        the one the client sees."""
+        q = LocalColmenaQueues()
+        slow_once = threading.Event()
+        slow_once.set()
+
+        def f(x):
+            if slow_once.is_set():
+                slow_once.clear()
+                time.sleep(0.6)      # first attempt: slow enough to time out
+            return x
+
+        server = TaskServer(
+            q, {"f": f}, n_workers=2,
+            retry=RetryPolicy(max_retries=2, backoff_s=0.1),
+            straggler=StragglerPolicy(enabled=False, check_interval_s=0.05),
+        ).start()
+        q.send_inputs(11, method="f", resources=ResourceRequest(timeout_s=0.2))
+        r = q.get_result(timeout=10)
+        assert r is not None and r.success and r.value == 11
+        assert server.metrics.tasks_retried >= 1
+        # the original attempt wakes at ~0.6s and completes; its delivery
+        # must be suppressed — exactly one result ever reaches the client
+        assert q.get_result(timeout=1.0) is None
+        server.stop()
+
+    def test_stop_returns_promptly(self):
+        """``stop()`` must not wait out the monitor poll interval (the
+        old ``_monitor_loop`` slept a full ``check_interval_s`` before
+        rechecking) nor the retry heap's next deadline."""
+        q = LocalColmenaQueues()
+        server = TaskServer(
+            q, {"boom": lambda: (_ for _ in ()).throw(RuntimeError("x"))},
+            n_workers=1,
+            retry=RetryPolicy(max_retries=1, backoff_s=30.0,
+                              retry_on=(FailureKind.EXCEPTION,)),
+            straggler=StragglerPolicy(check_interval_s=5.0),
+        ).start()
+        q.send_inputs(method="boom")
+        deadline = time.monotonic() + 2
+        while server.pending_retries() == 0 and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert server.pending_retries() == 1   # a retry parked 30s out
+        t0 = time.monotonic()
+        server.stop()
+        assert time.monotonic() - t0 < 1.0, "stop() waited out a poll interval"
+
     def test_elastic_resize(self):
         pool = WorkerPool("default", 2)
         assert pool.n_workers == 2
@@ -241,3 +357,80 @@ class TestCampaign:
         assert t2.progress == 3
         server.stop()
         server2.stop()
+
+    def _mk_campaign(self, tmp_path, progress=0):
+        q = LocalColmenaQueues()
+
+        class T(BaseThinker):
+            def __init__(self):
+                super().__init__(q)
+                self.progress = progress
+
+            def get_state(self):
+                return {"progress": self.progress}
+
+            def set_state(self, s):
+                self.progress = s["progress"]
+
+        t = T()
+        server = TaskServer(q, {"f": lambda: 1}, n_workers=1)
+        return t, Campaign(t, server, state_dir=str(tmp_path))
+
+    def test_corrupt_checkpoint_falls_back(self, tmp_path, caplog):
+        """A truncated (torn-write) newest checkpoint logs a warning and
+        resume falls back to the previous retained checkpoint instead of
+        silently resuming from nothing — or crashing."""
+        t, camp = self._mk_campaign(tmp_path)
+        for step in range(3):
+            t.progress = step + 1
+            camp.checkpoint()
+        newest = camp.latest_checkpoint()
+        with open(newest, "rb+") as f:
+            f.truncate(os.path.getsize(newest) // 2)
+
+        t2, camp2 = self._mk_campaign(tmp_path, progress=-1)
+        with caplog.at_level(logging.WARNING, logger="repro.campaign"):
+            assert camp2.try_resume()
+        assert t2.progress == 2               # the step-2 checkpoint, not nothing
+        assert camp2.resume_fallbacks == 1
+        assert any("corrupt" in rec.message for rec in caplog.records)
+        # new checkpoints continue past the survivor, never overwrite history
+        assert camp2.checkpoints_written == 2
+
+    def test_bitflipped_checkpoint_detected_by_digest(self, tmp_path):
+        """A bit-flip deep in the pickled payload still unpickles the
+        envelope — the content digest is what catches it."""
+        from repro.chaos import corrupt_file
+
+        t, camp = self._mk_campaign(tmp_path)
+        for step in range(2):
+            t.progress = step + 1
+            camp.checkpoint()
+        corrupt_file(camp.latest_checkpoint(), n_bytes=8, offset_frac=0.7)
+
+        t2, camp2 = self._mk_campaign(tmp_path)
+        assert camp2.try_resume()
+        assert t2.progress == 1
+        assert camp2.resume_fallbacks == 1
+
+    def test_all_checkpoints_corrupt_resumes_nothing(self, tmp_path):
+        t, camp = self._mk_campaign(tmp_path)
+        camp.checkpoint()
+        camp.checkpoint()
+        for path in camp._checkpoint_candidates():
+            with open(path, "wb") as f:
+                f.write(b"not a pickle at all")
+        _, camp2 = self._mk_campaign(tmp_path)
+        assert not camp2.try_resume()
+        assert camp2.resume_fallbacks == 2
+
+    def test_retention_keeps_fallback_target(self, tmp_path):
+        """``retain`` is clamped to >= 2 so the corrupt-newest fallback
+        always has a survivor to land on."""
+        t, camp = self._mk_campaign(tmp_path)
+        camp.retain = max(2, 0)  # mirrors the constructor clamp
+        assert Campaign(t, camp.server, state_dir=str(tmp_path), retain=0).retain == 2
+        for step in range(6):
+            t.progress = step
+            camp.checkpoint()
+        assert len(camp._checkpoint_candidates()) >= 2
