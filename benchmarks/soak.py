@@ -2,13 +2,21 @@
 
 Pushes 10^4 (``--smoke``) to 10^5–10^6 (``--full`` / ``--tasks N``)
 lightweight tasks through the federated two-site harness in
-``repro.chaos.soak`` while the default ``ChaosSchedule`` fires seven
-faults at it (zombie-cohort storm, two SIGKILLs of the spawned site,
-request drops, result delays, checkpoint corruption + resume drill, a
-burst flood against the elastic pool). The ``InvariantChecker`` verdict
-is a **hard gate**: zero lost results, zero duplicated deliveries, zero
-lifecycle-order violations, intact payloads, and bounded recovery after
-every fault — a violation raises, so CI fails loudly.
+``repro.chaos.soak`` while the default ``ChaosSchedule`` fires eight
+faults at it (zombie-cohort storm, two SIGKILLs of the spawned site, a
+full network partition, request drops, result delays, checkpoint
+corruption + resume drill, a burst flood against the elastic pool). The
+``InvariantChecker`` verdict is a **hard gate**: zero lost results,
+zero duplicated deliveries, zero lifecycle-order violations, intact
+payloads, and bounded recovery after every fault — a violation raises,
+so CI fails loudly.
+
+``--slo`` additionally runs the streaming burn-rate engine
+(``repro.observe.slo``) over the live run with auto-remediation wired
+(stall -> expedite resubmission, backlog -> elastic pre-grow) and gates
+on the alerting loop itself: chaos must drive at least one alert
+through fire AND resolve within the resolve bound, with nothing left
+firing after settle.
 
 With ``--record DIR`` metrics land in ``BENCH_soak.json`` via
 ``BenchRecorder`` (the PR 6 trajectory machinery); compare runs with
@@ -35,11 +43,12 @@ def main(
     n_tasks: Optional[int] = None,
     schedule=None,
     recovery_bound_s: float = 10.0,
+    slo: bool = False,
 ) -> dict:
     from repro.chaos import SoakConfig, SoakHarness, default_chaos_schedule
 
     n = n_tasks if n_tasks is not None else (QUICK_TASKS if quick else FULL_TASKS)
-    cfg = SoakConfig(n_tasks=n, recovery_bound_s=recovery_bound_s)
+    cfg = SoakConfig(n_tasks=n, recovery_bound_s=recovery_bound_s, slo=slo)
     sched = schedule if schedule is not None else default_chaos_schedule()
     result = SoakHarness(cfg, sched).run()
     rep = result.report
@@ -64,6 +73,15 @@ def main(
         "local_retries": result.metrics.get("local_retries", 0),
         "verdict": "PASS" if rep.ok else "FAIL",
     }
+    if slo:
+        rows.update({
+            "alerts_fired": result.metrics.get("alerts_fired", 0),
+            "alerts_resolved": result.metrics.get("alerts_resolved", 0),
+            "alerts_unresolved": result.metrics.get("alerts_unresolved", 0),
+            "max_alert_resolve_s": round(result.metrics.get("max_alert_resolve_s", 0.0), 3),
+            "remediations": result.metrics.get("remediations", 0),
+            "partition_drops": result.metrics.get("partition_drops", 0),
+        })
     for k, v in rows.items():
         print(f"soak,{k},{v}")
     for r in rep.recoveries:
@@ -87,6 +105,16 @@ def main(
         recorder.metric("failed_deliveries", rep.failed_deliveries, unit="deliveries")
         recorder.metric("site_kills", result.metrics.get("site_kills", 0), unit="kills")
         recorder.metric("pool_resizes", result.metrics.get("pool_resizes", 0), unit="resizes")
+        if slo:
+            recorder.metric("alerts_fired", result.metrics.get("alerts_fired", 0),
+                            unit="alerts", gate=(">=", 1))
+            recorder.metric("alerts_unresolved", result.metrics.get("alerts_unresolved", 0),
+                            unit="alerts", gate=("<=", 0))
+            recorder.metric("max_alert_resolve_s",
+                            result.metrics.get("max_alert_resolve_s", 0.0),
+                            unit="s", gate=("<=", 10.0))
+            recorder.metric("remediations", result.metrics.get("remediations", 0),
+                            unit="runs")
 
     if not rep.ok:
         raise AssertionError(
@@ -107,6 +135,9 @@ def _cli() -> None:
     ap.add_argument("--chaos", default=None, metavar="FILE",
                     help="JSON ChaosSchedule overriding the default")
     ap.add_argument("--recovery-bound-s", type=float, default=10.0)
+    ap.add_argument("--slo", action="store_true",
+                    help="run the burn-rate SLO engine over the soak and "
+                         "gate on alerts firing AND resolving")
     args = ap.parse_args()
 
     schedule = None
@@ -126,7 +157,8 @@ def _cli() -> None:
         recorder = BenchRecorder("soak", out_dir=args.record)
     try:
         main(quick=not args.full, recorder=recorder, n_tasks=n_tasks,
-             schedule=schedule, recovery_bound_s=args.recovery_bound_s)
+             schedule=schedule, recovery_bound_s=args.recovery_bound_s,
+             slo=args.slo)
     except Exception as exc:
         if recorder is not None:
             print(f"suite,soak,recorded,{recorder.finish(ok=False, error=str(exc))}")

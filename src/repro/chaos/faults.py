@@ -59,8 +59,10 @@ class ChaosLink:
         self.delay_s = 0.0
         self._drop_until = 0.0
         self._delay_until = 0.0
+        self._partition_until = 0.0
         self.dropped = 0
         self.delayed = 0
+        self.partition_drops = 0
 
     # Links ride inside queues across process boundaries; the child's
     # copy starts inert (windows closed) and cannot be toggled remotely.
@@ -70,6 +72,7 @@ class ChaosLink:
         state.pop("_lock", None)
         state["_drop_until"] = 0.0
         state["_delay_until"] = 0.0
+        state["_partition_until"] = 0.0
         return state
 
     def __setstate__(self, state: dict) -> None:
@@ -87,13 +90,28 @@ class ChaosLink:
             self.delay_s = max(0.0, delay_s)
             self._delay_until = time.monotonic() + duration_s
 
+    def enable_partition(self, duration_s: float) -> None:
+        """Full bidirectional blackout: every task request is dropped and
+        no result is delivered until the window closes (a network
+        partition, not a lossy link — both directions go dark at once)."""
+        with self._lock:
+            self._partition_until = time.monotonic() + duration_s
+
     def disable(self) -> None:
         with self._lock:
             self._drop_until = 0.0
             self._delay_until = 0.0
+            self._partition_until = 0.0
+
+    def partitioned(self) -> bool:
+        with self._lock:
+            return time.monotonic() < self._partition_until
 
     def should_drop_request(self) -> bool:
         with self._lock:
+            if time.monotonic() < self._partition_until:
+                self.partition_drops += 1
+                return True
             if time.monotonic() < self._drop_until and self._rng.random() < self.drop_rate:
                 self.dropped += 1
                 return True
@@ -124,6 +142,12 @@ class _ChaosQueuesMixin:
         super()._push_request(payload)
 
     def _pop_result(self, topic: str, timeout: Optional[float]) -> Any:
+        # During a partition nothing crosses the link in either direction:
+        # results stay buffered in the transport (delivered after heal),
+        # so the driver sees silence, not loss.
+        if self.chaos.partitioned():
+            time.sleep(min(0.05, timeout) if timeout is not None else 0.05)
+            return None
         payload = super()._pop_result(topic, timeout)
         if payload is not None:
             delay = self.chaos.result_delay()

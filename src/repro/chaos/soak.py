@@ -156,6 +156,18 @@ class WorkLedger:
                 self.resubmits += 1
         return len(late)
 
+    def expedite(self, site: str) -> int:
+        """Zero the deadline of everything in flight at ``site`` so the
+        next ``overdue`` sweep recycles it immediately — the remediation
+        a firing delivery-stall alert runs. At-least-once safe: if the
+        stalled site delivers after all, the duplicate is suppressed at
+        ``accept`` exactly like any other resubmission."""
+        with self._lock:
+            mine = [i for i, (s, _) in self.inflight.items() if s == site]
+            for i in mine:
+                self.inflight[i] = (site, 0.0)
+        return len(mine)
+
     def requeue_site(self, site: str) -> int:
         """Immediately recycle everything in flight at a site (it was
         just killed; no point waiting out the deadline)."""
@@ -300,15 +312,25 @@ class SoakConfig:
     # medians would otherwise speculate half the backlog.
     straggler: StragglerPolicy = field(default_factory=lambda: StragglerPolicy(factor=50.0, min_history=20))
     heartbeat_timeout_s: float = 2.0
+    # SLO mode: a streaming burn-rate engine watches the run (delivery
+    # stall on the proc link, local backlog) and auto-remediates firing
+    # alerts (expedite resubmission / pre-grow the elastic fleet). The
+    # invariant gate then requires chaos to have driven >=1 alert through
+    # fire AND resolve, within the resolve bound.
+    slo: bool = False
+    slo_settle_s: float = 6.0          # post-run grace for firing alerts to resolve
+    alert_resolve_bound_s: float = 10.0
 
 
 def default_chaos_schedule() -> ChaosSchedule:
-    """The stock soak schedule: seven faults spread over the run —
-    a zombie storm, two site kills, a drop window, a delay window, a
-    checkpoint corruption + resume drill, and a burst."""
+    """The stock soak schedule: eight faults spread over the run —
+    a zombie storm, two site kills, a full network partition, a drop
+    window, a delay window, a checkpoint corruption + resume drill, and
+    a burst."""
     return ChaosSchedule([
         ChaosAction(kind="doom_workers", at_frac=0.10, params={"n": 3}, scope="local"),
         ChaosAction(kind="kill_site", at_frac=0.22, params={"site": "proc"}, scope="proc"),
+        ChaosAction(kind="partition", at_frac=0.33, params={"duration_s": 0.6}, scope="proc"),
         ChaosAction(kind="drop_requests", at_frac=0.40, params={"rate": 0.3, "duration_s": 0.6}, scope="proc"),
         ChaosAction(kind="delay_results", at_frac=0.50, params={"delay_s": 0.01, "duration_s": 0.6}, scope="proc"),
         ChaosAction(kind="corrupt_checkpoint", at_frac=0.60, params={"mode": "bitflip"}, scope="none"),
@@ -399,6 +421,54 @@ class SoakHarness:
             checkpoint_interval_s=cfg.checkpoint_every_s, name="soak",
         )
 
+        # -- SLO engine: burn-rate alerts + auto-remediation ----------------
+        self.slo_engine = None
+        self._last_proc_delivery = time.monotonic()
+        self._pending_partition = 0.0
+        self._scheduled_kills = sum(
+            1 for a in self.schedule.actions if a.kind == "kill_site"
+        )
+        if cfg.slo:
+            from repro.observe import MetricsAggregator, SLOEngine, SLOObjective, SLOSpec
+
+            # Windows are soak-sized (sub-second faults), not production-
+            # sized: fast/slow at 0.25s/0.6s with a 50ms tick keeps the
+            # multi-window logic intact while letting a 0.6s partition —
+            # which the next scheduled fault may cut short — still drive
+            # pending -> firing -> resolved inside a smoke run.
+            objectives = [
+                SLOObjective(
+                    name="proc-delivery-stall", signal="gauge",
+                    gauge="delivery_stall_s", pool="proc",
+                    threshold=0.15, kind="ceiling", budget=0.25,
+                    fast_window_s=0.25, slow_window_s=0.6, min_samples=3,
+                    severity="page",
+                ),
+                SLOObjective(
+                    name="local-backlog", signal="backlog",
+                    pool=cfg.local_pool.name,
+                    threshold=float(cfg.max_inflight_local + 96),
+                    kind="ceiling", budget=0.25,
+                    fast_window_s=0.25, slow_window_s=0.6, min_samples=3,
+                    severity="ticket",
+                ),
+            ]
+            self.slo_engine = SLOEngine(
+                self.log,
+                spec=SLOSpec(objectives=objectives, interval_s=0.05),
+                aggregator=MetricsAggregator(self.log),
+            )
+            self.slo_engine.on_fire(
+                "proc-delivery-stall",
+                lambda alert: {"expedited": self.ledger.expedite("proc")},
+                label="expedite_proc",
+            )
+            self.slo_engine.on_fire(
+                "local-backlog",
+                lambda alert: {"grown": self.scaler.pre_grow(cfg.local_pool.name)},
+                label="elastic_pre_grow",
+            )
+
     def _proc_server_kwargs(self) -> Dict[str, Any]:
         cfg = self.cfg
         path = os.path.join(cfg.out_dir, f"soak-proc-{self.proc.generation}.jsonl")
@@ -455,6 +525,31 @@ class SoakHarness:
         self.local_injector.doom_cohort(n)
         self._add_probe(f"doom_workers({n})", scope="local")
         return {"ok": True, "doomed": n}
+
+    def _kills_remaining(self) -> bool:
+        """True while the schedule still owes a ``kill_site`` fault."""
+        return self.proc.kills < self._scheduled_kills
+
+    def _handle_partition(self, params: Dict[str, Any]) -> Dict[str, Any]:
+        """Full bidirectional blackout on the proc link: requests are
+        dropped AND buffered results stop being delivered until it heals
+        (results submitted before the cut arrive late, not lost). At
+        smoke scale the schedule compresses, so a partition landing while
+        the site is SIGKILL-dark would black out a link nobody is using,
+        and one landing just *before* a SIGKILL gets its stall signal
+        wiped when the kill requeues the site's inflight work. Either
+        way the cut would be indistinguishable from the kill outage, so
+        the partition is deferred until the restart after the *last*
+        scheduled kill: it always hits a live link with a clean runway,
+        making it observable by (and attributable to) the SLO engine."""
+        dur = float(params.get("duration_s", 0.5))
+        deferred = self.proc.down or self._kills_remaining()
+        if deferred:
+            self._pending_partition = dur
+        else:
+            self.link.enable_partition(dur)
+        self._add_probe(f"partition({dur:.2f}s)", scope="proc")
+        return {"ok": True, "duration_s": dur, "deferred": deferred}
 
     def _handle_drop_requests(self, params: Dict[str, Any]) -> Dict[str, Any]:
         rate = float(params.get("rate", 0.3))
@@ -559,6 +654,8 @@ class SoakHarness:
                 r = site.queues.get_result(timeout=0)
                 if r is None:
                     break
+                if site is self.proc:
+                    self._last_proc_delivery = time.monotonic()
                 status = self.ledger.accept(r)
                 if status == "accepted":
                     self._resolve_probes(site.name, time.monotonic())
@@ -575,11 +672,34 @@ class SoakHarness:
             site.queues.renew_transport()
             site.generation += 1
             self._spawn_proc_server()
+            # The down window is a known outage, not a delivery stall; the
+            # stall clock restarts with the new incarnation (before the
+            # down flag flips, so the sampler never sees a stale clock).
+            self._last_proc_delivery = time.monotonic()
             site.down = False
+            if self._pending_partition and not self._kills_remaining():
+                self.link.enable_partition(self._pending_partition)
+                self._pending_partition = 0.0
+                logger.warning("chaos: deferred partition applied post-restart")
             logger.warning("chaos: proc site restarted (generation %d)", site.generation)
 
     def _progress(self) -> float:
         return self.ledger.completed / max(1, self.cfg.n_tasks)
+
+    def _stall_sampler(self, stop: threading.Event) -> None:
+        """Gauge how long the proc link has gone without delivering while
+        it still owes work — the partition detector the SLO engine's
+        ``delivery_stall_s`` objective watches. Runs on its own thread so
+        the signal keeps flowing while the driver loop blocks in a site
+        respawn (which is precisely when stalls happen)."""
+        while not stop.is_set():
+            stall = (
+                time.monotonic() - self._last_proc_delivery
+                if not self.proc.down and self.ledger.inflight_at("proc")
+                else 0.0
+            )
+            self.log.gauge("delivery_stall_s", stall, pool="proc")
+            stop.wait(0.02)
 
     # -------------------------------------------------------------------- run
     def run(self) -> SoakResult:
@@ -592,6 +712,7 @@ class SoakHarness:
             "delay_results": self._handle_delay_results,
             "corrupt_checkpoint": self._handle_corrupt_checkpoint,
             "burst": self._handle_burst,
+            "partition": self._handle_partition,
         }
         runner = ChaosRunner(self.schedule, handlers, progress=self._progress, event_log=self.log)
 
@@ -599,6 +720,17 @@ class SoakHarness:
         self.local.server.start()
         self.scaler.emit_baseline()
         self.scaler.start()
+        stall_stop = threading.Event()
+        if self.slo_engine is not None:
+            self._last_proc_delivery = t0
+            self.slo_engine.start()
+            # Dedicated sampler: the driver loop blocks for >1s inside a
+            # site respawn, which is exactly when the stall signal
+            # matters — the gauge must keep flowing regardless.
+            threading.Thread(
+                target=self._stall_sampler, args=(stall_stop,),
+                daemon=True, name="soak-stall-gauge",
+            ).start()
         runner.start()
         last_ckpt = t0
         deadline = t0 + cfg.deadline_s
@@ -624,6 +756,14 @@ class SoakHarness:
                         self._resolve_probes("local", time.monotonic())
         finally:
             runner.stop()
+            stall_stop.set()
+            if self.slo_engine is not None:
+                # The run is over: heal the stall gauge (no deliveries are
+                # coming) and give firing alerts their settle window to
+                # observe recovery before teardown freezes the engine.
+                self.log.gauge("delivery_stall_s", 0.0, pool="proc")
+                self.slo_engine.settle(cfg.slo_settle_s)
+                self.slo_engine.stop()
             self.scaler.stop()
             with self._ckpt_lock:
                 self.campaign.final_checkpoint()
@@ -647,9 +787,12 @@ class SoakHarness:
                          state_dir=cfg.state_dir, name="soak")
         audit_ok = audit.try_resume() and audit_ledger.completed == self.ledger.completed
 
-        report = self._check(runner, extra_violations=(
-            [] if audit_ok else ["final checkpoint failed its resume round-trip"]
-        ))
+        extra: List[str] = []
+        if not audit_ok:
+            extra.append("final checkpoint failed its resume round-trip")
+        if self.slo_engine is not None:
+            extra.extend(self._slo_violations(runner))
+        report = self._check(runner, extra_violations=extra)
         metrics = self._metrics(runner, wall)
         if self.log is not None:
             self.log.close()
@@ -691,14 +834,55 @@ class SoakHarness:
             report.ok = False
         return report
 
+    def _slo_violations(self, runner: ChaosRunner) -> List[str]:
+        """SLO-mode invariants: chaos must have driven the alerting loop
+        end to end — at least one alert fired, the partition raised one,
+        everything resolved, and resolution stayed inside the bound."""
+        eng = self.slo_engine
+        out: List[str] = []
+        fired = [tr for tr in eng.transitions if tr["to"] == "firing"]
+        if not fired:
+            out.append("slo: no alert fired during the chaos soak")
+        part_ts = [f.t for f in runner.fired if f.action.kind == "partition" and f.ok]
+        if part_ts:
+            # The partition counts as alerted if any alert *activity*
+            # (a firing or a resolve transition) lands at or after the
+            # injection: a resolve after that instant means the alert was
+            # still covering the link when the cut happened, so demanding
+            # a brand-new firing transition would double-count merged
+            # firing intervals as misses.
+            p_t = part_ts[0]
+            covered = any(
+                tr["t"] >= p_t
+                for tr in eng.transitions
+                if tr["to"] == "firing" or tr["from"] == "firing"
+            )
+            if not covered:
+                out.append("slo: the partition fault raised no alert")
+        still = eng.firing()
+        if still:
+            out.append(f"slo: still firing after settle: {', '.join(sorted(still))}")
+        resolve_times = [
+            tr["firing_s"] for tr in eng.transitions
+            if tr["from"] == "firing" and tr["to"] == "ok" and "firing_s" in tr
+        ]
+        worst = max(resolve_times, default=0.0)
+        if worst > self.cfg.alert_resolve_bound_s:
+            out.append(
+                f"slo: slowest alert took {worst:.2f}s to resolve "
+                f"(bound {self.cfg.alert_resolve_bound_s}s)"
+            )
+        return out
+
     def _metrics(self, runner: ChaosRunner, wall: float) -> Dict[str, Any]:
         sm = self.local.server.metrics
-        return {
+        out = {
             "wall_s": wall,
             "site_kills": self.proc.kills,
             "proc_generations": self.proc.generation,
             "requests_dropped": self.link.dropped,
             "results_delayed": self.link.delayed,
+            "partition_drops": self.link.partition_drops,
             "local_retries": sm.tasks_retried,
             "local_workers_replaced": sm.workers_replaced,
             "local_speculated": sm.speculative_launched,
@@ -707,6 +891,20 @@ class SoakHarness:
             "resume_drills": len(self.drill_results),
             "faults_unfired": len(runner.unfired),
         }
+        if self.slo_engine is not None:
+            eng = self.slo_engine
+            resolved = [
+                tr["firing_s"] for tr in eng.transitions
+                if tr["from"] == "firing" and tr["to"] == "ok" and "firing_s" in tr
+            ]
+            out.update({
+                "alerts_fired": sum(1 for tr in eng.transitions if tr["to"] == "firing"),
+                "alerts_resolved": len(resolved),
+                "alerts_unresolved": len(eng.firing()),
+                "max_alert_resolve_s": max(resolved, default=0.0),
+                "remediations": eng.remediations_run,
+            })
+        return out
 
 
 def run_soak(config: Optional[SoakConfig] = None, schedule: Optional[ChaosSchedule] = None) -> SoakResult:

@@ -216,6 +216,21 @@ class ObserveSpec:
     # Metrics export: a directory path, an ``repro.observe.ExportSpec``,
     # or a dict of its knobs — periodic Prometheus text + JSON snapshots.
     export: Optional[Any] = None
+    # Live ops plane. ``ops_port`` starts an ``repro.observe.OpsServer``
+    # (HTTP /metrics /healthz /readyz /snapshot /alerts; 0 = ephemeral
+    # port, read it back from ``app.ops.port``). ``slo`` is ``True`` (a
+    # default objective set), an ``SLOSpec``, or its dict/list form —
+    # a streaming burn-rate alert engine over the live metrics.
+    # ``anomaly`` adds the EWMA/z-score advisory detector (``True`` or
+    # ``AnomalySpec`` knobs). ``remediate=True`` wires firing SLO alerts
+    # to the steering loops the app composes: backlog alerts pre-grow
+    # the elastic fleet, utilization-floor alerts force a reallocator
+    # rebalance. (Loss-rate alerts are wired where a resubmission path
+    # exists — see the chaos soak harness.)
+    ops_port: Optional[int] = None
+    slo: Optional[Any] = None           # True | SLOSpec | dict | [objectives]
+    anomaly: Optional[Any] = None       # True | AnomalySpec | dict
+    remediate: bool = False
 
     def resolved_server_jsonl(self) -> Optional[str]:
         if self.server_jsonl_path is not None:
@@ -302,6 +317,13 @@ class AppSpec:
             self.queues = QueueSpec(backend=self.queues)
         if self.observe is not None and self.observe.elastic is False:
             self.observe.elastic = None  # False means off, same as unset
+        if self.observe is not None:
+            if self.observe.slo is False:
+                self.observe.slo = None
+            if self.observe.anomaly is False:
+                self.observe.anomaly = None
+            if self.observe.remediate and self.observe.slo is None:
+                raise ValueError("ObserveSpec.remediate needs an SLO spec (alerts drive remediation)")
         self.pools = normalize_pools(self.pools)
         self.pools.setdefault("default", PoolSpec("default", 1))
         if isinstance(self.steering, type) and issubclass(self.steering, BaseThinker):
@@ -493,6 +515,12 @@ class ColmenaApp:
         self.reallocator: Optional[Any] = None
         self.elastic: Optional[Any] = None
         self.exporter: Optional[Any] = None
+        # Live ops plane: one shared aggregator feeds the exporter, the
+        # HTTP endpoint, and the SLO/anomaly engines.
+        self.aggregator: Optional[Any] = None
+        self.slo: Optional[Any] = None
+        self.anomaly: Optional[Any] = None
+        self.ops: Optional[Any] = None
         self.campaign: Optional[Campaign] = None
         self.report: Optional[CampaignReport] = None
 
@@ -624,10 +652,19 @@ class ColmenaApp:
                 self.reallocator = self._build_reallocator(spec.observe)
         if spec.observe is not None and spec.observe.elastic is not None:
             self.elastic = self._build_elastic(spec.observe)
-        if spec.observe is not None and spec.observe.export is not None:
+        ospec = spec.observe
+        needs_aggregator = ospec is not None and (
+            ospec.export is not None or ospec.ops_port is not None
+            or ospec.slo is not None or ospec.anomaly is not None
+        )
+        if needs_aggregator:
+            from repro.observe import MetricsAggregator
+
+            self.aggregator = MetricsAggregator(self.event_log)
+        if ospec is not None and ospec.export is not None:
             from repro.observe import ExportSpec, MetricsExporter
 
-            exp = spec.observe.export
+            exp = ospec.export
             if isinstance(exp, str):
                 exp = ExportSpec(dir=exp)
             elif isinstance(exp, Mapping):
@@ -635,7 +672,38 @@ class ColmenaApp:
             self.exporter = MetricsExporter(
                 self.event_log, spec=exp,
                 slots_by_pool={name: ps.size for name, ps in self.pool_specs.items()},
+                aggregator=self.aggregator,
             )
+        if ospec is not None and ospec.slo is not None:
+            from repro.observe import SLOEngine, SLOSpec
+
+            self.slo = SLOEngine(
+                self.event_log, SLOSpec.from_any(ospec.slo),
+                aggregator=self.aggregator,
+                slots_by_pool={name: ps.size for name, ps in self.pool_specs.items()},
+            )
+        if ospec is not None and ospec.anomaly is not None:
+            from repro.observe import AnomalyDetector, AnomalySpec
+
+            self.anomaly = AnomalyDetector(
+                self.event_log, AnomalySpec.from_any(ospec.anomaly),
+                aggregator=self.aggregator,
+            )
+            if self.slo is not None:
+                # One tick thread: the SLO engine drives the detector.
+                self.slo.anomaly = self.anomaly
+        if ospec is not None and ospec.ops_port is not None:
+            from repro.observe import OpsServer
+
+            self.ops = OpsServer(
+                aggregator=self.aggregator,
+                slots_by_pool={name: ps.size for name, ps in self.pool_specs.items()},
+                slo=self.slo,
+                anomaly=self.anomaly,
+                port=ospec.ops_port,
+            )
+        if ospec is not None and ospec.remediate and self.slo is not None:
+            self._wire_remediations()
         if spec.campaign is not None:
             self.campaign = Campaign(
                 self.thinker,
@@ -647,6 +715,22 @@ class ColmenaApp:
 
         self._built = True
         return self
+
+    def _wire_remediations(self) -> None:
+        """Close the observe→steer loop: firing SLO alerts trigger the
+        steering components the app already composes. Every attempt is
+        recorded as a ``remediation`` event by the engine."""
+        if self.elastic is not None:
+            def _pre_grow(alert: Dict[str, Any]) -> Any:
+                grown = self.elastic.pre_grow(alert.get("pool"))
+                return {"grown": grown}
+
+            self.slo.on_fire("backlog", _pre_grow, label="elastic_pre_grow")
+        if self.reallocator is not None:
+            def _rebalance(alert: Dict[str, Any]) -> Any:
+                return {"moves": len(self.reallocator.step() or [])}
+
+            self.slo.on_fire("utilization", _rebalance, label="reallocator_rebalance")
 
     def _build_elastic(self, ospec: ObserveSpec) -> Any:
         from repro.observe import ElasticPolicy, ElasticScaler
@@ -716,6 +800,10 @@ class ColmenaApp:
             self._started = True
         self.build()
         self._t0 = time.monotonic()
+        # Ops endpoint first: /healthz answers "starting" while the rest
+        # of the stack comes up.
+        if self.ops is not None:
+            self.ops.start()
         if self.campaign is not None and self.spec.campaign.resume:
             self.campaign.try_resume()
         self.server.start()
@@ -725,6 +813,10 @@ class ColmenaApp:
             self.elastic.start()
         if self.exporter is not None:
             self.exporter.start()
+        if self.slo is not None:
+            self.slo.start()
+        elif self.anomaly is not None:
+            self.anomaly.start()  # standalone: no SLO engine to tick it
         if self.campaign is not None:
             self._ckpt_stop = threading.Event()
             self._ckpt_thread = threading.Thread(
@@ -739,6 +831,8 @@ class ColmenaApp:
                 target=self._drive_thinker, args=(timeout,), daemon=True, name="app-thinker"
             )
             self._thinker_thread.start()
+        if self.ops is not None:
+            self.ops.set_state("ready")
         return self
 
     def _drive_thinker(self, timeout: Optional[float]) -> None:
@@ -771,6 +865,8 @@ class ColmenaApp:
             if self._stopped or not self._started:
                 return self.report
             self._stopped = True
+        if self.ops is not None:
+            self.ops.set_state("draining")
         # Every step below is guarded: stop() must complete (and not mask
         # the original error) even when start() failed mid-build and only
         # part of the stack exists.
@@ -793,6 +889,10 @@ class ColmenaApp:
             self.reallocator.stop()
         if self.elastic is not None:
             self.elastic.stop()
+        if self.slo is not None:
+            self.slo.stop()
+        if self.anomaly is not None:
+            self.anomaly.stop()
         if self.exporter is not None:
             self.exporter.stop()
         if self.server is not None:
@@ -802,6 +902,9 @@ class ColmenaApp:
                 self.store.close()
             except Exception:  # noqa: BLE001 - teardown must complete
                 pass
+        if self.ops is not None:
+            self.ops.set_state("stopped")
+            self.ops.stop()
         if self._owns_log and self.event_log is not None:
             self.event_log.close()
         completed = (
@@ -837,8 +940,18 @@ class ColmenaApp:
             self.thinker.rec.event_log = log
         if self.reallocator is not None:
             self.reallocator.rebind_event_log(log)
+        if self.aggregator is not None:
+            from repro.observe import MetricsAggregator
+
+            self.aggregator = MetricsAggregator(log)
         if self.exporter is not None:
-            self.exporter.rebind(log)
+            self.exporter.rebind(log, aggregator=self.aggregator)
+        if self.slo is not None:
+            self.slo.rebind(log, aggregator=self.aggregator)
+        if self.anomaly is not None:
+            self.anomaly.rebind(log, aggregator=self.aggregator)
+        if self.ops is not None:
+            self.ops.rebind(self.aggregator)
         if self.elastic is not None:
             self.elastic.rebind_event_log(log)
             # Fresh log, fresh left edge: without a baseline gauge the

@@ -272,6 +272,24 @@ def spec_to_dict(spec: Any) -> Dict[str, Any]:
                 raise ValueError(
                     f"ObserveSpec.elastic {type(o.elastic).__name__} does not serialize"
                 )
+        if o.ops_port is not None:
+            obs["ops_port"] = o.ops_port
+        if o.remediate:
+            obs["remediate"] = True
+        for knob in ("slo", "anomaly"):
+            v = getattr(o, knob)
+            if v is None:
+                continue
+            if v is True:
+                obs[knob] = {}
+            elif isinstance(v, Mapping):
+                obs[knob] = dict(v)
+            elif hasattr(v, "to_dict"):
+                obs[knob] = v.to_dict()
+            else:
+                raise ValueError(
+                    f"ObserveSpec.{knob} {type(v).__name__} does not serialize"
+                )
         out["observe"] = obs
 
     if spec.steering is not None:
@@ -398,6 +416,13 @@ def spec_from_dict(d: Mapping[str, Any]) -> Any:
             o["elastic"] = dict(o["elastic"]) if isinstance(o["elastic"], Mapping) else o["elastic"]
         elif o.get("elastic") is False:
             o.pop("elastic")
+        for knob in ("slo", "anomaly"):
+            # `slo = false` in a [smoke] override disables the engine the
+            # same way `elastic = false` disables the scaler.
+            if o.get(knob) is False:
+                o.pop(knob)
+            elif knob in o and isinstance(o[knob], Mapping):
+                o[knob] = dict(o[knob])
         observe = ObserveSpec(**o)
 
     steering = None

@@ -36,7 +36,12 @@ sink path is given. Fields:
              ``profile`` (a timed span: ``t`` = start, ``value`` = wall
              seconds, ``stage`` = span name, ``info["device_s"]`` =
              post-``block_until_ready`` device time — emitted by
-             ``EventLog.profile`` around kernel / ensemble calls).
+             ``EventLog.profile`` around kernel / ensemble calls),
+             ``alert`` (an SLO/anomaly transition: stage ``pending``/
+             ``firing``/``resolved``, ``info["name"]`` the objective,
+             ``info["severity"]`` ``page``/``ticket``/``advisory``), or
+             ``remediation`` (an auto-remediation attempt: ``stage`` =
+             handler label, ``info`` carries the alert name and ``ok``).
              The kind set is OPEN: consumers must tolerate (count, not
              crash on) kinds they do not model — see
              ``MetricsAggregator.unknown_kinds``
@@ -74,9 +79,11 @@ at ``send_inputs`` rides on the ``Result`` across the boundary, so
 (``python -m repro.observe trace a.jsonl b.jsonl -o trace.json``).
 """
 
+from .anomaly import AnomalyDetector, AnomalySpec
 from .bench import (
     BenchRecorder,
     bench_diff,
+    build_trajectory,
     env_fingerprint,
     load_bench,
     render_diff,
@@ -90,6 +97,7 @@ from .events import (
     lifecycle_order_violations,
 )
 from .export import ExportSpec, MetricsExporter
+from .ops import OpsServer
 from .metrics import (
     BatchStats,
     CacheStats,
@@ -109,6 +117,7 @@ from .reallocator import (
     ReallocatorMixin,
 )
 from .report import build_report, dump_json, render_text
+from .slo import SLOEngine, SLOObjective, SLOSpec, default_objectives
 from .synthetic import PoolWorkloadThinker, run_bursty, run_pool_workload, run_two_pool
 from .trace import (
     Span,
@@ -124,12 +133,16 @@ from .trace import (
 
 __all__ = [
     "AdaptiveReallocator",
+    "AnomalyDetector",
+    "AnomalySpec",
     "AUX_STAGES",
     "BatchStats",
     "bench_diff",
     "BenchRecorder",
     "build_report",
     "build_task_traces",
+    "build_trajectory",
+    "default_objectives",
     "CacheStats",
     "dump_json",
     "env_fingerprint",
@@ -138,6 +151,7 @@ __all__ = [
     "load_bench",
     "merge_jsonl",
     "MetricsExporter",
+    "OpsServer",
     "profiled_call",
     "render_diff",
     "Span",
@@ -165,5 +179,8 @@ __all__ = [
     "run_bursty",
     "run_pool_workload",
     "run_two_pool",
+    "SLOEngine",
+    "SLOObjective",
+    "SLOSpec",
     "STAGE_ORDER",
 ]

@@ -9,6 +9,9 @@
     # Compare two benchmark recordings (or two directories of them)
     python -m repro.observe bench diff BENCH_old.json BENCH_new.json
     python -m repro.observe bench diff benchmarks/baselines bench_out --fail-on-regress
+
+    # Fold per-run recordings into one commit-ordered trajectory.json
+    python -m repro.observe bench trajectory benchmarks/baselines bench_out -o trajectory.json
 """
 
 from __future__ import annotations
@@ -75,6 +78,23 @@ def _cmd_bench_diff(args: argparse.Namespace) -> int:
     return 0
 
 
+def _cmd_bench_trajectory(args: argparse.Namespace) -> int:
+    from .bench import build_trajectory, collect_bench
+
+    docs = collect_bench(args.inputs)
+    if not docs:
+        print(f"no BENCH_*.json recordings found under: {', '.join(args.inputs)}")
+        return 2
+    traj = build_trajectory(docs)
+    with open(args.out, "w") as fh:
+        json.dump(traj, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    for suite, data in traj["suites"].items():
+        print(f"  {suite}: {len(data['runs'])} run(s), {len(data['series'])} metric series")
+    print(f"wrote {args.out}: {len(traj['suites'])} suite(s) from {len(docs)} recording(s)")
+    return 0
+
+
 def main(argv=None) -> int:
     parser = argparse.ArgumentParser(prog="python -m repro.observe", description=__doc__)
     sub = parser.add_subparsers(dest="cmd", required=True)
@@ -99,6 +119,13 @@ def main(argv=None) -> int:
     p_diff.add_argument("--fail-on-regress", action="store_true",
                         help="exit 1 when any gated metric regressed")
     p_diff.set_defaults(fn=_cmd_bench_diff)
+    p_traj = bench_sub.add_parser(
+        "trajectory", help="aggregate BENCH_*.json recordings into trajectory.json")
+    p_traj.add_argument("inputs", nargs="+",
+                        help="BENCH_*.json files and/or directories of them")
+    p_traj.add_argument("-o", "--out", default="trajectory.json",
+                        help="output trajectory file")
+    p_traj.set_defaults(fn=_cmd_bench_trajectory)
 
     args = parser.parse_args(argv)
     return args.fn(args)

@@ -1,0 +1,248 @@
+"""Streaming anomaly detection: EWMA + z-score advisory alerts.
+
+Static SLO thresholds catch absolute violations; regressions *relative
+to the campaign's own recent behavior* — latency creeping up, arrival
+rate collapsing, cache hit rate falling off a cliff — need a baseline
+learned online. ``AnomalyDetector`` keeps an exponentially-weighted
+mean/variance per watched series and raises an **advisory** alert when
+a reading lands more than ``z_threshold`` standard deviations from the
+learned mean (resolving with hysteresis at ``resolve_z``).
+
+Advisory alerts flow through the same ``EventLog.alert`` channel as SLO
+alerts (``severity="advisory"``) so they land in traces, reports, and
+``GET /alerts`` — but they are deliberately excluded from remediation:
+an anomaly is a prompt for a human (or a future policy), not a trigger.
+
+The detector is tick-driven. Standalone it runs its own daemon thread
+(``start()``/``stop()``); composed with an ``SLOEngine`` it is ticked
+by the engine's evaluation loop (one clock, ordered transitions).
+"""
+
+from __future__ import annotations
+
+import logging
+import math
+import threading
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple
+
+from .events import EventLog
+from .metrics import MetricsAggregator
+
+logger = logging.getLogger("repro.observe.anomaly")
+
+_SERIES = ("latency", "arrival_rate", "cache_hit_rate")
+
+
+@dataclass
+class AnomalySpec:
+    """Knobs for the detector. ``series`` selects which signals to watch;
+    ``min_samples`` readings must arrive before a series can alert."""
+
+    alpha: float = 0.1
+    z_threshold: float = 4.0
+    resolve_z: float = 2.0
+    min_samples: int = 20
+    interval_s: float = 0.5
+    series: Tuple[str, ...] = _SERIES
+
+    def __post_init__(self) -> None:
+        if not (0.0 < self.alpha <= 1.0):
+            raise ValueError("anomaly alpha must be in (0, 1]")
+        if self.resolve_z > self.z_threshold:
+            raise ValueError("anomaly resolve_z must not exceed z_threshold")
+        unknown = set(self.series) - set(_SERIES)
+        if unknown:
+            raise ValueError(f"unknown anomaly series: {sorted(unknown)}")
+        self.series = tuple(self.series)
+
+    @classmethod
+    def from_any(cls, value: Any) -> "AnomalySpec":
+        if isinstance(value, cls):
+            return value
+        if value is True or value is None:
+            return cls()
+        if isinstance(value, Mapping):
+            d = dict(value)
+            if "series" in d:
+                d["series"] = tuple(d["series"])
+            return cls(**d)
+        raise ValueError(f"cannot build AnomalySpec from {type(value).__name__}")
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"alpha": self.alpha, "z_threshold": self.z_threshold,
+                "resolve_z": self.resolve_z, "min_samples": self.min_samples,
+                "interval_s": self.interval_s, "series": list(self.series)}
+
+
+class _Ewma:
+    """Streaming EW mean/variance; ``score`` is the z of a new reading
+    against the baseline *before* it is absorbed."""
+
+    def __init__(self, alpha: float) -> None:
+        self.alpha = alpha
+        self.n = 0
+        self.mean = 0.0
+        self.var = 0.0
+
+    def score(self, x: float) -> float:
+        if self.n == 0:
+            return 0.0
+        std = math.sqrt(self.var)
+        if std <= 1e-12:
+            return 0.0
+        return (x - self.mean) / std
+
+    def update(self, x: float) -> None:
+        if self.n == 0:
+            self.mean = x
+        else:
+            diff = x - self.mean
+            incr = self.alpha * diff
+            self.mean += incr
+            self.var = (1.0 - self.alpha) * (self.var + diff * incr)
+        self.n += 1
+
+
+class _SeriesState:
+    def __init__(self, name: str, alpha: float) -> None:
+        self.name = name
+        self.ewma = _Ewma(alpha)
+        self.active = False
+        self.last_z: Optional[float] = None
+        self.last_value: Optional[float] = None
+        self.fired_count = 0
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"name": f"anomaly:{self.name}", "signal": "anomaly",
+                "severity": "advisory",
+                "state": "firing" if self.active else "ok",
+                "value": self.last_value, "z": self.last_z,
+                "mean": self.ewma.mean, "n": self.ewma.n,
+                "fired_count": self.fired_count}
+
+
+class AnomalyDetector:
+    """Watch derived metrics for statistical surprises."""
+
+    def __init__(
+        self,
+        log: Optional[EventLog],
+        spec: Any = None,
+        aggregator: Optional[MetricsAggregator] = None,
+        clock: Callable[[], float] = time.monotonic,
+    ) -> None:
+        self.log = log
+        self.spec = AnomalySpec.from_any(spec)
+        self.agg = aggregator if aggregator is not None else MetricsAggregator(log)
+        self._clock = clock
+        self._lock = threading.Lock()
+        self._states = {name: _SeriesState(name, self.spec.alpha) for name in self.spec.series}
+        # Latency samples accumulate between ticks (mean per tick is the
+        # series reading); cache counters diff tick-over-tick.
+        self._lat_sum = 0.0
+        self._lat_n = 0
+        self._cache_seen = (0, 0)
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        if "latency" in self._states:
+            self.agg.add_listener(self._on_sample)
+
+    def _on_sample(self, sample: Dict[str, object]) -> None:
+        if sample.get("type") != "latency":
+            return
+        with self._lock:
+            self._lat_sum += float(sample["seconds"])  # type: ignore[arg-type]
+            self._lat_n += 1
+
+    # ----------------------------------------------------------------- tick
+    def _readings(self) -> Dict[str, float]:
+        out: Dict[str, float] = {}
+        if "latency" in self._states:
+            with self._lock:
+                if self._lat_n:
+                    out["latency"] = self._lat_sum / self._lat_n
+                    self._lat_sum, self._lat_n = 0.0, 0
+        if "arrival_rate" in self._states:
+            by_pool = self.agg.gauges().get("arrival_rate")
+            if by_pool:
+                out["arrival_rate"] = sum(by_pool.values()) / len(by_pool)
+        if "cache_hit_rate" in self._states:
+            total = self.agg.cache_stats()["total"]
+            prev_h, prev_m = self._cache_seen
+            dh, dm = total.hits - prev_h, total.misses - prev_m
+            if dh + dm > 0:
+                self._cache_seen = (total.hits, total.misses)
+                out["cache_hit_rate"] = dh / (dh + dm)
+        return out
+
+    def tick(self, now: Optional[float] = None) -> None:
+        now = self._clock() if now is None else now
+        for name, value in self._readings().items():
+            st = self._states[name]
+            z = st.ewma.score(value)
+            warmed = st.ewma.n >= self.spec.min_samples
+            st.ewma.update(value)
+            st.last_z, st.last_value = z, value
+            if not warmed:
+                continue
+            if not st.active and abs(z) >= self.spec.z_threshold:
+                st.active = True
+                st.fired_count += 1
+                self._emit("firing", st, value, z)
+            elif st.active and abs(z) <= self.spec.resolve_z:
+                st.active = False
+                self._emit("resolved", st, value, z)
+
+    def _emit(self, stage: str, st: _SeriesState, value: float, z: float) -> None:
+        logger.info("anomaly: %s %s (value=%.6g z=%.2f mean=%.6g)",
+                    st.name, stage, value, z, st.ewma.mean)
+        if self.log is not None:
+            self.log.alert(stage, f"anomaly:{st.name}", value=value,
+                           severity="advisory", signal="anomaly",
+                           z=round(z, 3), mean=st.ewma.mean)
+
+    # ------------------------------------------------------------ accessors
+    def alerts(self) -> List[Dict[str, Any]]:
+        return [st.to_dict() for st in self._states.values()]
+
+    def firing(self) -> List[str]:
+        return [f"anomaly:{n}" for n, st in self._states.items() if st.active]
+
+    # ------------------------------------------------------------ lifecycle
+    def start(self) -> "AnomalyDetector":
+        if self._thread is not None:
+            return self
+        self._stop.clear()
+        self._thread = threading.Thread(target=self._loop, daemon=True, name="anomaly-detector")
+        self._thread.start()
+        return self
+
+    def _loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                self.tick()
+            except Exception:  # noqa: BLE001
+                logger.exception("anomaly tick failed")
+            self._stop.wait(self.spec.interval_s)
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=10)
+            self._thread = None
+
+    def rebind(self, log: Optional[EventLog],
+               aggregator: Optional[MetricsAggregator] = None) -> None:
+        self.agg.remove_listener(self._on_sample)
+        self.log = log
+        self.agg = aggregator if aggregator is not None else MetricsAggregator(log)
+        with self._lock:
+            self._lat_sum, self._lat_n = 0.0, 0
+            self._cache_seen = (0, 0)
+        if "latency" in self._states:
+            self.agg.add_listener(self._on_sample)
+
+
+__all__ = ["AnomalySpec", "AnomalyDetector"]

@@ -233,9 +233,80 @@ def match_baselines(old_dir: str, new_dir: str) -> List[Tuple[str, str]]:
     return [(old_idx[k], new_idx[k]) for k in sorted(set(old_idx) & set(new_idx))]
 
 
+def collect_bench(paths: List[str]) -> List[Dict[str, Any]]:
+    """Load every ``BENCH_*.json`` under the given files/directories
+    (directories are scanned non-recursively; bad files are skipped —
+    a trajectory should aggregate whatever survives, not die on one
+    truncated artifact)."""
+    docs: List[Dict[str, Any]] = []
+    files: List[str] = []
+    for p in paths:
+        if os.path.isdir(p):
+            files.extend(
+                os.path.join(p, fn)
+                for fn in sorted(os.listdir(p))
+                if fn.startswith("BENCH_") and fn.endswith(".json")
+            )
+        else:
+            files.append(p)
+    for path in files:
+        try:
+            docs.append(load_bench(path))
+        except (OSError, ValueError, json.JSONDecodeError):
+            continue
+    return docs
+
+
+def build_trajectory(docs: List[Dict[str, Any]]) -> Dict[str, Any]:
+    """Fold per-run recordings into one commit-ordered trajectory.
+
+    Output shape::
+
+        {"schema": 1,
+         "suites": {suite: {
+             "runs":   [{"commit", "timestamp", "duration_s", "passed"}, ...],
+             "series": {metric: [{"commit", "timestamp", "value",
+                                  "passed"?}, ...]}}}}
+
+    Runs are ordered by timestamp (recording wall-clock), so appending
+    each CI run's artifact yields per-metric series a dashboard can plot
+    straight across PRs. Duplicate (commit, timestamp) runs of a suite
+    collapse to the last one seen.
+    """
+    by_suite: Dict[str, Dict[Tuple[Optional[str], Optional[str]], Dict[str, Any]]] = {}
+    for doc in docs:
+        key = (doc.get("commit"), doc.get("timestamp"))
+        by_suite.setdefault(str(doc.get("name")), {})[key] = doc
+    suites: Dict[str, Any] = {}
+    for suite, runs_by_key in sorted(by_suite.items()):
+        runs = sorted(runs_by_key.values(), key=lambda d: (d.get("timestamp") or "", d.get("commit") or ""))
+        series: Dict[str, List[Dict[str, Any]]] = {}
+        run_rows: List[Dict[str, Any]] = []
+        for doc in runs:
+            run_rows.append({
+                "commit": doc.get("commit"),
+                "timestamp": doc.get("timestamp"),
+                "duration_s": doc.get("duration_s"),
+                "passed": doc.get("passed"),
+            })
+            for metric, row in sorted(doc.get("metrics", {}).items()):
+                point: Dict[str, Any] = {
+                    "commit": doc.get("commit"),
+                    "timestamp": doc.get("timestamp"),
+                    "value": row.get("value"),
+                }
+                if "passed" in row:
+                    point["passed"] = row["passed"]
+                series.setdefault(metric, []).append(point)
+        suites[suite] = {"runs": run_rows, "series": series}
+    return {"schema": SCHEMA_VERSION, "suites": suites}
+
+
 __all__ = [
     "BenchRecorder",
     "bench_diff",
+    "build_trajectory",
+    "collect_bench",
     "diff_paths",
     "env_fingerprint",
     "git_commit",

@@ -208,6 +208,34 @@ class EventLog:
             Event(t=t_start, kind="profile", stage=name, value=float(wall_s), info=info)
         )
 
+    def alert(self, stage: str, name: str, value: Optional[float] = None,
+              severity: str = "page", pool: Optional[str] = None, **info: Any) -> Event:
+        """Record an SLO/anomaly alert transition (``kind="alert"``):
+        ``stage`` is the lifecycle edge (``pending``/``firing``/
+        ``resolved``), ``name`` identifies the objective, ``value`` is the
+        signal reading that drove the transition, and ``info`` carries the
+        burn rates / window config. Alerts flow through the same log as
+        task events, so they land in traces, reports, and the JSONL sink
+        alongside the work they describe."""
+        return self.emit(
+            Event(t=self._clock(), kind="alert", stage=stage, pool=pool,
+                  value=None if value is None else float(value),
+                  info={"name": name, "severity": severity, **info})
+        )
+
+    def remediation(self, action: str, alert: str, ok: bool = True,
+                    pool: Optional[str] = None, **info: Any) -> Event:
+        """Record an auto-remediation attempt (``kind="remediation"``):
+        ``action`` names the handler (e.g. ``elastic_pre_grow``),
+        ``alert`` the firing objective that triggered it, and ``ok``
+        whether the handler ran cleanly. Every closed observe→steer loop
+        leaves one of these in the log, so soak invariants can assert the
+        system *acted* on its alerts, not just raised them."""
+        return self.emit(
+            Event(t=self._clock(), kind="remediation", stage=action, pool=pool,
+                  value=1.0 if ok else 0.0, info={"alert": alert, "ok": bool(ok), **info})
+        )
+
     # ------------------------------------------------------------- consumers
     def subscribe(self, fn: Callable[[Event], None], replay: bool = True) -> None:
         """Register a streaming consumer; with ``replay`` it first receives

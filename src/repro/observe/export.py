@@ -125,10 +125,14 @@ class MetricsExporter:
         except OSError:
             pass
 
-    def rebind(self, log: EventLog) -> None:
+    def rebind(self, log: EventLog, aggregator: Optional[MetricsAggregator] = None) -> None:
         """Point the exporter at a fresh event log (benchmarks that swap
-        logs between a warm-up and a measured phase)."""
-        self.agg = MetricsAggregator(log)
+        logs between a warm-up and a measured phase; checkpoint resume).
+        The replacement aggregator subscribes only to the *new* log, so
+        events still arriving on the old one are never double-counted.
+        Pass ``aggregator`` to share one instance with the ops server /
+        SLO engine instead of building a private one."""
+        self.agg = aggregator if aggregator is not None else MetricsAggregator(log)
 
 
 __all__ = ["ExportSpec", "MetricsExporter"]

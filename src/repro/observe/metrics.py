@@ -24,7 +24,7 @@ from __future__ import annotations
 import math
 import threading
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 from .events import Event, EventLog
 
@@ -203,12 +203,34 @@ class MetricsAggregator:
         self._gauges: Dict[Tuple[str, Optional[str]], float] = {}
         # Profiled code spans (kernel/surrogate timings): total wall per name.
         self._profiles: Dict[str, SpanStats] = {}
+        # Alert/remediation events (SLO engine, anomaly detector) are
+        # first-class: kept verbatim for reports plus a per-alert latest
+        # state so snapshots/Prometheus can say what is firing *now*.
+        self.alert_events: List[Event] = []
+        self.remediation_events: List[Event] = []
+        self._alert_state: Dict[str, Dict[str, object]] = {}
+        # Derived-sample listeners: called OUTSIDE the aggregator lock
+        # with small dicts ({"type": "latency"|"delivery", ...}) as tasks
+        # complete — the SLO engine and anomaly detector consume these
+        # instead of re-deriving latency from raw events (the twin-dedup
+        # logic lives here once).
+        self._listeners: List[Callable[[Dict[str, object]], None]] = []
         # Forward-compat: kinds this aggregator does not understand are
         # counted, never dropped silently or crashed on — newer emitters
         # may share a log with older consumers.
         self.unknown_kinds: Dict[str, int] = {}
         if log is not None:
             log.subscribe(self.observe, replay=True)
+
+    def add_listener(self, fn: Callable[[Dict[str, object]], None]) -> None:
+        """Register a derived-sample consumer (copy-on-write, like the
+        EventLog subscriber list — safe against concurrent observe)."""
+        with self._lock:
+            self._listeners = self._listeners + [fn]
+
+    def remove_listener(self, fn: Callable[[Dict[str, object]], None]) -> None:
+        with self._lock:
+            self._listeners = [f for f in self._listeners if f is not fn]
 
     # ----------------------------------------------------------------- ingest
     def _pool(self, name: Optional[str]) -> PoolStats:
@@ -219,114 +241,145 @@ class MetricsAggregator:
         return st
 
     def observe(self, ev: Event) -> None:
+        samples: List[Dict[str, object]] = []
         with self._lock:
-            self.t_first = ev.t if self.t_first is None else min(self.t_first, ev.t)
-            self.t_last = ev.t if self.t_last is None else max(self.t_last, ev.t)
-            if ev.kind == "gauge":
-                if ev.value is not None:
-                    self._gauges[(ev.stage, ev.pool)] = float(ev.value)
-                if ev.stage == "slots" and ev.pool is not None:
-                    self._capacity.setdefault(ev.pool, _Capacity()).set(ev.t, ev.value or 0.0)
-                elif ev.stage == "workers" and ev.pool is not None:
-                    self._fleet.setdefault(ev.pool, _Capacity()).set(ev.t, ev.value or 0.0)
-                elif ev.stage == "batch_occupancy":
-                    st = self._batches.setdefault(ev.info.get("method") or "?", BatchStats())
-                    n = int(ev.value or 0)
-                    st.batches += 1
-                    st.tasks += n
-                    st.max_occupancy = max(st.max_occupancy, n)
-                return
-            if ev.kind == "cache":
-                cs = self._cache.setdefault(ev.method or "?", CacheStats())
-                if ev.stage == "hit":
-                    cs.hits += 1
-                    cs.bytes_saved += int(ev.info.get("nbytes") or 0)
-                else:
-                    cs.misses += 1
-                return
-            if ev.kind == "realloc":
-                self.reallocations.append(ev)
-                return
-            if ev.kind == "pool_resize":
-                self.pool_resizes.append(ev)
-                return
-            if ev.kind == "surrogate":
-                self.surrogate_events.append(ev)
-                return
-            if ev.kind == "profile":
-                self._profiles.setdefault(ev.stage, SpanStats()).add(float(ev.value or 0.0))
-                return
-            if ev.kind != "task":
-                self.unknown_kinds[ev.kind] = self.unknown_kinds.get(ev.kind, 0) + 1
-                return
-            if ev.task_id is None:
-                return
+            listeners = self._listeners
+            self._observe_locked(ev, samples)
+        # Derived samples are delivered outside the lock so listeners may
+        # freely call back into accessors (which take it).
+        for fn in listeners:
+            for s in samples:
+                fn(s)
 
-            tid, stage = ev.task_id, ev.stage
-            marks = self._marks.get(tid)
-            # "first" = first time this stage is seen for a still-tracked
-            # task; speculative twins share a task_id, so their duplicate
-            # running/completed events must not re-count the task.
-            first = marks is not None and stage not in marks
-            if marks is None and stage in _INTRO_STAGES:
-                marks = self._marks[tid] = {}
-                first = True
+    def _observe_locked(self, ev: Event, samples: List[Dict[str, object]]) -> None:
+        self.t_first = ev.t if self.t_first is None else min(self.t_first, ev.t)
+        self.t_last = ev.t if self.t_last is None else max(self.t_last, ev.t)
+        if ev.kind == "gauge":
+            if ev.value is not None:
+                self._gauges[(ev.stage, ev.pool)] = float(ev.value)
+            if ev.stage == "slots" and ev.pool is not None:
+                self._capacity.setdefault(ev.pool, _Capacity()).set(ev.t, ev.value or 0.0)
+            elif ev.stage == "workers" and ev.pool is not None:
+                self._fleet.setdefault(ev.pool, _Capacity()).set(ev.t, ev.value or 0.0)
+            elif ev.stage == "batch_occupancy":
+                st = self._batches.setdefault(ev.info.get("method") or "?", BatchStats())
+                n = int(ev.value or 0)
+                st.batches += 1
+                st.tasks += n
+                st.max_occupancy = max(st.max_occupancy, n)
+            return
+        if ev.kind == "cache":
+            cs = self._cache.setdefault(ev.method or "?", CacheStats())
+            if ev.stage == "hit":
+                cs.hits += 1
+                cs.bytes_saved += int(ev.info.get("nbytes") or 0)
+            else:
+                cs.misses += 1
+            return
+        if ev.kind == "realloc":
+            self.reallocations.append(ev)
+            return
+        if ev.kind == "pool_resize":
+            self.pool_resizes.append(ev)
+            return
+        if ev.kind == "surrogate":
+            self.surrogate_events.append(ev)
+            return
+        if ev.kind == "profile":
+            self._profiles.setdefault(ev.stage, SpanStats()).add(float(ev.value or 0.0))
+            return
+        if ev.kind == "alert":
+            self.alert_events.append(ev)
+            name = str(ev.info.get("name") or "?")
+            st = self._alert_state.setdefault(
+                name, {"name": name, "state": "ok", "severity": "page", "transitions": 0}
+            )
+            st["state"] = ev.stage if ev.stage in ("pending", "firing") else "ok"
+            st["severity"] = ev.info.get("severity", st["severity"])
+            st["t"] = ev.t
+            st["value"] = ev.value
+            st["transitions"] = int(st["transitions"]) + 1  # type: ignore[call-overload]
+            return
+        if ev.kind == "remediation":
+            self.remediation_events.append(ev)
+            return
+        if ev.kind != "task":
+            self.unknown_kinds[ev.kind] = self.unknown_kinds.get(ev.kind, 0) + 1
+            return
+        if ev.task_id is None:
+            return
+
+        tid, stage = ev.task_id, ev.stage
+        marks = self._marks.get(tid)
+        # "first" = first time this stage is seen for a still-tracked
+        # task; speculative twins share a task_id, so their duplicate
+        # running/completed events must not re-count the task.
+        first = marks is not None and stage not in marks
+        if marks is None and stage in _INTRO_STAGES:
+            marks = self._marks[tid] = {}
+            first = True
+        if marks is not None:
+            marks.setdefault(stage, ev.t)
+
+        if stage == "submitted":
+            st = self._pool(ev.pool)
+            st.submitted += 1
+            st.backlog += 1
+        elif stage == "running":
+            # Pool name on running/completed events is the executing
+            # WorkerPool's name — the ground truth for busy accounting.
+            # Busy intervals key on (task, worker) so concurrent
+            # speculative copies are each accounted for.
+            pool = ev.pool or "default"
+            self._pool(pool).running += 1
+            key = (tid, ev.info.get("worker_id"))
+            self._run_pool[key] = pool
+            self._run_start[key] = ev.t
+            if first:  # only the first copy leaves the backlog
+                # Backlog was counted under the *requested* pool.
+                origin = self._pool(ev.info.get("requested_pool") or pool)
+                if origin.backlog > 0:
+                    origin.backlog -= 1
+        elif stage in ("completed", "failed"):
+            key = (tid, ev.info.get("worker_id"))
+            pool = self._run_pool.pop(key, ev.pool or "default")
+            st = self._pool(pool)
+            start = self._run_start.pop(key, None)
+            if start is not None:
+                # Every copy's worker time is real busy time, even a
+                # speculative loser's — count it all.
+                st.busy_seconds += ev.t - start
+                if st.running > 0:
+                    st.running -= 1
+            elif marks is not None and "running" not in marks:
+                # failed before running (e.g. unknown method): clear backlog
+                if st.backlog > 0:
+                    st.backlog -= 1
+            if stage == "completed":
+                if first:  # one completion per task, not per copy
+                    st.completed += 1
+                    hist = self._methods.get(ev.method or "?")
+                    if hist is None:
+                        hist = self._methods[ev.method or "?"] = LatencyHistogram()
+                    if start is not None:
+                        hist.observe(ev.t - start)
+                        samples.append({"type": "latency", "t": ev.t, "method": ev.method or "?",
+                                        "pool": pool, "seconds": ev.t - start})
+                    samples.append({"type": "delivery", "t": ev.t, "method": ev.method or "?",
+                                    "pool": pool, "ok": True})
+            elif first:
+                st.failed += 1
+                samples.append({"type": "delivery", "t": ev.t, "method": ev.method or "?",
+                                "pool": pool, "ok": False})
+        elif stage == "result_received":
             if marks is not None:
-                marks.setdefault(stage, ev.t)
-
-            if stage == "submitted":
-                st = self._pool(ev.pool)
-                st.submitted += 1
-                st.backlog += 1
-            elif stage == "running":
-                # Pool name on running/completed events is the executing
-                # WorkerPool's name — the ground truth for busy accounting.
-                # Busy intervals key on (task, worker) so concurrent
-                # speculative copies are each accounted for.
-                pool = ev.pool or "default"
-                self._pool(pool).running += 1
-                key = (tid, ev.info.get("worker_id"))
-                self._run_pool[key] = pool
-                self._run_start[key] = ev.t
-                if first:  # only the first copy leaves the backlog
-                    # Backlog was counted under the *requested* pool.
-                    origin = self._pool(ev.info.get("requested_pool") or pool)
-                    if origin.backlog > 0:
-                        origin.backlog -= 1
-            elif stage in ("completed", "failed"):
-                key = (tid, ev.info.get("worker_id"))
-                pool = self._run_pool.pop(key, ev.pool or "default")
-                st = self._pool(pool)
-                start = self._run_start.pop(key, None)
-                if start is not None:
-                    # Every copy's worker time is real busy time, even a
-                    # speculative loser's — count it all.
-                    st.busy_seconds += ev.t - start
-                    if st.running > 0:
-                        st.running -= 1
-                elif marks is not None and "running" not in marks:
-                    # failed before running (e.g. unknown method): clear backlog
-                    if st.backlog > 0:
-                        st.backlog -= 1
-                if stage == "completed":
-                    if first:  # one completion per task, not per copy
-                        st.completed += 1
-                        hist = self._methods.get(ev.method or "?")
-                        if hist is None:
-                            hist = self._methods[ev.method or "?"] = LatencyHistogram()
-                        if start is not None:
-                            hist.observe(ev.t - start)
-                elif first:
-                    st.failed += 1
-            elif stage == "result_received":
-                if marks is not None:
-                    for name, a, b in _SPANS:
-                        if a in marks and b in marks and marks[b] >= marks[a]:
-                            self._spans.setdefault(name, SpanStats()).add(marks[b] - marks[a])
-                # Drop transient state: keeps memory O(in-flight). Later
-                # stages (decision_made, a straggler loser's completion)
-                # find no marks and are ignored rather than re-created.
-                self._marks.pop(tid, None)
+                for name, a, b in _SPANS:
+                    if a in marks and b in marks and marks[b] >= marks[a]:
+                        self._spans.setdefault(name, SpanStats()).add(marks[b] - marks[a])
+            # Drop transient state: keeps memory O(in-flight). Later
+            # stages (decision_made, a straggler loser's completion)
+            # find no marks and are ignored rather than re-created.
+            self._marks.pop(tid, None)
 
     # -------------------------------------------------------------- accessors
     def pool_stats(self) -> Dict[str, PoolStats]:
@@ -426,6 +479,26 @@ class MetricsAggregator:
                 name: {"count": s.count, "mean_s": s.mean, "total_s": s.total}
                 for name, s in self._profiles.items()
             }
+
+    def alert_stats(self) -> Dict[str, object]:
+        """Alert/remediation roll-up: transition counts, which objectives
+        are firing right now, and per-alert latest state."""
+        with self._lock:
+            events = list(self.alert_events)
+            states = {k: dict(v) for k, v in self._alert_state.items()}
+            remediations = len(self.remediation_events)
+            remediations_ok = sum(
+                1 for e in self.remediation_events if e.info.get("ok", True)
+            )
+        return {
+            "events": len(events),
+            "fired": sum(1 for e in events if e.stage == "firing"),
+            "resolved": sum(1 for e in events if e.stage == "resolved"),
+            "firing": sorted(k for k, v in states.items() if v["state"] == "firing"),
+            "states": states,
+            "remediations": remediations,
+            "remediations_ok": remediations_ok,
+        }
 
     def backlog(self, pool: str) -> int:
         with self._lock:
@@ -552,6 +625,7 @@ class MetricsAggregator:
             "batches": batches,
             "gauges": self.gauges(),
             "profiles": self.profile_stats(),
+            "alerts": self.alert_stats(),
             "unknown_kinds": dict(self.unknown_kinds),
         }
 
@@ -634,5 +708,21 @@ class MetricsAggregator:
                 for pool, value in sorted(by_pool.items())
             ],
         )
+        alerts = self.alert_stats()
+        if alerts["events"]:
+            series("repro_alerts_fired_total", "counter", "Alert firing transitions",
+                   [({}, float(alerts["fired"]))])
+            series("repro_alerts_resolved_total", "counter", "Alert resolved transitions",
+                   [({}, float(alerts["resolved"]))])
+        series(
+            "repro_alert_firing", "gauge", "1 while the named alert is firing",
+            [
+                ({"name": name, "severity": str(alerts["states"][name]["severity"])}, 1.0)
+                for name in alerts["firing"]
+            ],
+        )
+        if alerts["remediations"]:
+            series("repro_remediations_total", "counter", "Auto-remediation attempts",
+                   [({}, float(alerts["remediations"]))])
         series("repro_makespan_seconds", "gauge", "Observed event-log window", [({}, self.makespan())])
         return "\n".join(lines) + "\n"

@@ -1,0 +1,196 @@
+"""Live ops endpoint: HTTP metrics/health/alerts over stdlib http.server.
+
+Until now every signal left the process through disk (JSONL logs,
+atomic ``metrics.prom``/``snapshot.json`` writes). ``OpsServer`` serves
+the same ``MetricsAggregator`` **live** — no disk round-trip, no
+staleness window — from a daemon thread:
+
+  ===============  ======================================================
+  ``GET /metrics``   Prometheus text exposition (scrape target)
+  ``GET /healthz``   liveness — 200 unless the app has stopped
+  ``GET /readyz``    readiness — 200 only while ``state == "ready"``
+  ``GET /snapshot``  the full JSON metrics snapshot
+  ``GET /alerts``    SLO + anomaly alert states (firing/pending/ok)
+  ``GET /``          endpoint index
+  ===============  ======================================================
+
+Lifecycle awareness comes from ``set_state``: ``ColmenaApp`` drives
+``starting → ready → draining → stopped`` around its own start/stop, so
+a load balancer (or the future campaign control plane) can hold traffic
+during startup and drain before teardown. ``port=0`` binds an ephemeral
+port (read it back from ``.port`` / ``.url``) — the right default for
+tests and multi-campaign hosts.
+"""
+
+from __future__ import annotations
+
+import json
+import logging
+import threading
+import time
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Any, Dict, List, Optional
+
+from .metrics import MetricsAggregator
+
+logger = logging.getLogger("repro.observe.ops")
+
+_STATES = ("starting", "ready", "draining", "stopped")
+
+
+class OpsServer:
+    """Serve live workflow health over HTTP (stdlib only, daemon thread)."""
+
+    def __init__(
+        self,
+        aggregator: Optional[MetricsAggregator] = None,
+        slots_by_pool: Optional[Dict[str, int]] = None,
+        slo: Optional[Any] = None,
+        anomaly: Optional[Any] = None,
+        host: str = "127.0.0.1",
+        port: int = 0,
+    ) -> None:
+        self.agg = aggregator
+        self.slots_by_pool = dict(slots_by_pool or {})
+        self.slo = slo
+        self.anomaly = anomaly
+        self.host = host
+        self.port = port
+        self._state = "starting"
+        self._state_t = time.monotonic()
+        self._t0 = time.monotonic()
+        self._lock = threading.Lock()
+        self._httpd: Optional[ThreadingHTTPServer] = None
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------- lifecycle
+    @property
+    def state(self) -> str:
+        with self._lock:
+            return self._state
+
+    def set_state(self, state: str) -> None:
+        if state not in _STATES:
+            raise ValueError(f"unknown ops state {state!r} (expected one of {_STATES})")
+        with self._lock:
+            if state != self._state:
+                logger.info("ops: state %s -> %s", self._state, state)
+                self._state = state
+                self._state_t = time.monotonic()
+
+    def start(self) -> "OpsServer":
+        if self._httpd is not None:
+            return self
+        server = self
+
+        class Handler(BaseHTTPRequestHandler):
+            def log_message(self, fmt: str, *args: Any) -> None:  # noqa: N802
+                logger.debug("ops: %s", fmt % args)
+
+            def do_GET(self) -> None:  # noqa: N802
+                try:
+                    server._route(self)
+                except BrokenPipeError:
+                    pass  # client went away mid-response
+                except Exception:  # noqa: BLE001 - one bad request must not kill serving
+                    logger.exception("ops request %s failed", self.path)
+                    try:
+                        self.send_error(500)
+                    except Exception:  # noqa: BLE001
+                        pass
+
+        self._httpd = ThreadingHTTPServer((self.host, self.port), Handler)
+        self._httpd.daemon_threads = True
+        self.port = self._httpd.server_address[1]
+        self._thread = threading.Thread(
+            target=self._httpd.serve_forever, kwargs={"poll_interval": 0.1},
+            daemon=True, name="ops-server",
+        )
+        self._thread.start()
+        logger.info("ops: serving on http://%s:%d", self.host, self.port)
+        return self
+
+    def stop(self) -> None:
+        httpd, self._httpd = self._httpd, None
+        if httpd is not None:
+            httpd.shutdown()
+            httpd.server_close()
+        if self._thread is not None:
+            self._thread.join(timeout=10)
+            self._thread = None
+
+    @property
+    def url(self) -> str:
+        return f"http://{self.host}:{self.port}"
+
+    def rebind(self, aggregator: Optional[MetricsAggregator]) -> None:
+        """Repoint at a fresh aggregator after ``rebind_event_log``."""
+        self.agg = aggregator
+
+    # --------------------------------------------------------------- routing
+    def _route(self, req: BaseHTTPRequestHandler) -> None:
+        path = req.path.split("?", 1)[0].rstrip("/") or "/"
+        if path == "/metrics":
+            if self.agg is None:
+                self._send(req, 503, "text/plain; charset=utf-8", "no aggregator\n")
+                return
+            text = self.agg.prometheus_text(slots_by_pool=self.slots_by_pool or None)
+            self._send(req, 200, "text/plain; version=0.0.4; charset=utf-8", text)
+        elif path == "/healthz":
+            state = self.state
+            code = 503 if state == "stopped" else 200
+            self._send_json(req, code, self._health_body(state))
+        elif path == "/readyz":
+            state = self.state
+            code = 200 if state == "ready" else 503
+            self._send_json(req, code, self._health_body(state))
+        elif path == "/snapshot":
+            if self.agg is None:
+                self._send_json(req, 503, {"error": "no aggregator"})
+                return
+            self._send_json(req, 200, self.agg.snapshot(slots_by_pool=self.slots_by_pool or None))
+        elif path == "/alerts":
+            self._send_json(req, 200, self._alerts_body())
+        elif path == "/":
+            self._send_json(req, 200, {
+                "state": self.state,
+                "endpoints": ["/metrics", "/healthz", "/readyz", "/snapshot", "/alerts"],
+            })
+        else:
+            self._send_json(req, 404, {"error": f"unknown path {path!r}"})
+
+    def _health_body(self, state: str) -> Dict[str, Any]:
+        now = time.monotonic()
+        with self._lock:
+            in_state_s = now - self._state_t
+        return {"state": state, "uptime_s": round(now - self._t0, 3),
+                "in_state_s": round(in_state_s, 3)}
+
+    def _alerts_body(self) -> Dict[str, Any]:
+        alerts: List[Dict[str, Any]] = []
+        firing: List[str] = []
+        if self.slo is not None:
+            alerts.extend(self.slo.alerts())
+            firing.extend(self.slo.firing())
+        if self.anomaly is not None:
+            alerts.extend(self.anomaly.alerts())
+            firing.extend(self.anomaly.firing())
+        return {"alerts": alerts, "firing": sorted(firing)}
+
+    # ---------------------------------------------------------------- output
+    @staticmethod
+    def _send(req: BaseHTTPRequestHandler, code: int, ctype: str, body: str) -> None:
+        data = body.encode("utf-8")
+        req.send_response(code)
+        req.send_header("Content-Type", ctype)
+        req.send_header("Content-Length", str(len(data)))
+        req.end_headers()
+        req.wfile.write(data)
+
+    @classmethod
+    def _send_json(cls, req: BaseHTTPRequestHandler, code: int, body: Dict[str, Any]) -> None:
+        cls._send(req, code, "application/json; charset=utf-8",
+                  json.dumps(body, indent=2, default=str) + "\n")
+
+
+__all__ = ["OpsServer"]

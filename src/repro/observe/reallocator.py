@@ -421,6 +421,36 @@ class ElasticScaler:
                 self.event_log.gauge("workers", new, pool=name)
         return changed
 
+    def pre_grow(self, pool: Optional[str] = None, n: Optional[int] = None,
+                 reason: str = "slo_alert") -> int:
+        """Grow the named pool (or every pool) by up to ``n`` slots
+        (default: the policy step) ahead of demand — the remediation
+        hook a firing backlog alert calls. Unlike ``step`` this does not
+        consult the queue: the alert already established the demand.
+        Returns the total number of slots actually added."""
+        step = self.policy.step if n is None else max(1, int(n))
+        grown = 0
+        targets = (
+            {pool: self.pools[pool]} if pool is not None and pool in self.pools
+            else self.pools
+        )
+        for name, p in targets.items():
+            spec = self.specs[name]
+            old = p.n_workers
+            target = spec.clamp(old + step)
+            if target == old:
+                continue
+            old, new = p.resize(target)
+            if new == old:
+                continue
+            self._sync_rec(name, old, new)
+            grown += new - old
+            self.resizes.append((time.monotonic(), name, old, new))
+            if self.event_log is not None:
+                self.event_log.pool_resize(name, old, new, reason=reason)
+                self.event_log.gauge("workers", new, pool=name)
+        return grown
+
     def _sync_rec(self, name: str, old: int, new: int) -> None:
         """Keep steering-slot capacity in step with the fleet. A shrink
         only removes *idle* slots (never yanks capacity out from under a

@@ -101,6 +101,21 @@ def build_report(
         }
     if agg.surrogate_events:
         report["surrogate"] = agg.surrogate_stats()
+    if agg.alert_events or agg.remediation_events:
+        alerts = agg.alert_stats()
+        report["alerts"] = {
+            "fired": alerts["fired"],
+            "resolved": alerts["resolved"],
+            "still_firing": alerts["firing"],
+            "remediations": alerts["remediations"],
+            "remediations_ok": alerts["remediations_ok"],
+            "timeline": [
+                {"t": round(ev.t, 6), "stage": ev.stage,
+                 "name": ev.info.get("name"), "severity": ev.info.get("severity"),
+                 "value": ev.value}
+                for ev in agg.alert_events
+            ],
+        }
     if agg.unknown_kinds:
         # Forward-compat: kinds this build of observe does not model are
         # surfaced (counted under event_kinds too) rather than dropped.
@@ -181,6 +196,15 @@ def render_text(report: dict) -> str:
         rg = f"  regret {regret[0]:.3f} -> {regret[-1]:.3f}" if regret else ""
         pol = f" [{sur['policy']}]" if sur.get("policy") else ""
         lines.append(f"surrogate:       {sur.get('retrains', 0)} retrain(s){cad}{rm}{rg}{pol}")
+    alerts = report.get("alerts")
+    if alerts:
+        still = alerts.get("still_firing") or []
+        tail = f", STILL FIRING: {', '.join(still)}" if still else ""
+        lines.append(
+            f"alerts:          {alerts.get('fired', 0)} fired, "
+            f"{alerts.get('resolved', 0)} resolved, "
+            f"{alerts.get('remediations', 0)} remediation(s){tail}"
+        )
     if report.get("unknown_kinds"):
         other = ", ".join(f"{k} x{n}" for k, n in sorted(report["unknown_kinds"].items()))
         lines.append(f"other events:    {other} (kinds unknown to this build)")

@@ -1,0 +1,507 @@
+"""Streaming SLO engine: declarative objectives, burn-rate alerting.
+
+An ``SLOSpec`` is a list of ``SLOObjective``s — "p99 task latency under
+1 s", "proc-pool utilization above 50%", "result-loss rate under 1%",
+"queue backlog under 100", "retrain cadence under budget" — each
+evaluated continuously against the live ``MetricsAggregator`` over a
+pair of sliding windows (Google-SRE multi-window burn-rate alerting):
+
+  * every sample is classified good/bad against the objective's
+    threshold; ``burn = bad_fraction / error_budget`` per window;
+  * the alert goes **pending** when the fast window (default 5 m) burns
+    hot, **firing** when the slow window (default 1 h) confirms it
+    (transient blips never page), and **resolved** once the fast window
+    cools below ``resolve_burn`` (hysteresis — no flapping);
+  * every transition is written into the ``EventLog`` as an ``alert``
+    event, so alerts appear in traces, reports, Prometheus, and the
+    JSONL record alongside the work they describe.
+
+Signals come from two places. *Event-driven* objectives (``latency``,
+``loss_rate``) sample from the aggregator's derived-sample stream — one
+good/bad observation per completed task, twin-deduped. *Tick-driven*
+objectives (``backlog``, ``utilization``, ``gauge``,
+``retrain_cadence``) are polled by the engine thread each
+``interval_s``. A ``latency`` objective with budget ``0.01`` is exactly
+a windowed p99 bound: at most 1% of tasks may exceed the threshold.
+
+``SLOEngine.on_fire`` registers auto-remediation handlers (match by
+objective name, signal, or ``"*"``), invoked once per pending→firing
+transition and recorded as ``remediation`` events — the closed
+observe→steer loop the paper argues for.
+"""
+
+from __future__ import annotations
+
+import logging
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple
+
+from .events import EventLog
+from .metrics import MetricsAggregator
+
+logger = logging.getLogger("repro.observe.slo")
+
+_SIGNALS = ("latency", "loss_rate", "backlog", "utilization", "gauge", "retrain_cadence")
+# Tick-driven signals are polled; the rest stream from the aggregator.
+_TICK_SIGNALS = frozenset(("backlog", "utilization", "gauge", "retrain_cadence"))
+
+
+@dataclass
+class SLOObjective:
+    """One declarative objective.
+
+    ``kind="ceiling"`` means values above ``threshold`` are bad;
+    ``"floor"`` means values below it are. ``budget`` is the tolerated
+    bad fraction (for ``loss_rate`` the threshold *is* the budget —
+    "loss rate under threshold" is already a fraction). ``pool`` /
+    ``method`` / ``gauge`` scope the signal; ``min_samples`` keeps a
+    near-empty window from alerting on noise.
+    """
+
+    name: str
+    signal: str
+    threshold: float = 0.0
+    kind: str = "ceiling"
+    pool: Optional[str] = None
+    method: Optional[str] = None
+    gauge: Optional[str] = None
+    budget: float = 0.1
+    fast_window_s: float = 300.0
+    slow_window_s: float = 3600.0
+    burn_threshold: float = 1.0
+    resolve_burn: float = 0.5
+    min_samples: int = 5
+    severity: str = "page"
+
+    def __post_init__(self) -> None:
+        if self.signal not in _SIGNALS:
+            raise ValueError(f"SLO {self.name!r}: unknown signal {self.signal!r} "
+                             f"(expected one of {_SIGNALS})")
+        if self.kind not in ("ceiling", "floor"):
+            raise ValueError(f"SLO {self.name!r}: kind must be 'ceiling' or 'floor'")
+        if self.signal == "gauge" and not self.gauge:
+            raise ValueError(f"SLO {self.name!r}: signal='gauge' requires a gauge name")
+        if self.signal == "loss_rate" and not (0.0 < self.threshold <= 1.0):
+            raise ValueError(f"SLO {self.name!r}: loss_rate threshold is a fraction in (0, 1]")
+        if not (0.0 < self.budget <= 1.0):
+            raise ValueError(f"SLO {self.name!r}: budget must be in (0, 1]")
+        if self.fast_window_s >= self.slow_window_s:
+            raise ValueError(f"SLO {self.name!r}: fast window must be shorter than slow")
+
+    @property
+    def effective_budget(self) -> float:
+        return self.threshold if self.signal == "loss_rate" else self.budget
+
+    def violated(self, value: float) -> bool:
+        return value > self.threshold if self.kind == "ceiling" else value < self.threshold
+
+    def to_dict(self) -> Dict[str, Any]:
+        d: Dict[str, Any] = {
+            "name": self.name, "signal": self.signal, "threshold": self.threshold,
+            "kind": self.kind, "budget": self.budget,
+            "fast_window_s": self.fast_window_s, "slow_window_s": self.slow_window_s,
+            "burn_threshold": self.burn_threshold, "resolve_burn": self.resolve_burn,
+            "min_samples": self.min_samples, "severity": self.severity,
+        }
+        for k in ("pool", "method", "gauge"):
+            if getattr(self, k) is not None:
+                d[k] = getattr(self, k)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "SLOObjective":
+        return cls(**dict(d))
+
+
+def default_objectives() -> List[SLOObjective]:
+    """A sane starter set for an ``[observe.slo]`` table with no explicit
+    objectives: p99-style latency, loss rate, and backlog ceilings."""
+    return [
+        SLOObjective(name="task-latency", signal="latency", threshold=1.0,
+                     budget=0.01, severity="page"),
+        SLOObjective(name="result-loss", signal="loss_rate", threshold=0.01,
+                     severity="page"),
+        SLOObjective(name="queue-backlog", signal="backlog", threshold=100.0,
+                     budget=0.1, severity="ticket"),
+    ]
+
+
+@dataclass
+class SLOSpec:
+    """A bag of objectives plus the engine's evaluation cadence."""
+
+    objectives: List[SLOObjective] = field(default_factory=default_objectives)
+    interval_s: float = 0.25
+
+    @classmethod
+    def from_any(cls, value: Any) -> "SLOSpec":
+        """Normalize spec-file shapes: ``True``/``{}`` → defaults, a list
+        of objective dicts, or a full ``{"objectives": [...]}`` mapping."""
+        if isinstance(value, cls):
+            return value
+        if value is True or value is None:
+            return cls()
+        if isinstance(value, (list, tuple)):
+            return cls(objectives=[_norm_objective(o) for o in value])
+        if isinstance(value, Mapping):
+            d = dict(value)
+            objectives = d.pop("objectives", None)
+            spec = cls(interval_s=float(d.pop("interval_s", 0.25)))
+            if d:
+                raise ValueError(f"unknown SLO spec keys: {sorted(d)}")
+            if objectives is not None:
+                spec.objectives = [_norm_objective(o) for o in objectives]
+            return spec
+        raise ValueError(f"cannot build SLOSpec from {type(value).__name__}")
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"interval_s": self.interval_s,
+                "objectives": [o.to_dict() for o in self.objectives]}
+
+
+def _norm_objective(o: Any) -> SLOObjective:
+    if isinstance(o, SLOObjective):
+        return o
+    if isinstance(o, Mapping):
+        return SLOObjective.from_dict(o)
+    raise ValueError(f"cannot build SLOObjective from {type(o).__name__}")
+
+
+class _BurnWindow:
+    """Sliding window of (t, bad) observations with an O(1) burn query."""
+
+    def __init__(self, horizon_s: float) -> None:
+        self.horizon_s = horizon_s
+        self._q: "deque[Tuple[float, bool]]" = deque()
+        self._bad = 0
+
+    def add(self, t: float, bad: bool) -> None:
+        self._q.append((t, bad))
+        if bad:
+            self._bad += 1
+
+    def _evict(self, now: float) -> None:
+        cutoff = now - self.horizon_s
+        q = self._q
+        while q and q[0][0] < cutoff:
+            _, bad = q.popleft()
+            if bad:
+                self._bad -= 1
+
+    def burn(self, now: float, budget: float, min_samples: int) -> Optional[float]:
+        """bad_fraction / budget, or None when the window is too thin."""
+        self._evict(now)
+        n = len(self._q)
+        if n < max(1, min_samples):
+            return None
+        return (self._bad / n) / budget
+
+    def clear(self) -> None:
+        self._q.clear()
+        self._bad = 0
+
+
+class _ObjectiveState:
+    def __init__(self, obj: SLOObjective) -> None:
+        self.obj = obj
+        self.fast = _BurnWindow(obj.fast_window_s)
+        self.slow = _BurnWindow(obj.slow_window_s)
+        self.state = "ok"
+        self.since: Optional[float] = None       # entered current state
+        self.last_fired_t: Optional[float] = None
+        self.fired_count = 0
+        self.resolved_count = 0
+        self.value: Optional[float] = None       # last raw signal reading
+        self.fast_burn: Optional[float] = None
+        self.slow_burn: Optional[float] = None
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "name": self.obj.name, "signal": self.obj.signal,
+            "severity": self.obj.severity, "state": self.state,
+            "threshold": self.obj.threshold, "kind": self.obj.kind,
+            "pool": self.obj.pool, "value": self.value,
+            "fast_burn": self.fast_burn, "slow_burn": self.slow_burn,
+            "since": self.since, "fired_count": self.fired_count,
+            "resolved_count": self.resolved_count,
+        }
+
+
+class SLOEngine:
+    """Evaluate an ``SLOSpec`` against live metrics; alert and remediate.
+
+    The engine shares a ``MetricsAggregator`` with the exporter/ops
+    server (or builds its own from the log), registers a derived-sample
+    listener for event-driven objectives, and runs a daemon tick thread
+    for polled ones. ``transitions`` records every state change
+    (including silent pending→ok de-escalations) for post-hoc gates.
+    """
+
+    def __init__(
+        self,
+        log: Optional[EventLog],
+        spec: Any = None,
+        aggregator: Optional[MetricsAggregator] = None,
+        slots_by_pool: Optional[Dict[str, int]] = None,
+        anomaly: Optional[Any] = None,
+        clock: Callable[[], float] = time.monotonic,
+    ) -> None:
+        self.log = log
+        self.spec = SLOSpec.from_any(spec)
+        self.agg = aggregator if aggregator is not None else MetricsAggregator(log)
+        self.slots_by_pool = dict(slots_by_pool or {})
+        self.anomaly = anomaly
+        self._clock = clock
+        self._lock = threading.Lock()
+        self._states = [_ObjectiveState(o) for o in self.spec.objectives]
+        self.transitions: List[Dict[str, Any]] = []
+        self._handlers: List[Tuple[str, Callable[[Dict[str, Any]], Any], str]] = []
+        self.remediations_run = 0
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self.agg.add_listener(self._on_sample)
+
+    # ----------------------------------------------------------- remediation
+    def on_fire(self, selector: str, fn: Callable[[Dict[str, Any]], Any],
+                label: Optional[str] = None) -> None:
+        """Register a remediation handler. ``selector`` matches the
+        objective's name, its signal, or ``"*"``; the handler receives
+        the alert dict on each pending→firing transition."""
+        self._handlers.append((selector, fn, label or getattr(fn, "__name__", "handler")))
+
+    def _remediate(self, st: _ObjectiveState) -> None:
+        alert = st.to_dict()
+        for selector, fn, label in self._handlers:
+            if selector not in ("*", st.obj.name, st.obj.signal):
+                continue
+            ok, detail = True, None
+            try:
+                detail = fn(alert)
+            except Exception as exc:  # noqa: BLE001 - a broken handler must not kill the engine
+                ok, detail = False, f"{type(exc).__name__}: {exc}"
+                logger.exception("remediation %s for alert %s raised", label, st.obj.name)
+            self.remediations_run += 1
+            if self.log is not None:
+                self.log.remediation(label, alert=st.obj.name, ok=ok,
+                                     pool=st.obj.pool, detail=detail)
+
+    # ------------------------------------------------------------- sampling
+    def _on_sample(self, sample: Dict[str, object]) -> None:
+        kind = sample.get("type")
+        with self._lock:
+            for st in self._states:
+                obj = st.obj
+                if obj.signal == "latency" and kind == "latency":
+                    if obj.method is not None and sample.get("method") != obj.method:
+                        continue
+                    if obj.pool is not None and sample.get("pool") != obj.pool:
+                        continue
+                    seconds = float(sample["seconds"])  # type: ignore[arg-type]
+                    st.value = seconds
+                    bad = obj.violated(seconds)
+                elif obj.signal == "loss_rate" and kind == "delivery":
+                    if obj.method is not None and sample.get("method") != obj.method:
+                        continue
+                    if obj.pool is not None and sample.get("pool") != obj.pool:
+                        continue
+                    bad = not bool(sample.get("ok", True))
+                else:
+                    continue
+                t = float(sample.get("t") or self._clock())
+                st.fast.add(t, bad)
+                st.slow.add(t, bad)
+
+    def _sample_value(self, obj: SLOObjective) -> Optional[float]:
+        """Current reading for a tick-driven objective (None = no data,
+        skip this tick — an empty system is neither good nor bad)."""
+        if obj.signal == "backlog":
+            if obj.pool is not None:
+                return float(self.agg.backlog(obj.pool))
+            pools = self.agg.pool_stats()
+            return float(max((st.backlog for st in pools.values()), default=0))
+        if obj.signal == "utilization":
+            return self._utilization_value(obj)
+        if obj.signal == "gauge":
+            by_pool = self.agg.gauges().get(obj.gauge or "")
+            if not by_pool:
+                return None
+            if obj.pool is not None:
+                return by_pool.get(obj.pool)
+            if len(by_pool) == 1:
+                return next(iter(by_pool.values()))
+            vals = by_pool.values()
+            return max(vals) if obj.kind == "ceiling" else min(vals)
+        if obj.signal == "retrain_cadence":
+            with self.agg._lock:
+                retrains = [ev.t for ev in self.agg.surrogate_events if ev.stage == "retrain"]
+            if not retrains:
+                return None
+            return self._clock() - retrains[-1]
+        return None
+
+    def _utilization_value(self, obj: SLOObjective) -> Optional[float]:
+        """Instantaneous busy fraction (running / capacity). Sampled only
+        while the scoped pools have outstanding work — an idle tail must
+        not breach a utilization floor."""
+        pools = self.agg.pool_stats()
+        gauges = self.agg.gauges()
+        names = [obj.pool] if obj.pool is not None else sorted(pools)
+        worst: Optional[float] = None
+        outstanding = 0
+        for name in names:
+            st = pools.get(name)
+            if st is None:
+                continue
+            outstanding += st.backlog + st.running
+            cap = (gauges.get("workers", {}).get(name)
+                   or gauges.get("slots", {}).get(name)
+                   or self.slots_by_pool.get(name))
+            if not cap:
+                continue
+            frac = st.running / float(cap)
+            worst = frac if worst is None else min(worst, frac)
+        if outstanding == 0:
+            return None
+        return worst
+
+    # ----------------------------------------------------------------- tick
+    def tick(self, now: Optional[float] = None) -> None:
+        now = self._clock() if now is None else now
+        with self._lock:
+            for st in self._states:
+                obj = st.obj
+                if obj.signal in _TICK_SIGNALS:
+                    value = self._sample_value(obj)
+                    if value is not None:
+                        st.value = value
+                        bad = obj.violated(value)
+                        st.fast.add(now, bad)
+                        st.slow.add(now, bad)
+                self._advance(st, now)
+        if self.anomaly is not None:
+            self.anomaly.tick(now)
+
+    def _advance(self, st: _ObjectiveState, now: float) -> None:
+        obj = st.obj
+        budget = obj.effective_budget
+        st.fast_burn = st.fast.burn(now, budget, obj.min_samples)
+        st.slow_burn = st.slow.burn(now, budget, obj.min_samples)
+        hot_fast = st.fast_burn is not None and st.fast_burn >= obj.burn_threshold
+        hot_slow = st.slow_burn is not None and st.slow_burn >= obj.burn_threshold
+        # Cooling is judged on the fast window alone (hysteresis via
+        # resolve_burn); a drained window (no recent samples) is cool —
+        # no data means no ongoing violation.
+        cool = st.fast_burn is None or st.fast_burn < obj.resolve_burn * obj.burn_threshold
+        if st.state == "ok":
+            if hot_fast and hot_slow:
+                self._transition(st, "firing", now)
+            elif hot_fast:
+                self._transition(st, "pending", now)
+        elif st.state == "pending":
+            if hot_fast and hot_slow:
+                self._transition(st, "firing", now)
+            elif cool:
+                self._transition(st, "ok", now, emit=False)
+        elif st.state == "firing":
+            if cool:
+                self._transition(st, "ok", now)
+
+    def _transition(self, st: _ObjectiveState, to: str, now: float, emit: bool = True) -> None:
+        obj = st.obj
+        frm, st.state = st.state, to
+        duration = (now - st.since) if st.since is not None else None
+        st.since = now
+        rec: Dict[str, Any] = {"t": now, "name": obj.name, "from": frm, "to": to,
+                               "value": st.value, "fast_burn": st.fast_burn,
+                               "slow_burn": st.slow_burn}
+        if to == "firing":
+            st.fired_count += 1
+            st.last_fired_t = now
+        elif frm == "firing":
+            st.resolved_count += 1
+            if st.last_fired_t is not None:
+                rec["firing_s"] = now - st.last_fired_t
+        self.transitions.append(rec)
+        stage = {"firing": "firing", "pending": "pending"}.get(to, "resolved")
+        if emit and self.log is not None:
+            info: Dict[str, Any] = {"signal": obj.signal, "threshold": obj.threshold,
+                                    "from": frm}
+            if st.fast_burn is not None:
+                info["fast_burn"] = round(st.fast_burn, 4)
+            if st.slow_burn is not None:
+                info["slow_burn"] = round(st.slow_burn, 4)
+            if "firing_s" in rec:
+                info["firing_s"] = round(rec["firing_s"], 6)
+            self.log.alert(stage, obj.name, value=st.value,
+                           severity=obj.severity, pool=obj.pool, **info)
+        logger.info("slo: %s %s -> %s (value=%s fast=%s slow=%s)",
+                    obj.name, frm, to, st.value, st.fast_burn, st.slow_burn)
+        if to == "firing":
+            self._remediate(st)
+
+    # ------------------------------------------------------------ accessors
+    def alerts(self) -> List[Dict[str, Any]]:
+        with self._lock:
+            return [st.to_dict() for st in self._states]
+
+    def firing(self) -> List[str]:
+        with self._lock:
+            return [st.obj.name for st in self._states if st.state == "firing"]
+
+    def settle(self, timeout_s: float = 5.0, poll_s: Optional[float] = None) -> bool:
+        """Tick until nothing is firing (or timeout). Call after a run's
+        work drains so resolution events land before teardown."""
+        poll = poll_s if poll_s is not None else max(0.01, self.spec.interval_s)
+        deadline = self._clock() + timeout_s
+        while True:
+            self.tick()
+            if not self.firing():
+                return True
+            if self._clock() >= deadline:
+                return False
+            time.sleep(poll)
+
+    # ------------------------------------------------------------ lifecycle
+    def start(self) -> "SLOEngine":
+        if self._thread is not None:
+            return self
+        self._stop.clear()
+        self._thread = threading.Thread(target=self._loop, daemon=True, name="slo-engine")
+        self._thread.start()
+        return self
+
+    def _loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                self.tick()
+            except Exception:  # noqa: BLE001 - the evaluator must outlive bad samples
+                logger.exception("slo tick failed")
+            self._stop.wait(self.spec.interval_s)
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=10)
+            self._thread = None
+
+    def rebind(self, log: Optional[EventLog],
+               aggregator: Optional[MetricsAggregator] = None) -> None:
+        """Repoint at a fresh log/aggregator (checkpoint resume): windows
+        and alert states reset — the old log's history is another run."""
+        with self._lock:
+            self.log = log
+            self._states = [_ObjectiveState(o) for o in self.spec.objectives]
+        self.agg.remove_listener(self._on_sample)
+        self.agg = aggregator if aggregator is not None else MetricsAggregator(log)
+        self.agg.add_listener(self._on_sample)
+
+
+__all__ = [
+    "SLOObjective",
+    "SLOSpec",
+    "SLOEngine",
+    "default_objectives",
+]

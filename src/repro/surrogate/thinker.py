@@ -44,6 +44,31 @@ from .acquisition import AcquisitionPolicy
 from .ensemble import DeepEnsemble, EnsembleConfig, _pad_pow2
 
 
+def adaptive_retrain_after(
+    current: int,
+    duration_s: float,
+    throughput_tps: float,
+    budget: float,
+    lo: int = 4,
+    hi: int = 4096,
+) -> int:
+    """Retrain cadence (results between retrains) that pins the fraction
+    of wall time spent training at ``budget``.
+
+    With retrains costing ``duration_s`` and simulations landing at
+    ``throughput_tps``, one train/simulate cycle spends
+    ``duration_s / (duration_s + cadence/throughput)`` of its wall time
+    training; solving that for ``budget`` gives
+    ``cadence = duration_s * throughput * (1 - budget) / budget``.
+    Invalid observations (no throughput yet, instant retrain) keep the
+    current cadence; the result is clamped to ``[lo, hi]``.
+    """
+    if not (0.0 < budget < 1.0) or duration_s <= 0.0 or throughput_tps <= 0.0:
+        return current
+    target = duration_s * throughput_tps * (1.0 - budget) / budget
+    return max(lo, min(hi, int(round(target)) or lo))
+
+
 class ActiveLearningThinker(BatchRetrainThinker):
     """Steer a fixed candidate pool with an online-retrained ensemble.
 
@@ -58,6 +83,11 @@ class ActiveLearningThinker(BatchRetrainThinker):
         2x ``retrain_after`` so the queue never starves between retrains).
     :param optimum_value: optional known/approximate optimum, enabling
         acquisition-regret telemetry.
+    :param retrain_budget: optional target fraction (0, 1) of wall time
+        spent retraining; when set, ``retrain_after`` adapts after every
+        retrain from its observed cost vs. simulate throughput
+        (``adaptive_retrain_after``), and the observed fraction is
+        gauged as ``retrain_budget``. ``None`` keeps the fixed cadence.
     """
 
     def __init__(
@@ -75,6 +105,7 @@ class ActiveLearningThinker(BatchRetrainThinker):
         train_slots: int = 1,
         select_horizon: Optional[int] = None,
         optimum_value: Optional[float] = None,
+        retrain_budget: Optional[float] = None,
         seed: int = 0,
     ) -> None:
         super().__init__(
@@ -91,6 +122,11 @@ class ActiveLearningThinker(BatchRetrainThinker):
         self.train_slots = train_slots
         self.select_horizon = select_horizon or 2 * retrain_after
         self.optimum_value = optimum_value
+        if retrain_budget is not None and not (0.0 < retrain_budget < 1.0):
+            raise ValueError(f"retrain_budget must be in (0, 1), got {retrain_budget}")
+        self.retrain_budget = retrain_budget
+        self._first_result_t: Optional[float] = None
+        self._train_seconds = 0.0
         self._rng = np.random.default_rng(seed)
         self._al_lock = threading.Lock()
         self._visited: set = set()
@@ -160,6 +196,8 @@ class ActiveLearningThinker(BatchRetrainThinker):
         x = np.asarray(result.args[0], np.float32)
         y = float(result.value)
         with self._al_lock:
+            if self._first_result_t is None:
+                self._first_result_t = time.monotonic()
             self._X.append(x)
             self._y.append(y)
             self._best = max(self._best, y)
@@ -190,11 +228,14 @@ class ActiveLearningThinker(BatchRetrainThinker):
                 return
             metrics = self.ensemble.fit(X, y, warm_start=True)
             self.train_rounds += 1
+            duration = time.monotonic() - t0
+            self._train_seconds += duration
             if log is not None:
                 log.surrogate_event(
                     "retrain", value=metrics["rmse"], round=self.train_rounds,
-                    n=metrics["n"], duration_s=round(time.monotonic() - t0, 6),
+                    n=metrics["n"], duration_s=round(duration, 6),
                 )
+            self._adapt_cadence(duration, len(y), log)
             self._rerank(log)
         finally:
             if moved:
@@ -203,6 +244,23 @@ class ActiveLearningThinker(BatchRetrainThinker):
                 if log is not None:
                     log.realloc("ml", "simulate", self.train_slots,
                                 reason="retrain_done")
+
+    def _adapt_cadence(self, duration_s: float, n_results: int,
+                       log: Optional[Any]) -> None:
+        """Budget-aware cadence: after each retrain, re-derive
+        ``retrain_after`` from the observed retrain cost and simulate
+        throughput so training stays near its wall-time budget."""
+        if self.retrain_budget is None:
+            return
+        with self._al_lock:
+            first_t = self._first_result_t
+        elapsed = time.monotonic() - first_t if first_t is not None else 0.0
+        throughput = n_results / elapsed if elapsed > 0 else 0.0
+        self.retrain_after = adaptive_retrain_after(
+            self.retrain_after, duration_s, throughput, self.retrain_budget)
+        if log is not None and elapsed > 0:
+            log.gauge("retrain_budget", self._train_seconds / elapsed)
+            log.gauge("retrain_after", float(self.retrain_after))
 
     def _rerank(self, log: Optional[Any] = None) -> None:
         """Jointly select the next batch of candidates from the freshly
@@ -244,6 +302,8 @@ class ActiveLearningThinker(BatchRetrainThinker):
                 "train_rounds": self.train_rounds,
                 "new_since_train": self._new_since_train,
                 "total": self._total,
+                "retrain_after": self.retrain_after,
+                "train_seconds": self._train_seconds,
                 "ensemble": self.ensemble.state_dict(),
                 "rng": self._rng.bit_generator.state,
             }
@@ -260,6 +320,9 @@ class ActiveLearningThinker(BatchRetrainThinker):
             self.train_rounds = state["train_rounds"]
             self._new_since_train = state["new_since_train"]
             self._total = state["total"]
+            # Adapted cadence survives resume (older checkpoints lack it).
+            self.retrain_after = state.get("retrain_after", self.retrain_after)
+            self._train_seconds = state.get("train_seconds", self._train_seconds)
             self._rng.bit_generator.state = state["rng"]
         self.ensemble.load_state_dict(state["ensemble"])
 
@@ -285,6 +348,7 @@ def run_active_campaign(
     *,
     n_slots: int = 4,
     retrain_after: Optional[int] = None,
+    retrain_budget: Optional[float] = None,
     n_candidates: int = 512,
     seed: int = 0,
     ensemble: Optional[DeepEnsemble] = None,
@@ -331,6 +395,7 @@ def run_active_campaign(
             candidates=candidates,
             n_slots=n_slots,
             retrain_after=retrain_after or max(8, budget // 5),
+            retrain_budget=retrain_budget,
             max_results=budget,
             ml_slots=1,
             optimum_value=scenario.optimum_value,
@@ -359,4 +424,9 @@ def run_active_campaign(
     }
 
 
-__all__ = ["ActiveLearningThinker", "campaign_ensemble_config", "run_active_campaign"]
+__all__ = [
+    "ActiveLearningThinker",
+    "adaptive_retrain_after",
+    "campaign_ensemble_config",
+    "run_active_campaign",
+]

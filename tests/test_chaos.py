@@ -304,3 +304,72 @@ class TestSoakEndToEnd:
         assert res.metrics["resume_drills"] == 1
         drill = next(f for f in res.fired if f.action.kind == "corrupt_checkpoint")
         assert drill.ok and drill.detail["fell_back"] and drill.detail["subset"]
+
+
+class TestPartitionFault:
+    def test_partition_drops_requests_and_holds_results(self):
+        """During a partition nothing crosses in either direction: requests
+        are dropped, finished results are held (delivered after heal)."""
+        q = ChaosLocalQueues(chaos=ChaosLink(seed=3))
+        server = TaskServer(q, {"f": lambda x: x}, n_workers=1).start()
+        # A result finished before the cut is *held*, not lost.
+        q.send_inputs(1, method="f")
+        time.sleep(0.3)
+        q.chaos.enable_partition(duration_s=0.5)
+        assert q.get_result(timeout=0.1) is None
+        # A request sent during the cut is dropped on the floor.
+        q.send_inputs(2, method="f")
+        assert q.chaos.partition_drops == 1
+        # After heal the buffered result arrives; the dropped one never does.
+        time.sleep(0.5)
+        r = q.get_result(timeout=5)
+        assert r is not None and r.value == 1
+        assert q.get_result(timeout=0.3) is None
+        server.stop()
+
+    def test_disable_heals_partition_immediately(self):
+        link = ChaosLink()
+        link.enable_partition(duration_s=60.0)
+        assert link.partitioned()
+        link.disable()
+        assert not link.partitioned()
+
+    def test_partition_window_inert_after_pickle(self):
+        import pickle
+
+        link = ChaosLink()
+        link.enable_partition(duration_s=60.0)
+        clone = pickle.loads(pickle.dumps(link))
+        assert not clone.partitioned()  # the child-side copy starts healed
+
+    def test_kill_sentinel_crosses_a_partition(self):
+        """Shutdown must survive a partition: the kill sentinel is never
+        dropped, so a server stop during a cut still terminates."""
+        q = ChaosLocalQueues(chaos=ChaosLink())
+        server = TaskServer(q, {"f": lambda x: x}, n_workers=1).start()
+        q.chaos.enable_partition(duration_s=30.0)
+        t0 = time.monotonic()
+        server.stop()
+        assert time.monotonic() - t0 < 10.0
+
+
+class TestSoakSLOGate:
+    def test_slo_soak_fires_and_resolves_partition_alert(self):
+        """The observe->steer loop under fire at test scale: a SIGKILL plus
+        a partition must drive the burn-rate engine through fire AND
+        resolve, with the remediation handlers recorded in the log."""
+        sched = ChaosSchedule([
+            ChaosAction(kind="kill_site", at_frac=0.2, params={"site": "proc"}, scope="proc"),
+            ChaosAction(kind="partition", at_frac=0.4, params={"duration_s": 0.6}, scope="proc"),
+        ])
+        cfg = SoakConfig(n_tasks=2000, deadline_s=120, recovery_bound_s=30.0,
+                         slo=True, seed=11)
+        res = SoakHarness(cfg, sched).run()
+        assert res.report.ok, res.report.violations
+        assert res.metrics["alerts_fired"] >= 1
+        assert res.metrics["alerts_resolved"] == res.metrics["alerts_fired"]
+        assert res.metrics["alerts_unresolved"] == 0
+        assert res.metrics["max_alert_resolve_s"] <= cfg.alert_resolve_bound_s
+        part = next(f for f in res.fired if f.action.kind == "partition")
+        assert part.ok and part.detail["deferred"] in (True, False)
+        assert res.metrics["remediations"] >= 1

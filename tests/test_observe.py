@@ -623,6 +623,42 @@ class TestMetricsExport:
         snap = json.loads((tmp_path / "snapshot.json").read_text())
         assert snap["methods"]["work"]["count"] == 2
 
+    def test_exporter_rebind_no_double_count(self, tmp_path):
+        """After ``rebind`` the exporter must aggregate only the new log:
+        late events still arriving on the old one are another run's."""
+        from repro.observe import ExportSpec, MetricsExporter
+
+        log1 = EventLog()
+        _run_tasks(log1, n_tasks=4)
+        exporter = MetricsExporter(log1, spec=ExportSpec(dir=str(tmp_path)))
+        exporter.write_once()
+        assert json.loads((tmp_path / "snapshot.json").read_text())[
+            "methods"]["work"]["count"] == 4
+        log2 = EventLog()
+        exporter.rebind(log2)
+        _run_tasks(log1, n_tasks=5)  # late arrivals on the old log: ignored
+        _run_tasks(log2, n_tasks=2)
+        exporter.write_once()
+        snap = json.loads((tmp_path / "snapshot.json").read_text())
+        assert snap["methods"]["work"]["count"] == 2
+
+    def test_jsonl_rotation_no_double_count(self, tmp_path):
+        """Every event lands in exactly one rotated generation — loading
+        all generations back recovers each task lifecycle exactly once."""
+        from repro.observe.trace import load_jsonl
+
+        path = tmp_path / "ev.jsonl"
+        log = EventLog(jsonl_path=str(path), rotate_bytes=4096, rotate_keep=8)
+        _, results = _run_tasks(log, n_tasks=24)
+        assert all(r.success for r in results)
+        log.close()
+        generations = sorted(tmp_path.glob("ev.jsonl*"))
+        assert len(generations) >= 2, "rotation never triggered"
+        events = [ev for g in generations for ev in load_jsonl(str(g))]
+        received = [ev for ev in events if ev.stage == "result_received"]
+        assert len(received) == 24
+        assert len({ev.task_id for ev in received}) == 24
+
     def test_observe_spec_export_knob(self, tmp_path):
         from repro.app import AppSpec, ColmenaApp, ObserveSpec
 

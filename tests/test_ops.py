@@ -1,0 +1,511 @@
+"""Tests for the live ops plane: the streaming SLO engine's multi-window
+burn-rate state machine (fake clock), alert-driven auto-remediation, the
+EWMA/z-score anomaly detector, the stdlib HTTP ops server (endpoints +
+lifecycle), app-level wiring, spec-file round-trips of the new observe
+knobs, and the budget-aware retrain cadence."""
+
+import json
+import urllib.request
+
+import pytest
+
+from repro.observe import (
+    AnomalyDetector,
+    AnomalySpec,
+    EventLog,
+    MetricsAggregator,
+    OpsServer,
+    SLOEngine,
+    SLOObjective,
+    SLOSpec,
+)
+from repro.observe.slo import _BurnWindow, default_objectives
+
+
+def _get(url, timeout=10):
+    with urllib.request.urlopen(url, timeout=timeout) as resp:
+        return resp.status, resp.read().decode("utf-8")
+
+
+def _get_code(url, timeout=10):
+    try:
+        return _get(url, timeout=timeout)[0]
+    except urllib.error.HTTPError as err:
+        return err.code
+
+
+class _FakeClock:
+    def __init__(self, t=0.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+
+class TestBurnWindow:
+    def test_burn_is_bad_fraction_over_budget(self):
+        w = _BurnWindow(horizon_s=10.0)
+        for t, bad in ((0.0, True), (1.0, False), (2.0, True), (3.0, True)):
+            w.add(t, bad)
+        assert w.burn(now=3.0, budget=0.5, min_samples=1) == pytest.approx(1.5)
+
+    def test_eviction_and_min_samples(self):
+        w = _BurnWindow(horizon_s=1.0)
+        w.add(0.0, True)
+        w.add(0.5, True)
+        assert w.burn(now=0.5, budget=1.0, min_samples=3) is None  # too thin
+        assert w.burn(now=5.0, budget=1.0, min_samples=1) is None  # all evicted
+
+
+class TestSLOStateMachine:
+    """Drive the engine tick-by-tick on a fake clock via a gauge signal."""
+
+    def _engine(self, clock, **obj_kwargs):
+        log = EventLog()
+        obj = SLOObjective(
+            name="qdepth", signal="gauge", gauge="qdepth", threshold=10.0,
+            kind="ceiling", budget=0.4, fast_window_s=1.0, slow_window_s=10.0,
+            min_samples=2, **obj_kwargs,
+        )
+        eng = SLOEngine(log, SLOSpec(objectives=[obj], interval_s=0.05),
+                        clock=clock)
+        return log, eng
+
+    def _feed(self, log, eng, t, value):
+        log.gauge("qdepth", value)
+        eng.tick(now=t)
+
+    def test_pending_firing_resolved_lifecycle(self):
+        clock = _FakeClock()
+        log, eng = self._engine(clock)
+        # Seed the slow window with good samples so the fast window can
+        # burn hot while the slow one stays diluted (pending, not firing).
+        for i in range(6):
+            self._feed(log, eng, float(i), 1.0)
+        for t in (9.5, 9.6, 9.7):
+            self._feed(log, eng, t, 100.0)
+        assert [tr["to"] for tr in eng.transitions] == ["pending"]
+        assert eng.firing() == []
+        # More bad samples push the slow window hot too: firing.
+        for t in (10.0, 10.5, 11.0):
+            self._feed(log, eng, t, 100.0)
+        assert eng.firing() == ["qdepth"]
+        # Good samples drain the fast window below resolve_burn: resolved.
+        for t in (12.0, 12.2, 12.4):
+            self._feed(log, eng, t, 1.0)
+        assert eng.firing() == []
+        edges = [(tr["from"], tr["to"]) for tr in eng.transitions]
+        assert edges == [("ok", "pending"), ("pending", "firing"), ("firing", "ok")]
+        fired, resolve = eng.transitions[1], eng.transitions[-1]
+        assert resolve["firing_s"] == pytest.approx(resolve["t"] - fired["t"])
+        stages = [ev.stage for ev in log.events() if ev.kind == "alert"]
+        assert stages == ["pending", "firing", "resolved"]
+
+    def test_transient_blip_never_pages(self):
+        clock = _FakeClock()
+        log, eng = self._engine(clock)
+        for i in range(8):
+            self._feed(log, eng, float(i), 1.0)
+        for t in (9.5, 9.6):  # brief spike: fast hot, slow still cool
+            self._feed(log, eng, t, 100.0)
+        assert [tr["to"] for tr in eng.transitions] == ["pending"]
+        for t in (11.0, 11.2, 11.4):  # recovery before the slow window heats
+            self._feed(log, eng, t, 1.0)
+        edges = [(tr["from"], tr["to"]) for tr in eng.transitions]
+        assert edges == [("ok", "pending"), ("pending", "ok")]
+        # The de-escalation is silent: no resolved alert for a pending blip.
+        stages = [ev.stage for ev in log.events() if ev.kind == "alert"]
+        assert stages == ["pending"]
+
+    def test_floor_objective_fires_on_low_values(self):
+        clock = _FakeClock()
+        log = EventLog()
+        obj = SLOObjective(
+            name="util-floor", signal="gauge", gauge="util", threshold=0.5,
+            kind="floor", budget=0.4, fast_window_s=1.0, slow_window_s=10.0,
+            min_samples=2,
+        )
+        eng = SLOEngine(log, SLOSpec(objectives=[obj]), clock=clock)
+        for t in (0.0, 0.2, 0.4, 0.6):
+            log.gauge("util", 0.1)
+            eng.tick(now=t)
+        assert eng.firing() == ["util-floor"]
+
+    def test_min_samples_gates_thin_windows(self):
+        clock = _FakeClock()
+        log, eng = self._engine(clock)
+        self._feed(log, eng, 0.0, 100.0)  # one bad sample < min_samples=2
+        assert eng.transitions == []
+
+    def test_alerts_accessor_shape(self):
+        clock = _FakeClock()
+        log, eng = self._engine(clock)
+        (alert,) = eng.alerts()
+        assert alert["name"] == "qdepth" and alert["state"] == "ok"
+        assert alert["signal"] == "gauge" and alert["threshold"] == 10.0
+
+    def test_objective_validation(self):
+        with pytest.raises(ValueError):
+            SLOObjective(name="x", signal="nope")
+        with pytest.raises(ValueError):
+            SLOObjective(name="x", signal="gauge")  # needs gauge name
+        with pytest.raises(ValueError):
+            SLOObjective(name="x", signal="latency", fast_window_s=10.0,
+                         slow_window_s=5.0)  # fast must be shorter
+        with pytest.raises(ValueError):
+            SLOObjective(name="x", signal="loss_rate", threshold=2.0)
+
+    def test_spec_from_any_shapes(self):
+        assert len(SLOSpec.from_any(True).objectives) == len(default_objectives())
+        spec = SLOSpec.from_any([{"name": "lat", "signal": "latency", "threshold": 2.0}])
+        assert spec.objectives[0].name == "lat"
+        spec = SLOSpec.from_any({"interval_s": 0.5, "objectives": [
+            {"name": "bl", "signal": "backlog", "threshold": 50.0}]})
+        assert spec.interval_s == 0.5 and spec.objectives[0].signal == "backlog"
+        with pytest.raises(ValueError):
+            SLOSpec.from_any({"bogus": 1})
+
+
+class TestRemediation:
+    def _firing_engine(self, handlers):
+        clock = _FakeClock()
+        log = EventLog()
+        obj = SLOObjective(
+            name="qdepth", signal="gauge", gauge="qdepth", threshold=10.0,
+            budget=0.4, fast_window_s=1.0, slow_window_s=10.0, min_samples=2,
+        )
+        eng = SLOEngine(log, SLOSpec(objectives=[obj]), clock=clock)
+        for selector, fn, label in handlers:
+            eng.on_fire(selector, fn, label=label)
+        for t in (0.0, 0.2, 0.4):
+            log.gauge("qdepth", 100.0)
+            eng.tick(now=t)
+        assert eng.firing() == ["qdepth"]
+        return log, eng
+
+    def test_handler_runs_once_per_firing_and_is_recorded(self):
+        calls = []
+        log, eng = self._firing_engine(
+            [("qdepth", lambda alert: calls.append(alert) or {"grown": 2}, "grow")])
+        assert len(calls) == 1 and calls[0]["name"] == "qdepth"
+        assert eng.remediations_run == 1
+        evs = [ev for ev in log.events() if ev.kind == "remediation"]
+        assert len(evs) == 1
+        assert evs[0].stage == "grow" and evs[0].info["ok"] is True
+        assert evs[0].info["alert"] == "qdepth"
+        # Still firing on later ticks: no re-run without a new transition.
+        eng.tick(now=0.6)
+        assert eng.remediations_run == 1
+
+    def test_selector_matching(self):
+        hits = []
+        self._firing_engine([
+            ("qdepth", lambda a: hits.append("name"), "by-name"),
+            ("gauge", lambda a: hits.append("signal"), "by-signal"),
+            ("*", lambda a: hits.append("star"), "by-star"),
+            ("other", lambda a: hits.append("other"), "no-match"),
+        ])
+        assert sorted(hits) == ["name", "signal", "star"]
+
+    def test_failing_handler_recorded_not_fatal(self):
+        def boom(alert):
+            raise RuntimeError("remediation exploded")
+
+        log, eng = self._firing_engine([("*", boom, "boom")])
+        assert eng.remediations_run == 1
+        (ev,) = [ev for ev in log.events() if ev.kind == "remediation"]
+        assert ev.info["ok"] is False
+        assert "RuntimeError" in ev.info["detail"]
+
+
+class TestAnomalyDetector:
+    def test_spike_fires_advisory_and_resolves(self):
+        clock = _FakeClock()
+        log = EventLog()
+        det = AnomalyDetector(
+            log, AnomalySpec(alpha=0.2, z_threshold=4.0, resolve_z=2.0,
+                             min_samples=10, series=("arrival_rate",)),
+            clock=clock)
+        for i in range(20):  # learn a noisy-flat baseline
+            log.gauge("arrival_rate", 10.0 + (i % 3) * 0.1, pool="p")
+            det.tick(now=float(i))
+        assert det.firing() == []
+        log.gauge("arrival_rate", 50.0, pool="p")  # 20x the learned spread
+        det.tick(now=21.0)
+        assert det.firing() == ["anomaly:arrival_rate"]
+        (alert,) = [a for a in det.alerts() if a["state"] == "firing"]
+        assert alert["severity"] == "advisory"
+        # EWMA absorbs the new level; hysteresis resolves the alert.
+        for i in range(30):
+            log.gauge("arrival_rate", 50.0, pool="p")
+            det.tick(now=22.0 + i)
+        assert det.firing() == []
+        stages = [ev.stage for ev in log.events() if ev.kind == "alert"]
+        assert stages == ["firing", "resolved"]
+
+    def test_warmup_never_alerts(self):
+        clock = _FakeClock()
+        log = EventLog()
+        det = AnomalyDetector(log, AnomalySpec(min_samples=50,
+                                               series=("arrival_rate",)),
+                              clock=clock)
+        for i in range(30):
+            log.gauge("arrival_rate", 1.0 if i % 2 else 1000.0, pool="p")
+            det.tick(now=float(i))
+        assert det.firing() == [] and det.alerts()[0]["state"] == "ok"
+
+    def test_spec_validation(self):
+        with pytest.raises(ValueError):
+            AnomalySpec(alpha=0.0)
+        with pytest.raises(ValueError):
+            AnomalySpec(resolve_z=5.0, z_threshold=4.0)
+        with pytest.raises(ValueError):
+            AnomalySpec(series=("nope",))
+
+
+class TestOpsServer:
+    def _server(self, **kwargs):
+        srv = OpsServer(**kwargs).start()
+        return srv
+
+    def test_endpoint_index_and_404(self):
+        srv = self._server()
+        try:
+            code, body = _get(srv.url + "/")
+            doc = json.loads(body)
+            assert code == 200 and "/metrics" in doc["endpoints"]
+            assert _get_code(srv.url + "/bogus") == 404
+        finally:
+            srv.stop()
+
+    def test_lifecycle_states_drive_health_codes(self):
+        srv = self._server()
+        try:
+            assert srv.state == "starting"
+            assert _get_code(srv.url + "/healthz") == 200
+            assert _get_code(srv.url + "/readyz") == 503
+            srv.set_state("ready")
+            assert _get_code(srv.url + "/readyz") == 200
+            srv.set_state("draining")
+            assert _get_code(srv.url + "/healthz") == 200
+            assert _get_code(srv.url + "/readyz") == 503
+            srv.set_state("stopped")
+            assert _get_code(srv.url + "/healthz") == 503
+            with pytest.raises(ValueError):
+                srv.set_state("bogus")
+        finally:
+            srv.stop()
+
+    def test_metrics_and_snapshot_need_aggregator(self):
+        srv = self._server()  # no aggregator bound
+        try:
+            assert _get_code(srv.url + "/metrics") == 503
+            assert _get_code(srv.url + "/snapshot") == 503
+        finally:
+            srv.stop()
+
+    def test_alerts_endpoint_merges_slo_and_anomaly(self):
+        clock = _FakeClock()
+        log = EventLog()
+        obj = SLOObjective(name="qdepth", signal="gauge", gauge="qdepth",
+                           threshold=10.0, budget=0.4, fast_window_s=1.0,
+                           slow_window_s=10.0, min_samples=2)
+        eng = SLOEngine(log, SLOSpec(objectives=[obj]), clock=clock)
+        det = AnomalyDetector(log, AnomalySpec(series=("arrival_rate",)),
+                              clock=clock)
+        for t in (0.0, 0.2, 0.4):
+            log.gauge("qdepth", 100.0)
+            eng.tick(now=t)
+        srv = self._server(slo=eng, anomaly=det)
+        try:
+            code, body = _get(srv.url + "/alerts")
+            doc = json.loads(body)
+            assert code == 200 and doc["firing"] == ["qdepth"]
+            names = {a["name"] for a in doc["alerts"]}
+            assert {"qdepth", "anomaly:arrival_rate"} <= names
+        finally:
+            srv.stop()
+
+
+class TestMetricsParity:
+    def test_http_metrics_match_prom_file(self, tmp_path):
+        """``GET /metrics`` and the exporter's ``metrics.prom`` render the
+        same aggregator: byte-identical once the log quiesces."""
+        from repro.core import (
+            LocalColmenaQueues, ResourceRequest, TaskServer, WorkerPool,
+        )
+        from repro.observe import ExportSpec, MetricsExporter
+
+        log = EventLog()
+        q = LocalColmenaQueues(event_log=log)
+        server = TaskServer(
+            q, {"work": lambda x: x * 2},
+            pools={"alpha": WorkerPool("alpha", 2), "default": WorkerPool("default", 1)},
+        ).start()
+        for i in range(6):
+            q.send_inputs(i, method="work", resources=ResourceRequest(pool="alpha"))
+        assert all(q.get_result(timeout=30).success for _ in range(6))
+        server.stop()
+
+        slots = {"alpha": 2}
+        agg = MetricsAggregator(log)
+        exporter = MetricsExporter(
+            log, spec=ExportSpec(dir=str(tmp_path)), slots_by_pool=slots,
+            aggregator=agg)
+        exporter.write_once()
+        srv = OpsServer(aggregator=agg, slots_by_pool=slots).start()
+        try:
+            code, body = _get(srv.url + "/metrics")
+        finally:
+            srv.stop()
+        assert code == 200
+        assert body == (tmp_path / "metrics.prom").read_text()
+        assert "repro_pool_completed" in body
+
+
+class TestAppOpsIntegration:
+    def test_ops_plane_serves_live_campaign(self, tmp_path):
+        from repro.app import AppSpec, ColmenaApp, ObserveSpec
+
+        app = ColmenaApp(AppSpec(
+            tasks={"double": lambda x: x * 2},
+            pools={"default": 2},
+            observe=ObserveSpec(
+                ops_port=0,
+                slo=[{"name": "backlog", "signal": "backlog",
+                      "threshold": 1e6, "budget": 0.5}],
+                anomaly={"min_samples": 5},
+                remediate=False,
+            ),
+        ))
+        with app.run(timeout=60) as handle:
+            assert app.ops is not None and app.ops.state == "ready"
+            url = app.ops.url
+            assert _get_code(url + "/readyz") == 200
+            for i in range(5):
+                handle.queues.send_inputs(i, method="double")
+            assert all(handle.queues.get_result(timeout=30).success
+                       for _ in range(5))
+            # Live scrape mid-campaign matches the shared aggregator.
+            code, body = _get(url + "/metrics")
+            assert code == 200
+            assert body == app.aggregator.prometheus_text(
+                slots_by_pool={"default": 2})
+            code, body = _get(url + "/snapshot")
+            assert json.loads(body)["methods"]["double"]["count"] == 5
+            code, body = _get(url + "/alerts")
+            doc = json.loads(body)
+            assert doc["firing"] == []
+            assert {a["name"] for a in doc["alerts"]} >= {
+                "backlog", "anomaly:latency"}
+        assert app.ops.state == "stopped"
+
+    def test_remediate_requires_slo(self):
+        from repro.app import AppSpec, ObserveSpec
+
+        with pytest.raises(ValueError, match="remediate"):
+            AppSpec(tasks={"f": lambda x: x},
+                    observe=ObserveSpec(remediate=True))
+
+
+class TestSpecfileOpsKnobs:
+    def test_roundtrip_ops_slo_anomaly_knobs(self):
+        from repro.app import AppSpec, ObserveSpec
+        from repro.core.specfile import spec_from_dict, spec_to_dict
+
+        spec = AppSpec(
+            tasks={"double": _spec_double},
+            observe=ObserveSpec(
+                ops_port=9137,
+                slo={"interval_s": 0.5, "objectives": [
+                    {"name": "lat", "signal": "latency", "threshold": 2.0}]},
+                anomaly={"z_threshold": 5.0},
+                remediate=True,
+            ),
+        )
+        d = spec_to_dict(spec)
+        assert d["observe"]["ops_port"] == 9137
+        assert d["observe"]["remediate"] is True
+        assert d["observe"]["slo"]["objectives"][0]["name"] == "lat"
+        back = spec_from_dict(d)
+        assert back.observe.ops_port == 9137 and back.observe.remediate
+        assert back.observe.slo["interval_s"] == 0.5
+        assert back.observe.anomaly["z_threshold"] == 5.0
+
+    def test_roundtrip_bare_true_knobs(self):
+        from repro.app import AppSpec, ObserveSpec
+        from repro.core.specfile import spec_from_dict, spec_to_dict
+
+        spec = AppSpec(tasks={"double": _spec_double},
+                       observe=ObserveSpec(slo=True, anomaly=True))
+        d = spec_to_dict(spec)
+        assert d["observe"]["slo"] == {} and d["observe"]["anomaly"] == {}
+        back = spec_from_dict(d)
+        # A bare table means "defaults": both engines enabled.
+        assert back.observe.slo is not None
+        assert back.observe.anomaly is not None
+
+
+def _spec_double(x):
+    return x * 2
+
+
+class TestAdaptiveRetrainCadence:
+    def test_cadence_scales_with_throughput_and_budget(self):
+        from repro.surrogate.thinker import adaptive_retrain_after
+
+        # 0.5 s per retrain at 100 tasks/s with a 20% training budget:
+        # one retrain every 0.5*100*(0.8/0.2) = 200 results.
+        assert adaptive_retrain_after(16, 0.5, 100.0, 0.2) == 200
+        # A looser budget retrains more often; a tighter one less.
+        assert adaptive_retrain_after(16, 0.5, 100.0, 0.5) == 50
+        assert adaptive_retrain_after(16, 0.5, 100.0, 0.1) == 450
+
+    def test_clamps_and_invalid_inputs(self):
+        from repro.surrogate.thinker import adaptive_retrain_after
+
+        assert adaptive_retrain_after(16, 100.0, 1000.0, 0.01, hi=4096) == 4096
+        assert adaptive_retrain_after(16, 1e-6, 1.0, 0.9, lo=4) == 4
+        # Invalid readings keep the current cadence.
+        assert adaptive_retrain_after(16, 0.0, 100.0, 0.2) == 16
+        assert adaptive_retrain_after(16, 0.5, 0.0, 0.2) == 16
+        assert adaptive_retrain_after(16, 0.5, 100.0, 0.0) == 16
+
+    def test_thinker_rejects_bad_budget(self):
+        import numpy as np
+
+        from repro.core import LocalColmenaQueues
+        from repro.surrogate import DeepEnsemble, make_policy
+        from repro.surrogate.thinker import ActiveLearningThinker
+
+        with pytest.raises(ValueError, match="retrain_budget"):
+            ActiveLearningThinker(
+                LocalColmenaQueues(topics=["simulate", "train"]),
+                ensemble=DeepEnsemble(2), policy=make_policy("ucb"),
+                candidates=np.zeros((8, 2), np.float32), n_slots=2,
+                retrain_after=4, retrain_budget=1.5,
+            )
+
+    def test_adapt_cadence_mutates_live_and_gauges(self):
+        import numpy as np
+
+        from repro.core import LocalColmenaQueues
+        from repro.surrogate import DeepEnsemble, make_policy
+        from repro.surrogate.thinker import ActiveLearningThinker
+
+        log = EventLog()
+        thinker = ActiveLearningThinker(
+            LocalColmenaQueues(topics=["simulate", "train"]),
+            ensemble=DeepEnsemble(2), policy=make_policy("ucb"),
+            candidates=np.zeros((8, 2), np.float32), n_slots=2,
+            retrain_after=4, retrain_budget=0.2,
+        )
+        import time as _time
+
+        thinker._first_result_t = _time.monotonic() - 10.0  # 10 s of results
+        thinker._train_seconds = 2.0
+        thinker._adapt_cadence(duration_s=2.0, n_results=100, log=log)
+        # throughput ~10/s, 2 s per retrain, 20% budget -> cadence ~80.
+        assert 70 <= thinker.retrain_after <= 90
+        gauges = {ev.stage for ev in log.events() if ev.kind == "gauge"}
+        assert {"retrain_budget", "retrain_after"} <= gauges
