@@ -1,0 +1,44 @@
+"""Project-invariant static analysis for the repro codebase.
+
+``repro.analyze`` is a purpose-built AST checker suite: each rule
+encodes a concurrency or serialization invariant this repo has already
+paid a bug for (busy-wait poll loops, inconsistent lock ordering,
+unpicklable attrs shipped across process boundaries, undeclared event
+kinds, spec fields silently dropped by the TOML round-trip, leaked
+threads). Run it as::
+
+    python -m repro.analyze src/repro --fail-on-violation \
+        --baseline analyze-baseline.json
+
+Findings are suppressed either inline (``# analyze: ignore[rule]``, on
+the flagged line or the line above) or via a committed baseline file
+whose entries carry a human reason string.
+
+``repro.analyze.runtime`` is the dynamic complement: a lock sanitizer
+that (under ``REPRO_LOCK_SANITIZER=1``) instruments every
+``threading.Lock/RLock/Condition`` created by repro code, records the
+real acquisition-order graph, and asserts it stays acyclic — a
+mini-TSan for the steering stack that tier-1 runs once with in CI.
+"""
+
+from .engine import (
+    AnalysisResult,
+    Corpus,
+    SourceFile,
+    Violation,
+    all_checkers,
+    analyze_paths,
+    load_baseline,
+    write_baseline,
+)
+
+__all__ = [
+    "AnalysisResult",
+    "Corpus",
+    "SourceFile",
+    "Violation",
+    "all_checkers",
+    "analyze_paths",
+    "load_baseline",
+    "write_baseline",
+]

@@ -1,0 +1,71 @@
+"""CLI: ``python -m repro.analyze [PATHS] [options]``.
+
+Exit status: 0 when clean (or when not ``--fail-on-violation``),
+1 when live violations remain, 2 on usage errors.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List, Optional
+
+from .engine import all_checkers, analyze_paths, load_baseline, write_baseline
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analyze",
+        description="Project-invariant static analysis for the repro codebase.",
+    )
+    ap.add_argument("paths", nargs="*", default=["src/repro"],
+                    help="files or directories to analyze (default: src/repro)")
+    ap.add_argument("--fail-on-violation", action="store_true",
+                    help="exit 1 if any live violation remains")
+    ap.add_argument("--baseline", default=None, metavar="FILE",
+                    help="JSON baseline of accepted findings (with reasons)")
+    ap.add_argument("--write-baseline", default=None, metavar="FILE",
+                    help="write current live findings as a new baseline and exit")
+    ap.add_argument("--rule", action="append", dest="rules", metavar="RULE",
+                    help="run only this rule (repeatable); default: all of "
+                         + ", ".join(sorted(all_checkers())))
+    ap.add_argument("--quiet", action="store_true",
+                    help="suppress the per-rule summary, print violations only")
+    args = ap.parse_args(argv)
+
+    try:
+        result = analyze_paths(args.paths or ["src/repro"],
+                               baseline=args.baseline, rules=args.rules)
+    except (FileNotFoundError, ValueError) as exc:
+        print(f"error: {exc}", file=sys.stderr)
+        return 2
+
+    if args.write_baseline:
+        reasons = load_baseline(args.write_baseline)
+        write_baseline(args.write_baseline, result.violations + result.baselined,
+                       reasons=reasons)
+        print(f"wrote {len(result.violations) + len(result.baselined)} entries "
+              f"to {args.write_baseline}")
+        return 0
+
+    for v in result.violations:
+        print(v.render())
+    if not args.quiet:
+        print(
+            f"analyze: {len(result.violations)} violation(s), "
+            f"{len(result.suppressed)} suppressed inline, "
+            f"{len(result.baselined)} baselined",
+            file=sys.stderr,
+        )
+        if result.stale_baseline:
+            print("analyze: stale baseline entries (no longer fire, prune them):",
+                  file=sys.stderr)
+            for fp in result.stale_baseline:
+                print(f"  {fp}", file=sys.stderr)
+    if result.violations and args.fail_on_violation:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

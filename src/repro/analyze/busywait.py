@@ -1,0 +1,103 @@
+"""Rule ``busy-wait``: a ``while`` loop that spins on ``time.sleep``.
+
+The steering stack's contract (PR 1) is that waiting threads *park* on
+a ``Condition``/``Event`` and are woken by the producer — a loop that
+re-checks state every ``sleep(poll)`` burns a core, adds up to a full
+poll interval of latency per hop, and cannot be interrupted by
+``stop()``. A loop passes when it blocks on a real wakeup primitive
+(``<event>.wait(timeout)``, ``<cond>.wait(...)``, a blocking
+``queue.get``) instead of sleeping.
+
+A second, softer form is also flagged: a loop whose wait *is* an
+``Event.wait`` but with a sub-100 ms constant timeout (or the
+``_POLL_S`` module constant) — spinning at 50 Hz on an event that a
+producer could subscribe to instead (the ``WakeEvent`` idiom).
+Deliberate short-poll fallbacks are expected to carry an inline
+suppression or a baseline entry explaining why polling is required.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List, Optional
+
+from .engine import Corpus, Violation, enclosing_qualname, expr_text, walk_scope
+
+_WAKEUP_ATTRS = {"wait", "wait_for", "get", "acquire", "join", "select"}
+_POLL_NAMES = {"_POLL_S", "POLL_S", "_POLL"}
+_SHORT_POLL_S = 0.1
+
+
+def _sleep_calls(loop: ast.While) -> List[ast.Call]:
+    out = []
+    for n in walk_scope(loop):
+        if isinstance(n, ast.Call) and expr_text(n.func) in ("time.sleep", "sleep"):
+            out.append(n)
+    return out
+
+
+def _has_wakeup(loop: ast.While) -> bool:
+    for n in [loop.test, *walk_scope(loop)]:
+        for sub in ast.walk(n):
+            if (isinstance(sub, ast.Call) and isinstance(sub.func, ast.Attribute)
+                    and sub.func.attr in _WAKEUP_ATTRS):
+                return True
+    return False
+
+
+def _short_poll_wait(loop: ast.While) -> Optional[ast.Call]:
+    """A ``<x>.wait(t)`` call in the loop with a provably short timeout."""
+    for n in walk_scope(loop):
+        if not (isinstance(n, ast.Call) and isinstance(n.func, ast.Attribute)
+                and n.func.attr == "wait"):
+            continue
+        arg = None
+        if n.args:
+            arg = n.args[0]
+        for kw in n.keywords:
+            if kw.arg == "timeout":
+                arg = kw.value
+        if isinstance(arg, ast.Constant) and isinstance(arg.value, (int, float)) \
+                and 0 < arg.value < _SHORT_POLL_S:
+            return n
+        if isinstance(arg, ast.Name) and arg.id in _POLL_NAMES:
+            return n
+    return None
+
+
+def check(corpus: Corpus) -> List[Violation]:
+    out: List[Violation] = []
+    for f in corpus.files:
+        for node in ast.walk(f.tree):
+            if not isinstance(node, ast.While):
+                continue
+            sleeps = _sleep_calls(node)
+            where = enclosing_qualname(f.tree, node)
+            if sleeps and not _has_wakeup(node):
+                out.append(Violation(
+                    rule="busy-wait",
+                    path=f.path,
+                    line=sleeps[0].lineno,
+                    symbol=where,
+                    message=(
+                        f"{where}: while-loop polls with time.sleep and no "
+                        "Condition/Event wakeup — park on <event>.wait(timeout) "
+                        "(or a stop event) so producers and stop() can interrupt it"
+                    ),
+                ))
+                continue
+            poll = _short_poll_wait(node)
+            if poll is not None:
+                out.append(Violation(
+                    rule="busy-wait",
+                    path=f.path,
+                    line=poll.lineno,
+                    symbol=f"{where}:short-poll",
+                    message=(
+                        f"{where}: while-loop spins on a sub-{int(_SHORT_POLL_S * 1000)} ms "
+                        "event poll — subscribe the waiter (WakeEvent/Condition) "
+                        "so the producer wakes it, or suppress with the reason "
+                        "polling is required"
+                    ),
+                ))
+    return out

@@ -1,0 +1,287 @@
+"""Checker engine: file corpus, suppression comments, baseline, report.
+
+The engine parses every ``.py`` file under the given paths once into a
+``Corpus`` and hands the whole corpus to each checker — several rules
+(lock-order, event-kind, spec round-trip, pickle-boundary) are
+cross-file by nature, so per-file visitors would miss exactly the bugs
+they exist to catch.
+
+Suppression layers, innermost first:
+
+* **inline** — ``# analyze: ignore[rule]`` (or ``ignore[rule1,rule2]``,
+  or ``ignore[*]``) on the flagged line or the line directly above it;
+* **baseline** — a committed JSON file mapping violation fingerprints
+  to reason strings. Fingerprints deliberately exclude line numbers so
+  unrelated edits don't churn the baseline.
+"""
+
+from __future__ import annotations
+
+import ast
+import json
+import os
+import re
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Iterable, List, Optional, Sequence
+
+_SUPPRESS_RE = re.compile(r"#\s*analyze:\s*ignore\[([\w\-*,\s]+)\]")
+
+
+@dataclass
+class Violation:
+    """One finding. ``symbol`` is a stable identifier (qualname, lock
+    cycle, field name) used for baseline fingerprinting instead of the
+    line number."""
+
+    rule: str
+    path: str
+    line: int
+    message: str
+    symbol: str = ""
+
+    @property
+    def fingerprint(self) -> str:
+        return f"{self.rule}:{self.path}:{self.symbol or self.message}"
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+@dataclass
+class SourceFile:
+    path: str        # as given (repo-relative when invoked from the repo root)
+    source: str
+    tree: ast.Module
+    suppressions: Dict[int, set] = field(default_factory=dict)  # line -> rules ('*' = all)
+
+    @property
+    def name(self) -> str:
+        return os.path.basename(self.path)
+
+    def suppressed(self, rule: str, line: int) -> bool:
+        for ln in (line, line - 1):
+            rules = self.suppressions.get(ln)
+            if rules and ("*" in rules or rule in rules):
+                return True
+        return False
+
+
+class Corpus:
+    """Every parsed file plus shared lookups checkers need."""
+
+    def __init__(self, files: Sequence[SourceFile]) -> None:
+        self.files = list(files)
+        self.by_name: Dict[str, List[SourceFile]] = {}
+        for f in self.files:
+            self.by_name.setdefault(f.name, []).append(f)
+
+    def find(self, suffix: str) -> Optional[SourceFile]:
+        """The unique file whose path ends with ``suffix`` (None if absent)."""
+        norm = suffix.replace("\\", "/")
+        hits = [f for f in self.files if f.path.replace("\\", "/").endswith(norm)]
+        return hits[0] if len(hits) == 1 else None
+
+
+def _scan_suppressions(source: str) -> Dict[int, set]:
+    out: Dict[int, set] = {}
+    for i, line in enumerate(source.splitlines(), start=1):
+        m = _SUPPRESS_RE.search(line)
+        if m:
+            out[i] = {r.strip() for r in m.group(1).split(",") if r.strip()}
+    return out
+
+
+def collect_files(paths: Iterable[str]) -> List[str]:
+    out: List[str] = []
+    for p in paths:
+        if os.path.isfile(p):
+            out.append(p)
+        elif os.path.isdir(p):
+            for root, dirs, names in os.walk(p):
+                dirs[:] = sorted(d for d in dirs if d != "__pycache__")
+                out.extend(os.path.join(root, n) for n in sorted(names) if n.endswith(".py"))
+        else:
+            raise FileNotFoundError(f"no such file or directory: {p}")
+    return out
+
+
+def build_corpus(paths: Iterable[str]) -> Corpus:
+    files: List[SourceFile] = []
+    for path in collect_files(paths):
+        with open(path, encoding="utf-8") as f:
+            source = f.read()
+        tree = ast.parse(source, filename=path)
+        files.append(SourceFile(path=path, source=source, tree=tree,
+                                suppressions=_scan_suppressions(source)))
+    return Corpus(files)
+
+
+# --------------------------------------------------------------------------
+# Baseline
+# --------------------------------------------------------------------------
+
+
+def load_baseline(path: str) -> Dict[str, str]:
+    """fingerprint -> reason. Tolerates a missing file (empty baseline)."""
+    if not os.path.exists(path):
+        return {}
+    with open(path, encoding="utf-8") as f:
+        doc = json.load(f)
+    entries = doc.get("entries", []) if isinstance(doc, dict) else doc
+    out: Dict[str, str] = {}
+    for e in entries:
+        out[e["fingerprint"]] = e.get("reason", "")
+    return out
+
+
+def write_baseline(path: str, violations: Sequence[Violation],
+                   reasons: Optional[Dict[str, str]] = None) -> None:
+    reasons = reasons or {}
+    entries = [
+        {
+            "fingerprint": v.fingerprint,
+            "rule": v.rule,
+            "path": v.path,
+            "reason": reasons.get(v.fingerprint, "TODO: justify or fix"),
+        }
+        for v in sorted(violations, key=lambda v: v.fingerprint)
+    ]
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump({"version": 1, "entries": entries}, f, indent=2)
+        f.write("\n")
+
+
+# --------------------------------------------------------------------------
+# Run
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class AnalysisResult:
+    violations: List[Violation]          # live findings (not suppressed/baselined)
+    suppressed: List[Violation]          # killed by inline comments
+    baselined: List[Violation]           # killed by the baseline file
+    stale_baseline: List[str]            # baseline fingerprints that no longer fire
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+
+Checker = Callable[[Corpus], List[Violation]]
+
+
+def all_checkers() -> Dict[str, Checker]:
+    from . import busywait, eventkinds, lockorder, pickleboundary, roundtrip, threads
+
+    return {
+        "busy-wait": busywait.check,
+        "lock-order": lockorder.check,
+        "pickle-boundary": pickleboundary.check,
+        "event-kind": eventkinds.check,
+        "spec-roundtrip": roundtrip.check,
+        "thread-lifecycle": threads.check,
+    }
+
+
+def analyze_paths(paths: Iterable[str], baseline: Optional[str] = None,
+                  rules: Optional[Iterable[str]] = None) -> AnalysisResult:
+    corpus = build_corpus(paths)
+    checkers = all_checkers()
+    if rules is not None:
+        unknown = set(rules) - set(checkers)
+        if unknown:
+            raise ValueError(f"unknown rules: {sorted(unknown)} (have {sorted(checkers)})")
+        checkers = {r: checkers[r] for r in rules}
+
+    raw: List[Violation] = []
+    for fn in checkers.values():
+        raw.extend(fn(corpus))
+    raw.sort(key=lambda v: (v.path, v.line, v.rule))
+
+    by_path = {f.path: f for f in corpus.files}
+    base = load_baseline(baseline) if baseline else {}
+
+    live: List[Violation] = []
+    suppressed: List[Violation] = []
+    baselined: List[Violation] = []
+    fired_fps = set()
+    for v in raw:
+        fired_fps.add(v.fingerprint)
+        sf = by_path.get(v.path)
+        if sf is not None and sf.suppressed(v.rule, v.line):
+            suppressed.append(v)
+        elif v.fingerprint in base:
+            baselined.append(v)
+        else:
+            live.append(v)
+    stale = sorted(fp for fp in base if fp not in fired_fps)
+    return AnalysisResult(violations=live, suppressed=suppressed,
+                          baselined=baselined, stale_baseline=stale)
+
+
+# --------------------------------------------------------------------------
+# Shared AST helpers used by several checkers
+# --------------------------------------------------------------------------
+
+
+def walk_scope(node: ast.AST) -> Iterable[ast.AST]:
+    """Yield nodes in ``node``'s body without descending into nested
+    function/class definitions (loop bodies, with-blocks etc. are
+    traversed)."""
+    stack = list(ast.iter_child_nodes(node))
+    while stack:
+        n = stack.pop()
+        yield n
+        if not isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef, ast.Lambda)):
+            stack.extend(ast.iter_child_nodes(n))
+
+
+def is_call_to(node: ast.AST, dotted: str) -> bool:
+    """True for ``Call`` nodes spelled exactly ``a.b(...)`` or, for a
+    bare name, ``b(...)``."""
+    if not isinstance(node, ast.Call):
+        return False
+    return expr_text(node.func) == dotted
+
+
+def expr_text(node: ast.AST) -> str:
+    """Dotted-name text of simple expressions ('' for anything complex)."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = expr_text(node.value)
+        return f"{base}.{node.attr}" if base else ""
+    return ""
+
+
+def qualname_index(tree: ast.Module) -> Dict[ast.AST, str]:
+    """Map every function/class def node to its dotted qualname."""
+    out: Dict[ast.AST, str] = {}
+
+    def visit(node: ast.AST, prefix: str) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+                q = f"{prefix}.{child.name}" if prefix else child.name
+                out[child] = q
+                visit(child, q)
+            else:
+                visit(child, prefix)
+
+    visit(tree, "")
+    return out
+
+
+def enclosing_qualname(tree: ast.Module, target: ast.AST) -> str:
+    """Qualname of the innermost def/class containing ``target``
+    ('<module>' at top level)."""
+    index = qualname_index(tree)
+    best = "<module>"
+    best_span = None
+    for node, q in index.items():
+        if (node.lineno <= target.lineno
+                and getattr(node, "end_lineno", node.lineno) >= getattr(target, "end_lineno", target.lineno)):
+            span = getattr(node, "end_lineno", node.lineno) - node.lineno
+            if best_span is None or span < best_span:
+                best, best_span = q, span
+    return best

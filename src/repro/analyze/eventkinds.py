@@ -1,0 +1,164 @@
+"""Rule ``event-kind``: the event vocabulary must be closed.
+
+* every ``Event(kind=...)`` constructed anywhere — including the
+  ``EventLog`` emit helpers — must use a kind declared in the
+  ``EVENT_KINDS`` registry in ``observe/events.py``;
+* every kind the observability consumers (``metrics.py``,
+  ``report.py``, ``trace.py``) dispatch on must actually be emitted
+  somewhere (directly or through an ``EventLog`` helper), else the
+  consumer is dead code watching for an event that never fires.
+
+The checker is corpus-wide: if no analyzed file declares
+``EVENT_KINDS`` the rule reports that gap once and stops (there is no
+registry to check against).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from .engine import Corpus, SourceFile, Violation, expr_text
+
+_CONSUMER_FILES = {"metrics.py", "report.py", "trace.py"}
+
+
+def _find_registry(corpus: Corpus) -> Tuple[Optional[SourceFile], Set[str]]:
+    for f in corpus.files:
+        for node in ast.walk(f.tree):
+            if isinstance(node, ast.Assign):
+                targets = [t.id for t in node.targets if isinstance(t, ast.Name)]
+            elif isinstance(node, ast.AnnAssign) and isinstance(node.target, ast.Name):
+                targets = [node.target.id]
+            else:
+                continue
+            if "EVENT_KINDS" not in targets or node.value is None:
+                continue
+            kinds: Set[str] = set()
+            for sub in ast.walk(node.value):
+                if isinstance(sub, ast.Constant) and isinstance(sub.value, str):
+                    kinds.add(sub.value)
+            return f, kinds
+    return None, set()
+
+
+def _event_emissions(corpus: Corpus) -> List[Tuple[SourceFile, int, str]]:
+    """(file, line, kind) for every ``Event(kind="...")`` construction."""
+    out = []
+    for f in corpus.files:
+        for node in ast.walk(f.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = expr_text(node.func).rsplit(".", 1)[-1]
+            if name != "Event":
+                continue
+            for kw in node.keywords:
+                if kw.arg == "kind" and isinstance(kw.value, ast.Constant) \
+                        and isinstance(kw.value.value, str):
+                    out.append((f, node.lineno, kw.value.value))
+    return out
+
+
+def _helper_kinds(corpus: Corpus) -> Dict[str, str]:
+    """EventLog helper-method name -> the kind it emits."""
+    out: Dict[str, str] = {}
+    for f in corpus.files:
+        for node in ast.walk(f.tree):
+            if not (isinstance(node, ast.ClassDef) and node.name == "EventLog"):
+                continue
+            for m in node.body:
+                if not isinstance(m, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    continue
+                for sub in ast.walk(m):
+                    if (isinstance(sub, ast.Call)
+                            and expr_text(sub.func).rsplit(".", 1)[-1] == "Event"):
+                        for kw in sub.keywords:
+                            if kw.arg == "kind" and isinstance(kw.value, ast.Constant) \
+                                    and isinstance(kw.value.value, str):
+                                out[m.name] = kw.value.value
+    return out
+
+
+def _helper_calls(corpus: Corpus, helpers: Dict[str, str]) -> Set[str]:
+    """Kinds emitted via ``<log>.helper(...)`` calls anywhere."""
+    out: Set[str] = set()
+    for f in corpus.files:
+        for node in ast.walk(f.tree):
+            if (isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute)
+                    and node.func.attr in helpers):
+                out.add(helpers[node.func.attr])
+    return out
+
+
+def _consumed_kinds(corpus: Corpus) -> List[Tuple[SourceFile, int, str]]:
+    """(file, line, kind) for every ``<x>.kind == "..."`` /
+    ``<x>.kind in (...)`` dispatch inside the consumer modules."""
+    out = []
+    for f in corpus.files:
+        if f.name not in _CONSUMER_FILES:
+            continue
+        for node in ast.walk(f.tree):
+            if not isinstance(node, ast.Compare):
+                continue
+            left = node.left
+            if not (isinstance(left, ast.Attribute) and left.attr == "kind"):
+                continue
+            for op, comp in zip(node.ops, node.comparators):
+                if isinstance(op, (ast.Eq, ast.NotEq)) and isinstance(comp, ast.Constant) \
+                        and isinstance(comp.value, str):
+                    out.append((f, node.lineno, comp.value))
+                elif isinstance(op, (ast.In, ast.NotIn)):
+                    for sub in ast.walk(comp):
+                        if isinstance(sub, ast.Constant) and isinstance(sub.value, str):
+                            out.append((f, node.lineno, sub.value))
+    return out
+
+
+def check(corpus: Corpus) -> List[Violation]:
+    registry_file, declared = _find_registry(corpus)
+    emissions = _event_emissions(corpus)
+    helpers = _helper_kinds(corpus)
+
+    if registry_file is None:
+        # Only meaningful when the events module is in scope at all.
+        if not emissions and not helpers:
+            return []
+        f, line, _ = emissions[0] if emissions else (corpus.files[0], 1, "")
+        return [Violation(
+            rule="event-kind",
+            path=f.path,
+            line=line,
+            symbol="EVENT_KINDS",
+            message=("Event kinds are emitted but no EVENT_KINDS registry is "
+                     "declared in the analyzed corpus (expected in observe/events.py)"),
+        )]
+
+    out: List[Violation] = []
+    for f, line, kind in emissions:
+        if kind not in declared:
+            out.append(Violation(
+                rule="event-kind",
+                path=f.path,
+                line=line,
+                symbol=f"emit:{kind}",
+                message=(f"Event kind {kind!r} is emitted but not declared in "
+                         f"EVENT_KINDS ({registry_file.path}) — consumers will "
+                         "file it under unknown_kinds"),
+            ))
+
+    emitted = {k for (_, _, k) in emissions} | _helper_calls(corpus, helpers) \
+        | set(helpers.values())
+    seen: Set[Tuple[str, str]] = set()
+    for f, line, kind in _consumed_kinds(corpus):
+        if kind in emitted or (f.path, kind) in seen:
+            continue
+        seen.add((f.path, kind))
+        out.append(Violation(
+            rule="event-kind",
+            path=f.path,
+            line=line,
+            symbol=f"consume:{kind}",
+            message=(f"{f.name} dispatches on event kind {kind!r}, but nothing "
+                     "in the analyzed corpus emits it"),
+        ))
+    return out

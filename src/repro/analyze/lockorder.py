@@ -1,0 +1,333 @@
+"""Rule ``lock-order``: extract the static lock-acquisition graph and
+flag potential deadlock cycles.
+
+Lock nodes
+    Attributes assigned ``threading.Lock()/RLock()/Condition()`` inside
+    a class (``self._lock = threading.Lock()`` → node ``Class._lock``)
+    or at module scope (node ``module:NAME``). Acquisitions through a
+    *different* receiver (``pool._lock``, ``self.agg._lock``) become
+    textual nodes (``pool._lock``) — deliberately NOT unified with any
+    class, because the receiver's type is unknown statically; merging
+    every ``_lock`` in the codebase into one node would manufacture
+    cycles that do not exist. The runtime sanitizer
+    (``repro.analyze.runtime``) covers the orderings this heuristic
+    cannot see.
+
+Edges
+    ``A -> B`` when B is acquired while A is held: lexically nested
+    ``with`` blocks, ``x.acquire()`` inside a held region, and — one
+    call level deep — ``self.method()`` calls where ``method`` of the
+    same class (or a corpus base class) directly acquires another lock.
+
+A strongly-connected component with more than one node (or a 2-cycle)
+is a potential deadlock and is reported once per cycle with every
+contributing acquisition site.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from .engine import Corpus, SourceFile, Violation, expr_text
+
+_LOCK_CTORS = {
+    "threading.Lock", "threading.RLock", "threading.Condition",
+    "Lock", "RLock", "Condition",
+}
+
+
+class _ClassInfo:
+    def __init__(self, name: str, node: ast.ClassDef, src: SourceFile) -> None:
+        self.name = name
+        self.node = node
+        self.src = src
+        self.bases = [expr_text(b).split(".")[-1] for b in node.bases]
+        self.lock_attrs: Set[str] = set()
+        self.methods: Dict[str, ast.FunctionDef] = {}
+        # method name -> lock keys it acquires directly (filled in pass 2)
+        self.direct: Dict[str, Set[str]] = {}
+
+
+def _collect_classes(corpus: Corpus) -> Dict[str, _ClassInfo]:
+    classes: Dict[str, _ClassInfo] = {}
+    for f in corpus.files:
+        for node in ast.walk(f.tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            info = _ClassInfo(node.name, node, f)
+            for item in node.body:
+                if isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    info.methods[item.name] = item
+                    for sub in ast.walk(item):
+                        if (isinstance(sub, ast.Assign)
+                                and isinstance(sub.value, ast.Call)
+                                and expr_text(sub.value.func) in _LOCK_CTORS):
+                            for tgt in sub.targets:
+                                if (isinstance(tgt, ast.Attribute)
+                                        and expr_text(tgt.value) == "self"):
+                                    info.lock_attrs.add(tgt.attr)
+                elif (isinstance(item, ast.Assign)
+                      and isinstance(item.value, ast.Call)
+                      and expr_text(item.value.func) in _LOCK_CTORS):
+                    for tgt in item.targets:
+                        if isinstance(tgt, ast.Name):
+                            info.lock_attrs.add(tgt.id)
+            # last definition wins on a name clash; fine for this codebase
+            classes[node.name] = info
+    return classes
+
+
+def _own_and_inherited_lock_attrs(cls: _ClassInfo,
+                                  classes: Dict[str, _ClassInfo]) -> Set[str]:
+    out: Set[str] = set()
+    seen: Set[str] = set()
+    stack = [cls.name]
+    while stack:
+        name = stack.pop()
+        if name in seen or name not in classes:
+            continue
+        seen.add(name)
+        out |= classes[name].lock_attrs
+        stack.extend(classes[name].bases)
+    return out
+
+
+def _lock_key(cls: Optional[_ClassInfo], classes: Dict[str, _ClassInfo],
+              expr: ast.AST) -> Optional[str]:
+    """Lock-graph node key for an acquired expression, or None if the
+    expression is not a known lock."""
+    text = expr_text(expr)
+    if not text:
+        return None
+    if cls is not None and text.startswith("self."):
+        attr = text[len("self."):]
+        if "." not in attr:
+            if attr in _own_and_inherited_lock_attrs(cls, classes):
+                return f"{cls.name}.{attr}"
+            return None
+    # Non-self receiver (pool._lock, self.agg._lock): keep the receiver
+    # text — unifying by attr name across classes fabricates cycles.
+    leaf = text.rsplit(".", 1)[-1]
+    looks_lockish = leaf.startswith("_") and (
+        "lock" in leaf or "cond" in leaf or "mutex" in leaf
+    )
+    return text if looks_lockish else None
+
+
+def _acquired_expr(node: ast.AST) -> Optional[ast.AST]:
+    """The lock expression a statement acquires, if any: ``with X:`` items
+    or ``X.acquire()``."""
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute) \
+            and node.func.attr == "acquire":
+        return node.func.value
+    return None
+
+
+class _EdgeWalker(ast.NodeVisitor):
+    """Walk one function body tracking the stack of held lock keys."""
+
+    def __init__(self, cls: Optional[_ClassInfo], classes: Dict[str, _ClassInfo],
+                 src: SourceFile, edges: Dict[Tuple[str, str], List[Tuple[str, int]]],
+                 method_name: str = "") -> None:
+        self.cls = cls
+        self.classes = classes
+        self.src = src
+        self.edges = edges
+        self.held: List[str] = []
+        self.method_name = method_name
+
+    # -- helpers
+    def _on_acquire(self, key: str, line: int) -> None:
+        for h in self.held:
+            if h != key:
+                self.edges.setdefault((h, key), []).append((self.src.path, line))
+
+    def _class_method_direct(self, name: str) -> Set[str]:
+        """Locks ``self.<name>()`` acquires directly (one level, corpus
+        bases included)."""
+        out: Set[str] = set()
+        seen: Set[str] = set()
+        stack = [self.cls.name] if self.cls else []
+        while stack:
+            cname = stack.pop()
+            if cname in seen or cname not in self.classes:
+                continue
+            seen.add(cname)
+            info = self.classes[cname]
+            if name in info.direct:
+                out |= info.direct[name]
+                break  # closest definition in the MRO wins
+            stack.extend(info.bases)
+        return out
+
+    # -- visitors
+    def visit_With(self, node: ast.With) -> None:
+        keys = []
+        for item in node.items:
+            key = _lock_key(self.cls, self.classes, item.context_expr)
+            if key is not None:
+                self._on_acquire(key, node.lineno)
+                self.held.append(key)
+                keys.append(key)
+        for stmt in node.body:
+            self.visit(stmt)
+        for _ in keys:
+            self.held.pop()
+
+    def visit_Call(self, node: ast.Call) -> None:
+        expr = _acquired_expr(node)
+        if expr is not None:
+            key = _lock_key(self.cls, self.classes, expr)
+            if key is not None:
+                self._on_acquire(key, node.lineno)
+                # treat as held for the rest of the function (linear
+                # approximation; release tracking is handled by `with`)
+                self.held.append(key)
+        elif (self.cls is not None and isinstance(node.func, ast.Attribute)
+              and expr_text(node.func.value) == "self" and self.held):
+            for key in self._class_method_direct(node.func.attr):
+                self._on_acquire(key, node.lineno)
+        self.generic_visit(node)
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        pass  # nested defs run later, with an empty held stack
+
+    visit_AsyncFunctionDef = visit_FunctionDef  # type: ignore[assignment]
+
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        pass
+
+
+def _direct_locks(cls: _ClassInfo, classes: Dict[str, _ClassInfo],
+                  fn: ast.FunctionDef) -> Set[str]:
+    out: Set[str] = set()
+    for node in ast.walk(fn):
+        expr = None
+        if isinstance(node, ast.With):
+            for item in node.items:
+                key = _lock_key(cls, classes, item.context_expr)
+                if key:
+                    out.add(key)
+        else:
+            expr = _acquired_expr(node)
+            if expr is not None:
+                key = _lock_key(cls, classes, expr)
+                if key:
+                    out.add(key)
+    return out
+
+
+def _find_cycles(edges: Dict[Tuple[str, str], List[Tuple[str, int]]]) -> List[List[str]]:
+    """Strongly-connected components with a cycle (size > 1, or a
+    self-referential pair A->B->A)."""
+    graph: Dict[str, Set[str]] = {}
+    for (a, b) in edges:
+        graph.setdefault(a, set()).add(b)
+        graph.setdefault(b, set())
+
+    index: Dict[str, int] = {}
+    low: Dict[str, int] = {}
+    on_stack: Set[str] = set()
+    stack: List[str] = []
+    counter = [0]
+    sccs: List[List[str]] = []
+
+    def strongconnect(v: str) -> None:
+        work = [(v, iter(sorted(graph[v])))]
+        index[v] = low[v] = counter[0]
+        counter[0] += 1
+        stack.append(v)
+        on_stack.add(v)
+        while work:
+            node, it = work[-1]
+            advanced = False
+            for w in it:
+                if w not in index:
+                    index[w] = low[w] = counter[0]
+                    counter[0] += 1
+                    stack.append(w)
+                    on_stack.add(w)
+                    work.append((w, iter(sorted(graph[w]))))
+                    advanced = True
+                    break
+                if w in on_stack:
+                    low[node] = min(low[node], index[w])
+            if advanced:
+                continue
+            work.pop()
+            if work:
+                parent = work[-1][0]
+                low[parent] = min(low[parent], low[node])
+            if low[node] == index[node]:
+                comp = []
+                while True:
+                    w = stack.pop()
+                    on_stack.discard(w)
+                    comp.append(w)
+                    if w == node:
+                        break
+                if len(comp) > 1:
+                    sccs.append(sorted(comp))
+
+    for v in sorted(graph):
+        if v not in index:
+            strongconnect(v)
+    return sccs
+
+
+def build_lock_graph(corpus: Corpus) -> Dict[Tuple[str, str], List[Tuple[str, int]]]:
+    """(from_key, to_key) -> [(path, line), ...] acquisition sites."""
+    classes = _collect_classes(corpus)
+    # pass 2a: per-method direct acquisitions (for one-level call expansion)
+    for info in classes.values():
+        for name, fn in info.methods.items():
+            info.direct[name] = _direct_locks(info, classes, fn)
+
+    edges: Dict[Tuple[str, str], List[Tuple[str, int]]] = {}
+    for f in corpus.files:
+        for node in ast.walk(f.tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            info = classes.get(node.name)
+            for item in node.body:
+                if isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    walker = _EdgeWalker(info, classes, f, edges, item.name)
+                    for stmt in item.body:
+                        walker.visit(stmt)
+        # module-level functions
+        for item in f.tree.body:
+            if isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                walker = _EdgeWalker(None, classes, f, edges)
+                for stmt in item.body:
+                    walker.visit(stmt)
+    return edges
+
+
+def check(corpus: Corpus) -> List[Violation]:
+    edges = build_lock_graph(corpus)
+    out: List[Violation] = []
+    for cycle in _find_cycles(edges):
+        cset = set(cycle)
+        sites = sorted({
+            f"{p}:{ln} ({a} -> {b})"
+            for (a, b), locs in edges.items()
+            if a in cset and b in cset
+            for (p, ln) in locs
+        })
+        path, line = "", 0
+        for (a, b), locs in sorted(edges.items()):
+            if a in cset and b in cset:
+                path, line = locs[0]
+                break
+        out.append(Violation(
+            rule="lock-order",
+            path=path,
+            line=line,
+            symbol="<->".join(cycle),
+            message=(
+                "potential deadlock cycle in the lock-acquisition graph: "
+                + " <-> ".join(cycle) + "; sites: " + "; ".join(sites)
+            ),
+        ))
+    return out

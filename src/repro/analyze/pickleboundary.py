@@ -1,0 +1,157 @@
+"""Rule ``pickle-boundary``: classes shipped across process boundaries
+must not carry unpicklable attributes unless ``__getstate__``/
+``__reduce__`` handles them.
+
+Boundary classes are (a) anything that already defines
+``__getstate__``/``__setstate__``/``__reduce__`` (it has declared
+itself picklable-with-care), (b) the known payload classes named in
+``_BOUNDARY_NAMES`` (results, specs, chaos links — the objects pipe
+queues and ``ProcessTaskServer`` actually serialize), and (c) classes
+whose name ends in ``Spec`` or ``Policy`` (the spec vocabulary is
+defined as picklable).
+
+Risky attributes are assignments of ``threading.Lock/RLock/Condition/
+Event/Thread``, ``lambda``s, and ``open(...)`` handles. An attribute is
+*handled* when its name appears as a string constant inside the class's
+(or a corpus base class's) ``__getstate__``/``__setstate__`` — the
+``state.pop("_lock")`` idiom — or when the class defines ``__reduce__``.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Set, Tuple
+
+from .engine import Corpus, SourceFile, Violation, expr_text
+
+_RISKY_CTORS = {
+    "threading.Lock", "threading.RLock", "threading.Condition",
+    "threading.Event", "threading.Thread",
+    "Lock", "RLock", "Condition", "Event", "Thread",
+}
+
+_BOUNDARY_NAMES = {
+    "Result", "PoolSpec", "ChaosLink", "FailureInjector", "TaskDef",
+    "TraceContext", "ResourceRequest", "Timestamps", "TimingInfo",
+}
+
+_STATE_METHODS = {"__getstate__", "__setstate__"}
+_REDUCE_METHODS = {"__reduce__", "__reduce_ex__"}
+
+
+class _Cls:
+    def __init__(self, node: ast.ClassDef, src: SourceFile) -> None:
+        self.node = node
+        self.src = src
+        self.name = node.name
+        self.bases = [expr_text(b).split(".")[-1] for b in node.bases]
+        self.methods = {
+            m.name: m for m in node.body
+            if isinstance(m, (ast.FunctionDef, ast.AsyncFunctionDef))
+        }
+        # attr -> (line, what) for risky assignments
+        self.risky: Dict[str, Tuple[int, str]] = {}
+        for m in self.methods.values():
+            for sub in ast.walk(m):
+                if isinstance(sub, ast.Assign):
+                    what = _risky_value(sub.value)
+                    if what is None:
+                        continue
+                    for tgt in sub.targets:
+                        if isinstance(tgt, ast.Attribute) and expr_text(tgt.value) == "self":
+                            self.risky[tgt.attr] = (sub.lineno, what)
+
+    def handled_names(self) -> Set[str]:
+        """String constants inside this class's own state methods."""
+        out: Set[str] = set()
+        for name in _STATE_METHODS:
+            fn = self.methods.get(name)
+            if fn is None:
+                continue
+            for sub in ast.walk(fn):
+                if isinstance(sub, ast.Constant) and isinstance(sub.value, str):
+                    out.add(sub.value)
+        return out
+
+    def has_reduce(self) -> bool:
+        return bool(_REDUCE_METHODS & set(self.methods))
+
+    def has_state_hooks(self) -> bool:
+        return bool(_STATE_METHODS & set(self.methods))
+
+
+def _risky_value(value: ast.AST) -> "str | None":
+    if isinstance(value, ast.Call):
+        fn = expr_text(value.func)
+        if fn in _RISKY_CTORS:
+            return fn
+        if fn == "open":
+            return "open(...) file handle"
+    if isinstance(value, ast.Lambda):
+        return "lambda"
+    return None
+
+
+def _is_boundary(cls: _Cls) -> bool:
+    return (cls.name in _BOUNDARY_NAMES
+            or cls.name.endswith("Spec")
+            or cls.name.endswith("Policy")
+            or cls.has_state_hooks()
+            or cls.has_reduce())
+
+
+def check(corpus: Corpus) -> List[Violation]:
+    classes: Dict[str, _Cls] = {}
+    for f in corpus.files:
+        for node in ast.walk(f.tree):
+            if isinstance(node, ast.ClassDef):
+                classes[node.name] = _Cls(node, f)
+
+    def mro_handled(cls: _Cls) -> Set[str]:
+        out: Set[str] = set()
+        seen: Set[str] = set()
+        stack = [cls.name]
+        while stack:
+            name = stack.pop()
+            if name in seen or name not in classes:
+                continue
+            seen.add(name)
+            out |= classes[name].handled_names()
+            stack.extend(classes[name].bases)
+        return out
+
+    def mro_reduce(cls: _Cls) -> bool:
+        seen: Set[str] = set()
+        stack = [cls.name]
+        while stack:
+            name = stack.pop()
+            if name in seen or name not in classes:
+                continue
+            seen.add(name)
+            if classes[name].has_reduce():
+                return True
+            stack.extend(classes[name].bases)
+        return False
+
+    out: List[Violation] = []
+    for cls in classes.values():
+        if not _is_boundary(cls) or not cls.risky:
+            continue
+        if mro_reduce(cls):
+            continue
+        handled = mro_handled(cls)
+        for attr, (line, what) in sorted(cls.risky.items()):
+            if attr in handled:
+                continue
+            out.append(Violation(
+                rule="pickle-boundary",
+                path=cls.src.path,
+                line=line,
+                symbol=f"{cls.name}.{attr}",
+                message=(
+                    f"{cls.name}.{attr} holds a {what}, but {cls.name} crosses "
+                    "a process boundary and its __getstate__ does not drop or "
+                    "rebuild it — pickling will fail (or ship a dead lock)"
+                ),
+            ))
+    return out

@@ -1,0 +1,126 @@
+"""Rule ``spec-roundtrip``: every field on the spec dataclasses that
+``specfile.py`` serializes must be *handled* by the to/from-dict code.
+
+"Handled" means the field name appears in the serialization surface:
+as a dict-key string constant, an attribute access, or a keyword
+argument inside ``specfile.py`` — or inside the class's own
+``to_dict``/``from_dict`` methods (the ``PoolSpec`` pattern, which
+specfile delegates to). A field that appears nowhere is silently
+dropped on save and silently defaulted on load: exactly the bug class
+PR 8 hit when new knobs were added by hand.
+
+The set of audited classes is discovered, not hard-coded: every
+capitalized name *called* inside ``specfile.py`` that resolves to a
+dataclass in the corpus (plus anything specfile touches through
+``X.from_dict``).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from .engine import Corpus, SourceFile, Violation, expr_text
+
+
+def _find_specfile(corpus: Corpus) -> Optional[SourceFile]:
+    direct = corpus.find("core/specfile.py")
+    if direct is not None:
+        return direct
+    for f in corpus.files:
+        names = {n.name for n in ast.walk(f.tree) if isinstance(n, ast.FunctionDef)}
+        if {"spec_to_dict", "spec_from_dict"} <= names:
+            return f
+    return None
+
+
+def _dataclasses(corpus: Corpus) -> Dict[str, Tuple[SourceFile, ast.ClassDef]]:
+    out: Dict[str, Tuple[SourceFile, ast.ClassDef]] = {}
+    for f in corpus.files:
+        for node in ast.walk(f.tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            for dec in node.decorator_list:
+                name = expr_text(dec if not isinstance(dec, ast.Call) else dec.func)
+                if name.rsplit(".", 1)[-1] == "dataclass":
+                    out[node.name] = (f, node)
+                    break
+    return out
+
+
+def _fields(node: ast.ClassDef) -> List[Tuple[str, int]]:
+    out = []
+    for item in node.body:
+        if isinstance(item, ast.AnnAssign) and isinstance(item.target, ast.Name):
+            name = item.target.id
+            if not name.startswith("_") and name.isupper() is False:
+                out.append((name, item.lineno))
+    return out
+
+
+def _mentioned_names(*scopes: ast.AST) -> Set[str]:
+    """Strings, attribute names, and keyword-arg names in the scopes."""
+    out: Set[str] = set()
+    for scope in scopes:
+        for node in ast.walk(scope):
+            if isinstance(node, ast.Constant) and isinstance(node.value, str):
+                out.add(node.value)
+            elif isinstance(node, ast.Attribute):
+                out.add(node.attr)
+            elif isinstance(node, ast.keyword) and node.arg:
+                out.add(node.arg)
+    return out
+
+
+def _audited_classes(specfile: SourceFile,
+                     dataclasses: Dict[str, Tuple[SourceFile, ast.ClassDef]]) -> Set[str]:
+    audited: Set[str] = set()
+    for node in ast.walk(specfile.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        text = expr_text(node.func)
+        if not text:
+            continue
+        leaf = text.rsplit(".", 1)[-1]
+        if leaf in dataclasses:
+            audited.add(leaf)
+        elif leaf in ("from_dict", "to_dict"):
+            owner = text.rsplit(".", 2)[-2] if text.count(".") >= 1 else ""
+            if owner in dataclasses:
+                audited.add(owner)
+    return audited
+
+
+def check(corpus: Corpus) -> List[Violation]:
+    specfile = _find_specfile(corpus)
+    if specfile is None:
+        return []  # specfile not in the analyzed set: nothing to audit against
+    dcs = _dataclasses(corpus)
+    audited = _audited_classes(specfile, dcs)
+
+    handled_global = _mentioned_names(specfile.tree)
+    out: List[Violation] = []
+    for cname in sorted(audited):
+        src, node = dcs[cname]
+        own_serializers = [
+            m for m in node.body
+            if isinstance(m, (ast.FunctionDef, ast.AsyncFunctionDef))
+            and m.name in ("to_dict", "from_dict")
+        ]
+        handled = handled_global | _mentioned_names(*own_serializers)
+        for fname, line in _fields(node):
+            if fname in handled:
+                continue
+            out.append(Violation(
+                rule="spec-roundtrip",
+                path=src.path,
+                line=line,
+                symbol=f"{cname}.{fname}",
+                message=(
+                    f"{cname}.{fname} is never mentioned by specfile.py (or "
+                    f"{cname}.to_dict/from_dict): the field is silently dropped "
+                    "on save and silently defaulted on load — serialize it or "
+                    "reject it explicitly"
+                ),
+            ))
+    return out

@@ -1,0 +1,309 @@
+"""Runtime lock sanitizer: a mini-TSan for the steering stack.
+
+Under ``REPRO_LOCK_SANITIZER=1`` (installed by ``tests/conftest.py``),
+every ``threading.Lock``/``RLock``/``Condition`` **created by repro
+code** is wrapped so real acquisitions are recorded into a global
+lock-order graph: an edge ``A -> B`` means some thread acquired B while
+holding A. At session end the graph must be acyclic — a cycle is a
+lock-order inversion that static analysis (``repro.analyze``'s
+``lock-order`` rule) may not see, because the static checker
+deliberately refuses to unify same-named lock attributes across
+classes.
+
+Locks are keyed by *creation site* (``file:line``), so every instance
+created at one site is one graph node — exactly the granularity the
+static graph uses. Locks created outside the repro package (stdlib,
+third-party) are left untouched: they are returned raw, cost nothing,
+and cannot pollute the graph.
+
+The wrappers implement the full ``Condition`` protocol
+(``_release_save``/``_acquire_restore``/``_is_owned``) so a traced
+RLock works as a Condition's inner lock, and ``threading.Condition()``
+called with no lock from repro code gets a traced RLock injected.
+``threading.Event`` is NOT patched: ``repro.core.thinker.WakeEvent``
+subclasses it, and a factory function cannot be subclassed.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import threading
+import traceback
+from typing import Dict, List, Optional, Set, Tuple
+
+import _thread
+
+ENV_FLAG = "REPRO_LOCK_SANITIZER"
+
+_REPRO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+class LockGraph:
+    """Acquisition-order edges keyed by lock creation site."""
+
+    def __init__(self) -> None:
+        # raw lock: the graph must never recurse into its own tracing
+        self._glock = _thread.allocate_lock()
+        self._local = threading.local()
+        # (from_site, to_site) -> (count, example traceback summary)
+        self.edges: Dict[Tuple[str, str], Tuple[int, str]] = {}
+        self.acquisitions = 0
+
+    # ------------------------------------------------------------- recording
+    def _held(self) -> List[str]:
+        held = getattr(self._local, "held", None)
+        if held is None:
+            held = self._local.held = []
+        return held
+
+    def on_acquire(self, site: str) -> None:
+        held = self._held()
+        self.acquisitions += 1
+        if held:
+            stack: Optional[str] = None
+            with self._glock:
+                for h in held:
+                    if h == site:
+                        continue  # re-entrant RLock acquire: not an ordering
+                    key = (h, site)
+                    prev = self.edges.get(key)
+                    if prev is None:
+                        if stack is None:
+                            stack = "".join(traceback.format_stack(limit=8)[:-2])
+                        self.edges[key] = (1, stack)
+                    else:
+                        self.edges[key] = (prev[0] + 1, prev[1])
+        held.append(site)
+
+    def on_release(self, site: str) -> None:
+        held = self._held()
+        # release order may differ from acquire order: drop the last match
+        for i in range(len(held) - 1, -1, -1):
+            if held[i] == site:
+                del held[i]
+                return
+
+    # ------------------------------------------------------------- analysis
+    def find_cycles(self) -> List[List[str]]:
+        """Strongly-connected components of size > 1 (each is a cycle)."""
+        with self._glock:
+            keys = list(self.edges)
+        graph: Dict[str, Set[str]] = {}
+        for a, b in keys:
+            graph.setdefault(a, set()).add(b)
+            graph.setdefault(b, set())
+
+        index: Dict[str, int] = {}
+        low: Dict[str, int] = {}
+        on_stack: Set[str] = set()
+        stack: List[str] = []
+        counter = [0]
+        sccs: List[List[str]] = []
+
+        def connect(v: str) -> None:
+            work = [(v, iter(sorted(graph[v])))]
+            index[v] = low[v] = counter[0]
+            counter[0] += 1
+            stack.append(v)
+            on_stack.add(v)
+            while work:
+                node, it = work[-1]
+                advanced = False
+                for w in it:
+                    if w not in index:
+                        index[w] = low[w] = counter[0]
+                        counter[0] += 1
+                        stack.append(w)
+                        on_stack.add(w)
+                        work.append((w, iter(sorted(graph[w]))))
+                        advanced = True
+                        break
+                    if w in on_stack:
+                        low[node] = min(low[node], index[w])
+                if advanced:
+                    continue
+                work.pop()
+                if work:
+                    low[work[-1][0]] = min(low[work[-1][0]], low[node])
+                if low[node] == index[node]:
+                    comp = []
+                    while True:
+                        w = stack.pop()
+                        on_stack.discard(w)
+                        comp.append(w)
+                        if w == node:
+                            break
+                    if len(comp) > 1:
+                        sccs.append(sorted(comp))
+
+        for v in sorted(graph):
+            if v not in index:
+                connect(v)
+        return sccs
+
+    def report_cycles(self) -> str:
+        lines = []
+        for cycle in self.find_cycles():
+            cset = set(cycle)
+            lines.append("lock-order cycle: " + " <-> ".join(cycle))
+            with self._glock:
+                for (a, b), (count, stack) in sorted(self.edges.items()):
+                    if a in cset and b in cset:
+                        lines.append(f"  {a} -> {b} (seen {count}x); first acquisition:")
+                        lines.extend("    " + ln for ln in stack.rstrip().splitlines())
+        return "\n".join(lines)
+
+    def assert_acyclic(self) -> None:
+        cycles = self.find_cycles()
+        if cycles:
+            raise AssertionError(
+                "runtime lock sanitizer found lock-order inversion(s):\n"
+                + self.report_cycles()
+            )
+
+
+_GLOBAL = LockGraph()
+
+
+def graph() -> LockGraph:
+    return _GLOBAL
+
+
+# --------------------------------------------------------------------------
+# Traced wrappers
+# --------------------------------------------------------------------------
+
+
+class _TracedLockBase:
+    __slots__ = ("_inner", "_site", "_graph")
+
+    def __init__(self, inner, site: str, graph: LockGraph) -> None:
+        self._inner = inner
+        self._site = site
+        self._graph = graph
+
+    def acquire(self, blocking: bool = True, timeout: float = -1):
+        got = self._inner.acquire(blocking, timeout)
+        if got:
+            self._graph.on_acquire(self._site)
+        return got
+
+    def release(self) -> None:
+        self._graph.on_release(self._site)
+        self._inner.release()
+
+    def locked(self) -> bool:
+        return self._inner.locked()
+
+    def __enter__(self):
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+    def _at_fork_reinit(self) -> None:  # pragma: no cover - fork safety
+        self._inner._at_fork_reinit()
+
+    def __repr__(self) -> str:
+        return f"<traced {self._inner!r} from {self._site}>"
+
+
+class TracedLock(_TracedLockBase):
+    """threading.Lock wrapper (Condition uses its plain acquire/release)."""
+
+
+class TracedRLock(_TracedLockBase):
+    """threading.RLock wrapper implementing the Condition inner-lock
+    protocol; ``wait()`` fully releases, so tracing must mirror it."""
+
+    def _release_save(self):
+        self._graph.on_release(self._site)
+        return self._inner._release_save()
+
+    def _acquire_restore(self, state) -> None:
+        self._inner._acquire_restore(state)
+        self._graph.on_acquire(self._site)
+
+    def _is_owned(self) -> bool:
+        return self._inner._is_owned()
+
+    def _recursion_count(self) -> int:  # pragma: no cover - 3.12+ API
+        return self._inner._recursion_count()
+
+
+# --------------------------------------------------------------------------
+# Patching
+# --------------------------------------------------------------------------
+
+_originals: Dict[str, object] = {}
+
+
+def _caller_site(depth: int = 2) -> Optional[str]:
+    """``file:line`` of the factory's caller when it lives under the
+    repro package; None otherwise (lock stays untraced)."""
+    try:
+        frame = sys._getframe(depth)
+    except ValueError:  # pragma: no cover
+        return None
+    path = frame.f_code.co_filename
+    if not os.path.abspath(path).startswith(_REPRO_ROOT):
+        return None
+    rel = os.path.relpath(path, os.path.dirname(_REPRO_ROOT))
+    return f"{rel}:{frame.f_lineno}"
+
+
+def installed() -> bool:
+    return bool(_originals)
+
+
+def install(graph: Optional[LockGraph] = None) -> None:
+    """Patch ``threading.Lock/RLock/Condition`` so repro-created locks
+    are traced into ``graph`` (the global graph by default). Idempotent."""
+    if _originals:
+        return
+    g = graph if graph is not None else _GLOBAL
+    orig_lock = threading.Lock
+    orig_rlock = threading.RLock
+    orig_condition = threading.Condition
+    _originals.update(Lock=orig_lock, RLock=orig_rlock, Condition=orig_condition)
+
+    def traced_lock():
+        site = _caller_site()
+        inner = orig_lock()
+        return TracedLock(inner, site, g) if site else inner
+
+    def traced_rlock():
+        site = _caller_site()
+        inner = orig_rlock()
+        return TracedRLock(inner, site, g) if site else inner
+
+    def traced_condition(lock=None):
+        if lock is None:
+            site = _caller_site()
+            if site:
+                lock = TracedRLock(orig_rlock(), site, g)
+        return orig_condition(lock)
+
+    threading.Lock = traced_lock
+    threading.RLock = traced_rlock
+    threading.Condition = traced_condition
+
+
+def uninstall() -> None:
+    """Restore the original factories. Locks created while installed
+    stay traced (they keep recording into their graph)."""
+    if not _originals:
+        return
+    threading.Lock = _originals.pop("Lock")
+    threading.RLock = _originals.pop("RLock")
+    threading.Condition = _originals.pop("Condition")
+
+
+def install_from_env() -> bool:
+    """Install when ``REPRO_LOCK_SANITIZER=1``; returns whether installed."""
+    if os.environ.get(ENV_FLAG) == "1":
+        install()
+        return True
+    return False

@@ -1,0 +1,81 @@
+"""Rule ``thread-lifecycle``: every started ``Thread`` must either be a
+daemon or have a reachable join/stop path.
+
+A non-daemon thread with no ``join`` anywhere in its owning scope keeps
+the interpreter alive after the campaign finishes — the classic "soak
+harness hangs at exit" failure. The rule accepts either:
+
+* ``daemon=True`` spelled literally at construction (the repo idiom:
+  daemon + an explicit stop event + join-with-timeout in ``stop()``), or
+* a ``.join(...)`` call somewhere in the enclosing class (for threads
+  created in methods) or module (for threads created at function/module
+  scope) — the thread is fire-and-wait, not fire-and-forget.
+
+``daemon=<expr>`` (e.g. ``daemon=self.daemon``) is treated as
+not-literally-daemon and therefore requires the join path.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List, Optional
+
+from .engine import Corpus, Violation, enclosing_qualname, expr_text
+
+
+def _is_thread_ctor(call: ast.Call) -> bool:
+    return expr_text(call.func) in ("threading.Thread", "Thread")
+
+
+def _daemon_literal_true(call: ast.Call) -> bool:
+    for kw in call.keywords:
+        if kw.arg == "daemon":
+            return isinstance(kw.value, ast.Constant) and kw.value.value is True
+    return False
+
+
+def _enclosing_class(tree: ast.Module, target: ast.AST) -> Optional[ast.ClassDef]:
+    best: Optional[ast.ClassDef] = None
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.ClassDef)
+                and node.lineno <= target.lineno
+                and getattr(node, "end_lineno", node.lineno) >= target.lineno):
+            if best is None or node.lineno > best.lineno:
+                best = node
+    return best
+
+
+def _has_join(scope: ast.AST) -> bool:
+    for node in ast.walk(scope):
+        if (isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "join"
+                # exclude ", ".join(...) — a string-literal receiver is str.join
+                and not isinstance(node.func.value, ast.Constant)):
+            return True
+    return False
+
+
+def check(corpus: Corpus) -> List[Violation]:
+    out: List[Violation] = []
+    for f in corpus.files:
+        for node in ast.walk(f.tree):
+            if not (isinstance(node, ast.Call) and _is_thread_ctor(node)):
+                continue
+            if _daemon_literal_true(node):
+                continue
+            scope: ast.AST = _enclosing_class(f.tree, node) or f.tree
+            if _has_join(scope):
+                continue
+            where = enclosing_qualname(f.tree, node)
+            out.append(Violation(
+                rule="thread-lifecycle",
+                path=f.path,
+                line=node.lineno,
+                symbol=where,
+                message=(
+                    f"{where}: Thread started without daemon=True and with no "
+                    "join path in its owning scope — it will outlive the "
+                    "campaign; mark it daemon (with a stop event) or join it"
+                ),
+            ))
+    return out

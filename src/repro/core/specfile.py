@@ -51,6 +51,7 @@ from .result import FailureKind
 from .thinker import BaseThinker
 
 __all__ = [
+    "SPEC_VERSION",
     "dumps_toml",
     "import_dotted",
     "dotted_path",
@@ -60,6 +61,15 @@ __all__ = [
     "spec_from_dict",
     "spec_to_dict",
 ]
+
+# Campaign-file format version. ``spec_to_dict`` stamps it; ``spec_from_dict``
+# migrates older versions forward and refuses newer ones with a clear error.
+#   v1 (implicit — files with no ``version`` key): allowed the bare-int pool
+#      shorthand ``pools.default = 4``.
+#   v2: pools must be tables (``pools.default = {size = 4}``); the int
+#      shorthand is migrated on load for v1 files but rejected in v2 files,
+#      so saved specs are always diffable against what loads.
+SPEC_VERSION = 2
 
 
 # --------------------------------------------------------------------------
@@ -203,6 +213,7 @@ def spec_to_dict(spec: Any) -> Dict[str, Any]:
         tasks.append(entry)
 
     out: Dict[str, Any] = {
+        "version": SPEC_VERSION,
         "tasks": tasks,
         "queues": {"backend": spec.queues.backend, "topics": list(spec.queues.topics)},
         "pools": {name: ps.to_dict() for name, ps in sorted(spec.pools.items())},
@@ -363,9 +374,40 @@ def _task_from_entry(entry: Any) -> Any:
     )
 
 
+def _spec_version(d: Mapping[str, Any]) -> int:
+    """Validate the ``version`` key; files without one are v1 (the format
+    that predates versioning). Future versions fail loudly rather than
+    half-loading a file written by a newer build."""
+    v = d.get("version", 1)
+    if isinstance(v, bool) or not isinstance(v, int):
+        raise ValueError(f"spec version must be an integer (got {v!r})")
+    if v < 1:
+        raise ValueError(f"spec version must be >= 1 (got {v})")
+    if v > SPEC_VERSION:
+        raise ValueError(
+            f"campaign spec declares version {v}, but this build reads "
+            f"version <= {SPEC_VERSION} — upgrade repro, or re-save the "
+            "spec from the build that wrote it"
+        )
+    return v
+
+
+def _migrate_spec_dict(d: Mapping[str, Any], version: int) -> Dict[str, Any]:
+    """Rewrite a pre-``SPEC_VERSION`` dict into the current shape.
+    v1 -> v2: the bare-int pool shorthand becomes an explicit table."""
+    out = dict(d)
+    if version < 2 and isinstance(out.get("pools"), Mapping):
+        out["pools"] = {
+            name: ({"size": v} if isinstance(v, int) and not isinstance(v, bool) else v)
+            for name, v in out["pools"].items()
+        }
+    return out
+
+
 def spec_from_dict(d: Mapping[str, Any]) -> Any:
     """Build an ``AppSpec`` from its plain-dict form (inverse of
-    ``spec_to_dict``; also accepts hand-written config shorthands)."""
+    ``spec_to_dict``; also accepts hand-written config shorthands).
+    Pre-``SPEC_VERSION`` dicts are migrated forward on the fly."""
     from .app import (  # local: avoid cycle
         AppSpec,
         CampaignSpec,
@@ -376,11 +418,22 @@ def spec_from_dict(d: Mapping[str, Any]) -> Any:
         SteeringSpec,
     )
 
-    known = {"tasks", "queues", "pools", "fabric", "observe", "steering",
-             "campaign", "server", "smoke"}
+    known = {"version", "tasks", "queues", "pools", "fabric", "observe",
+             "steering", "campaign", "server", "smoke"}
     unknown = set(d) - known
     if unknown:
         raise ValueError(f"unknown spec sections: {sorted(unknown)}")
+    version = _spec_version(d)
+    d = _migrate_spec_dict(d, version)
+    if version >= 2 and isinstance(d.get("pools"), Mapping):
+        bare = sorted(name for name, v in d["pools"].items()
+                      if isinstance(v, int) and not isinstance(v, bool))
+        if bare:
+            raise ValueError(
+                f"pools {bare}: version {version} specs spell pool sizes as "
+                "tables ({size = n}); the bare-int shorthand is only read "
+                "from version 1 (unversioned) files"
+            )
     if "tasks" not in d or not d["tasks"]:
         raise ValueError("a campaign needs at least one [[tasks]] entry")
 

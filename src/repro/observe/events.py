@@ -53,6 +53,24 @@ STAGE_ORDER: tuple = (
 # Stages emitted outside the linear lifecycle.
 AUX_STAGES: tuple = ("speculated", "retried", "reallocated")
 
+# The closed vocabulary of ``Event.kind`` values. Every ``Event(kind=...)``
+# constructed anywhere in the tree must use one of these (enforced by the
+# ``event-kind`` rule of ``repro.analyze``); consumers that dispatch on a
+# kind not listed here are watching for an event that never fires. Add the
+# kind here in the same change that introduces its first emitter.
+EVENT_KINDS: tuple = (
+    "task",          # lifecycle stage for one task (task_event)
+    "cache",         # warm-worker proxy cache hit/miss (cache_event)
+    "gauge",         # named scalar sample (gauge)
+    "realloc",       # cross-pool resource move (realloc)
+    "pool_resize",   # elastic fleet grow/shrink (pool_resize)
+    "surrogate",     # surrogate-model retrain/rerank (surrogate_event)
+    "profile",       # profiled code span (profile)
+    "alert",         # SLO alert transition (alert)
+    "remediation",   # auto-remediation attempt (remediation)
+    "chaos",         # fault-injection action fired (chaos.schedule)
+)
+
 
 @dataclass
 class Event:

@@ -453,7 +453,9 @@ class SLOEngine:
 
     def settle(self, timeout_s: float = 5.0, poll_s: Optional[float] = None) -> bool:
         """Tick until nothing is firing (or timeout). Call after a run's
-        work drains so resolution events land before teardown."""
+        work drains so resolution events land before teardown. Parks on
+        the engine's stop event between ticks, so ``stop()`` interrupts
+        a settle immediately instead of waiting out the poll interval."""
         poll = poll_s if poll_s is not None else max(0.01, self.spec.interval_s)
         deadline = self._clock() + timeout_s
         while True:
@@ -462,7 +464,8 @@ class SLOEngine:
                 return True
             if self._clock() >= deadline:
                 return False
-            time.sleep(poll)
+            if self._stop.wait(poll):
+                return False
 
     # ------------------------------------------------------------ lifecycle
     def start(self) -> "SLOEngine":

@@ -9,6 +9,40 @@ import numpy as np
 import pytest
 
 
+def pytest_configure(config):
+    # Opt-in mini-TSan: REPRO_LOCK_SANITIZER=1 wraps every Lock/RLock/
+    # Condition created by repro code so the real acquisition order is
+    # recorded; pytest_sessionfinish asserts the graph stayed acyclic.
+    from repro.analyze import runtime
+
+    if runtime.install_from_env():
+        config._repro_lock_sanitizer = True
+
+
+def pytest_sessionfinish(session, exitstatus):
+    if not getattr(session.config, "_repro_lock_sanitizer", False):
+        return
+    from repro.analyze import runtime
+
+    g = runtime.graph()
+    cycles = g.find_cycles()
+    tr = session.config.pluginmanager.get_plugin("terminalreporter")
+    if tr is not None:
+        tr.write_line(
+            f"repro lock sanitizer: {g.acquisitions} acquisitions, "
+            f"{len(g.edges)} ordered pairs, {len(cycles)} cycle(s)"
+        )
+    if cycles:
+        report = g.report_cycles()
+        if tr is not None:
+            tr.write_line(report, red=True)
+        else:
+            print(report, file=sys.stderr)
+        # wrap_session reads session.exitstatus after this hook returns,
+        # so flipping it here fails the run without an internal error.
+        session.exitstatus = 1
+
+
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)

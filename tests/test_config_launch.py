@@ -33,7 +33,7 @@ from repro.app import (
     task,
 )
 from repro.core import BaseThinker, ResourceCounter, RetryPolicy, agent, result_processor
-from repro.core.specfile import dotted_path, dumps_toml, import_dotted
+from repro.core.specfile import SPEC_VERSION, dotted_path, dumps_toml, import_dotted
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SENTINEL = object()
@@ -137,6 +137,65 @@ class TestDictRoundTrip:
             assert handle.wait(30)
         assert handle.thinker.count == 4
         assert app.report.completed
+
+
+class TestSpecVersioning:
+    def test_to_dict_stamps_current_version(self):
+        assert spec_to_dict(_full_spec())["version"] == SPEC_VERSION
+
+    def test_saved_files_carry_the_version(self, tmp_path):
+        path = str(tmp_path / "c.toml")
+        save_spec(_full_spec(), path)
+        assert f"version = {SPEC_VERSION}" in open(path).read()
+
+    def test_v1_int_pool_shorthand_migrates(self):
+        # a pre-versioning file: no version key, bare-int pool sizes
+        spec = spec_from_dict({
+            "tasks": ["test_config_launch.special_task"],
+            "pools": {"special": 3},
+        })
+        assert spec.pools["special"].size == 3
+
+    def test_v2_rejects_int_pool_shorthand(self):
+        with pytest.raises(ValueError, match="bare-int shorthand"):
+            spec_from_dict({
+                "version": 2,
+                "tasks": ["test_config_launch.special_task"],
+                "pools": {"special": 3},
+            })
+
+    def test_future_version_fails_loudly(self):
+        with pytest.raises(ValueError, match="upgrade repro"):
+            spec_from_dict({
+                "version": SPEC_VERSION + 1,
+                "tasks": ["test_config_launch.special_task"],
+            })
+
+    @pytest.mark.parametrize("bad", ["2", True, 0, -1, 1.5])
+    def test_malformed_version_rejected(self, bad):
+        with pytest.raises(ValueError, match="version"):
+            spec_from_dict({
+                "version": bad,
+                "tasks": ["test_config_launch.special_task"],
+            })
+
+    def test_versioned_file_load(self, tmp_path):
+        # save (stamps v2) -> load honors the stamp and round-trips
+        path = str(tmp_path / "c.json")
+        save_spec(_full_spec(), path)
+        doc = json.load(open(path))
+        assert doc["version"] == SPEC_VERSION
+        assert spec_to_dict(load_spec(path)) == spec_to_dict(_full_spec())
+
+    def test_v1_file_still_loads(self, tmp_path):
+        # a legacy file written before versioning existed
+        path = str(tmp_path / "old.json")
+        doc = spec_to_dict(_full_spec())
+        del doc["version"]
+        doc["pools"]["special"] = 1  # the old shorthand
+        json.dump(doc, open(path, "w"))
+        spec = load_spec(path)
+        assert spec.pools["special"].size == 1
 
 
 class TestDottedPaths:
