@@ -1,0 +1,411 @@
+"""Control-plane gate: many campaigns, one fleet, a SIGKILLed daemon.
+
+Starts a real ``python -m repro.control serve`` daemon over a shared
+two-pool fleet, submits four campaigns over HTTP (three contending for
+the ``default`` pool with weights 2/1/1, one alone on ``aux``), lets a
+``ChaosSchedule`` SIGKILL the daemon mid-``running`` through the
+``kill_control_plane`` primitive, restarts it on the same root, and
+waits for auto-resume to finish everything. Hard gates (a violation
+raises, so CI fails loudly):
+
+* **exactly-once under crash** — every campaign's results journal holds
+  each index exactly once (``InvariantChecker`` over a ledger
+  reconstructed from the journals; zero lost, zero duplicated);
+* **>= 3 campaigns were mid-flight** when the daemon died, and every
+  one of them records ``resumed >= 1`` after the restart;
+* **fair share** — each contended campaign's integrated slot-share
+  stays within 20% of its weight entitlement (``FleetAccounting``,
+  persisted across the crash);
+* **remote-site elasticity** — a resize request round-trips to a
+  spawned ``ProcessTaskServer`` (request -> ack -> ``pool_resize``
+  event in the site's own log), including clamping to the spec band.
+
+With ``--record DIR`` metrics land in ``BENCH_control.json`` via
+``BenchRecorder`` (the CI ``control-smoke`` job records this).
+"""
+
+from __future__ import annotations
+
+import argparse
+import collections
+import json
+import os
+import shutil
+import signal
+import subprocess
+import sys
+import tempfile
+import time
+import urllib.request
+from typing import Any, Dict, List, Optional
+
+SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+
+SMOKE_W = 60      # light campaign task count; heavy = 2x, aux = 1.5x
+FULL_W = 200
+TASK_S = 0.05
+KILL_AT_FRAC = 0.15   # min campaign progress when the SIGKILL fires
+
+
+def _campaign_toml(n_tasks: int, weight: float, pool: str, pool_size: int,
+                   n_parallel: int) -> str:
+    return f"""
+[[tasks]]
+fn = "repro.control.workload.workload_task"
+pool = "{pool}"
+
+[pools.{pool}]
+size = {pool_size}
+
+[steering]
+thinker = "repro.control.workload.make_workload"
+
+[steering.kwargs]
+n_tasks = {n_tasks}
+n_parallel = {n_parallel}
+task_s = {TASK_S}
+
+[campaign]
+checkpoint_interval_s = 0.2
+
+[control]
+weight = {weight}
+min_slots = 1
+"""
+
+
+def _journal_indices(state_dir: str) -> List[int]:
+    path = os.path.join(state_dir, "results.jsonl")
+    if not os.path.exists(path):
+        return []
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                out.append(int(json.loads(line)["index"]))
+            except (ValueError, KeyError):
+                continue  # torn tail line from the SIGKILL mid-append
+    return out
+
+
+class _JournalLedger:
+    """Duck-typed ``WorkLedger`` view over a results journal, so
+    ``InvariantChecker`` gates the crash-resume run with the same
+    exactly-once semantics as the soak tier: a journal line is an
+    acceptance, so a missing index is *lost* and a repeated index is a
+    duplicated delivery."""
+
+    def __init__(self, n_tasks: int, indices: List[int]) -> None:
+        self.n_tasks = n_tasks
+        counts = collections.Counter(i for i in indices if 0 <= i < n_tasks)
+        self.completed = len(counts)
+        self._missing = [i for i in range(n_tasks) if i not in counts]
+        self.exactly_once_violations = sorted(i for i, c in counts.items() if c > 1)
+        self.value_errors: List[int] = []
+        self.duplicates_suppressed = 0
+        self.failed_deliveries = 0
+        self.resubmits = 0
+
+    def missing_indices(self, limit: int = 8) -> List[int]:
+        return self._missing[:limit]
+
+
+def _wait(predicate, timeout: float, msg: str, interval: float = 0.2) -> None:
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if predicate():
+            return
+        time.sleep(interval)
+    raise AssertionError(f"control_plane benchmark timed out waiting for {msg}")
+
+
+def _remote_resize_phase(workdir: str) -> Dict[str, Any]:
+    """The cross-process elasticity gate: resize a spawned
+    ``ProcessTaskServer`` over the control channel and observe the
+    ``pool_resize`` event in the site's own log."""
+    from repro.app import (
+        AppSpec, ColmenaApp, ObserveSpec, PoolSpec, QueueSpec, ServerSpec, TaskDef,
+    )
+    from repro.control import workload_task
+
+    parent_log = os.path.join(workdir, "resize_events.jsonl")
+    child_log = os.path.join(workdir, "resize_events.server.jsonl")
+    app = ColmenaApp(AppSpec(
+        tasks=[TaskDef(fn=workload_task, method="workload_task")],
+        queues=QueueSpec(backend="pipe"),
+        pools={"default": PoolSpec("default", 2, min_size=1, max_size=6)},
+        server=ServerSpec(in_process=False),
+        observe=ObserveSpec(jsonl_path=parent_log),
+    ))
+    roundtrips = 0
+    clamped_new = None
+    with app.run(timeout=120) as handle:
+        ack = handle.queues.request_resize("default", 4, timeout=60)
+        if ack is not None and ack.ok and ack.detail == {"old": 2, "new": 4}:
+            roundtrips += 1
+        ack2 = handle.queues.request_resize("default", 99, timeout=60)
+        if ack2 is not None and ack2.ok:
+            roundtrips += 1
+            clamped_new = ack2.detail.get("new")
+        # the channel still delivers work after control traffic
+        handle.queues.send_inputs(5, method="workload_task")
+        r = handle.queues.get_result(timeout=60)
+        delivered = bool(r is not None and r.success and r.value == 16)
+    resize_events = 0
+    if os.path.exists(child_log):
+        with open(child_log) as f:
+            for line in f:
+                try:
+                    ev = json.loads(line)
+                except ValueError:
+                    continue
+                if ev.get("kind") == "pool_resize" and ev.get("value") == 4.0:
+                    resize_events += 1
+    return {
+        "resize_roundtrips": roundtrips,
+        "resize_clamped_new": clamped_new,
+        "resize_events": resize_events,
+        "resize_delivery_ok": delivered,
+    }
+
+
+def main(
+    quick: bool = True,
+    recorder=None,
+    n_tasks: Optional[int] = None,
+    keep_root: Optional[str] = None,
+) -> dict:
+    from repro.chaos import (
+        ChaosAction, ChaosRunner, ChaosSchedule, InvariantChecker, kill_control_plane,
+    )
+    from repro.control import DONE, FleetAccounting, StateStore
+
+    w = n_tasks if n_tasks is not None else (SMOKE_W if quick else FULL_W)
+    # heavy gets 2x the weight AND 2x the tasks, so under a fair split
+    # every default-pool campaign finishes around the same time and the
+    # cleanly-contended three-way phase dominates the accounting.
+    plan = {
+        "heavy": {"n": 2 * w, "weight": 2.0, "pool": "default", "pool_size": 8},
+        "light-a": {"n": w, "weight": 1.0, "pool": "default", "pool_size": 8},
+        "light-b": {"n": w, "weight": 1.0, "pool": "default", "pool_size": 8},
+        "aux-cam": {"n": (3 * w) // 2, "weight": 1.0, "pool": "aux", "pool_size": 2},
+    }
+
+    workdir = keep_root or tempfile.mkdtemp(prefix="bench_control_")
+    root = os.path.join(workdir, "root")
+    fleet_path = os.path.join(workdir, "fleet.toml")
+    with open(fleet_path, "w") as f:
+        f.write("[pools.default]\nsize = 8\n\n[pools.aux]\nsize = 2\n")
+    port_file = os.path.join(workdir, "port")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+
+    def serve() -> subprocess.Popen:
+        return subprocess.Popen(
+            [sys.executable, "-m", "repro.control", "serve",
+             "--root", root, "--fleet", fleet_path,
+             "--port-file", port_file, "--tick", "0.1"],
+            env=env, stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL,
+        )
+
+    def url() -> str:
+        with open(port_file) as f:
+            return f"http://127.0.0.1:{f.read().strip()}"
+
+    def get(path: str) -> dict:
+        with urllib.request.urlopen(url() + path, timeout=30) as r:
+            return json.loads(r.read())
+
+    t0 = time.monotonic()
+    proc = serve()
+    runner = None
+    try:
+        _wait(lambda: os.path.exists(port_file), timeout=60, msg="daemon port file")
+        ids: Dict[str, str] = {}
+        for name, cfg in plan.items():
+            body = _campaign_toml(cfg["n"], cfg["weight"], cfg["pool"],
+                                  cfg["pool_size"], n_parallel=8).encode()
+            req = urllib.request.Request(
+                url() + f"/campaigns?name={name}", data=body, method="POST")
+            with urllib.request.urlopen(req, timeout=30) as r:
+                ids[name] = json.loads(r.read())["id"]
+
+        store = StateStore(root)
+        dirs = {name: store.state_dir(cid) for name, cid in ids.items()}
+
+        def min_progress() -> float:
+            return min(
+                len(set(_journal_indices(dirs[name]))) / plan[name]["n"]
+                for name in plan
+            )
+
+        kill_detail: Dict[str, Any] = {}
+
+        def kill_daemon(params: Dict[str, Any]) -> Dict[str, Any]:
+            fresh = StateStore(root)
+            unfinished = [n for n, cid in ids.items() if fresh.get(cid).state != DONE]
+            pid = proc.pid
+            ok = kill_control_plane(proc) == pid
+            kill_detail.update({"ok": ok, "pid": pid, "unfinished": unfinished})
+            return dict(kill_detail)
+
+        sched = ChaosSchedule([ChaosAction(
+            kind="kill_control_plane", at_frac=KILL_AT_FRAC, scope="none",
+            label="kill-control-plane")])
+        runner = ChaosRunner(sched, handlers={"kill_control_plane": kill_daemon},
+                             progress=min_progress, poll_s=0.1).start()
+        _wait(lambda: runner.fired, timeout=300, msg="scheduled daemon SIGKILL")
+        unfinished_at_kill = list(kill_detail.get("unfinished", []))
+
+        os.remove(port_file)
+        proc = serve()
+        _wait(lambda: os.path.exists(port_file), timeout=60,
+              msg="daemon restart port file")
+        _wait(lambda: all(c["state"] == DONE
+                          for c in get("/campaigns")["campaigns"]),
+              timeout=180 if quick else 600, msg="all campaigns done after resume")
+        campaigns = {c["name"]: c for c in get("/campaigns")["campaigns"]}
+    finally:
+        if runner is not None:
+            runner.stop()
+        if proc.poll() is None:
+            proc.send_signal(signal.SIGTERM)
+            try:
+                proc.wait(timeout=20)
+            except subprocess.TimeoutExpired:
+                proc.kill()
+
+    # -- exactly-once under crash: InvariantChecker over the journals ------
+    checker = InvariantChecker(require_faults=1)
+    lost = violations = completed = total = 0
+    problems: List[str] = []
+    for name, cfg in plan.items():
+        ledger = _JournalLedger(cfg["n"], _journal_indices(dirs[name]))
+        rep = checker.check(ledger, fired=runner.fired)
+        lost += rep.lost
+        violations += rep.exactly_once_violations
+        completed += rep.completed
+        total += cfg["n"]
+        problems += [f"{name}: {v}" for v in rep.violations]
+
+    resumed_min = min(
+        (campaigns[name]["resumed"] for name in unfinished_at_kill), default=0)
+
+    # -- fair share while contended, integrated across the crash -----------
+    acct = FleetAccounting(os.path.join(root, "fleet_accounting.json")).report()
+    by_id = {cid: name for name, cid in ids.items()}
+    contended = {by_id[cid]: cell for cid, cell in acct.items()
+                 if cid in by_id and cell["contended_s"] > 0.5}
+    max_share_error = max((c["share_error"] for c in contended.values()
+                           if c["share_error"] is not None), default=0.0)
+
+    remote = _remote_resize_phase(workdir)
+    wall_s = time.monotonic() - t0
+
+    rows = {
+        "campaigns": len(plan),
+        "campaigns_done": sum(1 for c in campaigns.values() if c["state"] == DONE),
+        "tasks": total,
+        "completed": completed,
+        "lost": lost,
+        "exactly_once_violations": violations,
+        "control_kills": len([f for f in runner.fired if f.ok]),
+        "unfinished_at_kill": len(unfinished_at_kill),
+        "resumed_min": resumed_min,
+        "contended_campaigns": len(contended),
+        "max_share_error": round(max_share_error, 4),
+        "wall_s": round(wall_s, 3),
+        **{k: v for k, v in remote.items()},
+        "verdict": "PASS" if not problems else "FAIL",
+    }
+    for k, v in rows.items():
+        print(f"control,{k},{v}")
+    for name, cell in sorted(contended.items()):
+        err = "n/a" if cell["share_error"] is None else f"{cell['share_error']:.4f}"
+        print(f"control,share_error,{name},{err}")
+
+    if recorder is not None:
+        recorder.metric("campaigns_done", rows["campaigns_done"], unit="campaigns",
+                        gate=(">=", 4))
+        recorder.metric("lost", lost, unit="tasks", gate=("<=", 0))
+        recorder.metric("exactly_once_violations", violations, unit="deliveries",
+                        gate=("<=", 0))
+        recorder.metric("control_kills", rows["control_kills"], unit="kills",
+                        gate=(">=", 1))
+        recorder.metric("unfinished_at_kill", rows["unfinished_at_kill"],
+                        unit="campaigns", gate=(">=", 3))
+        recorder.metric("resumed_min", resumed_min, unit="resumes", gate=(">=", 1))
+        recorder.metric("contended_campaigns", len(contended), unit="campaigns",
+                        gate=(">=", 2))
+        recorder.metric("max_share_error", max_share_error, unit="fraction",
+                        gate=("<=", 0.2))
+        recorder.metric("resize_roundtrips", remote["resize_roundtrips"],
+                        unit="acks", gate=(">=", 1))
+        recorder.metric("resize_events", remote["resize_events"], unit="events",
+                        gate=(">=", 1))
+        recorder.metric("wall_s", wall_s, unit="s")
+
+    if rows["campaigns_done"] < len(plan):
+        problems.append(f"only {rows['campaigns_done']}/{len(plan)} campaigns done")
+    if len(unfinished_at_kill) < 3:
+        problems.append(
+            f"only {len(unfinished_at_kill)} campaigns were mid-flight at the "
+            "SIGKILL; the gate needs >= 3 actually crash-resumed")
+    if resumed_min < 1:
+        problems.append("a crashed campaign finished without recording a resume")
+    if len(contended) < 2:
+        problems.append("fewer than 2 campaigns ever contended the fleet")
+    if max_share_error > 0.2:
+        problems.append(
+            f"fair-share error {max_share_error:.3f} > 0.2 while contended")
+    if remote["resize_roundtrips"] < 1 or remote["resize_events"] < 1:
+        problems.append(f"remote resize did not round-trip: {remote}")
+    if not remote["resize_delivery_ok"]:
+        problems.append("remote site stopped delivering work after control traffic")
+
+    if keep_root is None:
+        shutil.rmtree(workdir, ignore_errors=True)
+    if problems:
+        raise AssertionError(
+            "control-plane gate FAILED: " + "; ".join(problems[:10]))
+    return rows
+
+
+def _cli() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    scale = ap.add_mutually_exclusive_group()
+    scale.add_argument("--smoke", action="store_true",
+                       help="CI control-smoke scale (the default)")
+    scale.add_argument("--full", action="store_true", help="longer campaigns")
+    ap.add_argument("--tasks", type=int, default=None,
+                    help="light-campaign task count (heavy = 2x, aux = 1.5x)")
+    ap.add_argument("--record", nargs="?", const="bench_out", default=None,
+                    metavar="DIR",
+                    help="write BENCH_control.json to DIR (default bench_out/)")
+    ap.add_argument("--root", default=None, metavar="DIR",
+                    help="keep the daemon root at DIR for inspection")
+    args = ap.parse_args()
+
+    recorder = None
+    if args.record is not None:
+        from repro.observe import BenchRecorder
+
+        recorder = BenchRecorder("control", out_dir=args.record)
+    try:
+        main(quick=not args.full, recorder=recorder, n_tasks=args.tasks,
+             keep_root=args.root)
+    except Exception as exc:
+        if recorder is not None:
+            print(f"suite,control,recorded,{recorder.finish(ok=False, error=str(exc))}")
+        print(f"suite,control,FAILED,{type(exc).__name__}: {exc}")
+        sys.exit(1)
+    if recorder is not None:
+        print(f"suite,control,recorded,{recorder.finish(ok=True)}")
+    print("suite,control,ok")
+
+
+if __name__ == "__main__":
+    _cli()

@@ -22,6 +22,11 @@ Figure map:
                     soak; exactly-once + bounded-recovery gate). Not in
                     --smoke: CI runs it as its own soak-chaos job via
                     ``python -m benchmarks.soak --smoke --record``.
+  control_plane  -> multi-campaign control plane (N campaigns over one
+                    fleet under daemon SIGKILL + auto-resume; fair-share
+                    + remote-resize gates). Not in --smoke: CI runs it
+                    as its own control-smoke job via
+                    ``python -m benchmarks.control_plane --smoke --record``.
 """
 
 from __future__ import annotations
@@ -45,7 +50,10 @@ def main() -> None:
     args = ap.parse_args()
     quick = not args.full
 
-    from . import kernel_bench, multisite, overhead, proxy_app, soak, steering_gain, utilization, weak_scaling
+    from . import (
+        control_plane, kernel_bench, multisite, overhead, proxy_app, soak,
+        steering_gain, utilization, weak_scaling,
+    )
 
     suites = {
         "overhead": overhead.main,
@@ -56,6 +64,7 @@ def main() -> None:
         "steering_gain": steering_gain.main,
         "kernel_bench": kernel_bench.main,
         "soak": soak.main,
+        "control_plane": control_plane.main,
     }
     if args.smoke:
         # steering_gain's smoke form is the CI quadratic gate: steered

@@ -1,0 +1,45 @@
+#!/usr/bin/env bash
+# Control-plane quickstart: one daemon, two campaigns, one shared fleet.
+#
+#   cd <repo root>
+#   PYTHONPATH=src bash examples/control_quickstart/run.sh
+#
+# Starts `python -m repro.control serve` over fleet.toml, submits the
+# screening (weight 2) and calibration (weight 1) campaigns over HTTP,
+# polls until both reach `done`, and shuts the daemon down. The daemon
+# is crash-safe: `kill -9` it mid-run, rerun this script with the same
+# ROOT, and both campaigns auto-resume from their checkpoints.
+set -euo pipefail
+
+HERE="$(cd "$(dirname "${BASH_SOURCE[0]}")" && pwd)"
+ROOT="${ROOT:-$HERE/.control-root}"
+PORT_FILE="$ROOT/.port"
+
+mkdir -p "$ROOT"
+rm -f "$PORT_FILE"
+
+python -m repro.control serve \
+  --root "$ROOT" --fleet "$HERE/fleet.toml" \
+  --port-file "$PORT_FILE" --tick 0.2 &
+DAEMON=$!
+trap 'kill "$DAEMON" 2>/dev/null || true; wait "$DAEMON" 2>/dev/null || true' EXIT
+
+for _ in $(seq 100); do [ -s "$PORT_FILE" ] && break; sleep 0.1; done
+URL="http://127.0.0.1:$(cat "$PORT_FILE")"
+echo "daemon up at $URL (root: $ROOT)"
+
+python -m repro.control submit "$HERE/screening.toml"   --url "$URL" --name screening
+python -m repro.control submit "$HERE/calibration.toml" --url "$URL" --name calibration
+
+echo "waiting for both campaigns to reach done..."
+for _ in $(seq 300); do
+  STATES=$(python -m repro.control status --url "$URL" \
+    | python -c 'import json,sys; print(" ".join(sorted(c["name"]+"="+c["state"] for c in json.load(sys.stdin)["campaigns"])))')
+  echo "  $STATES"
+  [ "$STATES" = "calibration=done screening=done" ] && break
+  sleep 1
+done
+
+python -m repro.control status --url "$URL"
+[ "$STATES" = "calibration=done screening=done" ] || { echo "campaigns did not finish"; exit 1; }
+echo "both campaigns done; journals under $ROOT/campaigns/<id>/state/results.jsonl"

@@ -25,6 +25,7 @@ from .faults import (
     ChaosLocalQueues,
     ChaosPipeQueues,
     corrupt_file,
+    kill_control_plane,
     kill_server_process,
     truncate_file,
 )
@@ -58,6 +59,7 @@ __all__ = [
     "WorkLedger",
     "corrupt_file",
     "default_chaos_schedule",
+    "kill_control_plane",
     "expected_value",
     "kill_server_process",
     "run_soak",

@@ -280,11 +280,32 @@ def kill_server_process(server: Any, sig: int = signal.SIGKILL) -> Optional[int]
     return pid
 
 
+def kill_control_plane(proc: Any, sig: int = signal.SIGKILL) -> Optional[int]:
+    """SIGKILL a control-plane daemon subprocess mid-run — the fault the
+    auto-resume path exists for. Accepts a ``subprocess.Popen`` (or
+    anything with ``.pid``/``.wait``); returns the pid killed, or None
+    if the daemon already exited."""
+    pid = getattr(proc, "pid", None)
+    if pid is None or (getattr(proc, "poll", None) and proc.poll() is not None):
+        return None
+    try:
+        os.kill(pid, sig)
+    except ProcessLookupError:
+        return None  # already gone
+    try:
+        proc.wait(timeout=10)
+    except Exception:  # noqa: BLE001 - a SIGKILLed child must reap; best effort
+        pass
+    logger.warning("chaos: SIGKILLed control-plane daemon pid=%d", pid)
+    return pid
+
+
 __all__: List[str] = [
     "ChaosLink",
     "ChaosLocalQueues",
     "ChaosPipeQueues",
     "corrupt_file",
+    "kill_control_plane",
     "kill_server_process",
     "truncate_file",
 ]

@@ -1,0 +1,52 @@
+"""repro.control: a persistent multi-campaign control plane.
+
+One daemon per site hosts many concurrent campaigns over a shared
+worker fleet: submissions arrive as ``campaign.toml`` over HTTP, every
+campaign's lifecycle is a durable state machine (crash -> auto-resume
+from its latest checkpoint + results journal), and slots are apportioned
+by weighted fair share with priority preemption. See
+``python -m repro.control --help``.
+"""
+
+from .api import ControlServer
+from .plane import ControlPlane
+from .scheduler import FleetAccounting, compute_grants, meets_floor, total_slots
+from .state import (
+    DONE,
+    FAILED,
+    LEGAL,
+    PAUSED,
+    RUNNING,
+    STAGED,
+    STATES,
+    SUBMITTED,
+    TERMINAL,
+    CampaignRecord,
+    IllegalTransition,
+    StateStore,
+)
+from .workload import CountedWorkload, make_workload, workload_task
+
+__all__ = [
+    "CampaignRecord",
+    "ControlPlane",
+    "ControlServer",
+    "CountedWorkload",
+    "DONE",
+    "FAILED",
+    "FleetAccounting",
+    "IllegalTransition",
+    "LEGAL",
+    "PAUSED",
+    "RUNNING",
+    "STAGED",
+    "STATES",
+    "SUBMITTED",
+    "StateStore",
+    "TERMINAL",
+    "compute_grants",
+    "make_workload",
+    "meets_floor",
+    "total_slots",
+    "workload_task",
+]

@@ -1,0 +1,169 @@
+"""HTTP API for the control plane (stdlib http.server, same idiom as
+``repro.observe.ops``).
+
+  ==============================  =======================================
+  ``GET  /``                        endpoint index
+  ``GET  /healthz``                 daemon liveness + campaign counts
+  ``GET  /campaigns``               every campaign record + current grant
+  ``GET  /campaigns/<id>``          one record
+  ``POST /campaigns?name=<n>``      submit (body: campaign TOML) -> 201
+  ``POST /campaigns/<id>/pause``    checkpoint + release slots
+  ``POST /campaigns/<id>/resume``   re-stage a paused campaign
+  ``GET  /fleet``                   fleet capacities + fair-share ledger
+  ==============================  =======================================
+
+``port=0`` binds an ephemeral port (read ``.port``/``.url`` back) — the
+right default for tests and multi-daemon hosts.
+"""
+
+from __future__ import annotations
+
+import json
+import logging
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Any, Dict, Optional
+from urllib.parse import parse_qs, urlparse
+
+from .plane import ControlPlane
+from .state import IllegalTransition
+
+logger = logging.getLogger("repro.control.api")
+
+
+class ControlServer:
+    """Serve one ControlPlane over HTTP from a daemon thread."""
+
+    def __init__(self, plane: ControlPlane, host: str = "127.0.0.1", port: int = 0) -> None:
+        self.plane = plane
+        self.host = host
+        self.port = port
+        self._httpd: Optional[ThreadingHTTPServer] = None
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------- lifecycle
+    def start(self) -> "ControlServer":
+        if self._httpd is not None:
+            return self
+        server = self
+
+        class Handler(BaseHTTPRequestHandler):
+            def log_message(self, fmt: str, *args: Any) -> None:  # noqa: N802
+                logger.debug("api: %s", fmt % args)
+
+            def do_GET(self) -> None:  # noqa: N802
+                server._safe_route(self)
+
+            def do_POST(self) -> None:  # noqa: N802
+                server._safe_route(self)
+
+        self._httpd = ThreadingHTTPServer((self.host, self.port), Handler)
+        self._httpd.daemon_threads = True
+        self.port = self._httpd.server_address[1]
+        self._thread = threading.Thread(
+            target=self._httpd.serve_forever, kwargs={"poll_interval": 0.1},
+            daemon=True, name="control-api",
+        )
+        self._thread.start()
+        logger.info("control plane serving on http://%s:%d", self.host, self.port)
+        return self
+
+    def stop(self) -> None:
+        httpd, self._httpd = self._httpd, None
+        if httpd is not None:
+            httpd.shutdown()
+            httpd.server_close()
+        if self._thread is not None:
+            self._thread.join(timeout=10)
+            self._thread = None
+
+    @property
+    def url(self) -> str:
+        return f"http://{self.host}:{self.port}"
+
+    # --------------------------------------------------------------- routing
+    def _safe_route(self, req: BaseHTTPRequestHandler) -> None:
+        try:
+            self._route(req)
+        except BrokenPipeError:
+            pass  # client went away mid-response
+        except (KeyError,) as exc:
+            self._send_json(req, 404, {"error": str(exc)})
+        except (ValueError, IllegalTransition) as exc:
+            self._send_json(req, 400, {"error": str(exc)})
+        except Exception:  # noqa: BLE001 - one bad request must not kill serving
+            logger.exception("control api request %s failed", req.path)
+            try:
+                req.send_error(500)
+            except Exception:  # noqa: BLE001
+                pass
+
+    def _route(self, req: BaseHTTPRequestHandler) -> None:
+        url = urlparse(req.path)
+        parts = [p for p in url.path.split("/") if p]
+        query = {k: v[-1] for k, v in parse_qs(url.query).items()}
+        plane = self.plane
+
+        if req.command == "GET":
+            if not parts:
+                self._send_json(req, 200, {
+                    "endpoints": [
+                        "/healthz", "/campaigns", "/campaigns/<id>",
+                        "POST /campaigns", "POST /campaigns/<id>/pause",
+                        "POST /campaigns/<id>/resume", "/fleet",
+                    ],
+                })
+            elif parts == ["healthz"]:
+                status = plane.status()
+                counts: Dict[str, int] = {}
+                for c in status["campaigns"]:
+                    counts[c["state"]] = counts.get(c["state"], 0) + 1
+                self._send_json(req, 200, {
+                    "ok": True, "uptime_s": status["uptime_s"], "campaigns": counts,
+                })
+            elif parts == ["campaigns"]:
+                self._send_json(req, 200, {"campaigns": plane.status()["campaigns"]})
+            elif len(parts) == 2 and parts[0] == "campaigns":
+                for c in plane.status()["campaigns"]:
+                    if c["id"] == parts[1]:
+                        self._send_json(req, 200, c)
+                        return
+                raise KeyError(f"unknown campaign {parts[1]!r}")
+            elif parts == ["fleet"]:
+                status = plane.status()
+                self._send_json(req, 200, {
+                    "fleet": status["fleet"], "accounting": status["accounting"],
+                })
+            else:
+                self._send_json(req, 404, {"error": f"unknown path {url.path!r}"})
+            return
+
+        # POST
+        if parts == ["campaigns"]:
+            length = int(req.headers.get("Content-Length", 0))
+            body = req.rfile.read(length).decode("utf-8")
+            if not body.strip():
+                raise ValueError("empty submission body (expected campaign TOML)")
+            rec = plane.submit(body, name=query.get("name"))
+            self._send_json(req, 201, rec.to_dict())
+        elif len(parts) == 3 and parts[0] == "campaigns" and parts[2] == "pause":
+            rec = plane.pause(parts[1])
+            self._send_json(req, 200, rec.to_dict())
+        elif len(parts) == 3 and parts[0] == "campaigns" and parts[2] == "resume":
+            rec = plane.resume(parts[1])
+            self._send_json(req, 200, rec.to_dict())
+        else:
+            self._send_json(req, 404, {"error": f"unknown path {url.path!r}"})
+
+    # ---------------------------------------------------------------- output
+    @staticmethod
+    def _send_json(req: BaseHTTPRequestHandler, code: int, body: Dict[str, Any]) -> None:
+        data = (json.dumps(body, indent=2, default=str) + "\n").encode("utf-8")
+        req.send_response(code)
+        req.send_header("Content-Type", "application/json; charset=utf-8")
+        req.send_header("Content-Length", str(len(data)))
+        req.end_headers()
+        req.wfile.write(data)
+
+
+__all__ = ["ControlServer"]

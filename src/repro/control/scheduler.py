@@ -1,0 +1,212 @@
+"""Weighted fair-share scheduling of campaigns over a shared fleet.
+
+The fleet is ``{pool_name: capacity}`` — the site's slot budget, shared
+by every campaign the daemon runs (the paper's many-campaign facilities
+multiplex one allocation). Per pool:
+
+1. **Priority classes** strictly dominate: a higher ``priority`` class
+   takes all the slots it demands before a lower class sees any.
+2. Within a class, slots are apportioned by **D'Hondt highest-averages**
+   on campaign ``weight``: repeatedly grant one slot to the campaign
+   maximizing ``weight / (granted + 1)`` among those still under their
+   demand. This converges to grants proportional to weight while staying
+   integral and work-conserving (unused demand flows to whoever wants it).
+3. ``min_slots`` floors are **reserved** when the class's floors fit in
+   the capacity (apportionment then shapes only the surplus). When they
+   don't fit, the weakest claims (lowest weight) are evicted to **zero**
+   until the surviving floors do — the control plane pauses the evicted
+   campaigns (preemption) rather than letting them crawl below their
+   floor.
+
+``FleetAccounting`` integrates grant-seconds against weight-share-seconds
+*while the pool is contended* (total demand > capacity) so a benchmark
+can assert "each campaign's realized share stayed within X% of its
+weight" — the fair-share gate.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+from typing import Any, Dict, Iterable, List, Optional, Tuple
+
+from .state import PAUSED, RUNNING, STAGED, CampaignRecord
+
+Grants = Dict[str, Dict[str, int]]  # campaign id -> {pool: slots}
+
+
+def _dhondt(
+    entries: List[Tuple[str, float, int]],
+    capacity: int,
+    floors: Optional[Dict[str, int]] = None,
+) -> Dict[str, int]:
+    """Apportion ``capacity`` slots over ``(id, weight, demand)`` entries
+    by highest averages, optionally seeding each campaign's grant at its
+    ``floors`` reservation (callers guarantee the floors fit). The seeded
+    slots count toward the quotients, so the proportional shape is
+    preserved above the floors. Deterministic: ties break by id."""
+    grants = {cid: 0 for cid, _, _ in entries}
+    demand = {cid: d for cid, _, d in entries}
+    weight = {cid: w for cid, w, _ in entries}
+    if floors:
+        for cid in grants:
+            grants[cid] = min(floors.get(cid, 0), demand[cid])
+        capacity -= sum(grants.values())
+    for _ in range(max(0, capacity)):
+        best: Optional[str] = None
+        best_q = -1.0
+        for cid in sorted(grants):
+            if grants[cid] >= demand[cid]:
+                continue
+            q = weight[cid] / (grants[cid] + 1)
+            if q > best_q:
+                best, best_q = cid, q
+        if best is None:
+            break  # all demand satisfied
+        grants[best] += 1
+    return grants
+
+
+def compute_grants(
+    records: Iterable[CampaignRecord],
+    fleet: Dict[str, int],
+    schedulable: Iterable[str] = (STAGED, RUNNING),
+) -> Grants:
+    """Slot grants for every schedulable campaign over every fleet pool."""
+    schedulable = set(schedulable)
+    active = [r for r in records if r.state in schedulable]
+    grants: Grants = {r.id: {} for r in active}
+    for pool, capacity in fleet.items():
+        wanting = [r for r in active if r.demand.get(pool, 0) > 0]
+        remaining = capacity
+        # Strict priority: higher classes are apportioned first out of
+        # whatever the classes above them left behind.
+        for prio in sorted({r.priority for r in wanting}, reverse=True):
+            klass = [r for r in wanting if r.priority == prio]
+            # min_slots floors are reserved when they fit; when the class's
+            # floors together exceed capacity, the weakest claims (lowest
+            # weight, id tiebreak) are evicted to zero until they do — the
+            # control plane pauses those rather than letting them crawl.
+            evicted: List[str] = []
+            while klass and sum(
+                min(r.min_slots, r.demand[pool]) for r in klass
+            ) > remaining:
+                evict = min(klass, key=lambda r: (r.weight, r.id))
+                evicted.append(evict.id)
+                klass = [r for r in klass if r.id != evict.id]
+            entries = [(r.id, r.weight, r.demand[pool]) for r in klass]
+            floors = {r.id: min(r.min_slots, r.demand[pool]) for r in klass}
+            pool_grants = _dhondt(entries, remaining, floors)
+            for cid in evicted:
+                pool_grants[cid] = 0
+            used = 0
+            for r in [x for x in wanting if x.priority == prio]:
+                g = pool_grants.get(r.id, 0)
+                grants[r.id][pool] = g
+                used += g
+            remaining -= used
+            if remaining <= 0:
+                break
+        # Pools a campaign wants but got nothing from still appear (0),
+        # so callers can distinguish "denied" from "never asked".
+        for r in active:
+            if r.demand.get(pool, 0) > 0:
+                grants[r.id].setdefault(pool, 0)
+    return grants
+
+
+def total_slots(grant: Dict[str, int]) -> int:
+    return sum(grant.values())
+
+
+def meets_floor(rec: CampaignRecord, grant: Dict[str, int]) -> bool:
+    """A campaign can (keep) run(ning) only when every pool it demands
+    grants at least ``min_slots`` — a starved pool stalls the whole
+    campaign, so partial grants are preemptions, not progress."""
+    if not rec.demand:
+        return False
+    return all(
+        grant.get(pool, 0) >= min(rec.min_slots, want)
+        for pool, want in rec.demand.items()
+        if want > 0
+    )
+
+
+class FleetAccounting:
+    """Integrate realized vs. entitled slot-share per campaign while the
+    fleet is contended; persisted so a restarted daemon keeps the ledger.
+    """
+
+    def __init__(self, path: Optional[str] = None) -> None:
+        self.path = path
+        self._lock = threading.Lock()
+        # cid -> {"actual": slot-seconds granted, "expected": slot-seconds
+        # entitled by weight share, "contended_s": seconds under contention}
+        self.shares: Dict[str, Dict[str, float]] = {}
+        if path and os.path.exists(path):
+            try:
+                with open(path) as f:
+                    self.shares = {k: dict(v) for k, v in json.load(f).items()}
+            except Exception:  # noqa: BLE001 - accounting is advisory, start fresh
+                self.shares = {}
+
+    def observe(
+        self,
+        records: List[CampaignRecord],
+        grants: Grants,
+        fleet: Dict[str, int],
+        dt: float,
+    ) -> None:
+        if dt <= 0:
+            return
+        by_id = {r.id: r for r in records}
+        with self._lock:
+            for pool, capacity in fleet.items():
+                wanting = [
+                    r for r in records
+                    if r.state in (STAGED, RUNNING, PAUSED) and r.demand.get(pool, 0) > 0
+                ]
+                demand_total = sum(r.demand[pool] for r in wanting)
+                if demand_total <= capacity or not wanting:
+                    continue  # uncontended: any split is fair
+                granted_total = sum(
+                    min(grants.get(r.id, {}).get(pool, 0), r.demand[pool]) for r in wanting
+                )
+                weight_total = sum(r.weight for r in wanting)
+                for r in wanting:
+                    cell = self.shares.setdefault(
+                        r.id, {"actual": 0.0, "expected": 0.0, "contended_s": 0.0}
+                    )
+                    cell["actual"] += grants.get(r.id, {}).get(pool, 0) * dt
+                    cell["expected"] += (r.weight / weight_total) * granted_total * dt
+                    cell["contended_s"] += dt
+            self._persist(by_id)
+
+    def _persist(self, by_id: Dict[str, CampaignRecord]) -> None:
+        if not self.path:
+            return
+        tmp = self.path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(self.shares, f, indent=2, sort_keys=True)
+        os.replace(tmp, self.path)
+
+    def report(self) -> Dict[str, Any]:
+        """Per-campaign realized/entitled slot-seconds and the relative
+        error ``|actual - expected| / expected`` (None until contended)."""
+        with self._lock:
+            out: Dict[str, Any] = {}
+            for cid, cell in self.shares.items():
+                expected = cell["expected"]
+                err = abs(cell["actual"] - expected) / expected if expected > 0 else None
+                out[cid] = {**cell, "share_error": err}
+            return out
+
+
+__all__ = [
+    "FleetAccounting",
+    "Grants",
+    "compute_grants",
+    "meets_floor",
+    "total_slots",
+]

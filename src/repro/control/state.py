@@ -1,0 +1,277 @@
+"""Durable per-campaign state machine for the control plane.
+
+Each campaign the daemon manages is a directory under
+``<root>/campaigns/<id>/``:
+
+    record.json    the CampaignRecord (state, weights, history)
+    spec.toml      the submitted campaign file, byte-for-byte
+    state/         Campaign checkpoints + the results journal
+
+``record.json`` is the source of truth across daemon restarts: a
+SIGKILLed daemon replays the directory on startup and re-stages every
+campaign that had not reached a terminal state (``recover``), so runs
+resume without any operator action — the paper's long-lived
+multi-campaign sites cannot afford babysitting.
+
+States and legal transitions::
+
+    submitted --> staged --> running --> done
+        |            ^  \\      |  \\
+        v            |   v     v   v
+      failed         +- paused failed
+
+``paused`` is re-stageable (resume) and reachable from both ``staged``
+(operator pause before launch) and ``running`` (operator pause or
+fair-share preemption). Anything else raises ``IllegalTransition``.
+"""
+
+from __future__ import annotations
+
+import json
+import logging
+import os
+import threading
+import time
+import uuid
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+logger = logging.getLogger("repro.control.state")
+
+SUBMITTED = "submitted"
+STAGED = "staged"
+RUNNING = "running"
+PAUSED = "paused"
+DONE = "done"
+FAILED = "failed"
+
+STATES = (SUBMITTED, STAGED, RUNNING, PAUSED, DONE, FAILED)
+TERMINAL = frozenset({DONE, FAILED})
+
+LEGAL: Dict[str, frozenset] = {
+    SUBMITTED: frozenset({STAGED, FAILED}),
+    STAGED: frozenset({RUNNING, PAUSED, FAILED}),
+    RUNNING: frozenset({PAUSED, DONE, FAILED}),
+    PAUSED: frozenset({STAGED, RUNNING, FAILED}),
+    DONE: frozenset(),
+    FAILED: frozenset(),
+}
+
+
+class IllegalTransition(ValueError):
+    """Raised when a campaign is driven through an edge not in LEGAL."""
+
+
+@dataclass
+class CampaignRecord:
+    """One campaign as the control plane sees it (JSON-serializable)."""
+
+    id: str
+    name: str
+    state: str = SUBMITTED
+    weight: float = 1.0
+    priority: int = 0
+    min_slots: int = 1
+    # Per-pool slot demand on the shared fleet (spec pool sizes, capped
+    # by [control].demand when set).
+    demand: Dict[str, int] = field(default_factory=dict)
+    history: List[List[Any]] = field(default_factory=list)  # [state, unix_t, reason]
+    error: Optional[str] = None
+    paused_by_user: bool = False
+    resumed: int = 0  # times re-staged after a pause/crash
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "id": self.id,
+            "name": self.name,
+            "state": self.state,
+            "weight": self.weight,
+            "priority": self.priority,
+            "min_slots": self.min_slots,
+            "demand": dict(self.demand),
+            "history": [list(h) for h in self.history],
+            "error": self.error,
+            "paused_by_user": self.paused_by_user,
+            "resumed": self.resumed,
+        }
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "CampaignRecord":
+        return cls(
+            id=d["id"],
+            name=d["name"],
+            state=d.get("state", SUBMITTED),
+            weight=float(d.get("weight", 1.0)),
+            priority=int(d.get("priority", 0)),
+            min_slots=int(d.get("min_slots", 1)),
+            demand={k: int(v) for k, v in d.get("demand", {}).items()},
+            history=[list(h) for h in d.get("history", [])],
+            error=d.get("error"),
+            paused_by_user=bool(d.get("paused_by_user", False)),
+            resumed=int(d.get("resumed", 0)),
+        )
+
+
+class StateStore:
+    """Durable campaign records under ``<root>/campaigns/<id>/``.
+
+    Every mutation goes through ``transition`` (legality-checked) and is
+    published atomically (tmp + ``os.replace``), so a daemon killed
+    mid-write leaves either the old record or the new one — never a torn
+    file.
+    """
+
+    def __init__(self, root: str) -> None:
+        self.root = root
+        self.campaigns_dir = os.path.join(root, "campaigns")
+        os.makedirs(self.campaigns_dir, exist_ok=True)
+        self._lock = threading.RLock()
+        self._records: Dict[str, CampaignRecord] = {}
+        self._load()
+
+    # ----------------------------------------------------------------- paths
+    def dir_for(self, cid: str) -> str:
+        return os.path.join(self.campaigns_dir, cid)
+
+    def spec_path(self, cid: str) -> str:
+        return os.path.join(self.dir_for(cid), "spec.toml")
+
+    def state_dir(self, cid: str) -> str:
+        return os.path.join(self.dir_for(cid), "state")
+
+    def _record_path(self, cid: str) -> str:
+        return os.path.join(self.dir_for(cid), "record.json")
+
+    # ------------------------------------------------------------------- I/O
+    def _load(self) -> None:
+        with self._lock:
+            for cid in sorted(os.listdir(self.campaigns_dir)):
+                path = self._record_path(cid)
+                try:
+                    with open(path) as f:
+                        self._records[cid] = CampaignRecord.from_dict(json.load(f))
+                except FileNotFoundError:
+                    continue  # half-created campaign dir: ignore
+                except Exception:  # noqa: BLE001 - one bad record must not kill the daemon
+                    logger.exception("unreadable campaign record %s; skipping", path)
+
+    def _save(self, rec: CampaignRecord) -> None:
+        path = self._record_path(rec.id)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(rec.to_dict(), f, indent=2, sort_keys=True)
+        os.replace(tmp, path)  # atomic publish
+
+    # --------------------------------------------------------------- surface
+    def create(
+        self,
+        name: str,
+        spec_text: str,
+        *,
+        weight: float = 1.0,
+        priority: int = 0,
+        min_slots: int = 1,
+        demand: Optional[Dict[str, int]] = None,
+    ) -> CampaignRecord:
+        cid = uuid.uuid4().hex[:8]
+        with self._lock:
+            os.makedirs(self.state_dir(cid), exist_ok=True)
+            with open(self.spec_path(cid), "w") as f:
+                f.write(spec_text)
+            rec = CampaignRecord(
+                id=cid,
+                name=name,
+                weight=weight,
+                priority=priority,
+                min_slots=min_slots,
+                demand=dict(demand or {}),
+            )
+            rec.history.append([SUBMITTED, time.time(), "submitted"])
+            self._save(rec)
+            self._records[cid] = rec
+            return rec
+
+    def get(self, cid: str) -> CampaignRecord:
+        with self._lock:
+            rec = self._records.get(cid)
+            if rec is None:
+                raise KeyError(f"unknown campaign {cid!r}")
+            return rec
+
+    def list(self) -> List[CampaignRecord]:  # noqa: A003 - store surface
+        with self._lock:
+            return sorted(self._records.values(), key=lambda r: r.history[0][1] if r.history else 0)
+
+    def transition(
+        self, cid: str, new_state: str, *, reason: str = "", error: Optional[str] = None
+    ) -> CampaignRecord:
+        if new_state not in STATES:
+            raise IllegalTransition(f"unknown state {new_state!r} (expected one of {STATES})")
+        with self._lock:
+            rec = self.get(cid)
+            if new_state not in LEGAL[rec.state]:
+                raise IllegalTransition(
+                    f"campaign {cid} ({rec.name}): illegal transition "
+                    f"{rec.state!r} -> {new_state!r}"
+                )
+            rec.state = new_state
+            rec.history.append([new_state, time.time(), reason])
+            if error is not None:
+                rec.error = error
+            if new_state == STAGED:
+                rec.resumed += 1 if len(rec.history) > 2 else 0
+            self._save(rec)
+            return rec
+
+    def set_paused_by_user(self, cid: str, value: bool) -> None:
+        with self._lock:
+            rec = self.get(cid)
+            rec.paused_by_user = value
+            self._save(rec)
+
+    def recover(self) -> List[CampaignRecord]:
+        """Re-stage every campaign interrupted by a daemon crash.
+
+        ``submitted``/``staged``/``running`` all become ``staged`` (their
+        work resumes from the latest Campaign checkpoint + journal);
+        ``paused`` stays paused only when the *user* paused it — a
+        preemption pause is scheduler state, not operator intent, so it
+        re-stages too. Returns the records that were re-staged.
+        """
+        restaged: List[CampaignRecord] = []
+        with self._lock:
+            for rec in list(self._records.values()):
+                if rec.state in TERMINAL:
+                    continue
+                if rec.state == PAUSED and rec.paused_by_user:
+                    continue
+                if rec.state == SUBMITTED:
+                    self.transition(rec.id, STAGED, reason="crash-recovery")
+                elif rec.state == RUNNING:
+                    # running -> staged is not a legal operator edge; a
+                    # crash goes through paused (the checkpoint on disk is
+                    # the implicit pause) then back to staged.
+                    self.transition(rec.id, PAUSED, reason="daemon crash")
+                    self.transition(rec.id, STAGED, reason="crash-recovery")
+                elif rec.state == PAUSED:
+                    self.transition(rec.id, STAGED, reason="crash-recovery")
+                elif rec.state != STAGED:
+                    continue
+                restaged.append(rec)
+        return restaged
+
+
+__all__ = [
+    "CampaignRecord",
+    "DONE",
+    "FAILED",
+    "IllegalTransition",
+    "LEGAL",
+    "PAUSED",
+    "RUNNING",
+    "STAGED",
+    "STATES",
+    "SUBMITTED",
+    "StateStore",
+    "TERMINAL",
+]

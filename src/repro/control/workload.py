@@ -1,0 +1,175 @@
+"""A journaled, exactly-once counted workload for control-plane campaigns.
+
+``CountedWorkload`` drives ``n_tasks`` integer tasks through the queues
+with at most ``n_parallel`` in flight, reusing the chaos tier's
+:class:`~repro.chaos.soak.WorkLedger` for exactly-once acceptance, and
+adds the piece a SIGKILLed daemon needs: a **results journal**. Campaign
+checkpoints are periodic, so the ledger state they capture is a *prefix*
+of the truth; every accepted result is also appended to
+``results.jsonl`` at accept time. On resume the journal replays over the
+restored checkpoint, re-marking anything accepted after the last
+checkpoint — so a crash loses zero results and re-runs only work that
+genuinely never delivered (tasks are idempotent, per the paper).
+
+Used by the control-plane tests/benchmark as the steering section of a
+submitted campaign::
+
+    [steering]
+    thinker = "repro.control.workload.make_workload"
+    [steering.kwargs]
+    n_tasks = 120
+    n_parallel = 8
+    task_s = 0.01
+"""
+
+from __future__ import annotations
+
+import collections
+import json
+import logging
+import os
+import time
+from typing import Any, Dict, Optional
+
+from repro.chaos.soak import WorkLedger
+from repro.core import Result
+from repro.core.thinker import BaseThinker, agent, result_processor
+
+logger = logging.getLogger("repro.control.workload")
+
+
+def workload_task(x: int, task_s: float = 0.0) -> int:
+    """Module-level (pickles into spawned sites); output is a checkable
+    function of the input, matching ``WorkLedger``'s payload check."""
+    if task_s > 0:
+        time.sleep(task_s)
+    return x * 3 + 1
+
+
+class CountedWorkload(BaseThinker):
+    """Submit/accept loop over a ``WorkLedger`` with a durable journal."""
+
+    def __init__(
+        self,
+        queues: Any,
+        n_tasks: int,
+        n_parallel: int = 4,
+        journal_path: Optional[str] = None,
+        task_s: float = 0.0,
+        method: str = "workload_task",
+        resubmit_after_s: float = 30.0,
+    ) -> None:
+        super().__init__(queues)
+        self.ledger = WorkLedger(n_tasks, resubmit_after_s=resubmit_after_s)
+        self.n_parallel = n_parallel
+        self.journal_path = journal_path
+        self.task_s = task_s
+        self.method = method
+
+    # ------------------------------------------------------------ checkpoint
+    def get_state(self) -> Dict[str, Any]:
+        return self.ledger.get_state()
+
+    def set_state(self, state: Dict[str, Any]) -> None:
+        self.ledger.set_state(state)
+
+    # --------------------------------------------------------------- journal
+    def _journal(self, index: int, task_id: str) -> None:
+        if not self.journal_path:
+            return
+        with open(self.journal_path, "a") as f:
+            f.write(json.dumps({"index": index, "task_id": task_id}) + "\n")
+            f.flush()
+            os.fsync(f.fileno())
+
+    def replay_journal(self) -> int:
+        """Re-mark journal entries over the (checkpoint-restored) ledger.
+
+        Idempotent: already-done indices are skipped, so checkpoint and
+        journal can overlap arbitrarily. Returns how many entries were
+        newer than the checkpoint."""
+        if not self.journal_path or not os.path.exists(self.journal_path):
+            return 0
+        led = self.ledger
+        replayed = 0
+        with open(self.journal_path) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    entry = json.loads(line)
+                    index = int(entry["index"])
+                except (ValueError, KeyError):
+                    continue  # torn tail line from a mid-append SIGKILL
+                with led._lock:
+                    if 0 <= index < led.n_tasks and not led.done[index]:
+                        led.done[index] = 1
+                        led.completed += 1
+                        led.next_fresh = max(led.next_fresh, index + 1)
+                        replayed += 1
+        # Rebuild the retry queue: everything handed out before the crash
+        # that never journaled a delivery goes back to the front.
+        with led._lock:
+            led.retry_q = collections.deque(
+                i for i in range(led.next_fresh) if not led.done[i]
+            )
+        if replayed:
+            logger.info("journal replay recovered %d results past the checkpoint", replayed)
+        return replayed
+
+    # ---------------------------------------------------------------- agents
+    @agent(startup=True)
+    def recover(self) -> None:
+        self.replay_journal()
+
+    def _submit(self, index: int) -> None:
+        task_id = self.queues.send_inputs(
+            index,
+            keyword_args={"task_s": self.task_s} if self.task_s else None,
+            method=self.method,
+            task_info={"index": index},
+        )
+        self.ledger.on_submitted(index, "fleet", task_id, time.monotonic())
+
+    @agent
+    def driver(self) -> None:
+        """Top-up loop: keeps ``n_parallel`` in flight and recycles
+        overdue work; the hot path (submit-on-accept) lives in
+        ``accept`` so throughput is not tick-bound."""
+        led = self.ledger
+        while not self.done.is_set():
+            if led.completed >= led.n_tasks:
+                return  # critical agent exit -> thinker shuts down
+            led.overdue(time.monotonic())
+            want = self.n_parallel - len(led.inflight)
+            for index in led.take(max(0, want)):
+                self._submit(index)
+            self.done.wait(0.2)
+
+    @result_processor
+    def accept(self, result: Result) -> None:
+        status = self.ledger.accept(result)
+        if status == "accepted":
+            self._journal(result.task_info["index"], result.task_id)
+        if self.ledger.completed >= self.ledger.n_tasks:
+            self.done.set()
+            return
+        if status in ("accepted", "failed") and not self.done.is_set():
+            for index in self.ledger.take(1):
+                self._submit(index)
+
+
+def make_workload(app: Any, **kwargs: Any) -> CountedWorkload:
+    """SteeringSpec factory: journal defaults to ``results.jsonl`` next
+    to the campaign checkpoints so the control plane's per-campaign
+    ``state/`` override places it automatically."""
+    if "journal_path" not in kwargs:
+        state_dir = app.spec.campaign.state_dir if app.spec.campaign else None
+        if state_dir:
+            os.makedirs(state_dir, exist_ok=True)
+            kwargs["journal_path"] = os.path.join(state_dir, "results.jsonl")
+    return CountedWorkload(app.queues, **kwargs)
+
+
+__all__ = ["CountedWorkload", "make_workload", "workload_task"]

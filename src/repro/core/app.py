@@ -75,11 +75,13 @@ __all__ = [
     "AppSpec",
     "CampaignSpec",
     "ColmenaApp",
+    "ControlSpec",
     "FabricSpec",
     "ObserveSpec",
     "PoolSpec",
     "ProcessTaskServer",
     "QueueSpec",
+    "RemotePool",
     "ServerSpec",
     "SteeringSpec",
     "TaskDef",
@@ -273,6 +275,30 @@ class CampaignSpec:
 
 
 @dataclass
+class ControlSpec:
+    """Submission envelope for the campaign control plane
+    (``repro.control``): how this campaign shares a daemon's fleet.
+
+    ``weight`` is its fair-share weight (slots apportion roughly
+    proportionally among contending campaigns), ``priority`` orders
+    preemption (higher priorities are satisfied first and may pause
+    lower ones), ``min_slots`` is the floor below which the campaign is
+    paused instead of starved, and ``demand`` caps the slots it will
+    accept (default: the sizes its own pool specs request)."""
+
+    weight: float = 1.0
+    priority: int = 0
+    min_slots: int = 1
+    demand: Optional[int] = None
+
+    def __post_init__(self) -> None:
+        if self.weight <= 0:
+            raise ValueError("ControlSpec.weight must be > 0")
+        if self.min_slots < 1:
+            raise ValueError("ControlSpec.min_slots must be >= 1")
+
+
+@dataclass
 class ServerSpec:
     """Task-server policies. ``in_process=False`` (pipe backend only)
     runs the server in its own spawned process — the paper's federated
@@ -309,6 +335,7 @@ class AppSpec:
     observe: Optional[ObserveSpec] = field(default_factory=ObserveSpec)
     campaign: Optional[CampaignSpec] = None
     server: ServerSpec = field(default_factory=ServerSpec)
+    control: Optional[ControlSpec] = None
 
     def __post_init__(self) -> None:
         if isinstance(self.tasks, Mapping):
@@ -340,15 +367,9 @@ class AppSpec:
             )
         if not self.server.in_process and self.queues.backend != "pipe":
             raise ValueError("a separate server process needs the 'pipe' queue backend")
-        if (
-            self.observe is not None
-            and self.observe.elastic is not None
-            and not self.server.in_process
-        ):
-            raise ValueError(
-                "elastic pools need the in-process server (the fleet lives in the "
-                "server process; resize it from a policy running there)"
-            )
+        # Elastic + out-of-process composes via the control channel:
+        # the scaler drives RemotePool proxies whose resize requests
+        # round-trip to the spawned site (no constraint needed here).
 
     # -- serialization (repro.core.specfile) --------------------------------
     def to_dict(self) -> Dict[str, Any]:
@@ -433,6 +454,99 @@ class ProcessTaskServer:
         if proc.is_alive():
             proc.terminate()
             proc.join(timeout=2)
+
+
+@dataclass
+class _RemoteWorkerState:
+    """Synthetic per-slot state for ``RemotePool.worker_states`` — the
+    scaler only reads ``busy``/``alive``."""
+
+    busy: bool
+    alive: bool = True
+
+
+class RemotePool:
+    """``ElasticScaler``-compatible proxy for a pool living inside a
+    spawned ``ProcessTaskServer`` site (cross-process elasticity).
+
+    The live ``WorkerPool`` cannot cross the process boundary, so the
+    proxy mirrors the scaler's read surface from the parent side:
+
+      * ``n_workers`` tracks the last acked size (seeded from the spec);
+      * ``queued()``/``worker_states()`` are estimated from the parent's
+        own lifecycle events — tasks ``submitted`` minus results
+        received for this pool is the in-flight count, of which up to
+        ``n_workers`` are presumed busy and the rest queued. Tasks that
+        rely on a method's default pool are attributed via
+        ``method_pools`` (the server applies the same mapping remotely);
+      * ``resize(target)`` round-trips a ``ControlRequest`` over the
+        request queue and blocks for the ack on the control topic — the
+        remote site clamps to its spec band, resizes, and records
+        ``pool_resize`` in its own event log. On timeout (site dead or
+        restarting) the proxy reports no change and the scaler simply
+        retries on a later tick.
+    """
+
+    def __init__(
+        self,
+        queues: ColmenaQueues,
+        spec: PoolSpec,
+        event_log: Optional[Any] = None,
+        method_pools: Optional[Dict[str, str]] = None,
+        ack_timeout_s: float = 10.0,
+    ) -> None:
+        self.name = spec.name
+        self.queues = queues
+        self.spec = spec
+        self.ack_timeout_s = ack_timeout_s
+        self._method_pools = dict(method_pools or {})
+        self._n_workers = spec.size
+        self._inflight = 0
+        self._lock = threading.Lock()
+        if event_log is not None:
+            event_log.subscribe(self._on_event, replay=True)
+
+    @property
+    def n_workers(self) -> int:
+        return self._n_workers
+
+    def _resolve_pool(self, ev: Any) -> str:
+        if ev.pool and ev.pool != "default":
+            return ev.pool
+        return self._method_pools.get(ev.method, ev.pool or "default")
+
+    def _on_event(self, ev: Any) -> None:
+        if ev.kind != "task" or self._resolve_pool(ev) != self.name:
+            return
+        if ev.stage == "submitted":
+            with self._lock:
+                self._inflight += 1
+        elif ev.stage == "result_received":
+            with self._lock:
+                self._inflight = max(0, self._inflight - 1)
+
+    def queued(self) -> int:
+        with self._lock:
+            inflight = self._inflight
+        return max(0, inflight - self._n_workers)
+
+    def worker_states(self) -> List[_RemoteWorkerState]:
+        with self._lock:
+            inflight = self._inflight
+        n = self._n_workers
+        busy = min(inflight, n)
+        return [_RemoteWorkerState(busy=i < busy) for i in range(n)]
+
+    def resize(self, target: int) -> Tuple[int, int]:
+        old = self._n_workers
+        ack = self.queues.request_resize(
+            self.name, int(target), timeout=self.ack_timeout_s, reason="elastic"
+        )
+        if ack is None or not ack.ok:
+            return old, old  # unacked: report no change, retry next tick
+        new = int(ack.detail.get("new", old))
+        self._n_workers = new
+        return int(ack.detail.get("old", old)), new
 
 
 # --------------------------------------------------------------------------
@@ -523,6 +637,12 @@ class ColmenaApp:
         self.ops: Optional[Any] = None
         self.campaign: Optional[Campaign] = None
         self.report: Optional[CampaignReport] = None
+        # Cross-process elastic proxies (out-of-process server + elastic).
+        self.remote_pools: Dict[str, Any] = {}
+        # Control-plane surface: lifecycle listeners (attach/detach) and
+        # the externally-driven pause flag (pause()).
+        self.paused = False
+        self._listeners: List[Callable[[str, "ColmenaApp"], None]] = []
 
         self._built = False
         self._started = False
@@ -746,8 +866,25 @@ class ColmenaApp:
                 "ObserveSpec.elastic is set but no PoolSpec widens its "
                 "[min_size, max_size] band; declare at least one elastic pool"
             )
+        if self.spec.server.in_process:
+            pools: Dict[str, Any] = {n: self.pools[n] for n in elastic_specs}
+        else:
+            # Cross-process elasticity: the fleet lives in the spawned
+            # site, so the scaler drives RemotePool proxies whose resizes
+            # round-trip over the control channel.
+            method_pools = {
+                td.method: td.pool for td in self.taskdefs if td.pool != "default"
+            }
+            pools = {
+                n: RemotePool(
+                    self.queues, spec, event_log=self.event_log,
+                    method_pools=method_pools,
+                )
+                for n, spec in elastic_specs.items()
+            }
+            self.remote_pools = pools
         return ElasticScaler(
-            pools={n: self.pools[n] for n in elastic_specs},
+            pools=pools,
             specs=elastic_specs,
             policy=policy,
             event_log=self.event_log,
@@ -833,7 +970,40 @@ class ColmenaApp:
             self._thinker_thread.start()
         if self.ops is not None:
             self.ops.set_state("ready")
+        self._notify("started")
         return self
+
+    # ---------------------------------------------------------- control plane
+    def attach(self, listener: Callable[[str, "ColmenaApp"], None]) -> None:
+        """Attach a control-plane listener: called as ``listener(event,
+        app)`` at lifecycle edges (``"started"``, ``"paused"``,
+        ``"stopped"``). The control plane uses this to mirror app
+        lifecycle into its durable campaign state machine."""
+        self._listeners.append(listener)
+
+    def detach(self, listener: Callable[[str, "ColmenaApp"], None]) -> None:
+        self._listeners = [cb for cb in self._listeners if cb is not listener]
+
+    def _notify(self, event: str) -> None:
+        for cb in list(self._listeners):
+            try:
+                cb(event, self)
+            except Exception:  # noqa: BLE001 - listeners must not break lifecycle
+                pass
+
+    def pause(self) -> Optional[CampaignReport]:
+        """Externally-driven pause (the control plane's preemption path):
+        drain the steering agents, take the final checkpoint, and release
+        every slot — exactly ``stop()``, but the run is marked *paused*
+        rather than finished. Resume by building a fresh ``ColmenaApp``
+        over the same ``CampaignSpec`` state dir (``resume=True`` puts
+        the thinker back where the checkpoint left it)."""
+        self.paused = True
+        # Snapshot before the drain as well: if an agent wedges during
+        # stop(), the pre-drain checkpoint still bounds the lost work.
+        if self.campaign is not None:
+            self.campaign.pause()
+        return self.stop()
 
     def _drive_thinker(self, timeout: Optional[float]) -> None:
         try:
@@ -920,6 +1090,7 @@ class ColmenaApp:
             server_metrics=dict(self.server.metrics.__dict__) if self.server else {},
             queue_metrics=dict(self.queues.metrics.__dict__) if self.queues else {},
         )
+        self._notify("paused" if self.paused else "stopped")
         return self.report
 
     # ---------------------------------------------------------------- observe

@@ -68,6 +68,10 @@ class Campaign:
         self.checkpoints_written = 0
         self._resumed_from: Optional[str] = None
         self.resume_fallbacks = 0  # corrupt checkpoints skipped on resume
+        # Serializes writers: the periodic checkpoint_loop thread vs. an
+        # externally-driven pause() (the control plane checkpoints on
+        # demand while the loop is still running).
+        self._ckpt_lock = threading.Lock()
         if state_dir:
             os.makedirs(state_dir, exist_ok=True)
 
@@ -78,36 +82,49 @@ class Campaign:
     def checkpoint(self) -> Optional[str]:
         if not self.state_dir:
             return None
-        get_state = getattr(self.thinker, "get_state", None)
-        state = get_state() if callable(get_state) else {}
-        record = {
-            "time": time.time(),
-            "thinker_state": state,
-            "server_metrics": self.server.metrics.__dict__,
-        }
-        # Envelope with a content digest: a torn write usually fails to
-        # unpickle, but a bit-flipped file can unpickle into garbage —
-        # the digest turns both into a detectable load failure that
-        # try_resume can fall back from.
-        payload = pickle.dumps(record, protocol=pickle.HIGHEST_PROTOCOL)
-        envelope = {"ckpt": 2, "sha256": hashlib.sha256(payload).hexdigest(), "payload": payload}
-        step = self.checkpoints_written
-        path = self._ckpt_path(step)
-        tmp = path + ".tmp"
-        with open(tmp, "wb") as f:
-            pickle.dump(envelope, f, protocol=pickle.HIGHEST_PROTOCOL)
-        os.replace(tmp, path)  # atomic publish
-        self.checkpoints_written += 1
-        # Retain the last ``retain`` checkpoints: exactly one step expires
-        # per write, so remove just it — not every step since the campaign
-        # began (which was O(n^2) unlink attempts over a long run).
-        expired = step - self.retain
-        if expired >= 0:
-            try:
-                os.remove(self._ckpt_path(expired))
-            except FileNotFoundError:
-                pass
-        return path
+        with self._ckpt_lock:
+            get_state = getattr(self.thinker, "get_state", None)
+            state = get_state() if callable(get_state) else {}
+            record = {
+                "time": time.time(),
+                "thinker_state": state,
+                "server_metrics": self.server.metrics.__dict__,
+            }
+            # Envelope with a content digest: a torn write usually fails to
+            # unpickle, but a bit-flipped file can unpickle into garbage —
+            # the digest turns both into a detectable load failure that
+            # try_resume can fall back from.
+            payload = pickle.dumps(record, protocol=pickle.HIGHEST_PROTOCOL)
+            envelope = {"ckpt": 2, "sha256": hashlib.sha256(payload).hexdigest(), "payload": payload}
+            step = self.checkpoints_written
+            path = self._ckpt_path(step)
+            tmp = path + ".tmp"
+            with open(tmp, "wb") as f:
+                pickle.dump(envelope, f, protocol=pickle.HIGHEST_PROTOCOL)
+            os.replace(tmp, path)  # atomic publish
+            self.checkpoints_written += 1
+            # Retain the last ``retain`` checkpoints: exactly one step expires
+            # per write, so remove just it — not every step since the campaign
+            # began (which was O(n^2) unlink attempts over a long run).
+            expired = step - self.retain
+            if expired >= 0:
+                try:
+                    os.remove(self._ckpt_path(expired))
+                except FileNotFoundError:
+                    pass
+            return path
+
+    def pause(self) -> Optional[str]:
+        """Externally-driven pause point: write a checkpoint *now* (safe
+        against the periodic loop) and return its path. The control plane
+        calls this before releasing a preempted campaign's slots, so the
+        resume that follows restores the freshest possible state rather
+        than one up to ``checkpoint_interval_s`` stale."""
+        try:
+            return self.checkpoint()
+        except Exception:  # noqa: BLE001 - pause must not kill the teardown
+            logger.exception("pause checkpoint failed")
+            return None
 
     def _checkpoint_candidates(self) -> List[str]:
         """Retained checkpoint paths, newest first."""

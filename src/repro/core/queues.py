@@ -28,6 +28,7 @@ import multiprocessing
 import queue
 import threading
 import time
+import uuid
 from dataclasses import dataclass, field
 from typing import Any, Dict, Iterable, Optional
 
@@ -46,6 +47,40 @@ _KILL = "__COLMENA_KILL__"
 # Thinker shuts down so result processors blocked in ``get_result`` /
 # ``get_completion`` wake instantly instead of lagging a pop timeout.
 _WAKE = "__COLMENA_WAKE__"
+
+# Reserved result topic for control acks. Control requests ride the
+# request queue (they must be ordered with task submissions), but their
+# acks get a dedicated topic: ``_pop_typed`` discards non-matching items,
+# so an ack sharing a topic with ``Result``s would silently eat results.
+CONTROL_TOPIC = "__control__"
+
+
+@dataclass
+class ControlRequest:
+    """An out-of-band command to a (possibly remote) task server.
+
+    Travels over the *request* queue like a task submission, so it works
+    unchanged across the pipe backend to a spawned ``ProcessTaskServer``
+    site. Kinds: ``resize`` (params: ``target``, optional ``reason``)
+    and ``ping`` (report pool sizes/backlog).
+    """
+
+    kind: str
+    pool: str = "default"
+    params: dict = field(default_factory=dict)
+    request_id: str = field(default_factory=lambda: uuid.uuid4().hex)
+
+
+@dataclass
+class ControlAck:
+    """The server's reply to a ``ControlRequest``, published on the
+    reserved ``CONTROL_TOPIC`` result queue."""
+
+    request_id: str
+    kind: str
+    pool: str
+    ok: bool
+    detail: dict = field(default_factory=dict)
 
 
 @dataclass
@@ -79,7 +114,7 @@ class ColmenaQueues:
         proxy_threshold: int = 10_000_000,  # 10 MB, as in the paper
         event_log: Optional[Any] = None,  # repro.observe.EventLog (duck-typed)
     ) -> None:
-        self.topics = list(dict.fromkeys(list(topics) + ["default"]))
+        self.topics = list(dict.fromkeys(list(topics) + ["default", CONTROL_TOPIC]))
         self.proxystore = proxystore
         self.proxy_threshold = proxy_threshold
         self.metrics = QueueMetrics()
@@ -88,6 +123,13 @@ class ColmenaQueues:
         # A kill signal observed mid-batch is deferred so already-popped
         # tasks in that batch are still dispatched before shutdown.
         self._kill_pending = False
+        # Server-side hook: ``TaskServer`` installs its control handler
+        # here (in its own process for spawned servers) so ``get_task``
+        # can service ControlRequests inline on the dispatch thread.
+        self.control_handler: Optional[Any] = None
+        # Acks popped while waiting for a different request_id are parked
+        # here instead of being dropped (concurrent control clients).
+        self._ack_buffer: list = []
 
     def _emit(self, stage: str, result: Result, **info: Any) -> None:
         log = self.event_log
@@ -101,6 +143,9 @@ class ColmenaQueues:
         state = dict(self.__dict__)
         state.pop("_metrics_lock", None)
         state["event_log"] = None
+        # Bound methods of the server don't pickle; the child-side server
+        # installs its own handler when it starts.
+        state["control_handler"] = None
         return state
 
     def __setstate__(self, state: dict) -> None:
@@ -242,20 +287,90 @@ class ColmenaQueues:
     def send_kill_signal(self) -> None:
         self._push_request(_KILL)
 
+    # ------------------------------------------------------- control channel
+    def send_control(self, kind: str, pool: str = "default", **params: Any) -> ControlRequest:
+        """Send an out-of-band command to the task server (fire-and-forget;
+        pair with ``get_control_ack``/``request_resize`` for the reply)."""
+        req = ControlRequest(kind=kind, pool=pool, params=params)
+        self._push_request(self._encode(req))
+        return req
+
+    def send_control_ack(self, ack: ControlAck) -> None:
+        """Server side: publish the reply on the reserved control topic."""
+        self._push_result(CONTROL_TOPIC, self._encode(ack))
+
+    def get_control_ack(
+        self,
+        timeout: Optional[float] = None,
+        request_id: Optional[str] = None,
+    ) -> Optional[ControlAck]:
+        """Pop the next control ack (optionally a specific request's).
+
+        With ``request_id``, acks for other requests are parked in a
+        buffer (not dropped) so concurrent control clients can interleave.
+        """
+        for i, ack in enumerate(self._ack_buffer):
+            if request_id is None or ack.request_id == request_id:
+                return self._ack_buffer.pop(i)
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while True:
+            ack = self._pop_typed(self._pop_result, CONTROL_TOPIC, timeout, ControlAck)
+            if ack is None:
+                return None
+            if request_id is None or ack.request_id == request_id:
+                return ack
+            self._ack_buffer.append(ack)
+            if deadline is not None:
+                timeout = deadline - time.monotonic()
+                if timeout <= 0:
+                    return None
+
+    def request_resize(
+        self, pool: str, target: int, timeout: Optional[float] = 10.0, **params: Any
+    ) -> Optional[ControlAck]:
+        """Round-trip a pool-resize command: request over the request
+        queue, ack back over the control topic. Returns None on timeout
+        (e.g. the remote site died before replying)."""
+        req = self.send_control("resize", pool=pool, target=int(target), **params)
+        return self.get_control_ack(timeout=timeout, request_id=req.request_id)
+
     # ------------------------------------------------------------- server API
     def get_task(self, timeout: Optional[float] = None) -> Optional[Result]:
         if self._kill_pending:
             self._kill_pending = False
             raise KillSignal()
-        payload = self._pop_request(timeout)
-        if payload is None:
-            return None
-        if isinstance(payload, str) and payload == _KILL:
-            raise KillSignal()
-        result: Result = self._decode(payload)
-        result.mark("picked_up")
-        self._emit("picked_up", result)
-        return result
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while True:
+            payload = self._pop_request(timeout)
+            if payload is None:
+                return None
+            if isinstance(payload, str) and payload == _KILL:
+                raise KillSignal()
+            item = self._decode(payload)
+            if isinstance(item, ControlRequest):
+                # Serviced inline on the dispatch thread, before the next
+                # task pop, so a resize ordered behind a burst of
+                # submissions still lands promptly (pops are cheap).
+                self._handle_control_request(item)
+                if deadline is not None:
+                    timeout = deadline - time.monotonic()
+                    if timeout <= 0:
+                        return None
+                continue
+            result: Result = item
+            result.mark("picked_up")
+            self._emit("picked_up", result)
+            return result
+
+    def _handle_control_request(self, req: ControlRequest) -> None:
+        handler = self.control_handler
+        if handler is None:
+            self.send_control_ack(ControlAck(
+                request_id=req.request_id, kind=req.kind, pool=req.pool,
+                ok=False, detail={"error": "no control handler installed"},
+            ))
+            return
+        handler(req)
 
     def get_task_batch(
         self,

@@ -52,6 +52,7 @@ from .thinker import BaseThinker
 
 __all__ = [
     "SPEC_VERSION",
+    "diff_spec_dicts",
     "dumps_toml",
     "import_dotted",
     "dotted_path",
@@ -318,6 +319,17 @@ def spec_to_dict(spec: Any) -> Dict[str, Any]:
             "resume": c.resume,
         }
 
+    if spec.control is not None:
+        ctl = spec.control
+        control: Dict[str, Any] = {
+            "weight": ctl.weight,
+            "priority": ctl.priority,
+            "min_slots": ctl.min_slots,
+        }
+        if ctl.demand is not None:
+            control["demand"] = ctl.demand
+        out["control"] = control
+
     s = spec.server
     if s.injector is not None:
         raise ValueError("ServerSpec.injector (a FailureInjector) does not serialize")
@@ -411,6 +423,7 @@ def spec_from_dict(d: Mapping[str, Any]) -> Any:
     from .app import (  # local: avoid cycle
         AppSpec,
         CampaignSpec,
+        ControlSpec,
         FabricSpec,
         ObserveSpec,
         QueueSpec,
@@ -419,7 +432,7 @@ def spec_from_dict(d: Mapping[str, Any]) -> Any:
     )
 
     known = {"version", "tasks", "queues", "pools", "fabric", "observe",
-             "steering", "campaign", "server", "smoke"}
+             "steering", "campaign", "server", "control", "smoke"}
     unknown = set(d) - known
     if unknown:
         raise ValueError(f"unknown spec sections: {sorted(unknown)}")
@@ -493,6 +506,10 @@ def spec_from_dict(d: Mapping[str, Any]) -> Any:
     if "campaign" in d:
         campaign = CampaignSpec(**dict(d["campaign"]))
 
+    control = None
+    if "control" in d:
+        control = ControlSpec(**dict(d["control"]))
+
     server = ServerSpec()
     if "server" in d:
         s = dict(d["server"])
@@ -519,6 +536,7 @@ def spec_from_dict(d: Mapping[str, Any]) -> Any:
         observe=observe,
         campaign=campaign,
         server=server,
+        control=control,
     )
 
 
@@ -640,6 +658,98 @@ def save_spec(spec: Any, path: str) -> str:
 
 
 # --------------------------------------------------------------------------
+# Spec diff: field-aware comparison of two campaign files
+# --------------------------------------------------------------------------
+
+
+def _load_raw(path: str, smoke: bool = False) -> Dict[str, Any]:
+    """Load a campaign file as a raw dict (no import of task modules) so
+    ``diff`` works even when a spec's ``fn`` targets are unimportable."""
+    if path.endswith(".json"):
+        with open(path) as f:
+            d = json.load(f)
+    elif path.endswith(".toml"):
+        d = _load_toml(path)
+    else:
+        raise ValueError(f"campaign file must be .toml or .json (got {path!r})")
+    overrides = d.pop("smoke", None)
+    if smoke:
+        if not overrides:
+            raise ValueError(f"{path} has no [smoke] table; cannot apply --smoke")
+        d = _deep_merge(d, overrides)
+    return d
+
+
+def _render_value(v: Any) -> str:
+    """Human-readable rendering for diff lines: ``$ref``/``$call`` markers
+    print as calls rather than opaque nested dicts."""
+    if isinstance(v, Mapping):
+        if "$ref" in v:
+            return f"$ref({v['$ref']})"
+        if "$call" in v:
+            parts = [repr(a) for a in v.get("args", ())]
+            parts += [f"{k}={r!r}" for k, r in v.get("kwargs", {}).items()]
+            return f"$call({v['$call']})({', '.join(parts)})"
+    return json.dumps(v, sort_keys=True, default=repr)
+
+
+def _is_marker(v: Any) -> bool:
+    return isinstance(v, Mapping) and ("$ref" in v or "$call" in v)
+
+
+def _flatten_spec(d: Any, prefix: str = "") -> Dict[str, Any]:
+    """Flatten a spec dict to ``dotted.path -> leaf`` pairs. ``$ref``/
+    ``$call`` tables are leaves. The ``[[tasks]]`` array is keyed by each
+    entry's method/fn name when unambiguous, so reordering tasks does not
+    diff and per-task field changes anchor to the task's name."""
+    flat: Dict[str, Any] = {}
+    if isinstance(d, Mapping) and not _is_marker(d):
+        if not d:
+            flat[prefix] = {}
+        for k, v in d.items():
+            flat.update(_flatten_spec(v, f"{prefix}.{k}" if prefix else str(k)))
+        return flat
+    if isinstance(d, list) and d and all(isinstance(x, Mapping) for x in d) \
+            and not any(_is_marker(x) for x in d):
+        names = [x.get("method") or x.get("fn") for x in d]
+        use_names = all(names) and len(set(names)) == len(names)
+        for i, v in enumerate(d):
+            key = names[i] if use_names else str(i)
+            flat.update(_flatten_spec(v, f"{prefix}[{key}]"))
+        return flat
+    flat[prefix] = d
+    return flat
+
+
+def diff_spec_dicts(a: Mapping[str, Any], b: Mapping[str, Any]) -> List[str]:
+    """Field-aware diff of two raw spec dicts. Returns human-readable
+    lines (``~`` changed, ``+`` only in b, ``-`` only in a); empty means
+    the specs are equivalent after migration to the current version."""
+    lines: List[str] = []
+    va, vb = _spec_version(a), _spec_version(b)
+    if va != vb:
+        note = []
+        if va < SPEC_VERSION:
+            note.append("a migrated")
+        if vb < SPEC_VERSION:
+            note.append("b migrated")
+        suffix = f" ({', '.join(note)} to v{SPEC_VERSION} for comparison)" if note else ""
+        lines.append(f"~ version: {va} -> {vb}{suffix}")
+    fa = _flatten_spec(_migrate_spec_dict(a, va))
+    fb = _flatten_spec(_migrate_spec_dict(b, vb))
+    fa.pop("version", None)
+    fb.pop("version", None)
+    for path in sorted(set(fa) | set(fb)):
+        if path not in fb:
+            lines.append(f"- {path} = {_render_value(fa[path])}")
+        elif path not in fa:
+            lines.append(f"+ {path} = {_render_value(fb[path])}")
+        elif fa[path] != fb[path]:
+            lines.append(f"~ {path}: {_render_value(fa[path])} -> {_render_value(fb[path])}")
+    return lines
+
+
+# --------------------------------------------------------------------------
 # CLI: python -m repro.app run campaign.toml
 # --------------------------------------------------------------------------
 
@@ -674,6 +784,18 @@ def _cmd_show(args: argparse.Namespace) -> int:
     return 0
 
 
+def _cmd_diff(args: argparse.Namespace) -> int:
+    a = _load_raw(args.a, smoke=args.smoke)
+    b = _load_raw(args.b, smoke=args.smoke)
+    lines = diff_spec_dicts(a, b)
+    for line in lines:
+        print(line)
+    if not lines:
+        print(f"specs are equivalent: {args.a} == {args.b}")
+        return 0
+    return 1
+
+
 def main(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.app",
@@ -697,6 +819,15 @@ def main(argv: Optional[List[str]] = None) -> int:
     show.add_argument("path")
     show.add_argument("--smoke", action="store_true")
     show.set_defaults(fn=_cmd_show)
+
+    diff = sub.add_parser(
+        "diff", help="field-aware diff of two campaign files (exit 1 when they differ)"
+    )
+    diff.add_argument("a")
+    diff.add_argument("b")
+    diff.add_argument("--smoke", action="store_true",
+                      help="apply each file's [smoke] override table before diffing")
+    diff.set_defaults(fn=_cmd_diff)
 
     args = ap.parse_args(argv)
     try:

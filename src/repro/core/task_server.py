@@ -38,7 +38,7 @@ from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
 from .executors import FailureInjector, PoolSpec, WorkerPool
-from .queues import ColmenaQueues, KillSignal
+from .queues import ColmenaQueues, ControlAck, ControlRequest, KillSignal
 from .result import FailureKind, ResourceRequest, Result
 
 logger = logging.getLogger("repro.task_server")
@@ -126,6 +126,8 @@ class TaskServer:
         if pools is None and pool_specs:
             pools = {name: spec.build(injector=injector) for name, spec in pool_specs.items()}
         self.pools = pools or {"default": WorkerPool("default", n_workers, injector=injector)}
+        # Kept for clamping remote resize requests to the spec's band.
+        self.pool_specs = dict(pool_specs or {})
         # Telemetry: default to the queues' log so one wiring point covers
         # the whole lifecycle; pools without their own log inherit it.
         self.event_log = event_log if event_log is not None else getattr(queues, "event_log", None)
@@ -155,6 +157,11 @@ class TaskServer:
 
     # ------------------------------------------------------------ lifecycle
     def start(self) -> "TaskServer":
+        # The control channel: resize/ping requests arriving over the
+        # request queue are serviced by this server (see handle_control).
+        # Installed here — in the server's own process for spawned sites —
+        # because bound methods don't survive the queue pickle boundary.
+        self.queues.control_handler = self.handle_control
         main = threading.Thread(target=self._dispatch_loop, daemon=True, name="task-server")
         main.start()
         self._threads.append(main)
@@ -180,6 +187,45 @@ class TaskServer:
             self._retry_cond.notify_all()
         for p in self.pools.values():
             p.shutdown()
+
+    # ------------------------------------------------------- control channel
+    def handle_control(self, req: ControlRequest) -> None:
+        """Service an out-of-band ``ControlRequest`` (cross-process
+        elasticity): ``resize`` retargets a pool within its spec band and
+        emits ``pool_resize`` into *this* process's event log; ``ping``
+        reports fleet state. Every request is acked on the control topic
+        so the parent side can block on the round-trip."""
+        ok, detail = True, {}
+        try:
+            if req.kind == "resize":
+                pool = self.pools.get(req.pool)
+                if pool is None:
+                    raise KeyError(f"unknown pool {req.pool!r}")
+                target = int(req.params["target"])
+                spec = self.pool_specs.get(req.pool)
+                if spec is not None:
+                    target = spec.clamp(target)
+                old, new = pool.resize(target)
+                detail = {"old": old, "new": new}
+                if self.event_log is not None and new != old:
+                    self.event_log.pool_resize(
+                        req.pool, old, new,
+                        reason=req.params.get("reason", "control"),
+                    )
+                    self.event_log.gauge("workers", new, pool=req.pool)
+            elif req.kind == "ping":
+                detail = {
+                    "pools": {n: p.n_workers for n, p in self.pools.items()},
+                    "queued": {n: p.queued() for n, p in self.pools.items()},
+                }
+            else:
+                raise ValueError(f"unknown control kind {req.kind!r}")
+        except Exception as exc:  # noqa: BLE001 - failure travels in the ack
+            ok, detail = False, {"error": f"{type(exc).__name__}: {exc}"}
+        self.queues.send_control_ack(ControlAck(
+            request_id=req.request_id, kind=req.kind, pool=req.pool,
+            ok=ok, detail=detail,
+        ))
 
     # -------------------------------------------------------------- dispatch
     def _dispatch_loop(self) -> None:

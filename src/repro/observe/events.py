@@ -69,6 +69,7 @@ EVENT_KINDS: tuple = (
     "alert",         # SLO alert transition (alert)
     "remediation",   # auto-remediation attempt (remediation)
     "chaos",         # fault-injection action fired (chaos.schedule)
+    "campaign_state",  # control-plane campaign transition (campaign_state)
 )
 
 
@@ -252,6 +253,19 @@ class EventLog:
         return self.emit(
             Event(t=self._clock(), kind="remediation", stage=action, pool=pool,
                   value=1.0 if ok else 0.0, info={"alert": alert, "ok": bool(ok), **info})
+        )
+
+    def campaign_state(self, campaign: str, state: str, **info: Any) -> Event:
+        """Record a control-plane campaign transition (``kind=
+        "campaign_state"``): ``stage`` is the new state (``submitted`` /
+        ``staged`` / ``running`` / ``paused`` / ``done`` / ``failed``),
+        ``topic`` carries the campaign id, and ``info`` the why (e.g.
+        ``reason="preempted"``, granted slots). The control plane emits
+        these into its own JSONL log, so a fleet's multi-campaign history
+        reads out of one trace alongside pool/gauge events."""
+        return self.emit(
+            Event(t=self._clock(), kind="campaign_state", stage=state,
+                  topic=campaign, info=info)
         )
 
     # ------------------------------------------------------------- consumers

@@ -39,6 +39,7 @@ from .acquisition import (
     EpsilonRandom,
     ExpectedImprovement,
     Greedy,
+    KrigingBeliever,
     make_policy,
     POLICIES,
     Thompson,
@@ -55,6 +56,7 @@ from .scenarios import (
     SeparableQuadratic,
     SyntheticScenario,
 )
+from .stream import EnsembleStreamCheckpointer
 from .thinker import ActiveLearningThinker, campaign_ensemble_config, run_active_campaign
 
 __all__ = [
@@ -64,10 +66,12 @@ __all__ = [
     "DeceptiveNeedle",
     "DeepEnsemble",
     "EnsembleConfig",
+    "EnsembleStreamCheckpointer",
     "EpsilonRandom",
     "ExpectedImprovement",
     "Greedy",
     "Heteroscedastic",
+    "KrigingBeliever",
     "make_policy",
     "make_scenario",
     "MultimodalSinusoid",

@@ -26,7 +26,7 @@ Policies (maximization convention — larger objective is better):
 from __future__ import annotations
 
 import math
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -35,6 +35,7 @@ __all__ = [
     "EpsilonRandom",
     "ExpectedImprovement",
     "Greedy",
+    "KrigingBeliever",
     "make_policy",
     "POLICIES",
     "Thompson",
@@ -82,8 +83,11 @@ class AcquisitionPolicy:
         rng: Optional[np.random.Generator] = None,
         members: Optional[np.ndarray] = None,
         exclude: Optional[set] = None,
+        X: Optional[np.ndarray] = None,
     ) -> List[int]:
-        """Jointly pick ``k`` distinct candidate indices."""
+        """Jointly pick ``k`` distinct candidate indices. ``X`` (the
+        candidate coordinates) is advisory — only geometry-aware
+        policies (``KrigingBeliever``) read it."""
         rng = rng or np.random.default_rng()
         s = self.scores(np.asarray(mean), np.asarray(std),
                         best_f=best_f, rng=rng, members=members)
@@ -162,7 +166,7 @@ class Thompson(AcquisitionPolicy):
         return rng.normal(mean, std)
 
     def select(self, k, mean, std, *, best_f=-math.inf, rng=None,
-               members=None, exclude=None):
+               members=None, exclude=None, X=None):
         rng = rng or np.random.default_rng()
         mean = np.asarray(mean)
         std = np.asarray(std)
@@ -190,7 +194,7 @@ class EpsilonRandom(AcquisitionPolicy):
         self.name = "random" if eps >= 1.0 else f"eps{eps:g}"
 
     def select(self, k, mean, std, *, best_f=-math.inf, rng=None,
-               members=None, exclude=None):
+               members=None, exclude=None, X=None):
         rng = rng or np.random.default_rng()
         mean = np.asarray(mean)
         n = mean.shape[0]
@@ -210,12 +214,80 @@ class EpsilonRandom(AcquisitionPolicy):
         return chosen
 
 
+class KrigingBeliever(AcquisitionPolicy):
+    """Hallucinated (kriging-believer) batch selection over a base policy.
+
+    Score-based policies pick a batch as top-k of one frozen score
+    vector, so all k picks pile onto the same optimistic peak — the
+    degenerate repeated-argmax batch. The kriging believer instead
+    selects the batch *sequentially*, and after each pick pretends the
+    pick's prediction is already observed ("believes" it): the incumbent
+    ``best_f`` absorbs the hallucinated value and the epistemic std of
+    nearby candidates collapses by a squared-exponential factor in
+    normalized candidate space, so the next pick is pushed toward
+    genuinely different regions. With no candidate coordinates (``X``)
+    the geometry term is unavailable and selection degrades gracefully
+    to the base policy's exclusion-only batch.
+
+    ``lengthscale`` is the shrink radius as a fraction of the candidate
+    cloud's span per dimension (isotropic in normalized coordinates).
+    """
+
+    name = "kriging"
+
+    def __init__(self, base: Any = "ucb", lengthscale: float = 0.1, **base_kwargs: Any) -> None:
+        self.base = make_policy(base, **base_kwargs) if isinstance(base, str) else base
+        if lengthscale <= 0:
+            raise ValueError(f"lengthscale must be > 0, got {lengthscale}")
+        self.lengthscale = float(lengthscale)
+        self.name = f"kriging[{self.base.name}]"
+
+    def scores(self, mean, std, *, best_f, rng, members=None):
+        return self.base.scores(mean, std, best_f=best_f, rng=rng, members=members)
+
+    def select(self, k, mean, std, *, best_f=-math.inf, rng=None,
+               members=None, exclude=None, X=None):
+        rng = rng or np.random.default_rng()
+        mean = np.asarray(mean, dtype=float)
+        std = np.asarray(std, dtype=float).copy()
+        if X is None:
+            return self.base.select(k, mean, std, best_f=best_f, rng=rng,
+                                    members=members, exclude=exclude)
+        Xn = np.asarray(X, dtype=float)
+        if Xn.ndim == 1:
+            Xn = Xn[:, None]
+        # Normalize each dimension to the candidate cloud's span so one
+        # lengthscale works across anisotropic pools.
+        span = Xn.max(axis=0) - Xn.min(axis=0)
+        span[span <= 0] = 1.0
+        Xn = Xn / span
+        ell2 = self.lengthscale * self.lengthscale
+        taken = set(exclude or ())
+        chosen: List[int] = []
+        best = float(best_f)
+        for _ in range(min(k, mean.shape[0] - len(taken))):
+            idx = self.base.select(1, mean, std, best_f=best, rng=rng,
+                                   members=members, exclude=taken)
+            if not idx:
+                break
+            i = idx[0]
+            chosen.append(i)
+            taken.add(i)
+            # Believe the prediction: the incumbent absorbs it and the
+            # neighborhood's epistemic std collapses.
+            best = max(best, float(mean[i]))
+            d2 = np.sum((Xn - Xn[i]) ** 2, axis=1)
+            std *= 1.0 - np.exp(-0.5 * d2 / ell2)
+        return chosen
+
+
 POLICIES: Dict[str, Callable[[], AcquisitionPolicy]] = {
     "greedy": Greedy,
     "ucb": UCB,
     "ei": ExpectedImprovement,
     "thompson": Thompson,
     "random": EpsilonRandom,
+    "kriging": KrigingBeliever,
 }
 
 

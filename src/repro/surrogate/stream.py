@@ -1,0 +1,224 @@
+"""Streaming (delta) ensemble checkpoints over ``repro.train.checkpoint``.
+
+Campaign checkpoints used to pickle the ensemble's **entire** state dict
+— params *and* full optimizer state — every interval, even when a
+retrain had not touched most of it. ``EnsembleStreamCheckpointer``
+writes ``DeepEnsemble.state_dict()`` as a step stream instead:
+
+* every array leaf is content-hashed (sha256); a **delta step** stores
+  only the leaves that changed since they were last stored and records
+  ``reused: {leaf: base_step}`` pointers for the rest;
+* every ``full_interval``-th step is a **full snapshot**, bounding every
+  delta chain to the window the manager retains (``keep =
+  full_interval + 2``), so GC can never orphan a base;
+* writes go through :class:`repro.train.checkpoint.CheckpointManager`
+  — atomic publish, async I/O off the steering thread, shard + manifest
+  layout;
+* non-array state (config, normalization scalars, rng) rides in the
+  manifest's JSON ``extra``.
+
+``restore()`` walks steps newest -> oldest and materializes the first
+chain whose bases all verify by hash, returning a dict with exactly the
+``DeepEnsemble.state_dict()`` shape — ``load_state_dict`` cannot tell
+the difference from the full-pickle path (the parity the campaign
+resume test asserts).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import os
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.train.checkpoint import CheckpointManager, _flatten_with_paths, _unflatten_into
+
+from .ensemble import DeepEnsemble, EnsembleConfig
+
+
+def _leaf_hash(v: np.ndarray) -> str:
+    v = np.ascontiguousarray(v)
+    h = hashlib.sha256()
+    h.update(str(v.dtype).encode())
+    h.update(str(v.shape).encode())
+    h.update(v.tobytes())
+    return h.hexdigest()
+
+
+def _structure(node: Any) -> Any:
+    """JSON-able structural template of a pytree (dict/list/tuple of
+    array leaves) so restore can unflatten without pickling anything."""
+    if isinstance(node, dict):
+        return {"t": "dict", "items": {k: _structure(v) for k, v in node.items()}}
+    if isinstance(node, (list, tuple)):
+        return {"t": "tuple" if isinstance(node, tuple) else "list",
+                "items": [_structure(v) for v in node]}
+    return {"t": "leaf"}
+
+
+def _template(struct: Any) -> Any:
+    if struct["t"] == "dict":
+        return {k: _template(v) for k, v in struct["items"].items()}
+    if struct["t"] in ("list", "tuple"):
+        items = [_template(v) for v in struct["items"]]
+        return tuple(items) if struct["t"] == "tuple" else items
+    return None
+
+
+def _config_to_json(cfg: EnsembleConfig) -> Dict[str, Any]:
+    return dataclasses.asdict(cfg)
+
+
+def _config_from_json(d: Dict[str, Any]) -> EnsembleConfig:
+    from repro.train.optimizer import OptimizerConfig
+
+    d = dict(d)
+    if isinstance(d.get("hidden"), list):
+        d["hidden"] = tuple(d["hidden"])
+    if isinstance(d.get("opt"), dict):
+        d["opt"] = OptimizerConfig(**d["opt"])
+    return EnsembleConfig(**d)
+
+
+class EnsembleStreamCheckpointer:
+    """Write/restore ``DeepEnsemble.state_dict()`` as a delta stream."""
+
+    def __init__(self, directory: str, full_interval: int = 4, async_writes: bool = True) -> None:
+        if full_interval < 1:
+            raise ValueError(f"full_interval must be >= 1, got {full_interval}")
+        self.full_interval = full_interval
+        self.async_writes = async_writes
+        # keep > full_interval: a delta's bases are never older than the
+        # last full snapshot, which this window always retains.
+        self.manager = CheckpointManager(directory, keep=full_interval + 2)
+        # leaf -> (hash, step it was last *stored* at). Starts empty after
+        # a restart, so the first post-restart save is a full snapshot.
+        self._last: Dict[str, Tuple[str, int]] = {}
+        latest = self.manager.latest_step()
+        self._next_step = 0 if latest is None else latest + 1
+
+    # ------------------------------------------------------------------ save
+    def save(self, ensemble: DeepEnsemble) -> int:
+        """Write one step (async by default); returns its step number."""
+        state = ensemble.state_dict()
+        arrays_tree = {
+            "params": state["params"],
+            "opt_state": state["opt_state"],
+            "x_mu": state["x_mu"],
+            "x_sd": state["x_sd"],
+        }
+        flat = {k: np.asarray(v) for k, v in _flatten_with_paths(arrays_tree).items()}
+        step = self._next_step
+        self._next_step += 1
+        full = (step % self.full_interval == 0) or not self._last
+        changed: Dict[str, np.ndarray] = {}
+        reused: Dict[str, int] = {}
+        hashes: Dict[str, str] = {}
+        for key, v in flat.items():
+            h = _leaf_hash(v)
+            hashes[key] = h
+            prev = self._last.get(key)
+            if full or prev is None or prev[0] != h:
+                changed[key] = v
+                self._last[key] = (h, step)
+            else:
+                reused[key] = prev[1]
+                self._last[key] = (h, prev[1])
+        meta = {
+            "in_dim": int(state["in_dim"]),
+            "config": _config_to_json(state["config"]),
+            "y_mu": float(state["y_mu"]),
+            "y_sd": float(state["y_sd"]),
+            "norm_frozen": bool(state["norm_frozen"]),
+            "fit_count": int(state["fit_count"]),
+            "rng": state["rng"],
+            "structure": _structure(arrays_tree),
+        }
+        extra = {"stream": 1, "full": full, "meta": meta,
+                 "reused": reused, "hashes": hashes}
+        if self.async_writes:
+            self.manager.save_async(step, changed, extra)
+        else:
+            self.manager.save(step, changed, extra)
+        return step
+
+    def wait(self) -> None:
+        """Block until the in-flight async write (if any) lands."""
+        self.manager.wait()
+
+    def all_steps(self) -> List[int]:
+        return self.manager.all_steps()
+
+    def latest_step(self) -> Optional[int]:
+        return self.manager.latest_step()
+
+    # --------------------------------------------------------------- restore
+    def _load_flat(self, step: int) -> Tuple[Dict[str, np.ndarray], Dict[str, Any]]:
+        path = os.path.join(self.manager.dir, f"step_{step:08d}")
+        import json
+
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(path, "shard_0.npz"))
+        return {k: data[k] for k in data.files}, manifest.get("extra", {})
+
+    def _materialize(self, step: int) -> Dict[str, Any]:
+        flat, extra = self._load_flat(step)
+        if not extra.get("stream"):
+            raise ValueError(f"step {step} is not a stream checkpoint")
+        hashes: Dict[str, str] = extra["hashes"]
+        base_cache: Dict[int, Dict[str, np.ndarray]] = {}
+        for key, base_step in extra.get("reused", {}).items():
+            base = base_cache.get(base_step)
+            if base is None:
+                base = base_cache[base_step] = self._load_flat(int(base_step))[0]
+            flat[key] = base[key]
+        for key, h in hashes.items():
+            if key not in flat:
+                raise ValueError(f"step {step}: leaf {key} missing from its chain")
+            if _leaf_hash(np.asarray(flat[key])) != h:
+                raise ValueError(f"step {step}: leaf {key} failed its content hash")
+        meta = extra["meta"]
+        tree = _unflatten_into(_template(meta["structure"]),
+                               {k: np.asarray(v) for k, v in flat.items()})
+        return {
+            "in_dim": meta["in_dim"],
+            "config": _config_from_json(meta["config"]),
+            "params": tree["params"],
+            "opt_state": tree["opt_state"],
+            "x_mu": np.asarray(tree["x_mu"]),
+            "x_sd": np.asarray(tree["x_sd"]),
+            "y_mu": meta["y_mu"],
+            "y_sd": meta["y_sd"],
+            "norm_frozen": meta["norm_frozen"],
+            "fit_count": meta["fit_count"],
+            "rng": meta["rng"],
+        }
+
+    def restore(self, step: Optional[int] = None) -> Dict[str, Any]:
+        """State dict from ``step`` (default: newest), falling back to
+        older steps when a chain is torn (a SIGKILL mid-write, a GC'd
+        base). Raises ``FileNotFoundError`` when nothing materializes."""
+        steps = self.all_steps()
+        if step is not None:
+            steps = [s for s in steps if s <= step]
+        last_err: Optional[Exception] = None
+        for s in reversed(steps):
+            try:
+                return self._materialize(s)
+            except Exception as exc:  # noqa: BLE001 - fall back to an older step
+                last_err = exc
+        raise FileNotFoundError(
+            f"no restorable ensemble stream step in {self.manager.dir!r}"
+            + (f" (last error: {last_err})" if last_err else "")
+        )
+
+    def restore_into(self, ensemble: DeepEnsemble, step: Optional[int] = None) -> int:
+        state = self.restore(step)
+        ensemble.load_state_dict(state)
+        return state["fit_count"]
+
+
+__all__ = ["EnsembleStreamCheckpointer"]

@@ -88,6 +88,11 @@ class ActiveLearningThinker(BatchRetrainThinker):
         retrain from its observed cost vs. simulate throughput
         (``adaptive_retrain_after``), and the observed fraction is
         gauged as ``retrain_budget``. ``None`` keeps the fixed cadence.
+    :param stream_dir: when set, campaign checkpoints stream the
+        ensemble's ``state_dict`` as asynchronous delta steps into this
+        directory (``EnsembleStreamCheckpointer``) and the pickle
+        carries only a small marker; ``None`` keeps the full-pickle
+        inline format. ``set_state`` accepts both formats.
     """
 
     def __init__(
@@ -106,6 +111,7 @@ class ActiveLearningThinker(BatchRetrainThinker):
         select_horizon: Optional[int] = None,
         optimum_value: Optional[float] = None,
         retrain_budget: Optional[float] = None,
+        stream_dir: Optional[str] = None,
         seed: int = 0,
     ) -> None:
         super().__init__(
@@ -125,6 +131,12 @@ class ActiveLearningThinker(BatchRetrainThinker):
         if retrain_budget is not None and not (0.0 < retrain_budget < 1.0):
             raise ValueError(f"retrain_budget must be in (0, 1), got {retrain_budget}")
         self.retrain_budget = retrain_budget
+        self.stream_dir = stream_dir
+        self._stream = None
+        if stream_dir is not None:
+            from .stream import EnsembleStreamCheckpointer
+
+            self._stream = EnsembleStreamCheckpointer(stream_dir)
         self._first_result_t: Optional[float] = None
         self._train_seconds = 0.0
         self._rng = np.random.default_rng(seed)
@@ -277,7 +289,7 @@ class ActiveLearningThinker(BatchRetrainThinker):
         mean, std = members.mean(axis=0), members.std(axis=0) + 1e-9
         ranked = self.policy.select(
             k, mean, std, best_f=best, rng=self._rng, members=members,
-            exclude=visited)
+            exclude=visited, X=self.candidates)
         with self._al_lock:
             self._selected = deque(ranked)
         if log is not None:
@@ -293,7 +305,7 @@ class ActiveLearningThinker(BatchRetrainThinker):
         """Campaign-checkpoint payload: everything needed to resume from
         the last retrain (observed data, queue position, ensemble)."""
         with self._al_lock, self._state_lock:
-            return {
+            state = {
                 "X": [np.asarray(x) for x in self._X],
                 "y": list(self._y),
                 "best": self._best,
@@ -304,9 +316,16 @@ class ActiveLearningThinker(BatchRetrainThinker):
                 "total": self._total,
                 "retrain_after": self.retrain_after,
                 "train_seconds": self._train_seconds,
-                "ensemble": self.ensemble.state_dict(),
                 "rng": self._rng.bit_generator.state,
             }
+            if self._stream is not None:
+                # Stream the (large) ensemble state as an async delta
+                # step; the pickle carries only a pointer to it.
+                step = self._stream.save(self.ensemble)
+                state["ensemble_stream"] = {"dir": self.stream_dir, "step": step}
+            else:
+                state["ensemble"] = self.ensemble.state_dict()
+            return state
 
     def set_state(self, state: Dict[str, Any]) -> None:
         if not state:
@@ -324,7 +343,18 @@ class ActiveLearningThinker(BatchRetrainThinker):
             self.retrain_after = state.get("retrain_after", self.retrain_after)
             self._train_seconds = state.get("train_seconds", self._train_seconds)
             self._rng.bit_generator.state = state["rng"]
-        self.ensemble.load_state_dict(state["ensemble"])
+        if "ensemble" in state:
+            self.ensemble.load_state_dict(state["ensemble"])
+        elif "ensemble_stream" in state:
+            from .stream import EnsembleStreamCheckpointer
+
+            marker = state["ensemble_stream"]
+            stream = self._stream
+            if stream is None or self.stream_dir != marker["dir"]:
+                stream = EnsembleStreamCheckpointer(marker["dir"])
+            # Walks back from the marker step when its async write never
+            # landed (e.g. SIGKILL between pickle publish and npz flush).
+            self.ensemble.load_state_dict(stream.restore(marker["step"]))
 
 
 # --------------------------------------------------------------------------

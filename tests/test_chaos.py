@@ -373,3 +373,44 @@ class TestSoakSLOGate:
         part = next(f for f in res.fired if f.action.kind == "partition")
         assert part.ok and part.detail["deferred"] in (True, False)
         assert res.metrics["remediations"] >= 1
+
+
+class TestControlPlaneFault:
+    def test_schedule_driven_kill_control_plane(self):
+        """A chaos schedule SIGKILLs a live control-plane-style daemon
+        through the ``kill_control_plane`` primitive, and the firing is
+        recorded ok; a second firing against the dead process reports
+        the no-op instead of raising."""
+        import subprocess
+        import sys
+
+        from repro.chaos import kill_control_plane
+
+        proc = subprocess.Popen(
+            [sys.executable, "-c", "import time; time.sleep(60)"],
+            stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL,
+        )
+        sched = ChaosSchedule([
+            ChaosAction(kind="kill_control_plane", at_s=0.0, scope="none"),
+        ])
+        runner = ChaosRunner(
+            sched,
+            handlers={
+                "kill_control_plane": lambda params: {
+                    "ok": kill_control_plane(proc) == proc.pid,
+                    "pid": proc.pid,
+                },
+            },
+        ).start()
+        try:
+            deadline = time.monotonic() + 10
+            while not runner.fired and time.monotonic() < deadline:
+                time.sleep(0.02)
+        finally:
+            runner.stop()
+        assert len(runner.fired) == 1
+        fired = runner.fired[0]
+        assert fired.ok and fired.detail["pid"] == proc.pid
+        assert proc.poll() is not None  # actually dead, reaped by the helper
+        # idempotent on a dead process: no signal, no exception
+        assert kill_control_plane(proc) is None

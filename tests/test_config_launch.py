@@ -357,3 +357,79 @@ class TestCLI:
         d = json.loads(proc.stdout)
         assert d["steering"]["thinker"] == "examples.quickstart.Quickstart"
         assert d["pools"]["default"]["size"] == 4
+
+
+class TestSpecDiff:
+    """`python -m repro.app diff a.toml b.toml`: field-aware, version-
+    stamp aware, with $ref/$call rendered readably."""
+
+    A = """
+version = 2
+[[tasks]]
+fn = "math.sin"
+timeout_s = 5
+[pools.default]
+size = 4
+[control]
+weight = 2.0
+"""
+    B = """
+version = 2
+[[tasks]]
+fn = "math.sin"
+[[tasks]]
+fn = "math.cos"
+[pools.default]
+size = 2
+[control]
+weight = 2.0
+priority = 1
+"""
+
+    def test_diff_lines_are_field_aware(self):
+        from repro.core.specfile import diff_spec_dicts
+        import tomli
+
+        lines = diff_spec_dicts(tomli.loads(self.A), tomli.loads(self.B))
+        assert "~ pools.default.size: 4 -> 2" in lines
+        assert "- tasks[math.sin].timeout_s = 5" in lines
+        assert any(line.startswith("+ tasks[math.cos].fn") for line in lines)
+        assert "+ control.priority = 1" in lines
+        assert not any("weight" in line for line in lines)  # unchanged field
+
+    def test_identical_specs_diff_empty(self):
+        from repro.core.specfile import diff_spec_dicts
+        import tomli
+
+        assert diff_spec_dicts(tomli.loads(self.A), tomli.loads(self.A)) == []
+
+    def test_cli_exit_codes_and_output(self, tmp_path):
+        a = tmp_path / "a.toml"
+        b = tmp_path / "b.toml"
+        a.write_text(self.A)
+        b.write_text(self.B)
+        env = dict(os.environ, PYTHONPATH=os.path.join(REPO_ROOT, "src"))
+        run = subprocess.run(
+            [sys.executable, "-m", "repro.app", "diff", str(a), str(b)],
+            capture_output=True, text=True, env=env,
+        )
+        assert run.returncode == 1  # differences found
+        assert "pools.default.size" in run.stdout
+        same = subprocess.run(
+            [sys.executable, "-m", "repro.app", "diff", str(a), str(a)],
+            capture_output=True, text=True, env=env,
+        )
+        assert same.returncode == 0
+        assert "equivalent" in same.stdout
+
+    def test_version_migration_is_reported_not_diffed(self, tmp_path):
+        """A v1 file (int pool shorthand) diffed against its v2 twin is
+        equivalent apart from the version note."""
+        from repro.core.specfile import diff_spec_dicts
+        import tomli
+
+        v1 = "version = 1\n[[tasks]]\nfn = \"math.sin\"\n[pools]\ndefault = 4\n"
+        v2 = "version = 2\n[[tasks]]\nfn = \"math.sin\"\n[pools.default]\nsize = 4\n"
+        lines = diff_spec_dicts(tomli.loads(v1), tomli.loads(v2))
+        assert lines and lines[0].startswith("~ version: 1 -> 2")
+        assert len(lines) == 1  # migrated bodies agree

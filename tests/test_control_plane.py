@@ -1,0 +1,470 @@
+"""Control plane: the durable campaign state machine, fair-share
+scheduler, in-process plane lifecycle (concurrent campaigns, preemption
+checkpoint/restore), the HTTP API, the remote-site resize channel, and
+the daemon SIGKILL -> auto-resume path."""
+
+import json
+import os
+import signal
+import subprocess
+import sys
+import time
+import urllib.error
+import urllib.request
+
+import pytest
+
+from repro.control import (
+    DONE,
+    FAILED,
+    PAUSED,
+    RUNNING,
+    STAGED,
+    SUBMITTED,
+    CampaignRecord,
+    ControlPlane,
+    ControlServer,
+    IllegalTransition,
+    StateStore,
+    compute_grants,
+    meets_floor,
+    total_slots,
+)
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _campaign_toml(n_tasks=24, n_parallel=4, task_s=0.0, pool_size=4,
+                   weight=1.0, priority=0, min_slots=1, checkpoint_s=0.5):
+    return f"""
+[[tasks]]
+fn = "repro.control.workload.workload_task"
+
+[pools.default]
+size = {pool_size}
+
+[steering]
+thinker = "repro.control.workload.make_workload"
+
+[steering.kwargs]
+n_tasks = {n_tasks}
+n_parallel = {n_parallel}
+task_s = {task_s}
+
+[campaign]
+checkpoint_interval_s = {checkpoint_s}
+
+[control]
+weight = {weight}
+priority = {priority}
+min_slots = {min_slots}
+"""
+
+
+def _journal_indices(store, cid):
+    path = os.path.join(store.state_dir(cid), "results.jsonl")
+    if not os.path.exists(path):
+        return []
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                out.append(json.loads(line)["index"])
+            except (ValueError, KeyError):
+                continue  # torn tail line from a SIGKILL mid-append
+    return out
+
+
+def _wait(predicate, timeout=30.0, interval=0.1, msg="condition"):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if predicate():
+            return
+        time.sleep(interval)
+    raise AssertionError(f"timed out waiting for {msg}")
+
+
+class TestStateMachine:
+    def test_illegal_transitions_rejected(self, tmp_path):
+        store = StateStore(str(tmp_path))
+        rec = store.create("c", "x = 1")
+        with pytest.raises(IllegalTransition):
+            store.transition(rec.id, RUNNING)       # submitted -/-> running
+        with pytest.raises(IllegalTransition):
+            store.transition(rec.id, DONE)          # submitted -/-> done
+        with pytest.raises(IllegalTransition):
+            store.transition(rec.id, "nonsense")
+        store.transition(rec.id, STAGED)
+        store.transition(rec.id, RUNNING)
+        store.transition(rec.id, DONE)
+        for s in (STAGED, RUNNING, PAUSED, FAILED):
+            with pytest.raises(IllegalTransition):  # done is terminal
+                store.transition(rec.id, s)
+        # the rejected edges never touched the durable record
+        assert StateStore(str(tmp_path)).get(rec.id).state == DONE
+
+    def test_records_survive_restart(self, tmp_path):
+        store = StateStore(str(tmp_path))
+        rec = store.create("persist-me", "[pools.default]\nsize = 2\n",
+                           weight=2.5, priority=1, min_slots=2, demand={"default": 2})
+        store.transition(rec.id, STAGED, reason="admitted")
+        again = StateStore(str(tmp_path))
+        got = again.get(rec.id)
+        assert (got.name, got.state, got.weight, got.priority, got.min_slots) == \
+            ("persist-me", STAGED, 2.5, 1, 2)
+        assert got.demand == {"default": 2}
+        assert [h[0] for h in got.history] == [SUBMITTED, STAGED]
+        with open(again.spec_path(rec.id)) as f:
+            assert f.read() == "[pools.default]\nsize = 2\n"
+
+    def test_recover_restages_every_non_terminal(self, tmp_path):
+        store = StateStore(str(tmp_path))
+        recs = {}
+        for state in (SUBMITTED, STAGED, RUNNING, PAUSED, DONE):
+            r = store.create(state, "x = 1")
+            recs[state] = r.id
+            for step in {SUBMITTED: [], STAGED: [STAGED],
+                         RUNNING: [STAGED, RUNNING],
+                         PAUSED: [STAGED, RUNNING, PAUSED],
+                         DONE: [STAGED, RUNNING, DONE]}[state]:
+                store.transition(r.id, step)
+        user = store.create("user-paused", "x = 1")
+        for step in (STAGED, RUNNING, PAUSED):
+            store.transition(user.id, step)
+        store.set_paused_by_user(user.id, True)
+
+        fresh = StateStore(str(tmp_path))  # the post-SIGKILL reload
+        restaged = {r.name for r in fresh.recover()}
+        assert restaged == {SUBMITTED, STAGED, RUNNING, PAUSED}
+        assert fresh.get(recs[RUNNING]).state == STAGED
+        assert fresh.get(recs[RUNNING]).resumed >= 1
+        assert fresh.get(recs[DONE]).state == DONE
+        assert fresh.get(user.id).state == PAUSED  # operator intent sticks
+
+
+class TestFairShare:
+    @staticmethod
+    def _rec(cid, weight=1.0, priority=0, min_slots=1, demand=None):
+        return CampaignRecord(id=cid, name=cid, state=STAGED, weight=weight,
+                              priority=priority, min_slots=min_slots,
+                              demand=dict(demand or {"default": 8}))
+
+    def test_grants_proportional_to_weight(self):
+        recs = [self._rec("a", weight=2.0), self._rec("b", weight=1.0)]
+        grants = compute_grants(recs, {"default": 6})
+        assert grants["a"]["default"] == 4 and grants["b"]["default"] == 2
+
+    def test_grant_capped_by_demand(self):
+        recs = [self._rec("a", weight=9.0, demand={"default": 2}), self._rec("b")]
+        grants = compute_grants(recs, {"default": 6})
+        assert grants["a"]["default"] == 2   # no use hoarding beyond demand
+        assert grants["b"]["default"] == 4   # surplus flows to the other
+
+    def test_priority_class_takes_capacity_first(self):
+        recs = [self._rec("lo", weight=100.0), self._rec("hi", priority=1)]
+        grants = compute_grants(recs, {"default": 4})
+        assert grants["hi"]["default"] == 4
+        assert grants["lo"]["default"] == 0
+        assert not meets_floor(recs[0], grants["lo"])
+
+    def test_min_slots_floor_evicts_weakest(self):
+        recs = [self._rec("a", weight=3.0, min_slots=2),
+                self._rec("b", weight=2.0, min_slots=2),
+                self._rec("c", weight=1.0, min_slots=2)]
+        grants = compute_grants(recs, {"default": 4})
+        # 4 slots cannot float three 2-slot floors: the lightest is parked
+        # at zero so the survivors both meet theirs.
+        assert grants["c"]["default"] == 0
+        assert grants["a"]["default"] >= 2 and grants["b"]["default"] >= 2
+        assert total_slots(grants["a"]) + total_slots(grants["b"]) == 4
+        assert meets_floor(recs[0], grants["a"]) and meets_floor(recs[1], grants["b"])
+        assert not meets_floor(recs[2], grants["c"])
+
+    def test_multi_pool_fleet_apportioned_independently(self):
+        recs = [self._rec("a", demand={"default": 4, "aux": 1}),
+                self._rec("b", demand={"default": 4})]
+        grants = compute_grants(recs, {"default": 4, "aux": 2})
+        assert grants["a"] == {"default": 2, "aux": 1}
+        assert grants["b"] == {"default": 2}
+
+
+class TestPlaneInProcess:
+    def test_rejects_bad_submissions(self, tmp_path):
+        plane = ControlPlane(str(tmp_path), {"default": 4})
+        with pytest.raises(ValueError, match="invalid campaign spec"):
+            plane.submit("this is not even toml [")
+        with pytest.raises(ValueError, match="no fleet pool"):
+            plane.submit(
+                "[[tasks]]\nfn = \"repro.control.workload.workload_task\"\n"
+                "pool = \"gpu\"\n[pools.gpu]\nsize = 2\n"
+                "[steering]\nthinker = \"repro.control.workload.make_workload\"\n"
+                "[steering.kwargs]\nn_tasks = 4\n")
+        with pytest.raises(ValueError, match="in_process"):
+            plane.submit(_campaign_toml() + "\n[queues]\nbackend = \"pipe\"\n"
+                         "[server]\nin_process = false\n")
+        assert plane.store.list() == []  # nothing bad was admitted
+
+    def test_concurrent_campaigns_share_fleet_and_finish(self, tmp_path):
+        plane = ControlPlane(str(tmp_path), {"default": 4}, tick_s=0.1).start()
+        try:
+            a = plane.submit(_campaign_toml(n_tasks=24, weight=2.0), name="heavy")
+            b = plane.submit(_campaign_toml(n_tasks=24, weight=1.0), name="light")
+            _wait(lambda: all(plane.store.get(c.id).state == DONE for c in (a, b)),
+                  timeout=90, msg="both campaigns done")
+        finally:
+            plane.stop()
+        for rec in (a, b):
+            idx = _journal_indices(plane.store, rec.id)
+            assert sorted(set(idx)) == list(range(24))
+            assert len(idx) == 24  # exactly-once: no duplicate journal lines
+        # fair share integrated actual vs expected slot-seconds per weight
+        # (both demand the whole pool, so the run was contended)
+        acct = plane.accounting.report()
+        assert set(acct) >= {a.id, b.id}
+        for cid in (a.id, b.id):
+            assert acct[cid]["contended_s"] > 0
+
+    def test_preemption_checkpoints_and_resumes(self, tmp_path):
+        plane = ControlPlane(str(tmp_path), {"default": 2}, tick_s=0.1).start()
+        try:
+            lo = plane.submit(
+                _campaign_toml(n_tasks=40, n_parallel=2, task_s=0.05,
+                               pool_size=2, checkpoint_s=0.2),
+                name="background")
+            _wait(lambda: plane.store.get(lo.id).state == RUNNING,
+                  timeout=30, msg="background campaign running")
+            _wait(lambda: len(_journal_indices(plane.store, lo.id)) >= 3,
+                  timeout=30, msg="background campaign made progress")
+            # A priority-1 campaign demanding the whole fleet preempts it.
+            hi = plane.submit(
+                _campaign_toml(n_tasks=8, n_parallel=2, pool_size=2,
+                               priority=1, min_slots=2),
+                name="urgent")
+            _wait(lambda: plane.store.get(lo.id).state == PAUSED,
+                  timeout=30, msg="background campaign preempted")
+            pre = _journal_indices(plane.store, lo.id)
+            assert pre and len(pre) < 40
+            # checkpoint exists: pause is checkpoint + release, not kill
+            ckpts = [f for f in os.listdir(plane.store.state_dir(lo.id))
+                     if f.endswith(".pkl")]
+            assert ckpts, "preemption pause must leave a checkpoint"
+            _wait(lambda: plane.store.get(hi.id).state == DONE,
+                  timeout=60, msg="urgent campaign done")
+            _wait(lambda: plane.store.get(lo.id).state == DONE,
+                  timeout=90, msg="background campaign resumed and done")
+        finally:
+            plane.stop()
+        assert plane.store.get(lo.id).resumed >= 1
+        idx = _journal_indices(plane.store, lo.id)
+        assert sorted(set(idx)) == list(range(40))
+        assert len(idx) == 40  # resume re-lost nothing, re-ran nothing
+        hi_idx = _journal_indices(plane.store, hi.id)
+        assert sorted(set(hi_idx)) == list(range(8))
+
+    def test_user_pause_survives_ticks_until_resume(self, tmp_path):
+        plane = ControlPlane(str(tmp_path), {"default": 2}, tick_s=0.1).start()
+        try:
+            rec = plane.submit(_campaign_toml(n_tasks=60, n_parallel=2,
+                                              task_s=0.05, pool_size=2))
+            _wait(lambda: plane.store.get(rec.id).state == RUNNING,
+                  timeout=30, msg="campaign running")
+            plane.pause(rec.id)
+            assert plane.store.get(rec.id).state == PAUSED
+            time.sleep(0.5)  # several ticks: a user pause must not re-stage
+            assert plane.store.get(rec.id).state == PAUSED
+            plane.resume(rec.id)
+            _wait(lambda: plane.store.get(rec.id).state == DONE,
+                  timeout=90, msg="campaign done after resume")
+        finally:
+            plane.stop()
+        idx = _journal_indices(plane.store, rec.id)
+        assert sorted(set(idx)) == list(range(60)) and len(idx) == 60
+
+
+class TestHTTPAPI:
+    def test_routes_and_error_mapping(self, tmp_path):
+        plane = ControlPlane(str(tmp_path), {"default": 4}, tick_s=0.1).start()
+        api = ControlServer(plane).start()
+        try:
+            def get(path):
+                with urllib.request.urlopen(api.url + path, timeout=10) as r:
+                    return json.loads(r.read())
+
+            def post(path, body=b""):
+                req = urllib.request.Request(api.url + path, data=body, method="POST")
+                with urllib.request.urlopen(req, timeout=10) as r:
+                    return r.status, json.loads(r.read())
+
+            assert get("/healthz")["ok"] is True
+            assert get("/fleet")["fleet"] == {"default": 4}
+
+            status, rec = post("/campaigns?name=via-http",
+                               _campaign_toml(n_tasks=8).encode())
+            assert status == 201 and rec["name"] == "via-http"
+            assert get(f"/campaigns/{rec['id']}")["id"] == rec["id"]
+            assert any(c["id"] == rec["id"] for c in get("/campaigns")["campaigns"])
+
+            with pytest.raises(urllib.error.HTTPError) as err:
+                post("/campaigns", b"not toml [")
+            assert err.value.code == 400
+            with pytest.raises(urllib.error.HTTPError) as err:
+                get("/campaigns/doesnotexist")
+            assert err.value.code == 404
+
+            _wait(lambda: plane.store.get(rec["id"]).state == DONE,
+                  timeout=60, msg="http-submitted campaign done")
+        finally:
+            api.stop()
+            plane.stop()
+
+
+class TestRemoteSiteControlChannel:
+    def test_resize_round_trips_to_spawned_server(self, tmp_path):
+        """The PR5 follow-on: a resize request crosses the process
+        boundary to a spawned ProcessTaskServer, which clamps, resizes,
+        acks, and records pool_resize in its own event log."""
+        from repro.app import (
+            AppSpec, ColmenaApp, ObserveSpec, PoolSpec, QueueSpec, ServerSpec,
+        )
+        from repro.app import TaskDef
+        from repro.control import workload_task
+
+        parent_log = str(tmp_path / "events.jsonl")
+        child_log = str(tmp_path / "events.server.jsonl")
+        app = ColmenaApp(AppSpec(
+            tasks=[TaskDef(fn=workload_task, method="workload_task")],
+            queues=QueueSpec(backend="pipe"),
+            pools={"default": PoolSpec("default", 2, min_size=1, max_size=6)},
+            server=ServerSpec(in_process=False),
+            observe=ObserveSpec(jsonl_path=parent_log),
+        ))
+        with app.run(timeout=60) as handle:
+            ack = handle.queues.request_resize("default", 4, timeout=30)
+            assert ack is not None and ack.ok, ack
+            assert ack.detail == {"old": 2, "new": 4}
+            # clamped to the spec band, acked with the effective size
+            ack2 = handle.queues.request_resize("default", 99, timeout=30)
+            assert ack2 is not None and ack2.ok and ack2.detail["new"] == 6
+            # the channel still delivers work after control traffic
+            handle.queues.send_inputs(5, method="workload_task")
+            r = handle.queues.get_result(timeout=30)
+            assert r is not None and r.success and r.value == 16
+        # the spawned site recorded the resize in its own event log
+        resizes = []
+        with open(child_log) as f:
+            for line in f:
+                try:
+                    ev = json.loads(line)
+                except ValueError:
+                    continue
+                if ev.get("kind") == "pool_resize":
+                    resizes.append(ev)
+        assert any(ev.get("value") == 4.0 for ev in resizes), resizes
+
+    def test_remote_pool_proxy_drives_resize(self):
+        """The ElasticScaler-facing proxy: ``resize`` round-trips the
+        control channel and mirrors the acked size; a dead site (no ack)
+        reports no change instead of wedging the scaler."""
+        from repro.app import AppSpec, ColmenaApp, PoolSpec, QueueSpec, ServerSpec
+        from repro.app import TaskDef
+        from repro.control import workload_task
+        from repro.core.app import RemotePool
+
+        spec = PoolSpec("default", 2, min_size=1, max_size=4)
+        app = ColmenaApp(AppSpec(
+            tasks=[TaskDef(fn=workload_task, method="workload_task")],
+            queues=QueueSpec(backend="pipe"),
+            pools={"default": spec},
+            server=ServerSpec(in_process=False),
+        ))
+        with app.run(timeout=60) as handle:
+            proxy = RemotePool(handle.queues, spec)
+            assert proxy.n_workers == 2
+            old, new = proxy.resize(3)
+            assert (old, new) == (2, 3)
+            assert proxy.n_workers == 3
+        # with no site listening there is no ack: no change, no hang
+        from repro.core import PipeColmenaQueues
+
+        dead = RemotePool(PipeColmenaQueues(), spec, ack_timeout_s=0.3)
+        assert dead.resize(4) == (2, 2)
+
+
+@pytest.mark.slow
+class TestDaemonCrashResume:
+    def test_sigkill_mid_run_then_auto_resume(self, tmp_path):
+        """SIGKILL the serve daemon while campaigns are mid-flight; a
+        restart on the same root must auto-resume every non-done campaign
+        and finish all of them with exactly-once journals."""
+        root = str(tmp_path / "root")
+        fleet = tmp_path / "fleet.toml"
+        fleet.write_text("[pools.default]\nsize = 4\n")
+        port_file = tmp_path / "port"
+        env = dict(os.environ, PYTHONPATH=SRC)
+
+        def serve():
+            return subprocess.Popen(
+                [sys.executable, "-m", "repro.control", "serve",
+                 "--root", root, "--fleet", str(fleet),
+                 "--port-file", str(port_file), "--tick", "0.1"],
+                env=env, stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL,
+            )
+
+        def url():
+            return f"http://127.0.0.1:{port_file.read_text().strip()}"
+
+        def get(path):
+            with urllib.request.urlopen(url() + path, timeout=10) as r:
+                return json.loads(r.read())
+
+        proc = serve()
+        try:
+            _wait(port_file.exists, timeout=60, msg="daemon port file")
+            body = _campaign_toml(n_tasks=40, n_parallel=4, task_s=0.05,
+                                  checkpoint_s=0.2).encode()
+            ids = []
+            for name in ("alpha", "beta"):
+                req = urllib.request.Request(
+                    url() + f"/campaigns?name={name}", data=body, method="POST")
+                with urllib.request.urlopen(req, timeout=30) as r:
+                    ids.append(json.loads(r.read())["id"])
+
+            store = StateStore(root)
+
+            def mid_flight():
+                return all(
+                    len(_journal_indices(store, cid)) >= 4 for cid in ids
+                ) and not all(
+                    StateStore(root).get(cid).state == DONE for cid in ids
+                )
+
+            _wait(mid_flight, timeout=60, msg="campaigns mid-flight")
+
+            from repro.chaos import kill_control_plane
+            assert kill_control_plane(proc) == proc.pid
+
+            port_file.unlink()
+            proc = serve()
+            _wait(port_file.exists, timeout=60, msg="daemon restart port file")
+            _wait(lambda: all(c["state"] == DONE
+                              for c in get("/campaigns")["campaigns"]),
+                  timeout=120, msg="all campaigns done after resume")
+
+            campaigns = get("/campaigns")["campaigns"]
+            assert {c["id"] for c in campaigns} == set(ids)
+            assert all(c["resumed"] >= 1 for c in campaigns)
+            store = StateStore(root)
+            for cid in ids:
+                idx = _journal_indices(store, cid)
+                assert sorted(set(idx)) == list(range(40)), f"lost results in {cid}"
+                assert len(idx) == len(set(idx)), f"duplicate results in {cid}"
+        finally:
+            if proc.poll() is None:
+                proc.send_signal(signal.SIGTERM)
+                try:
+                    proc.wait(timeout=20)
+                except subprocess.TimeoutExpired:
+                    proc.kill()

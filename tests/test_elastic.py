@@ -400,13 +400,29 @@ class TestAppElastic:
             app._started = True
             app.stop()
 
-    def test_elastic_rejected_across_processes(self):
-        from repro.app import AppSpec, ObserveSpec, QueueSpec, ServerSpec
+    def test_elastic_across_processes_builds_remote_pools(self):
+        """Cross-process elasticity: elastic + an out-of-process server
+        used to be rejected; now it composes ``RemotePool`` proxies that
+        drive the spawned site's pools over the control channel."""
+        from repro.app import (
+            AppSpec, ColmenaApp, ObserveSpec, PoolSpec, QueueSpec, ServerSpec,
+            TaskDef,
+        )
+        from repro.control import workload_task
+        from repro.core.app import RemotePool
 
-        with pytest.raises(ValueError, match="in-process"):
-            AppSpec(
-                tasks={"work": lambda x: x},
-                queues=QueueSpec(backend="pipe"),
-                server=ServerSpec(in_process=False),
-                observe=ObserveSpec(elastic=True),
-            )
+        app = ColmenaApp(AppSpec(
+            tasks=[TaskDef(fn=workload_task, method="workload_task")],
+            queues=QueueSpec(backend="pipe"),
+            pools={"default": PoolSpec("default", 2, min_size=1, max_size=4)},
+            server=ServerSpec(in_process=False),
+            observe=ObserveSpec(elastic=True),
+        ))
+        with app.run(timeout=60):
+            assert app.elastic is not None
+            assert set(app.remote_pools) == {"default"}
+            proxy = app.remote_pools["default"]
+            assert isinstance(proxy, RemotePool)
+            old, new = proxy.resize(3)
+            assert (old, new) == (2, 3)
+            assert proxy.n_workers == 3

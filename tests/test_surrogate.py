@@ -226,3 +226,72 @@ class TestScenarios:
         # stepping toward the needle from the hill decreases value.
         step = hill_top + 0.3 * (needle_top - hill_top) / np.linalg.norm(needle_top - hill_top)
         assert sc.true_value(step) < sc.true_value(hill_top)
+
+
+class TestKrigingBeliever:
+    """Hallucinated batch selection must diversify where plain top-k
+    piles onto one peak."""
+
+    @staticmethod
+    def _bump_pool(n=101):
+        # Narrow mean bump + large flat epistemic std: top-k of one
+        # frozen UCB score hugs the bump (the mean tiebreaks identical
+        # exploration terms), so batch diversity has to come from the
+        # believer's std collapse around each pick.
+        X = np.linspace(0.0, 1.0, n)[:, None]
+        mean = np.exp(-0.5 * ((X[:, 0] - 0.5) / 0.03) ** 2)
+        std = np.full(n, 1.0)
+        return X, mean, std
+
+    def test_spreads_where_plain_ucb_repeats_the_argmax_region(self):
+        from repro.surrogate import KrigingBeliever
+
+        X, mean, std = self._bump_pool()
+        rng = np.random.default_rng(0)
+        k = 5
+        ucb = UCB(beta=2.0)
+        plain = ucb.select(k, mean, std, rng=rng, X=X)
+        kb = KrigingBeliever(base="ucb", lengthscale=0.15, beta=2.0)
+        believed = kb.select(k, mean, std, rng=rng, X=X)
+
+        assert len(set(plain)) == k and len(set(believed)) == k
+        # both exploit the peak itself...
+        assert int(np.argmax(mean)) in believed
+        # ...but the degenerate batch hugs it while the believer spreads
+        def min_gap(idx):
+            xs = np.sort(X[idx, 0])
+            return float(np.min(np.diff(xs)))
+        assert min_gap(plain) < 0.05           # top-k of one frozen score: adjacent picks
+        assert min_gap(believed) > min_gap(plain) * 2
+        assert np.ptp(X[believed, 0]) > np.ptp(X[plain, 0])
+
+    def test_without_coordinates_degrades_to_base_policy(self):
+        from repro.surrogate import KrigingBeliever
+
+        _, mean, std = self._bump_pool()
+        base = UCB(beta=2.0)
+        kb = KrigingBeliever(base=UCB(beta=2.0), lengthscale=0.1)
+        assert kb.select(4, mean, std, rng=np.random.default_rng(1)) == \
+            base.select(4, mean, std, rng=np.random.default_rng(1))
+
+    def test_registry_and_validation(self):
+        from repro.surrogate import KrigingBeliever
+
+        p = make_policy("kriging", base="ei", lengthscale=0.2)
+        assert isinstance(p, KrigingBeliever) and p.name == "kriging[ei]"
+        with pytest.raises(ValueError):
+            KrigingBeliever(lengthscale=0.0)
+
+    def test_believed_incumbent_raises_best_f_for_ei(self):
+        """After the first pick, EI must see the hallucinated incumbent:
+        a candidate equal to the pick's mean with tiny std scores ~0."""
+        from repro.surrogate import KrigingBeliever
+
+        X = np.array([[0.0], [0.5], [1.0]])
+        mean = np.array([1.0, 1.0, 0.2])
+        std = np.array([1e-6, 1e-6, 0.5])
+        kb = KrigingBeliever(base="ei", lengthscale=0.05)
+        picks = kb.select(2, mean, std, best_f=0.0, rng=np.random.default_rng(0), X=X)
+        # plain EI top-2 of one frozen score would take both 1.0-mean
+        # twins; the believer's second pick prefers the uncertain point.
+        assert picks[0] in (0, 1) and picks[1] == 2
